@@ -1,0 +1,96 @@
+//! Export flow: from dataset to manufacturable bespoke Verilog.
+//!
+//! ```bash
+//! cargo run --release --example rtl_export [-- <dataset> <out_dir>]
+//! ```
+//!
+//! Produces, for the chosen dataset (default: vertebral):
+//!   * `<out>/<ds>_exact.v`   — exact 8-bit bespoke design (behavioral +
+//!     EGT-mapped structural netlist),
+//!   * `<ds>_approx.v`        — best 1%-loss approximate design,
+//!   * a summary of the area/power/delay deltas.
+//!
+//! The structural netlists instantiate the EGT cell names
+//! (EGT_NAND2/EGT_NOR2/…), i.e. what a printed-PDK P&R flow would consume.
+
+use axdt::coordinator::{optimize_dataset, EngineChoice, RunOptions};
+use axdt::data::generators;
+use axdt::dt::{train, TrainConfig};
+use axdt::hw::synth::{self, TreeApprox};
+use axdt::hw::{rtl, EgtLibrary};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("vertebral").to_string();
+    let out_dir = args.get(1).map(String::as_str).unwrap_or("results/rtl").to_string();
+    std::fs::create_dir_all(&out_dir)?;
+
+    let seed = 42;
+    let spec = generators::spec(&dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let lib = EgtLibrary::default();
+
+    // Exact design.
+    let data = generators::generate(spec, seed);
+    let (train_d, _) = data.split(0.3, seed);
+    let tree = train(&train_d, &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 });
+    let exact = TreeApprox::exact(&tree);
+    let exact_circuit = synth::synth_tree(&tree, &exact);
+    let exact_rep = exact_circuit.netlist.report(&lib);
+    let exact_path = format!("{out_dir}/{dataset}_exact.v");
+    std::fs::write(&exact_path, rtl::export(&tree, &exact, &exact_circuit, &format!("{dataset}_exact")))?;
+
+    // Approximate design from the co-design search.
+    let opts = RunOptions {
+        seed,
+        pop_size: 32,
+        generations: 20,
+        margin_max: 5,
+        engine: EngineChoice::Native,
+    };
+    let run = optimize_dataset(&dataset, &opts, None)?;
+    let best = run
+        .best_within_loss(0.01)
+        .or_else(|| run.front.first())
+        .ok_or_else(|| anyhow::anyhow!("empty front"))?;
+    let approx_circuit = synth::synth_tree(&tree, &best.approx);
+    let approx_path = format!("{out_dir}/{dataset}_approx.v");
+    std::fs::write(
+        &approx_path,
+        rtl::export(&tree, &best.approx, &approx_circuit, &format!("{dataset}_approx")),
+    )?;
+
+    println!("wrote {exact_path} and {approx_path}\n");
+    println!("{:<10} {:>11} {:>11} {:>11} {:>9}", "design", "area(mm^2)", "power(mW)", "delay(ms)", "accuracy");
+    println!(
+        "{:<10} {:>11.2} {:>11.3} {:>11.1} {:>9.3}",
+        "exact", exact_rep.area_mm2, exact_rep.power_mw, exact_rep.delay_ms, run.baseline_accuracy
+    );
+    println!(
+        "{:<10} {:>11.2} {:>11.3} {:>11.1} {:>9.3}",
+        "approx",
+        best.measured.area_mm2,
+        best.measured.power_mw,
+        best.measured.delay_ms,
+        best.accuracy
+    );
+    println!(
+        "\nsavings: {:.2}x area, {:.2}x power, accuracy {:+.3}",
+        exact_rep.area_mm2 / best.measured.area_mm2,
+        exact_rep.power_mw / best.measured.power_mw,
+        best.accuracy - run.baseline_accuracy
+    );
+
+    // Per-comparator precision histogram of the chosen design.
+    let mut hist = [0usize; 9];
+    for &b in &best.approx.bits {
+        hist[b as usize] += 1;
+    }
+    println!("\nprecision histogram of the approximate design:");
+    for bits in 2..=8 {
+        if hist[bits] > 0 {
+            println!("  {bits}-bit: {:<3} {}", hist[bits], "#".repeat(hist[bits]));
+        }
+    }
+    Ok(())
+}

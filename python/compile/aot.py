@@ -1,0 +1,73 @@
+"""AOT compile path: lower the L2 graph to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  Lowered with
+``return_tuple=True`` so the rust side unwraps a 1-tuple.
+
+Run once by ``make artifacts`` (skipped when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs:
+    artifacts/dt_eval_<bucket>.hlo.txt   one per shape bucket
+    artifacts/meta.json                  shapes + parameter order for rust
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.dt_infer import TILE_S, mxu_flops, vmem_bytes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(name):
+    s, n, l, c, p = model.BUCKETS[name]
+    shapes = model.input_shapes(s, n, l, c, p)
+    return jax.jit(model.dt_eval_accuracy).lower(*shapes)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", nargs="*", default=list(model.BUCKETS))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    meta = {"tile_s": TILE_S, "input_names": model.INPUT_NAMES, "buckets": {}}
+    for name in args.buckets:
+        s, n, l, c, p = model.BUCKETS[name]
+        text = to_hlo_text(lower_bucket(name))
+        path = os.path.join(args.out_dir, f"dt_eval_{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["buckets"][name] = {
+            "s": s, "n": n, "l": l, "c": c, "p": p,
+            "file": os.path.basename(path),
+            "vmem_bytes_per_step": vmem_bytes(n, l, c),
+            "mxu_flops_per_exec": mxu_flops(s, n, l, c, p),
+        }
+        print(f"[aot] {name}: S={s} N={n} L={l} C={c} P={p} "
+              f"-> {path} ({len(text)} chars, "
+              f"vmem/step={vmem_bytes(n, l, c)/2**20:.2f} MiB)")
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {os.path.join(args.out_dir, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""L1 Pallas kernel: population-batched oblivious decision-tree inference.
+
+This is the fitness-evaluation hot-spot of the approximate-DT framework: for a
+population of P chromosomes (each a dual-approximation of the same trained
+tree: per-comparator precision + substituted integer thresholds), evaluate the
+quantized tree on S test samples and return the number of correct predictions
+per chromosome.
+
+The paper evaluates chromosomes with a per-sample recursive tree walk in
+Python.  That formulation is branchy and serial; here the tree is evaluated
+*obliviously* so the hot loop is two back-to-back matmuls that map onto the
+TPU MXU systolic array (see DESIGN.md "Hardware-Adaptation"):
+
+    cmp[s, i]   = (min(floor(x[s, i] * scale[i]), scale[i] - 1) <= thr[i])
+    mis[s, l]   = cmp[s, :] @ wleaf[:, l] + bias[l]      # mismatch count
+    active      = (mis == 0)                             # unique per sample
+    score[s, c] = active[s, :] @ onehot[:, c]
+    correct     = sum(valid * (argmax_c score == label))
+
+Tensor encoding of the tree structure (computed once in rust, passed as
+runtime inputs so one artifact serves any tree that fits the shape bucket):
+
+  * ``wleaf[i, l] = mask[i, l] * (1 - 2 * sense[i, l])`` where ``mask`` marks
+    comparator *i* on the root path of leaf *l* and ``sense`` is the outcome
+    (1 = "take the <=, i.e. left, branch") required to reach *l*.
+  * ``bias[l] = sum_i mask[i, l] * sense[i, l]``.  Then ``mis[s, l]`` counts
+    path mismatches exactly (small integers, exact in f32), and is zero for
+    precisely one leaf per sample.
+  * padded comparators: ``wleaf`` row of zeros (thr/scale arbitrary).
+  * padded leaves: ``bias[l] >= 1e6`` so they can never activate.
+  * padded samples: ``valid = 0``.
+
+Grid/BlockSpec schedule: grid = (S // TILE_S, P), **population innermost**.
+Each step loads one sample tile of the pre-gathered feature matrix and one
+chromosome's (thr, scale) rows; the two matmuls run at [TILE_S, N] @ [N, L]
+and [TILE_S, L] @ [L, C].  The whole correct-count vector [P] is a single
+persistent output block accumulated in place.
+
+Why this grid order (the §Perf L1 iteration, EXPERIMENTS.md): with the
+population axis innermost, the *large* streamed operand — the [TILE_S, N]
+xsel tile — changes only once per P steps, while the per-chromosome rows
+(2·N·4 B, ~2.5 KB) stream cheaply.  The original (P, S//TILE_S) order
+re-fetched the full S×N matrix once per chromosome: ~P× more HBM traffic
+(large bucket: 160 MB vs 7.6 MB per execution on a real TPU).
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; on a real TPU the same BlockSpecs express the HBM->VMEM
+pipeline (VMEM budget per step is reported by ``vmem_bytes``).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sample-tile height. 128 keeps the [TILE_S, N] x [N, L] matmul MXU-aligned
+# (128x128 systolic tiles) and the per-step VMEM footprint under ~1 MiB even
+# for the "large" bucket (N = L = 320).
+TILE_S = 256
+
+
+def _dt_eval_kernel(
+    xsel_ref,      # [TILE_S, N]  pre-gathered features, in [0, 1]
+    labels_ref,    # [TILE_S]     class ids as f32
+    valid_ref,     # [TILE_S]     1.0 for real samples, 0.0 for padding
+    thr_ref,       # [1, N]       integer thresholds (as f32) of chromosome p
+    scale_ref,     # [1, N]       2^bits per comparator of chromosome p
+    wleaf_ref,     # [N, L]       mask * (1 - 2 * sense)
+    bias_ref,      # [1, L]       sum_i mask * sense (+1e6 on padded leaves)
+    onehot_ref,    # [L, C]       leaf -> class one-hot
+    out_ref,       # [P]          correct-prediction counts (persistent block)
+):
+    """One (sample-tile, chromosome) grid step."""
+    s_tile = pl.program_id(0)
+    p = pl.program_id(1)
+
+    # Zero the whole accumulator vector on the very first step.
+    @pl.when((s_tile == 0) & (p == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = xsel_ref[...]
+    scale = scale_ref[...]            # [1, N] broadcasts over the tile
+    thr = thr_ref[...]
+
+    # Dual approximation, integer-exact in f32 (values < 2^24):
+    # quantize the input feature to b bits and compare against the
+    # (already substituted) integer threshold.
+    xq = jnp.minimum(jnp.floor(x * scale), scale - 1.0)
+    cmp = (xq <= thr).astype(jnp.float32)                   # [TILE_S, N]
+
+    # Leaf matching: mismatch count per (sample, leaf) is a matmul.
+    # bf16 inputs double MXU throughput on a real TPU and stay exact here
+    # (cmp is 0/1, wleaf is -1/0/+1, counts <= tree depth << 256); the
+    # accumulator stays f32.
+    mis = (
+        jnp.dot(
+            cmp.astype(jnp.bfloat16),
+            wleaf_ref[...].astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+        + bias_ref[...]
+    )                                                        # [TILE_S, L]
+    active = (mis == 0.0).astype(jnp.float32)                # [TILE_S, L]
+
+    # Class scores and prediction.
+    score = jnp.dot(
+        active, onehot_ref[...], preferred_element_type=jnp.float32
+    )                                                        # [TILE_S, C]
+    pred = jnp.argmax(score, axis=-1).astype(jnp.float32)    # [TILE_S]
+
+    correct = (pred == labels_ref[...]).astype(jnp.float32) * valid_ref[...]
+    out_ref[p] += jnp.sum(correct)
+
+
+def dt_eval_counts(xsel, labels, valid, thr, scale, wleaf, bias, onehot):
+    """Correct-prediction counts per chromosome.
+
+    Args:
+      xsel:   f32[S, N]  test features pre-gathered per comparator.
+      labels: f32[S]     class ids.
+      valid:  f32[S]     sample mask.
+      thr:    f32[P, N]  integer thresholds per chromosome.
+      scale:  f32[P, N]  2^bits per chromosome/comparator.
+      wleaf:  f32[N, L]  tree-structure contraction matrix.
+      bias:   f32[L]     path-length bias (padded leaves >= 1e6).
+      onehot: f32[L, C]  leaf class one-hot.
+
+    Returns:
+      f32[P] number of correct predictions among valid samples.
+    """
+    s, n = xsel.shape
+    p, _ = thr.shape
+    l, c = onehot.shape
+    tile_s = min(TILE_S, s)  # small buckets fit in one tile
+    if s % tile_s != 0:
+        raise ValueError(f"S={s} must be a multiple of tile_s={tile_s}")
+
+    grid = (s // tile_s, p)  # population innermost: xsel tile reused P times
+    bias2 = bias.reshape(1, l)
+
+    return pl.pallas_call(
+        _dt_eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_s, n), lambda js, ip: (js, 0)),   # xsel
+            pl.BlockSpec((tile_s,), lambda js, ip: (js,)),       # labels
+            pl.BlockSpec((tile_s,), lambda js, ip: (js,)),       # valid
+            pl.BlockSpec((1, n), lambda js, ip: (ip, 0)),        # thr
+            pl.BlockSpec((1, n), lambda js, ip: (ip, 0)),        # scale
+            pl.BlockSpec((n, l), lambda js, ip: (0, 0)),         # wleaf
+            pl.BlockSpec((1, l), lambda js, ip: (0, 0)),         # bias
+            pl.BlockSpec((l, c), lambda js, ip: (0, 0)),         # onehot
+        ],
+        # Single persistent [P] block: accumulated in place every step.
+        out_specs=pl.BlockSpec((p,), lambda js, ip: (0,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xsel, labels, valid, thr, scale, wleaf, bias2, onehot)
+
+
+def vmem_bytes(n: int, l: int, c: int, tile_s: int = TILE_S) -> int:
+    """Estimated VMEM residency of one grid step (all operands f32).
+
+    Used by DESIGN.md/EXPERIMENTS.md to argue the real-TPU schedule fits:
+    everything below must sit in the ~16 MiB per-core VMEM simultaneously
+    (double-buffered inputs would roughly double the input terms).
+    """
+    f = 4  # sizeof f32
+    return (
+        tile_s * n * f      # xsel tile
+        + 2 * tile_s * f    # labels + valid
+        + 2 * n * f         # thr + scale rows
+        + n * l * f         # wleaf
+        + l * f             # bias
+        + l * c * f         # onehot
+        + tile_s * l * f    # mis/active intermediate
+        + tile_s * c * f    # score
+        + tile_s * f        # pred/correct
+    )
+
+
+def mxu_flops(s: int, n: int, l: int, c: int, p: int) -> int:
+    """Total MXU FLOPs for one population evaluation (2 matmuls)."""
+    return 2 * p * s * (n * l + l * c)
+
+
+dt_eval_counts_jit = jax.jit(dt_eval_counts)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for the population DT-evaluation kernel.
+
+Two independent reference implementations:
+
+  * :func:`dt_eval_counts_ref` -- the same oblivious (matmul) formulation as
+    the Pallas kernel, written as plain vectorized jnp.  This is the
+    numerical oracle pytest compares the kernel against.
+  * :func:`dt_walk_predict` -- a literal per-sample recursive tree walk over
+    an explicit node table (the formulation the paper uses in its Python
+    framework).  Used by the tests to prove that the *encoding* (wleaf /
+    bias / onehot) is faithful to real tree routing, not just that two
+    copies of the same algebra agree.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def quantize(x, scale):
+    """b-bit quantization of a [0, 1] feature: min(floor(x*2^b), 2^b-1)."""
+    return jnp.minimum(jnp.floor(x * scale), scale - 1.0)
+
+
+def dt_eval_counts_ref(xsel, labels, valid, thr, scale, wleaf, bias, onehot):
+    """Vectorized oracle; same contract as dt_infer.dt_eval_counts."""
+    xq = quantize(xsel[None, :, :], scale[:, None, :])       # [P, S, N]
+    cmp = (xq <= thr[:, None, :]).astype(jnp.float32)
+    mis = jnp.einsum("psn,nl->psl", cmp, wleaf) + bias[None, None, :]
+    active = (mis == 0.0).astype(jnp.float32)                # [P, S, L]
+    score = jnp.einsum("psl,lc->psc", active, onehot)        # [P, S, C]
+    pred = jnp.argmax(score, axis=-1).astype(jnp.float32)    # [P, S]
+    correct = (pred == labels[None, :]).astype(jnp.float32) * valid[None, :]
+    return jnp.sum(correct, axis=-1)
+
+
+def dt_walk_predict(node_feat, node_thr_int, node_scale, node_left,
+                    node_right, node_leaf_class, x):
+    """Recursive tree walk for a single sample (numpy, test-only).
+
+    Node table layout (index 0 = root):
+      node_feat[i]       feature index tested at node i (-1 for leaves)
+      node_thr_int[i]    integer threshold at node i's precision
+      node_scale[i]      2^bits at node i
+      node_left/right[i] child indices
+      node_leaf_class[i] class id for leaves, -1 otherwise
+    Routing rule (sklearn convention, as in the paper):
+      go left iff quantize(x[feat]) <= thr_int.
+    """
+    i = 0
+    while node_leaf_class[i] < 0:
+        sc = node_scale[i]
+        code = min(np.floor(x[node_feat[i]] * sc), sc - 1.0)
+        i = node_left[i] if code <= node_thr_int[i] else node_right[i]
+    return node_leaf_class[i]
+
+
+def tree_tensors(node_feat, node_left, node_right, node_leaf_class,
+                 n_pad, l_pad, c_pad):
+    """Encode an explicit node table into the kernel's tensor format.
+
+    Returns (comp_of_node, wleaf, bias, onehot, comp_feat) where
+    comp_of_node maps internal node index -> comparator slot, and
+    comp_feat[j] is the feature gathered for comparator slot j.
+    """
+    internal = [i for i in range(len(node_feat)) if node_leaf_class[i] < 0]
+    comp_of_node = {n: j for j, n in enumerate(internal)}
+    leaves = [i for i in range(len(node_feat)) if node_leaf_class[i] >= 0]
+
+    wleaf = np.zeros((n_pad, l_pad), np.float32)
+    bias = np.full((l_pad,), 1e6, np.float32)
+    onehot = np.zeros((l_pad, c_pad), np.float32)
+
+    parent = {}
+    for i in internal:
+        parent[node_left[i]] = (i, 1)   # sense 1: left = (<= thr) taken
+        parent[node_right[i]] = (i, 0)
+
+    def path(leaf):
+        steps = []
+        cur = leaf
+        while cur in parent:
+            node, sense = parent[cur]
+            steps.append((comp_of_node[node], sense))
+            cur = node
+        return steps
+
+    for l_idx, leaf in enumerate(leaves):
+        b = 0.0
+        for j, sense in path(leaf):
+            wleaf[j, l_idx] = 1.0 - 2.0 * sense
+            b += sense
+        bias[l_idx] = b
+        onehot[l_idx, int(node_leaf_class[leaf])] = 1.0
+
+    comp_feat = np.zeros((n_pad,), np.int64)
+    for n, j in comp_of_node.items():
+        comp_feat[j] = node_feat[n]
+    return comp_of_node, wleaf, bias, onehot, comp_feat

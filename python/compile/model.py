@@ -1,0 +1,76 @@
+"""L2: the JAX evaluation graph that is AOT-lowered to artifacts/*.hlo.txt.
+
+The "model" of this paper is a trained decision tree being evaluated under a
+population of dual approximations (per-comparator precision + substituted
+integer thresholds).  The graph wraps the L1 Pallas kernel
+(:mod:`compile.kernels.dt_infer`) with the final accuracy reduction.  All
+tree structure arrives as runtime inputs, so one artifact per *shape bucket*
+serves every dataset/tree that fits it (padding conventions documented in the
+kernel module).
+
+Input order (this IS the PJRT parameter order the rust runtime packs):
+
+  0. xsel   f32[S, N]
+  1. labels f32[S]
+  2. valid  f32[S]
+  3. thr    f32[P, N]
+  4. scale  f32[P, N]
+  5. wleaf  f32[N, L]
+  6. bias   f32[L]
+  7. onehot f32[L, C]
+
+Output: 1-tuple (acc f32[P]) -- lowered with return_tuple=True, so the rust
+side unwraps with to_tuple1().
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import dt_infer
+
+#: Shape buckets compiled by aot.py: name -> (S, N, L, C, P).
+#: Rust routes each dataset to the smallest bucket that fits and pads.
+BUCKETS = {
+    "small": (256, 64, 64, 16, 32),
+    "medium": (1024, 256, 256, 16, 32),
+    "large": (4096, 320, 320, 16, 32),
+}
+
+INPUT_NAMES = [
+    "xsel", "labels", "valid", "thr", "scale", "wleaf", "bias", "onehot",
+]
+
+
+def input_shapes(s, n, l, c, p):
+    """ShapeDtypeStructs in artifact parameter order."""
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((s, n), f32),   # xsel
+        jax.ShapeDtypeStruct((s,), f32),     # labels
+        jax.ShapeDtypeStruct((s,), f32),     # valid
+        jax.ShapeDtypeStruct((p, n), f32),   # thr
+        jax.ShapeDtypeStruct((p, n), f32),   # scale
+        jax.ShapeDtypeStruct((n, l), f32),   # wleaf
+        jax.ShapeDtypeStruct((l,), f32),     # bias
+        jax.ShapeDtypeStruct((l, c), f32),   # onehot
+    ]
+
+
+def dt_eval_accuracy(xsel, labels, valid, thr, scale, wleaf, bias, onehot):
+    """Accuracy in [0, 1] per chromosome; the AOT entry point."""
+    counts = dt_infer.dt_eval_counts(
+        xsel, labels, valid, thr, scale, wleaf, bias, onehot
+    )
+    denom = jnp.maximum(jnp.sum(valid), 1.0)
+    return (counts / denom,)
+
+
+def dt_eval_accuracy_ref(xsel, labels, valid, thr, scale, wleaf, bias, onehot):
+    """Same graph over the pure-jnp oracle (test-only, never exported)."""
+    from compile.kernels import ref
+
+    counts = ref.dt_eval_counts_ref(
+        xsel, labels, valid, thr, scale, wleaf, bias, onehot
+    )
+    denom = jnp.maximum(jnp.sum(valid), 1.0)
+    return (counts / denom,)

@@ -1,0 +1,194 @@
+"""Kernel-vs-oracle correctness: the CORE signal for the L1/L2 layers.
+
+Three tiers:
+  1. hypothesis sweeps of random shapes/populations: pallas kernel ==
+     pure-jnp oracle, bit-exact (all arithmetic is integer-exact in f32).
+  2. encoding faithfulness: oblivious evaluation == literal per-sample
+     recursive tree walk on randomly grown trees.
+  3. padding semantics: padded samples/comparators/leaves never change
+     results.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dt_infer, ref
+from compile import model
+
+
+def make_problem(rng, s, n, l, c, p, valid_frac=1.0):
+    xsel = rng.random((s, n), dtype=np.float32)
+    labels = rng.integers(0, c, s).astype(np.float32)
+    valid = (rng.random(s) < valid_frac).astype(np.float32)
+    bits = rng.integers(2, 9, (p, n))
+    scale = (2.0 ** bits).astype(np.float32)
+    thr = np.floor(rng.random((p, n)) * scale).astype(np.float32)
+    wleaf, bias, onehot = random_tree_tensors(rng, n, l, c)
+    return xsel, labels, valid, thr, scale, wleaf, bias, onehot
+
+
+def random_tree_tensors(rng, n_pad, l_pad, c_pad):
+    """Random binary tree with <= min(n_pad, l_pad - 1) internal nodes."""
+    node = grow_random_tree(rng, n_pad, l_pad, c_pad)
+    _, wleaf, bias, onehot, _ = ref.tree_tensors(
+        node["feat"], node["left"], node["right"], node["leaf_class"],
+        n_pad, l_pad, c_pad,
+    )
+    return wleaf, bias, onehot
+
+
+def grow_random_tree(rng, n_pad, l_pad, c_pad, n_feat=None):
+    """Explicit node-table random tree (for walk-vs-oblivious tests)."""
+    n_feat = n_feat or n_pad
+    max_internal = int(min(n_pad, l_pad - 1))
+    n_internal = int(rng.integers(1, max_internal + 1))
+    feat, left, right, leaf_class = [], [], [], []
+
+    def add(internal_budget):
+        idx = len(feat)
+        if internal_budget[0] > 0 and (len(feat) == 0 or rng.random() < 0.7):
+            internal_budget[0] -= 1
+            feat.append(int(rng.integers(0, n_feat)))
+            left.append(-1); right.append(-1); leaf_class.append(-1)
+            l_child = add(internal_budget)
+            r_child = add(internal_budget)
+            left[idx], right[idx] = l_child, r_child
+        else:
+            feat.append(-1); left.append(-1); right.append(-1)
+            leaf_class.append(int(rng.integers(0, c_pad)))
+        return idx
+
+    add([n_internal])
+    return {
+        "feat": np.array(feat), "left": np.array(left),
+        "right": np.array(right), "leaf_class": np.array(leaf_class),
+    }
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s_tiles=st.integers(1, 3),
+    n=st.integers(2, 96),
+    l_extra=st.integers(1, 32),
+    c=st.integers(2, 16),
+    p=st.integers(1, 8),
+    valid_frac=st.sampled_from([0.5, 0.9, 1.0]),
+)
+def test_kernel_matches_ref_hypothesis(seed, s_tiles, n, l_extra, c, p, valid_frac):
+    rng = np.random.default_rng(seed)
+    s = dt_infer.TILE_S * s_tiles
+    l = min(n, l_extra) + 1 + int(np.random.default_rng(seed + 1).integers(0, 8))
+    prob = make_problem(rng, s, n, l, c, p, valid_frac)
+    got = np.asarray(dt_infer.dt_eval_counts(*prob))
+    want = np.asarray(ref.dt_eval_counts_ref(*[jnp.asarray(a) for a in prob]))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_oblivious_matches_tree_walk(seed):
+    """The tensor encoding routes every sample to the same leaf/class as a
+    literal recursive walk with per-node quantization."""
+    rng = np.random.default_rng(seed)
+    n_pad, l_pad, c_pad = 32, 33, 8
+    s = dt_infer.TILE_S
+    node = grow_random_tree(rng, n_pad, l_pad, c_pad, n_feat=5)
+    comp_of_node, wleaf, bias, onehot, comp_feat = ref.tree_tensors(
+        node["feat"], node["left"], node["right"], node["leaf_class"],
+        n_pad, l_pad, c_pad,
+    )
+    n_comp = len(comp_of_node)
+    x = rng.random((s, 5), dtype=np.float32)
+    bits = rng.integers(2, 9, n_pad)
+    scale = (2.0 ** bits).astype(np.float32)
+    thr = np.floor(rng.random(n_pad) * scale).astype(np.float32)
+
+    # node-table view of the same approximation
+    nt_thr = np.zeros(len(node["feat"]), np.float32)
+    nt_scale = np.ones(len(node["feat"]), np.float32)
+    for nd, j in comp_of_node.items():
+        nt_thr[nd] = thr[j]
+        nt_scale[nd] = scale[j]
+
+    walk = np.array([
+        ref.dt_walk_predict(node["feat"], nt_thr, nt_scale, node["left"],
+                            node["right"], node["leaf_class"], x[i])
+        for i in range(s)
+    ], dtype=np.float32)
+
+    xsel = x[:, comp_feat]                      # gather per comparator slot
+    valid = np.ones(s, np.float32)
+    got = np.asarray(dt_infer.dt_eval_counts(
+        xsel, walk, valid, thr[None, :], scale[None, :], wleaf, bias, onehot,
+    ))
+    # labels == walk predictions, so a faithful encoding scores 100%.
+    assert got[0] == s, f"oblivious eval disagrees with tree walk: {got[0]}/{s}"
+
+
+def test_padding_invariance():
+    """Adding padded comparators/leaves/samples never changes counts."""
+    rng = np.random.default_rng(7)
+    s, n, l, c, p = dt_infer.TILE_S, 8, 9, 4, 4
+    xsel, labels, valid, thr, scale, wleaf, bias, onehot = make_problem(
+        rng, s, n, l, c, p)
+    base = np.asarray(dt_infer.dt_eval_counts(
+        xsel, labels, valid, thr, scale, wleaf, bias, onehot))
+
+    n2, l2, s2 = n + 8, l + 7, s + dt_infer.TILE_S
+    xsel2 = np.zeros((s2, n2), np.float32); xsel2[:s, :n] = xsel
+    labels2 = np.zeros(s2, np.float32); labels2[:s] = labels
+    valid2 = np.zeros(s2, np.float32); valid2[:s] = valid
+    thr2 = np.zeros((p, n2), np.float32); thr2[:, :n] = thr
+    scale2 = np.ones((p, n2), np.float32); scale2[:, :n] = scale
+    wleaf2 = np.zeros((n2, l2), np.float32); wleaf2[:n, :l] = wleaf
+    bias2 = np.full(l2, 1e6, np.float32); bias2[:l] = bias
+    onehot2 = np.zeros((l2, c), np.float32); onehot2[:l] = onehot
+    padded = np.asarray(dt_infer.dt_eval_counts(
+        xsel2, labels2, valid2, thr2, scale2, wleaf2, bias2, onehot2))
+    np.testing.assert_array_equal(base, padded)
+
+
+def test_exactly_one_leaf_active():
+    """Structural invariant: every sample activates exactly one leaf."""
+    rng = np.random.default_rng(3)
+    s, n, l, c, p = dt_infer.TILE_S, 16, 17, 5, 3
+    xsel, labels, valid, thr, scale, wleaf, bias, onehot = make_problem(
+        rng, s, n, l, c, p)
+    xq = np.minimum(np.floor(xsel[None] * scale[:, None]), scale[:, None] - 1)
+    cmp = (xq <= thr[:, None]).astype(np.float32)
+    mis = np.einsum("psn,nl->psl", cmp, wleaf) + bias[None, None]
+    active = (mis == 0).sum(axis=-1)
+    assert np.all(active == 1)
+
+
+def test_quantize_bounds():
+    """Quantized code stays in [0, 2^b - 1] even at x == 1.0."""
+    for b in range(2, 9):
+        sc = np.float32(2.0 ** b)
+        xs = np.array([0.0, 1.0, 0.999999, 1e-9, 0.5], np.float32)
+        q = np.asarray(ref.quantize(jnp.asarray(xs), sc))
+        assert q.min() >= 0.0 and q.max() <= sc - 1
+
+
+@pytest.mark.parametrize("bucket", list(model.BUCKETS))
+def test_bucket_shapes_lowerable(bucket):
+    """Every shape bucket traces + lowers (abstract eval only, no compile)."""
+    import jax
+    s, n, l, c, p = model.BUCKETS[bucket]
+    shapes = model.input_shapes(s, n, l, c, p)
+    lowered = jax.jit(model.dt_eval_accuracy).lower(*shapes)
+    assert lowered is not None
+
+
+def test_accuracy_normalization():
+    """model.dt_eval_accuracy divides by the number of *valid* samples."""
+    rng = np.random.default_rng(11)
+    s, n, l, c, p = dt_infer.TILE_S, 4, 5, 3, 2
+    prob = list(make_problem(rng, s, n, l, c, p, valid_frac=0.5))
+    acc = np.asarray(model.dt_eval_accuracy(*prob)[0])
+    counts = np.asarray(dt_infer.dt_eval_counts(*prob))
+    denom = max(prob[2].sum(), 1.0)
+    np.testing.assert_allclose(acc, counts / denom, rtol=1e-6)

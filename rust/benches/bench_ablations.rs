@@ -1,0 +1,133 @@
+//! Ablations on the design choices the paper calls out:
+//!
+//!   1. **Mixed vs uniform precision** (§II-B: "we investigate ultra-low
+//!      precision mixed-precision bespoke architectures … at a finer
+//!      granularity"): run the GA with per-comparator precision genes vs a
+//!      single shared precision, same budget, compare fronts.
+//!   2. **Substitution margin m** (§III-A, paper fixes ±5): sweep
+//!      m ∈ {0, 1, 3, 5, 10} and report the area of the best design within
+//!      1% accuracy loss.
+//!   3. **Estimated vs synthesized area fidelity** (Fig. 5's estimated
+//!      front vs measured points): correlation and mean relative error of
+//!      the LUT-sum estimate across a front.
+
+use axdt::coordinator::{EngineChoice, RunOptions};
+use axdt::data::generators;
+use axdt::dt::{train, TrainConfig};
+use axdt::fitness::{native::NativeEngine, FitnessEvaluator, Problem};
+use axdt::fitness::AccuracyEngine;
+use axdt::ga::{run_nsga2, NsgaConfig};
+use axdt::hw::synth::TreeApprox;
+use axdt::hw::{AreaLut, EgtLibrary};
+use axdt::report;
+use axdt::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new("ablations");
+    let quick = b.quick();
+    let gens = if quick { 4 } else { 15 };
+    let pop = if quick { 12 } else { 32 };
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+
+    // ---- 1. mixed vs uniform precision --------------------------------
+    for dataset in ["seeds", "vertebral"] {
+        let spec = generators::spec(dataset).unwrap();
+        let data = generators::generate(spec, 42);
+        let (train_d, test_d) = data.split(0.3, 42);
+        let tree =
+            train(&train_d, &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 });
+        let problem = Problem::new(spec.id, tree, &test_d, &lut, &lib, 5);
+        let n = problem.n_comparators();
+        let baseline_acc = NativeEngine::accuracy_one(&problem, &TreeApprox::exact(&problem.tree));
+
+        // Mixed precision: the framework as-is.
+        let mut ev = FitnessEvaluator::new(&problem, &lut, NativeEngine::default());
+        let cfg = NsgaConfig { pop_size: pop, generations: gens, seed: 1, ..Default::default() };
+        let mixed = run_nsga2(n, &cfg, &mut ev);
+        let mixed_best = best_area_within(&problem, &lut, &mixed, baseline_acc, 0.01);
+
+        // Uniform precision: exhaustive over the 7 precisions (the
+        // alternative the paper argues against), margin search included.
+        let mut uniform_best = f64::INFINITY;
+        let mut engine = NativeEngine::default();
+        for bits in 2u8..=8 {
+            for margin in [0u32, 5] {
+                let thr_int: Vec<u32> = problem
+                    .thresholds
+                    .iter()
+                    .map(|&t| {
+                        let t0 = axdt::quant::int_threshold(t, bits);
+                        lut.cheapest_in_margin(bits, t0, margin).0
+                    })
+                    .collect();
+                let approx = TreeApprox { bits: vec![bits; n], thr_int };
+                let acc = engine.batch_accuracy(&problem, std::slice::from_ref(&approx))[0];
+                if acc >= baseline_acc - 0.01 {
+                    uniform_best = uniform_best.min(problem.estimate_area(&lut, &approx));
+                }
+            }
+        }
+        b.row(&format!(
+            "ablation/precision/{dataset}: mixed {:.2} mm^2 vs uniform {:.2} mm^2 within 1% loss ({}x finer)",
+            mixed_best,
+            uniform_best,
+            if mixed_best < uniform_best { "mixed wins, " } else { "uniform wins, " },
+        ));
+    }
+
+    // ---- 2. margin sweep ------------------------------------------------
+    for margin in [0u32, 1, 3, 5, 10] {
+        let opts = RunOptions {
+            pop_size: pop,
+            generations: gens,
+            margin_max: margin,
+            engine: EngineChoice::Native,
+            ..Default::default()
+        };
+        let run = report::fig5_run("seeds", &opts, None).unwrap();
+        b.row(&format!(
+            "ablation/margin/seeds m=±{margin}: best area @1% loss = {:.2} mm^2 (gain {:.2}x)",
+            run.best_within_loss(0.01).map(|p| p.measured.area_mm2).unwrap_or(f64::NAN),
+            run.area_gain(0.01).unwrap_or(f64::NAN),
+        ));
+    }
+
+    // ---- 3. estimated vs synthesized area fidelity -----------------------
+    let opts = RunOptions {
+        pop_size: pop,
+        generations: gens,
+        engine: EngineChoice::Native,
+        ..Default::default()
+    };
+    for dataset in ["seeds", "balance"] {
+        let run = report::fig5_run(dataset, &opts, None).unwrap();
+        let mut rel_err = Vec::new();
+        for p in &run.front {
+            if p.measured.area_mm2 > 0.0 {
+                rel_err.push((p.est_area_mm2 - p.measured.area_mm2).abs() / p.measured.area_mm2);
+            }
+        }
+        let mean_err = rel_err.iter().sum::<f64>() / rel_err.len().max(1) as f64;
+        b.row(&format!(
+            "ablation/estimate-fidelity/{dataset}: mean |est-meas|/meas = {:.1}% over {} front designs",
+            100.0 * mean_err,
+            rel_err.len(),
+        ));
+    }
+}
+
+fn best_area_within(
+    problem: &Problem,
+    lut: &AreaLut,
+    res: &axdt::ga::NsgaResult,
+    baseline_acc: f64,
+    loss: f64,
+) -> f64 {
+    let ctx = problem.decode_context(lut);
+    res.pareto_front()
+        .iter()
+        .filter(|s| 1.0 - s.objectives[0] >= baseline_acc - loss)
+        .map(|s| problem.estimate_area(lut, &s.chromosome.decode(&ctx)))
+        .fold(f64::INFINITY, f64::min)
+}

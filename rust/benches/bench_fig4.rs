@@ -1,0 +1,45 @@
+//! Fig. 4 regeneration: bespoke-comparator area vs hardwired threshold, at
+//! 6-bit (a) and 8-bit (b) precision, plus synthesis-throughput timings
+//! (the LUT build cost is the one-time setup of the GA's area oracle).
+
+use axdt::hw::synth::synth_comparator;
+use axdt::hw::{AreaLut, EgtLibrary};
+use axdt::util::bench::{black_box, Bench};
+use axdt::util::stats::Summary;
+
+fn main() {
+    let mut b = Bench::new("fig4");
+    let lib = EgtLibrary::default();
+
+    // The figure.
+    let (text, c6, c8) = axdt::report::fig4();
+    b.row(&text);
+
+    // Shape diagnostics the paper's narrative relies on: non-linearity and
+    // the existence of much-cheaper neighbours.
+    for (bits, curve) in [(6u8, &c6), (8u8, &c8)] {
+        let s = Summary::from_slice(curve);
+        let mut neighbour_gain = Summary::new();
+        let lut = AreaLut::build(&lib);
+        for t in 0..curve.len() as u32 {
+            let (_, best) = lut.cheapest_in_margin(bits, t, 5);
+            if curve[t as usize] > 0.0 {
+                neighbour_gain.push(best / curve[t as usize]);
+            }
+        }
+        b.row(&format!(
+            "fig4/{bits}bit: area mean {:.3} mm^2, p10 {:.3}, p90 {:.3}; ±5 substitution keeps {:.0}% of area on median",
+            s.mean(),
+            s.percentile(0.1),
+            s.percentile(0.9),
+            100.0 * neighbour_gain.median(),
+        ));
+    }
+
+    // Timings.
+    b.iter("synth_comparator/8bit_t170", || black_box(synth_comparator(8, 170)));
+    b.iter("synth_comparator/6bit_t42", || black_box(synth_comparator(6, 42)));
+    b.iter("area_lut_build/all_508_comparators", || {
+        black_box(AreaLut::build(&lib))
+    });
+}

@@ -1,0 +1,55 @@
+//! Fig. 5 regeneration: NSGA-II pareto fronts per dataset.
+//!
+//! Environment knobs (benches must stay bounded):
+//!   AXDT_BENCH_DATASETS  comma list (default: seeds,vertebral,balance —
+//!                        one per size class; use "all" for the full 10)
+//!   AXDT_BENCH_POP / AXDT_BENCH_GENS   GA budget (default 32 / 12)
+//!   AXDT_BENCH_ENGINE    native | xla (default native; xla needs artifacts)
+//!
+//! The full-scale fronts for all 10 datasets are produced by
+//! `examples/paper_repro.rs` / `axdt repro all` and recorded in
+//! EXPERIMENTS.md.
+
+use axdt::coordinator::{EngineChoice, EvalService, RunOptions};
+use axdt::report;
+use axdt::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig5");
+    let datasets = match std::env::var("AXDT_BENCH_DATASETS").ok().as_deref() {
+        None => vec!["seeds".to_string(), "vertebral".to_string(), "balance".to_string()],
+        Some("all") => axdt::data::generators::all_ids().iter().map(|s| s.to_string()).collect(),
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+    };
+    let pop: usize = std::env::var("AXDT_BENCH_POP").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
+    let gens: usize =
+        std::env::var("AXDT_BENCH_GENS").ok().and_then(|v| v.parse().ok()).unwrap_or(12);
+    let engine = match std::env::var("AXDT_BENCH_ENGINE").ok().as_deref() {
+        Some("xla") => EngineChoice::Xla,
+        _ => EngineChoice::Native,
+    };
+    let service = match engine {
+        EngineChoice::Xla => Some(EvalService::spawn_xla("artifacts").expect("make artifacts")),
+        _ => None,
+    };
+
+    let opts = RunOptions { pop_size: pop, generations: gens, engine, ..Default::default() };
+    for d in &datasets {
+        let t0 = std::time::Instant::now();
+        let run = report::fig5_run(d, &opts, service.as_ref()).expect("fig5 run");
+        let elapsed = t0.elapsed();
+        b.row(&report::render_fig5(&run));
+        b.record_once(&format!("optimize/{d}/pop{pop}x{gens}"), elapsed);
+        b.row(&format!(
+            "fig5/{d}: {:.1} evals/s, {} front points, area gain @1% = {:.2}x, @2% = {:.2}x",
+            run.evaluations as f64 / run.elapsed_s,
+            run.front.len(),
+            run.area_gain(0.01).unwrap_or(f64::NAN),
+            run.area_gain(0.02).unwrap_or(f64::NAN),
+        ));
+    }
+    if let Some(svc) = service {
+        b.row(&format!("eval service: {}", svc.metrics.render()));
+        svc.shutdown();
+    }
+}

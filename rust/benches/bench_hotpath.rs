@@ -1,0 +1,110 @@
+//! Fitness hot-path microbenchmarks (the paper's §IV time-complexity
+//! discussion: "the slowest single-chromosome evaluation had a duration of
+//! 3.08 ms, for the HAR dataset").
+//!
+//! Measures per-chromosome accuracy-evaluation latency for:
+//!   * the native tree-walk engine, single chromosome and batched;
+//!   * the XLA artifact, amortized over a full population execution
+//!     (requires `make artifacts`; skipped otherwise);
+//! on the small (seeds) and large (HAR) ends of the workload spectrum,
+//! plus coordinator overhead (service round-trip vs direct call).
+
+use std::sync::Arc;
+
+use axdt::coordinator::{EvalService, XlaEngine};
+use axdt::data::generators;
+use axdt::dt::{train, TrainConfig};
+use axdt::fitness::native::NativeEngine;
+use axdt::fitness::{AccuracyEngine, Problem};
+use axdt::hw::synth::TreeApprox;
+use axdt::hw::{AreaLut, EgtLibrary};
+use axdt::util::bench::{black_box, Bench};
+use axdt::util::rng::Pcg64;
+
+fn problem_for(dataset: &str) -> Problem {
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+    let spec = generators::spec(dataset).unwrap();
+    let data = generators::generate(spec, 42);
+    let (train_d, test_d) = data.split(0.3, 42);
+    let tree = train(&train_d, &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 });
+    Problem::new(spec.id, tree, &test_d, &lut, &lib, 5)
+}
+
+fn random_batch(p: &Problem, count: usize, seed: u64) -> Vec<TreeApprox> {
+    let mut rng = Pcg64::seeded(seed);
+    let n = p.n_comparators();
+    (0..count)
+        .map(|_| {
+            let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+            let thr_int: Vec<u32> = (0..n)
+                .map(|j| axdt::quant::int_threshold(p.thresholds[j], bits[j]))
+                .collect();
+            TreeApprox { bits, thr_int }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("hotpath");
+    let quick = b.quick();
+
+    for dataset in ["seeds", "har"] {
+        if quick && dataset == "har" {
+            continue;
+        }
+        let p = problem_for(dataset);
+        let batch32 = random_batch(&p, 32, 7);
+
+        // Native: single chromosome.
+        b.iter(&format!("native_single/{dataset}"), || {
+            black_box(NativeEngine::accuracy_one(&p, &batch32[0]))
+        });
+        // Native: batch of 32 across the thread pool (per-chromosome cost
+        // is this divided by 32).
+        let mut native = NativeEngine::default();
+        b.iter(&format!("native_batch32/{dataset}"), || {
+            black_box(native.batch_accuracy(&p, &batch32))
+        });
+    }
+
+    // XLA path (skip silently when artifacts are absent).
+    match EvalService::spawn_xla("artifacts") {
+        Err(e) => b.row(&format!("xla: skipped ({e})")),
+        Ok(svc) => {
+            for dataset in ["seeds", "har"] {
+                if quick && dataset == "har" {
+                    continue;
+                }
+                let p = Arc::new(problem_for(dataset));
+                let mut engine = XlaEngine::register(&svc, Arc::clone(&p)).unwrap();
+                let batch32 = random_batch(&p, 32, 7);
+                // Warm (compile + first exec) before timing.
+                let _ = engine.batch_accuracy(&p, &batch32[..1]);
+                b.iter(&format!("xla_exec_pop32/{dataset}"), || {
+                    black_box(engine.batch_accuracy(&p, &batch32))
+                });
+                b.iter(&format!("xla_exec_pop1/{dataset}"), || {
+                    black_box(engine.batch_accuracy(&p, &batch32[..1]))
+                });
+            }
+            b.row(&format!("eval service: {}", svc.metrics.render()));
+            b.row("paper reference: slowest single-chromosome eval = 3.08 ms (HAR, python)");
+            svc.shutdown();
+        }
+    }
+
+    // Coordinator overhead: service round-trip vs direct native call.
+    let p = Arc::new(problem_for("seeds"));
+    let svc = EvalService::spawn_native(32);
+    let mut via_service = XlaEngine::register(&svc, Arc::clone(&p)).unwrap();
+    let batch = random_batch(&p, 32, 9);
+    let mut direct = NativeEngine::default();
+    b.iter("coordinator_overhead/direct_batch32", || {
+        black_box(direct.batch_accuracy(&p, &batch))
+    });
+    b.iter("coordinator_overhead/service_batch32", || {
+        black_box(via_service.batch_accuracy(&p, &batch))
+    });
+    svc.shutdown();
+}

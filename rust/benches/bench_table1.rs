@@ -1,0 +1,53 @@
+//! Table I regeneration + stage timing.
+//!
+//! Prints the paper's Table I (exact bespoke baselines, paper values
+//! alongside) and times each pipeline stage — dataset generation, CART
+//! training, bespoke synthesis — for a small/medium/large dataset.
+//!
+//! Run: `cargo bench --bench bench_table1` (add `-- --quick` for CI).
+
+use axdt::data::generators;
+use axdt::dt::{train, TrainConfig};
+use axdt::hw::synth::{self, TreeApprox};
+use axdt::hw::EgtLibrary;
+use axdt::report;
+use axdt::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("table1");
+
+    // The table itself (the paper artifact).
+    let datasets: Vec<String> = generators::all_ids().iter().map(|s| s.to_string()).collect();
+    let t0 = std::time::Instant::now();
+    let (text, rows) = report::table1(&datasets, 42).expect("table1");
+    b.row(&text);
+    b.record_once("full_table_10_datasets", t0.elapsed());
+
+    // Stage timings on representative datasets.
+    let lib = EgtLibrary::default();
+    for id in ["seeds", "cardio", "whitewine"] {
+        let spec = generators::spec(id).unwrap();
+        b.iter(&format!("generate/{id}"), || black_box(generators::generate(spec, 42)));
+
+        let data = generators::generate(spec, 42);
+        let (train_d, _) = data.split(0.3, 42);
+        let cfg = TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 };
+        if b.quick() && id == "whitewine" {
+            continue;
+        }
+        b.iter(&format!("train/{id}"), || black_box(train(&train_d, &cfg)));
+
+        let tree = train(&train_d, &cfg);
+        let approx = TreeApprox::exact(&tree);
+        b.iter(&format!("synth_exact/{id}"), || {
+            black_box(synth::synth_tree(&tree, &approx).netlist.report(&lib))
+        });
+    }
+
+    // Fidelity summary vs the paper (goes to EXPERIMENTS.md).
+    let mut max_acc_err: f64 = 0.0;
+    for r in &rows {
+        max_acc_err = max_acc_err.max((r.accuracy - r.spec.paper_accuracy).abs());
+    }
+    b.row(&format!("max |accuracy - paper| across datasets: {max_acc_err:.3}"));
+}

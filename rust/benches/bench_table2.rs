@@ -1,0 +1,49 @@
+//! Table II regeneration: area/power of the best design within a 1%
+//! accuracy-loss budget, with Blue-Spark-battery (<3 mW) and
+//! energy-harvester (<0.1 mW) feasibility classification, plus the
+//! aggregate area/power gain the paper headlines (3.2× / 3.4×).
+//!
+//! Same environment knobs as bench_fig5 (AXDT_BENCH_DATASETS/POP/GENS/
+//! ENGINE).  Selection + full re-synthesis of the winning designs is timed.
+
+use axdt::coordinator::{EngineChoice, EvalService, RunOptions};
+use axdt::report;
+use axdt::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("table2");
+    let datasets = match std::env::var("AXDT_BENCH_DATASETS").ok().as_deref() {
+        None => vec!["seeds".to_string(), "vertebral".to_string(), "mammographic".to_string()],
+        Some("all") => axdt::data::generators::all_ids().iter().map(|s| s.to_string()).collect(),
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+    };
+    let pop: usize = std::env::var("AXDT_BENCH_POP").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
+    let gens: usize =
+        std::env::var("AXDT_BENCH_GENS").ok().and_then(|v| v.parse().ok()).unwrap_or(15);
+    let engine = match std::env::var("AXDT_BENCH_ENGINE").ok().as_deref() {
+        Some("xla") => EngineChoice::Xla,
+        _ => EngineChoice::Native,
+    };
+    let service = match engine {
+        EngineChoice::Xla => Some(EvalService::spawn_xla("artifacts").expect("make artifacts")),
+        _ => None,
+    };
+    let opts = RunOptions { pop_size: pop, generations: gens, engine, ..Default::default() };
+
+    let mut runs = Vec::new();
+    for d in &datasets {
+        let t0 = std::time::Instant::now();
+        runs.push(report::fig5_run(d, &opts, service.as_ref()).expect("run"));
+        b.record_once(&format!("optimize/{d}"), t0.elapsed());
+    }
+
+    let t0 = std::time::Instant::now();
+    let table = report::table2(&runs, 0.01);
+    b.record_once("select_and_render/loss1pct", t0.elapsed());
+    b.row(&table);
+    b.row(&report::table2(&runs, 0.02));
+
+    if let Some(svc) = service {
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,35 @@
+// Dev probe: verify an HLO-text artifact parses, compiles and executes on the
+// PJRT CPU client. Usage: probe_artifact <path> [s n l c p]
+fn main() -> anyhow::Result<()> {
+    let path = std::env::args().nth(1).expect("path");
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(&path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    println!("compiled OK: {}", path);
+    let dims: Vec<usize> = std::env::args().skip(2).map(|a| a.parse().unwrap()).collect();
+    if dims.len() == 5 {
+        let (s, n, l, c, p) = (dims[0], dims[1], dims[2], dims[3], dims[4]);
+        let f = |len: usize, v: f32| xla::Literal::vec1(&vec![v; len]);
+        let xsel = f(s * n, 0.5).reshape(&[s as i64, n as i64])?;
+        let labels = f(s, 1.0);
+        let valid = f(s, 1.0);
+        let thr = f(p * n, 3.0).reshape(&[p as i64, n as i64])?;
+        let scale = f(p * n, 16.0).reshape(&[p as i64, n as i64])?;
+        let mut wl = vec![0f32; n * l];
+        wl[0] = -1.0; wl[1] = 1.0; // comparator 0 -> leaf0 (left), leaf1 (right)
+        let wleaf = xla::Literal::vec1(&wl).reshape(&[n as i64, l as i64])?;
+        let mut bi = vec![1e6f32; l];
+        bi[0] = 1.0; bi[1] = 0.0;
+        let bias = xla::Literal::vec1(&bi);
+        let mut oh = vec![0f32; l * c];
+        oh[1] = 1.0; oh[c + 3] = 1.0;
+        let onehot = xla::Literal::vec1(&oh).reshape(&[l as i64, c as i64])?;
+        let t0 = std::time::Instant::now();
+        let res = exe.execute::<xla::Literal>(&[xsel, labels, valid, thr, scale, wleaf, bias, onehot])?[0][0]
+            .to_literal_sync()?;
+        let acc = res.to_tuple1()?.to_vec::<f32>()?;
+        println!("exec {:?} acc[0..4]={:?}", t0.elapsed(), &acc[..4.min(acc.len())]);
+    }
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! Run configuration: defaults ← JSON config file ← CLI flags.
+//!
+//! The `axdt` launcher resolves its configuration in three layers, each
+//! overriding the previous: built-in defaults, an optional `--config
+//! file.json`, then explicit command-line options.  `to_json`/`from_json`
+//! round-trip so runs can be archived next to their results.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::EngineChoice;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Fully resolved run configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub seed: u64,
+    pub datasets: Vec<String>,
+    pub pop_size: usize,
+    pub generations: usize,
+    pub margin_max: u32,
+    pub engine: String,
+    pub artifact_dir: String,
+    pub threads: usize,
+    pub accuracy_loss: f64,
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            seed: 42,
+            datasets: crate::data::generators::all_ids()
+                .into_iter()
+                .map(String::from)
+                .collect(),
+            pop_size: 48,
+            generations: 30,
+            margin_max: 5,
+            engine: "xla".into(),
+            artifact_dir: "artifacts".into(),
+            threads: 0, // auto
+            accuracy_loss: 0.01,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Layer CLI options (and optional `--config`) over the defaults.
+    pub fn resolve(args: &Args) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            cfg = RunConfig::from_json(&text)?;
+        }
+        cfg.seed = args.u64_or("seed", cfg.seed)?;
+        if args.get("datasets").is_some() {
+            cfg.datasets = args.list_or("datasets", &[]);
+            if cfg.datasets.len() == 1 && cfg.datasets[0] == "all" {
+                cfg.datasets = crate::data::generators::all_ids()
+                    .into_iter()
+                    .map(String::from)
+                    .collect();
+            }
+        }
+        cfg.pop_size = args.usize_or("pop", cfg.pop_size)?;
+        cfg.generations = args.usize_or("generations", cfg.generations)?;
+        cfg.margin_max = args.u64_or("margin", cfg.margin_max as u64)? as u32;
+        cfg.engine = args.str_or("engine", &cfg.engine);
+        cfg.artifact_dir = args.str_or("artifacts", &cfg.artifact_dir);
+        cfg.threads = args.usize_or("threads", cfg.threads)?;
+        cfg.accuracy_loss = args.f64_or("loss", cfg.accuracy_loss)?;
+        cfg.out_dir = args.str_or("out", &cfg.out_dir);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        EngineChoice::parse(&self.engine)?;
+        if self.pop_size < 4 {
+            return Err(anyhow!("pop_size must be >= 4"));
+        }
+        if self.datasets.is_empty() {
+            return Err(anyhow!("no datasets selected"));
+        }
+        for d in &self.datasets {
+            if crate::data::generators::spec(d).is_none() {
+                return Err(anyhow!("unknown dataset '{d}'"));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.accuracy_loss) {
+            return Err(anyhow!("loss must be in [0,1]"));
+        }
+        Ok(())
+    }
+
+    pub fn engine_choice(&self) -> EngineChoice {
+        EngineChoice::parse(&self.engine).expect("validated")
+    }
+
+    pub fn run_options(&self) -> crate::coordinator::RunOptions {
+        crate::coordinator::RunOptions {
+            seed: self.seed,
+            pop_size: self.pop_size,
+            generations: self.generations,
+            margin_max: self.margin_max,
+            engine: self.engine_choice(),
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "datasets",
+                Json::Arr(self.datasets.iter().map(|d| Json::str(d.clone())).collect()),
+            ),
+            ("pop_size", Json::num(self.pop_size as f64)),
+            ("generations", Json::num(self.generations as f64)),
+            ("margin_max", Json::num(self.margin_max as f64)),
+            ("engine", Json::str(self.engine.clone())),
+            ("artifact_dir", Json::str(self.artifact_dir.clone())),
+            ("threads", Json::num(self.threads as f64)),
+            ("accuracy_loss", Json::num(self.accuracy_loss)),
+            ("out_dir", Json::str(self.out_dir.clone())),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(text: &str) -> Result<RunConfig> {
+        let j = Json::parse(text).context("parsing config json")?;
+        let d = RunConfig::default();
+        let get_num = |k: &str, dv: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dv);
+        let get_str =
+            |k: &str, dv: &str| j.get(k).and_then(Json::as_str).unwrap_or(dv).to_string();
+        let datasets = match j.get("datasets").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect(),
+            None => d.datasets.clone(),
+        };
+        let cfg = RunConfig {
+            seed: get_num("seed", d.seed as f64) as u64,
+            datasets,
+            pop_size: get_num("pop_size", d.pop_size as f64) as usize,
+            generations: get_num("generations", d.generations as f64) as usize,
+            margin_max: get_num("margin_max", d.margin_max as f64) as u32,
+            engine: get_str("engine", &d.engine),
+            artifact_dir: get_str("artifact_dir", &d.artifact_dir),
+            threads: get_num("threads", d.threads as f64) as usize,
+            accuracy_loss: get_num("accuracy_loss", d.accuracy_loss),
+            out_dir: get_str("out_dir", &d.out_dir),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::{flag, opt, OptSpec};
+
+    const SPEC: &[OptSpec] = &[
+        opt("seed", ""),
+        opt("datasets", ""),
+        opt("pop", ""),
+        opt("generations", ""),
+        opt("margin", ""),
+        opt("engine", ""),
+        opt("artifacts", ""),
+        opt("threads", ""),
+        opt("loss", ""),
+        opt("out", ""),
+        opt("config", ""),
+        flag("verbose", ""),
+    ];
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+        assert_eq!(RunConfig::default().datasets.len(), 10);
+    }
+
+    #[test]
+    fn cli_overrides_defaults() {
+        let args = Args::parse(
+            &sv(&["run", "--seed", "7", "--datasets", "seeds,cardio", "--engine", "native"]),
+            SPEC,
+        )
+        .unwrap();
+        let cfg = RunConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.datasets, sv(&["seeds", "cardio"]));
+        assert_eq!(cfg.engine_choice(), EngineChoice::Native);
+        assert_eq!(cfg.pop_size, 48, "untouched default");
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut cfg = RunConfig::default();
+        cfg.seed = 99;
+        cfg.datasets = sv(&["har"]);
+        cfg.engine = "native".into();
+        let text = cfg.to_json();
+        let back = RunConfig::from_json(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = RunConfig::default();
+        cfg.engine = "quantum".into();
+        assert!(cfg.validate().is_err());
+        let mut cfg2 = RunConfig::default();
+        cfg2.datasets = sv(&["atlantis"]);
+        assert!(cfg2.validate().is_err());
+        let mut cfg3 = RunConfig::default();
+        cfg3.pop_size = 2;
+        assert!(cfg3.validate().is_err());
+    }
+
+    #[test]
+    fn datasets_all_keyword() {
+        let args = Args::parse(&sv(&["--datasets", "all"]), SPEC).unwrap();
+        let cfg = RunConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.datasets.len(), 10);
+    }
+}

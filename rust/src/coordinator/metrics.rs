@@ -1,0 +1,76 @@
+//! Coordinator metrics: lock-free counters + latency aggregation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::Summary;
+
+/// Shared counters for the evaluation service.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// XLA executions issued.
+    pub executions: AtomicU64,
+    /// Chromosomes whose fitness was computed (pre-padding).
+    pub chromosomes: AtomicU64,
+    /// Chromosome slots wasted to padding.
+    pub padded_slots: AtomicU64,
+    /// Problems registered.
+    pub problems: AtomicU64,
+    /// Per-execution latency (ns).
+    latency: Mutex<Summary>,
+}
+
+impl Metrics {
+    pub fn record_execution(&self, real: usize, padded: usize, elapsed_ns: u64) {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        self.chromosomes.fetch_add(real as u64, Ordering::Relaxed);
+        self.padded_slots.fetch_add((padded - real) as u64, Ordering::Relaxed);
+        self.latency.lock().unwrap().push(elapsed_ns as f64);
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        self.latency.lock().unwrap().clone()
+    }
+
+    /// Fraction of executed chromosome slots that were padding.
+    pub fn padding_waste(&self) -> f64 {
+        let real = self.chromosomes.load(Ordering::Relaxed) as f64;
+        let pad = self.padded_slots.load(Ordering::Relaxed) as f64;
+        if real + pad == 0.0 {
+            0.0
+        } else {
+            pad / (real + pad)
+        }
+    }
+
+    /// One-line human summary.
+    pub fn render(&self) -> String {
+        let lat = self.latency_summary();
+        format!(
+            "execs={} chromosomes={} padding_waste={:.1}% exec_latency_p50={} p99={}",
+            self.executions.load(Ordering::Relaxed),
+            self.chromosomes.load(Ordering::Relaxed),
+            100.0 * self.padding_waste(),
+            crate::util::stats::fmt_duration_ns(lat.median()),
+            crate::util::stats::fmt_duration_ns(lat.percentile(0.99)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let m = Metrics::default();
+        m.record_execution(30, 32, 1_000_000);
+        m.record_execution(32, 32, 2_000_000);
+        assert_eq!(m.executions.load(Ordering::Relaxed), 2);
+        assert_eq!(m.chromosomes.load(Ordering::Relaxed), 62);
+        assert_eq!(m.padded_slots.load(Ordering::Relaxed), 2);
+        assert!((m.padding_waste() - 2.0 / 64.0).abs() < 1e-12);
+        assert_eq!(m.latency_summary().len(), 2);
+        assert!(m.render().contains("execs=2"));
+    }
+}

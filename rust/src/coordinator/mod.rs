@@ -1,0 +1,30 @@
+//! L3 coordinator: the evaluation service and the optimization driver.
+//!
+//! The paper's framework is an optimization *service*: many GA populations
+//! (one per dataset, possibly concurrent) need fitness evaluated, and the
+//! expensive part — accuracy over the test set — runs on an accelerator
+//! artifact with fixed shapes.  The coordinator owns that traffic:
+//!
+//! * [`service::EvalService`] — a leader thread that owns the PJRT runtime;
+//!   clients register problems (routing them to a shape bucket, uploading
+//!   static tensors once) and submit chromosome batches over channels.  The
+//!   service splits/pads batches to the artifact's population width,
+//!   executes, and replies.  Tokio is not available in this image, so the
+//!   event loop is plain `std::sync::mpsc` + threads.
+//! * [`service::XlaEngine`] — the client-side [`AccuracyEngine`] facade that
+//!   makes the service pluggable wherever the native engine is.
+//! * [`metrics::Metrics`] — execution counters (executions, chromosomes,
+//!   padding waste, cache traffic, latency) surfaced by the CLI.
+//! * [`driver`] — the per-dataset pipeline: generate → split → train →
+//!   [`crate::fitness::Problem`] → NSGA-II → pareto front with *measured*
+//!   (fully synthesized) area/power for every front design.
+//!
+//! [`AccuracyEngine`]: crate::fitness::AccuracyEngine
+
+pub mod driver;
+pub mod metrics;
+pub mod service;
+
+pub use driver::{optimize_dataset, DatasetRun, EngineChoice, ParetoPoint, RunOptions};
+pub use metrics::Metrics;
+pub use service::{EvalService, XlaEngine};

@@ -1,0 +1,216 @@
+//! Random-forest extension (beyond the paper's evaluation, which covers
+//! single decision trees; §I motivates DT/RF/SVM as the printed-ML family).
+//!
+//! Bagging ensemble of CART trees with majority voting.  The approximation
+//! machinery lifts directly: a forest chromosome is the concatenation of
+//! the member trees' dual-approximation genes, and the bespoke circuit is
+//! the member netlists sharing feature buses plus a printed majority-vote
+//! stage (see [`crate::hw::vote`]).
+
+use super::train::{train, TrainConfig};
+use super::tree::Tree;
+use crate::data::Dataset;
+use crate::hw::synth::TreeApprox;
+use crate::util::rng::Pcg64;
+
+/// Bagging configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ForestConfig {
+    pub n_trees: usize,
+    /// Leaf cap per member tree.
+    pub max_leaves: usize,
+    /// Bootstrap sample fraction (with replacement).
+    pub sample_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        ForestConfig { n_trees: 5, max_leaves: 32, sample_frac: 1.0, seed: 42 }
+    }
+}
+
+/// A trained bagging ensemble.
+#[derive(Clone, Debug)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+    pub n_classes: usize,
+    pub n_features: usize,
+}
+
+impl Forest {
+    /// Majority vote over member predictions (ties → lowest class id).
+    pub fn predict(&self, x: &[f32]) -> u32 {
+        let mut votes = vec![0u32; self.n_classes];
+        for t in &self.trees {
+            votes[t.predict(x) as usize] += 1;
+        }
+        argmax(&votes)
+    }
+
+    pub fn accuracy(&self, x: &[f32], y: &[u32], n_features: usize) -> f64 {
+        if y.is_empty() {
+            return 0.0;
+        }
+        let correct = y
+            .iter()
+            .enumerate()
+            .filter(|&(i, &label)| self.predict(&x[i * n_features..(i + 1) * n_features]) == label)
+            .count();
+        correct as f64 / y.len() as f64
+    }
+
+    /// Total comparators across member trees (forest chromosome length / 2).
+    pub fn n_comparators(&self) -> usize {
+        self.trees.iter().map(|t| t.n_comparators()).sum()
+    }
+
+    /// Concatenated comparator thresholds, member order.
+    pub fn thresholds(&self) -> Vec<f32> {
+        self.trees.iter().flat_map(|t| t.comparator_thresholds()).collect()
+    }
+
+    /// Split a concatenated approximation back into per-tree pieces.
+    pub fn split_approx(&self, approx: &TreeApprox) -> Vec<TreeApprox> {
+        assert_eq!(approx.bits.len(), self.n_comparators());
+        let mut out = Vec::with_capacity(self.trees.len());
+        let mut off = 0;
+        for t in &self.trees {
+            let n = t.n_comparators();
+            out.push(TreeApprox {
+                bits: approx.bits[off..off + n].to_vec(),
+                thr_int: approx.thr_int[off..off + n].to_vec(),
+            });
+            off += n;
+        }
+        out
+    }
+
+    /// The exact 8-bit baseline approximation of the whole forest.
+    pub fn exact_approx(&self) -> TreeApprox {
+        let mut bits = Vec::new();
+        let mut thr = Vec::new();
+        for t in &self.trees {
+            let a = TreeApprox::exact(t);
+            bits.extend(a.bits);
+            thr.extend(a.thr_int);
+        }
+        TreeApprox { bits, thr_int: thr }
+    }
+
+    /// Majority-vote prediction on 8-bit feature codes under a concatenated
+    /// approximation (native fitness path of the forest extension).
+    pub fn predict_codes(&self, approxes: &[TreeApprox], codes: &[u32]) -> u32 {
+        let mut votes = vec![0u32; self.n_classes];
+        for (t, a) in self.trees.iter().zip(approxes) {
+            votes[crate::hw::synth::predict_codes(t, a, codes) as usize] += 1;
+        }
+        argmax(&votes)
+    }
+}
+
+fn argmax(votes: &[u32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in votes.iter().enumerate() {
+        if v > votes[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Train a bagging forest.
+pub fn train_forest(data: &Dataset, cfg: &ForestConfig) -> Forest {
+    let mut rng = Pcg64::new(cfg.seed, 0xF0E5);
+    let n_boot = ((data.n_samples as f64) * cfg.sample_frac).round().max(1.0) as usize;
+    let trees = (0..cfg.n_trees)
+        .map(|_| {
+            // Bootstrap resample (with replacement).
+            let mut x = Vec::with_capacity(n_boot * data.n_features);
+            let mut y = Vec::with_capacity(n_boot);
+            for _ in 0..n_boot {
+                let s = rng.below(data.n_samples as u64) as usize;
+                x.extend_from_slice(data.row(s));
+                y.push(data.y[s]);
+            }
+            let boot = Dataset {
+                name: format!("{}/boot", data.name),
+                x,
+                y,
+                n_samples: n_boot,
+                n_features: data.n_features,
+                n_classes: data.n_classes,
+            };
+            train(&boot, &TrainConfig { max_leaves: cfg.max_leaves, min_samples_split: 2 })
+        })
+        .collect();
+    Forest { trees, n_classes: data.n_classes, n_features: data.n_features }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators;
+
+    fn setup() -> (Forest, Dataset, Dataset) {
+        let spec = generators::spec("seeds").unwrap();
+        let data = generators::generate(spec, 42);
+        let (train_d, test_d) = data.split(0.3, 42);
+        let forest = train_forest(
+            &train_d,
+            &ForestConfig { n_trees: 5, max_leaves: 12, sample_frac: 1.0, seed: 7 },
+        );
+        (forest, train_d, test_d)
+    }
+
+    #[test]
+    fn forest_trains_and_votes() {
+        let (forest, _, test_d) = setup();
+        assert_eq!(forest.trees.len(), 5);
+        for t in &forest.trees {
+            assert!(t.validate().is_ok());
+        }
+        let acc = forest.accuracy(&test_d.x, &test_d.y, test_d.n_features);
+        assert!(acc > 0.75, "forest accuracy {acc}");
+    }
+
+    #[test]
+    fn forest_at_least_close_to_single_tree() {
+        let (forest, train_d, test_d) = setup();
+        let single = train(&train_d, &TrainConfig { max_leaves: 12, min_samples_split: 2 });
+        let acc_f = forest.accuracy(&test_d.x, &test_d.y, test_d.n_features);
+        let acc_t = single.accuracy(&test_d.x, &test_d.y, test_d.n_features);
+        assert!(acc_f >= acc_t - 0.08, "forest {acc_f} vs tree {acc_t}");
+    }
+
+    #[test]
+    fn approx_roundtrip_and_exact_codes_vote() {
+        let (forest, _, test_d) = setup();
+        let exact = forest.exact_approx();
+        assert_eq!(exact.bits.len(), forest.n_comparators());
+        let parts = forest.split_approx(&exact);
+        assert_eq!(parts.len(), forest.trees.len());
+
+        // 8-bit code votes ≈ float votes.
+        let mut agree = 0usize;
+        for s in 0..test_d.n_samples {
+            let row = test_d.row(s);
+            let codes: Vec<u32> = row
+                .iter()
+                .map(|&x| crate::quant::code(x, crate::hw::synth::FEATURE_BITS))
+                .collect();
+            if forest.predict_codes(&parts, &codes) == forest.predict(row) {
+                agree += 1;
+            }
+        }
+        assert!(agree as f64 / test_d.n_samples as f64 > 0.93);
+    }
+
+    #[test]
+    fn bootstrap_diversity() {
+        let (forest, _, _) = setup();
+        // Member trees should not all be identical.
+        let first = format!("{:?}", forest.trees[0].nodes);
+        assert!(forest.trees.iter().skip(1).any(|t| format!("{:?}", t.nodes) != first));
+    }
+}

@@ -1,0 +1,15 @@
+//! Decision-tree substrate: CART training and the tree model.
+//!
+//! The paper trains its exact trees with scikit-learn ("nodes are expanded
+//! until all leaves are pure … maximum number of leafs").  This module is a
+//! from-scratch CART: Gini impurity, midpoint thresholds, best-first
+//! (largest weighted impurity decrease) node expansion with an optional
+//! leaf cap — the exact semantics of sklearn's `max_leaf_nodes` growth.
+
+pub mod forest;
+pub mod prune;
+pub mod train;
+pub mod tree;
+
+pub use train::{train, TrainConfig};
+pub use tree::{Node, Tree};

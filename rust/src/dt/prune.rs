@@ -1,0 +1,259 @@
+//! Approximation-aware tree pruning.
+//!
+//! Threshold substitution can saturate a comparator at `2^b − 1`, making it
+//! constant-true (the `≤` branch always taken).  Synthesis removes the dead
+//! logic automatically (constant propagation), but downstream consumers of
+//! the *tree* — the RTL emitter, the exported model, accuracy evaluation —
+//! benefit from an explicitly pruned structure: fewer comparators, shallower
+//! paths, and an exported design whose documentation matches its silicon
+//! (well, ink).
+
+use super::tree::{Node, Tree};
+use crate::hw::synth::TreeApprox;
+use crate::quant;
+
+/// Result of pruning: the reduced tree + approximation, and the mapping
+/// from new comparator slots to original slots.
+#[derive(Clone, Debug)]
+pub struct Pruned {
+    pub tree: Tree,
+    pub approx: TreeApprox,
+    /// `slot_map[new_slot] == old_slot`.
+    pub slot_map: Vec<usize>,
+    /// Comparators removed because they were constant-true.
+    pub removed_constant: usize,
+    /// Leaves removed as unreachable.
+    pub removed_leaves: usize,
+}
+
+/// Fold constant-true comparators and drop unreachable subtrees.
+pub fn prune(tree: &Tree, approx: &TreeApprox) -> Pruned {
+    let n = tree.n_comparators();
+    assert_eq!(approx.bits.len(), n);
+    assert_eq!(approx.thr_int.len(), n);
+    let mut slot_of_node = vec![usize::MAX; tree.nodes.len()];
+    for (slot, node) in tree.comparator_nodes().into_iter().enumerate() {
+        slot_of_node[node] = slot;
+    }
+
+    // Rebuild reachable structure depth-first.
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut bits = Vec::new();
+    let mut thr_int = Vec::new();
+    let mut slot_map = Vec::new();
+    let mut removed_constant = 0usize;
+
+    // Returns new node index.
+    fn rebuild(
+        tree: &Tree,
+        approx: &TreeApprox,
+        slot_of_node: &[usize],
+        i: usize,
+        nodes: &mut Vec<Node>,
+        bits: &mut Vec<u8>,
+        thr_int: &mut Vec<u32>,
+        slot_map: &mut Vec<usize>,
+        removed_constant: &mut usize,
+    ) -> i32 {
+        let node = tree.nodes[i];
+        if node.is_leaf() {
+            nodes.push(node);
+            return (nodes.len() - 1) as i32;
+        }
+        let slot = slot_of_node[i];
+        let (b, t) = (approx.bits[slot], approx.thr_int[slot]);
+        if t == quant::levels(b) - 1 {
+            // Constant-true: the left branch is always taken.
+            *removed_constant += 1;
+            return rebuild(
+                tree, approx, slot_of_node, node.left as usize, nodes, bits, thr_int,
+                slot_map, removed_constant,
+            );
+        }
+        let idx = nodes.len();
+        nodes.push(node); // children fixed below
+        bits.push(b);
+        thr_int.push(t);
+        slot_map.push(slot);
+        // NOTE: comparator slots are defined by node order; we push nodes
+        // pre-order, so slot indices match `bits`/`thr_int` pushed here only
+        // if internal nodes appear in the same relative order. They do:
+        // comparator_nodes() of the new tree enumerates internal nodes in
+        // node-index order, which is exactly our push order.
+        let l = rebuild(
+            tree, approx, slot_of_node, node.left as usize, nodes, bits, thr_int,
+            slot_map, removed_constant,
+        );
+        let r = rebuild(
+            tree, approx, slot_of_node, node.right as usize, nodes, bits, thr_int,
+            slot_map, removed_constant,
+        );
+        nodes[idx].left = l;
+        nodes[idx].right = r;
+        idx as i32
+    }
+
+    let root = rebuild(
+        tree,
+        approx,
+        &slot_of_node,
+        0,
+        &mut nodes,
+        &mut bits,
+        &mut thr_int,
+        &mut slot_map,
+        &mut removed_constant,
+    );
+    assert_eq!(root, 0);
+
+    let pruned_tree = Tree { nodes, n_features: tree.n_features, n_classes: tree.n_classes };
+    let removed_leaves = tree.n_leaves() - pruned_tree.n_leaves();
+    debug_assert!(pruned_tree.validate().is_ok());
+
+    // Fix the slot ordering: comparator_nodes() is node-index order; our
+    // pre-order pushes interleave leaves, so recompute the permutation.
+    let comp_nodes = pruned_tree.comparator_nodes();
+    // Map node index -> position in push order of internal nodes.
+    let mut push_pos = std::collections::HashMap::new();
+    let mut k = 0usize;
+    for (idx, node) in pruned_tree.nodes.iter().enumerate() {
+        if !node.is_leaf() {
+            push_pos.insert(idx, k);
+            k += 1;
+        }
+    }
+    let mut bits2 = Vec::with_capacity(bits.len());
+    let mut thr2 = Vec::with_capacity(bits.len());
+    let mut slot_map2 = Vec::with_capacity(bits.len());
+    for &node_idx in &comp_nodes {
+        // push order == node-index order for internal nodes? nodes were
+        // appended in pre-order, so node indices increase with push order:
+        // the two orders coincide.
+        let pos = push_pos[&node_idx];
+        bits2.push(bits[pos]);
+        thr2.push(thr_int[pos]);
+        slot_map2.push(slot_map[pos]);
+    }
+
+    Pruned {
+        tree: pruned_tree,
+        approx: TreeApprox { bits: bits2, thr_int: thr2 },
+        slot_map: slot_map2,
+        removed_constant,
+        removed_leaves,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators;
+    use crate::dt::{train, TrainConfig};
+    use crate::hw::synth;
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (Tree, Vec<f32>) {
+        let spec = generators::spec("vertebral").unwrap();
+        let data = generators::generate(spec, 3);
+        let tree = train(&data, &TrainConfig { max_leaves: 16, min_samples_split: 2 });
+        let thr = tree.comparator_thresholds();
+        (tree, thr)
+    }
+
+    #[test]
+    fn pruning_noop_without_constants() {
+        let (tree, _) = setup();
+        let approx = TreeApprox::exact(&tree);
+        // exact thresholds rarely saturate; force non-saturated
+        let approx = TreeApprox {
+            bits: approx.bits.clone(),
+            thr_int: approx.thr_int.iter().map(|&t| t.min(254)).collect(),
+        };
+        let pr = prune(&tree, &approx);
+        assert_eq!(pr.removed_constant, 0);
+        assert_eq!(pr.tree.n_comparators(), tree.n_comparators());
+        // Slot order may be permuted (pruned tree is rebuilt pre-order);
+        // contents must map back exactly.
+        for (new_slot, &old_slot) in pr.slot_map.iter().enumerate() {
+            assert_eq!(pr.approx.thr_int[new_slot], approx.thr_int[old_slot]);
+            assert_eq!(pr.approx.bits[new_slot], approx.bits[old_slot]);
+        }
+    }
+
+    #[test]
+    fn constant_comparators_removed_and_semantics_preserved() {
+        let (tree, thr) = setup();
+        let mut rng = Pcg64::seeded(0xBEE);
+        for _ in 0..10 {
+            let n = tree.n_comparators();
+            let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+            let thr_int: Vec<u32> = (0..n)
+                .map(|j| {
+                    let t = crate::quant::int_threshold(thr[j], bits[j]);
+                    // Saturate ~1/3 of comparators to force pruning.
+                    if rng.chance(0.33) {
+                        crate::quant::levels(bits[j]) - 1
+                    } else {
+                        t.min(crate::quant::levels(bits[j]) - 2)
+                    }
+                })
+                .collect();
+            let approx = TreeApprox { bits, thr_int };
+            let pr = prune(&tree, &approx);
+            assert!(pr.tree.validate().is_ok());
+            // Constant folds remove themselves AND any comparators inside
+            // the dead subtree.
+            assert!(
+                pr.tree.n_comparators() + pr.removed_constant <= tree.n_comparators()
+            );
+            assert!(pr.removed_constant > 0 || pr.tree.n_comparators() == tree.n_comparators());
+            // Prediction equivalence on random codes.
+            for _ in 0..50 {
+                let codes: Vec<u32> =
+                    (0..tree.n_features).map(|_| rng.below(256) as u32).collect();
+                assert_eq!(
+                    synth::predict_codes(&tree, &approx, &codes),
+                    synth::predict_codes(&pr.tree, &pr.approx, &codes)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_synthesis_never_larger() {
+        let (tree, thr) = setup();
+        let lib = crate::hw::EgtLibrary::default();
+        let n = tree.n_comparators();
+        let bits = vec![4u8; n];
+        let thr_int: Vec<u32> = (0..n)
+            .map(|j| {
+                if j % 3 == 0 {
+                    15 // constant-true at 4 bits
+                } else {
+                    crate::quant::int_threshold(thr[j], 4)
+                }
+            })
+            .collect();
+        let approx = TreeApprox { bits, thr_int };
+        let full = synth::synth_tree(&tree, &approx).netlist.area_mm2(&lib);
+        let pr = prune(&tree, &approx);
+        let pruned = synth::synth_tree(&pr.tree, &pr.approx).netlist.area_mm2(&lib);
+        assert!(pruned <= full * 1.0001, "pruned {pruned} full {full}");
+    }
+
+    #[test]
+    fn slot_map_points_to_originals() {
+        let (tree, thr) = setup();
+        let n = tree.n_comparators();
+        let bits = vec![5u8; n];
+        let thr_int: Vec<u32> = (0..n)
+            .map(|j| if j == 0 { 31 } else { crate::quant::int_threshold(thr[j], 5).min(30) })
+            .collect();
+        let approx = TreeApprox { bits, thr_int };
+        let pr = prune(&tree, &approx);
+        for (new_slot, &old_slot) in pr.slot_map.iter().enumerate() {
+            assert_eq!(pr.approx.bits[new_slot], approx.bits[old_slot]);
+            assert_eq!(pr.approx.thr_int[new_slot], approx.thr_int[old_slot]);
+        }
+    }
+}

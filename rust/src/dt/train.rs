@@ -1,0 +1,284 @@
+//! Best-first CART training (Gini), sklearn `max_leaf_nodes` semantics.
+//!
+//! Candidate frontier nodes are expanded in order of *weighted impurity
+//! decrease*; growth stops at the leaf cap or when no split improves Gini —
+//! with no cap this grows until all leaves are pure, exactly the paper's
+//! setup ("nodes are expanded until all leaves are pure").
+
+use super::tree::{Node, Tree};
+use crate::data::Dataset;
+
+/// Training configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    /// Maximum number of leaves (`usize::MAX` = grow to purity).
+    pub max_leaves: usize,
+    /// Do not split nodes with fewer samples.
+    pub min_samples_split: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { max_leaves: usize::MAX, min_samples_split: 2 }
+    }
+}
+
+/// A scored candidate split for one frontier node.
+#[derive(Clone, Debug)]
+struct Candidate {
+    node_idx: usize,
+    samples: Vec<u32>,
+    feat: usize,
+    thr: f32,
+    /// Weighted impurity decrease `n·gini - (nl·gini_l + nr·gini_r)`.
+    gain: f64,
+}
+
+/// Train a tree on `data` (features must already be in [0, 1]).
+pub fn train(data: &Dataset, cfg: &TrainConfig) -> Tree {
+    assert!(data.n_samples > 0, "cannot train on an empty dataset");
+    let mut tree = Tree {
+        nodes: Vec::new(),
+        n_features: data.n_features,
+        n_classes: data.n_classes,
+    };
+
+    let all: Vec<u32> = (0..data.n_samples as u32).collect();
+    tree.nodes.push(leaf_node(data, &all));
+    let mut n_leaves = 1usize;
+
+    // Frontier of splittable leaves, kept sorted by gain (small Vec; the
+    // trees here have at most a few hundred leaves, so O(n) insert is fine).
+    let mut frontier: Vec<Candidate> = Vec::new();
+    if let Some(c) = best_split(data, cfg, 0, all) {
+        frontier.push(c);
+    }
+
+    while n_leaves < cfg.max_leaves {
+        // Pop the highest-gain candidate.
+        let Some(best_pos) = frontier
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.gain.partial_cmp(&b.1.gain).unwrap())
+            .map(|(i, _)| i)
+        else {
+            break;
+        };
+        let cand = frontier.swap_remove(best_pos);
+
+        // Partition the node's samples.
+        let (ls, rs): (Vec<u32>, Vec<u32>) = cand
+            .samples
+            .iter()
+            .partition(|&&s| data.x[s as usize * data.n_features + cand.feat] <= cand.thr);
+        debug_assert!(!ls.is_empty() && !rs.is_empty());
+
+        let li = tree.nodes.len();
+        tree.nodes.push(leaf_node(data, &ls));
+        let ri = tree.nodes.len();
+        tree.nodes.push(leaf_node(data, &rs));
+        let n = &mut tree.nodes[cand.node_idx];
+        n.feat = cand.feat as i32;
+        n.thr = cand.thr;
+        n.left = li as i32;
+        n.right = ri as i32;
+        n.leaf_class = -1;
+        n_leaves += 1;
+
+        if let Some(c) = best_split(data, cfg, li, ls) {
+            frontier.push(c);
+        }
+        if let Some(c) = best_split(data, cfg, ri, rs) {
+            frontier.push(c);
+        }
+    }
+    tree
+}
+
+fn leaf_node(data: &Dataset, samples: &[u32]) -> Node {
+    let mut counts = vec![0u32; data.n_classes];
+    for &s in samples {
+        counts[data.y[s as usize] as usize] += 1;
+    }
+    let class = counts
+        .iter()
+        .enumerate()
+        .max_by_key(|&(i, &c)| (c, std::cmp::Reverse(i)))
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0);
+    Node {
+        feat: -1,
+        thr: 0.0,
+        left: -1,
+        right: -1,
+        leaf_class: class,
+        n_samples: samples.len() as u32,
+    }
+}
+
+#[inline]
+fn gini_from_counts(counts: &[u32], n: f64) -> f64 {
+    if n <= 0.0 {
+        return 0.0;
+    }
+    1.0 - counts.iter().map(|&c| {
+        let p = c as f64 / n;
+        p * p
+    }).sum::<f64>()
+}
+
+/// Best (feature, midpoint-threshold) Gini split for one node, or None if
+/// the node is pure / too small / no split has positive gain.
+fn best_split(
+    data: &Dataset,
+    cfg: &TrainConfig,
+    node_idx: usize,
+    samples: Vec<u32>,
+) -> Option<Candidate> {
+    let n = samples.len();
+    if n < cfg.min_samples_split {
+        return None;
+    }
+    let mut counts = vec![0u32; data.n_classes];
+    for &s in &samples {
+        counts[data.y[s as usize] as usize] += 1;
+    }
+    let parent_gini = gini_from_counts(&counts, n as f64);
+    if parent_gini == 0.0 {
+        return None; // pure
+    }
+    let parent_weighted = n as f64 * parent_gini;
+
+    let mut best: Option<(usize, f32, f64)> = None; // (feat, thr, gain)
+    let mut order: Vec<u32> = samples.clone();
+    let mut left = vec![0u32; data.n_classes];
+
+    for feat in 0..data.n_features {
+        order.sort_unstable_by(|&a, &b| {
+            let va = data.x[a as usize * data.n_features + feat];
+            let vb = data.x[b as usize * data.n_features + feat];
+            va.partial_cmp(&vb).unwrap()
+        });
+        left.iter_mut().for_each(|c| *c = 0);
+        for i in 0..n - 1 {
+            let s = order[i] as usize;
+            left[data.y[s] as usize] += 1;
+            let v = data.x[s * data.n_features + feat];
+            let v_next = data.x[order[i + 1] as usize * data.n_features + feat];
+            if v_next <= v {
+                continue; // no threshold between equal values
+            }
+            let nl = (i + 1) as f64;
+            let nr = (n - i - 1) as f64;
+            let gini_l = gini_from_counts(&left, nl);
+            // right counts = total - left
+            let mut gini_r_sum = 0.0;
+            for k in 0..data.n_classes {
+                let c = (counts[k] - left[k]) as f64 / nr;
+                gini_r_sum += c * c;
+            }
+            let gini_r = 1.0 - gini_r_sum;
+            // sklearn semantics: any valid split of an impure node is
+            // allowed (min_impurity_decrease = 0), so zero-gain splits —
+            // e.g. the root of an XOR pattern — still expand.
+            let gain = parent_weighted - (nl * gini_l + nr * gini_r);
+            if best.map_or(true, |(_, _, g)| gain > g) {
+                let thr = 0.5 * (v + v_next); // midpoint, sklearn convention
+                best = Some((feat, thr, gain));
+            }
+        }
+    }
+    best.map(|(feat, thr, gain)| Candidate { node_idx, samples, feat, thr, gain })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators;
+
+    fn make(xs: &[(f32, f32, u32)]) -> Dataset {
+        Dataset {
+            name: "t".into(),
+            x: xs.iter().flat_map(|&(a, b, _)| [a, b]).collect(),
+            y: xs.iter().map(|&(_, _, c)| c).collect(),
+            n_samples: xs.len(),
+            n_features: 2,
+            n_classes: xs.iter().map(|&(_, _, c)| c + 1).max().unwrap() as usize,
+        }
+    }
+
+    #[test]
+    fn separable_data_trains_to_perfect_accuracy() {
+        let d = make(&[
+            (0.1, 0.9, 0), (0.2, 0.8, 0), (0.15, 0.2, 0),
+            (0.8, 0.1, 1), (0.9, 0.3, 1), (0.7, 0.2, 1),
+        ]);
+        let t = train(&d, &TrainConfig::default());
+        assert!(t.validate().is_ok());
+        assert_eq!(t.accuracy(&d.x, &d.y, 2), 1.0);
+        assert_eq!(t.n_comparators(), 1, "one split suffices");
+    }
+
+    #[test]
+    fn grows_to_purity_without_cap() {
+        // XOR-ish: needs depth 2.
+        let d = make(&[
+            (0.1, 0.1, 0), (0.9, 0.9, 0),
+            (0.1, 0.9, 1), (0.9, 0.1, 1),
+        ]);
+        let t = train(&d, &TrainConfig::default());
+        assert_eq!(t.accuracy(&d.x, &d.y, 2), 1.0);
+        assert!(t.depth() >= 2);
+    }
+
+    #[test]
+    fn leaf_cap_respected() {
+        let s = generators::spec("seeds").unwrap();
+        let data = generators::generate(s, 1);
+        for cap in [2usize, 4, 8] {
+            let t = train(&data, &TrainConfig { max_leaves: cap, min_samples_split: 2 });
+            assert!(t.n_leaves() <= cap, "cap {cap} leaves {}", t.n_leaves());
+            assert_eq!(t.n_comparators(), t.n_leaves() - 1);
+            assert!(t.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn single_class_yields_single_leaf() {
+        let d = make(&[(0.1, 0.1, 0), (0.9, 0.9, 0)]);
+        let t = train(&d, &TrainConfig::default());
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.predict(&[0.5, 0.5]), 0);
+    }
+
+    #[test]
+    fn best_first_matches_gain_order() {
+        // The first split must be the globally best one: x0 at ~0.5
+        // separates classes perfectly, x1 is noise.
+        let d = make(&[
+            (0.1, 0.5, 0), (0.2, 0.1, 0), (0.3, 0.9, 0),
+            (0.7, 0.4, 1), (0.8, 0.95, 1), (0.9, 0.05, 1),
+        ]);
+        let t = train(&d, &TrainConfig { max_leaves: 2, min_samples_split: 2 });
+        assert_eq!(t.nodes[0].feat, 0);
+        assert!((t.nodes[0].thr - 0.5).abs() < 0.21);
+    }
+
+    #[test]
+    fn thresholds_are_midpoints_of_observed_values() {
+        let d = make(&[(0.2, 0.0, 0), (0.4, 0.0, 1)]);
+        let t = train(&d, &TrainConfig::default());
+        assert_eq!(t.nodes[0].thr, 0.3);
+    }
+
+    #[test]
+    fn train_real_generator_accuracy_reasonable() {
+        let s = generators::spec("seeds").unwrap();
+        let data = generators::generate(s, 42);
+        let (train_d, test_d) = data.split(0.3, 42);
+        let t = train(&train_d, &TrainConfig { max_leaves: s.max_leaves, min_samples_split: 2 });
+        let acc = t.accuracy(&test_d.x, &test_d.y, test_d.n_features);
+        assert!(acc > 0.7, "seeds accuracy {acc}");
+        assert!(t.validate().is_ok());
+    }
+}

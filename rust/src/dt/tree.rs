@@ -1,0 +1,308 @@
+//! Tree model: storage, prediction, structural queries, path extraction.
+
+/// One node of a binary decision tree.
+///
+/// Internal nodes test `x[feat] <= thr` (sklearn convention: true = left).
+/// Leaves carry `leaf_class >= 0` and `feat == -1`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Node {
+    pub feat: i32,
+    pub thr: f32,
+    pub left: i32,
+    pub right: i32,
+    pub leaf_class: i32,
+    pub n_samples: u32,
+}
+
+impl Node {
+    pub fn is_leaf(&self) -> bool {
+        self.leaf_class >= 0
+    }
+}
+
+/// A trained decision tree. Node 0 is the root.
+#[derive(Clone, Debug, Default)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+    pub n_features: usize,
+    pub n_classes: usize,
+}
+
+/// One step on a root→leaf path: (comparator slot, required outcome).
+/// `sense == true` means the path takes the `<=` (left) branch.
+pub type PathStep = (usize, bool);
+
+impl Tree {
+    /// Plain (un-approximated) prediction.
+    pub fn predict(&self, x: &[f32]) -> u32 {
+        let mut i = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.is_leaf() {
+                return n.leaf_class as u32;
+            }
+            i = if x[n.feat as usize] <= n.thr {
+                n.left as usize
+            } else {
+                n.right as usize
+            };
+        }
+    }
+
+    /// Test accuracy of the plain tree.
+    pub fn accuracy(&self, x: &[f32], y: &[u32], n_features: usize) -> f64 {
+        if y.is_empty() {
+            return 0.0;
+        }
+        let correct = y
+            .iter()
+            .enumerate()
+            .filter(|&(i, &label)| self.predict(&x[i * n_features..(i + 1) * n_features]) == label)
+            .count();
+        correct as f64 / y.len() as f64
+    }
+
+    /// Internal (comparator) node indices, in node-index order.  The
+    /// position in this list is the node's *comparator slot*: the index used
+    /// by chromosomes, the area LUT, and the tensor encoding alike.
+    pub fn comparator_nodes(&self) -> Vec<usize> {
+        (0..self.nodes.len()).filter(|&i| !self.nodes[i].is_leaf()).collect()
+    }
+
+    /// Leaf node indices in node-index order.
+    pub fn leaf_nodes(&self) -> Vec<usize> {
+        (0..self.nodes.len()).filter(|&i| self.nodes[i].is_leaf()).collect()
+    }
+
+    pub fn n_comparators(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.is_leaf()).count()
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    /// Maximum root→leaf depth (edges).
+    pub fn depth(&self) -> usize {
+        fn rec(t: &Tree, i: usize) -> usize {
+            let n = &t.nodes[i];
+            if n.is_leaf() {
+                0
+            } else {
+                1 + rec(t, n.left as usize).max(rec(t, n.right as usize))
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            rec(self, 0)
+        }
+    }
+
+    /// Root→leaf path for every leaf (leaf-node-index order), as
+    /// (comparator slot, sense) steps.  This is the structure behind the
+    /// kernel's `wleaf`/`bias` encoding and the RTL path-AND trees.
+    pub fn leaf_paths(&self) -> Vec<Vec<PathStep>> {
+        let comp_slot: std::collections::HashMap<usize, usize> = self
+            .comparator_nodes()
+            .into_iter()
+            .enumerate()
+            .map(|(slot, node)| (node, slot))
+            .collect();
+        let mut paths = Vec::with_capacity(self.n_leaves());
+        let mut stack: Vec<PathStep> = Vec::new();
+        fn rec(
+            t: &Tree,
+            i: usize,
+            comp_slot: &std::collections::HashMap<usize, usize>,
+            stack: &mut Vec<PathStep>,
+            out: &mut Vec<Vec<PathStep>>,
+        ) {
+            let n = &t.nodes[i];
+            if n.is_leaf() {
+                out.push(stack.clone());
+                return;
+            }
+            let slot = comp_slot[&i];
+            stack.push((slot, true));
+            rec(t, n.left as usize, comp_slot, stack, out);
+            stack.pop();
+            stack.push((slot, false));
+            rec(t, n.right as usize, comp_slot, stack, out);
+            stack.pop();
+        }
+        if !self.nodes.is_empty() {
+            rec(self, 0, &comp_slot, &mut stack, &mut paths);
+        }
+        // rec emits in DFS order == leaf_nodes() order? DFS visits leaves in
+        // left-to-right order; leaf_nodes() is node-index order. Reorder to
+        // node-index order for a stable slot mapping.
+        let leaf_order = self.leaf_nodes();
+        let mut dfs_leaves = Vec::new();
+        fn dfs_leaf_ids(t: &Tree, i: usize, out: &mut Vec<usize>) {
+            let n = &t.nodes[i];
+            if n.is_leaf() {
+                out.push(i);
+            } else {
+                dfs_leaf_ids(t, n.left as usize, out);
+                dfs_leaf_ids(t, n.right as usize, out);
+            }
+        }
+        if !self.nodes.is_empty() {
+            dfs_leaf_ids(self, 0, &mut dfs_leaves);
+        }
+        let pos: std::collections::HashMap<usize, usize> =
+            dfs_leaves.iter().enumerate().map(|(k, &id)| (id, k)).collect();
+        leaf_order.iter().map(|id| paths[pos[id]].clone()).collect()
+    }
+
+    /// Class id of each leaf, in leaf-node-index order.
+    pub fn leaf_classes(&self) -> Vec<u32> {
+        self.leaf_nodes()
+            .into_iter()
+            .map(|i| self.nodes[i].leaf_class as u32)
+            .collect()
+    }
+
+    /// Feature tested by each comparator slot.
+    pub fn comparator_features(&self) -> Vec<usize> {
+        self.comparator_nodes()
+            .into_iter()
+            .map(|i| self.nodes[i].feat as usize)
+            .collect()
+    }
+
+    /// Threshold of each comparator slot (float, in [0, 1]).
+    pub fn comparator_thresholds(&self) -> Vec<f32> {
+        self.comparator_nodes()
+            .into_iter()
+            .map(|i| self.nodes[i].thr)
+            .collect()
+    }
+
+    /// Structural sanity check: every node reachable exactly once, children
+    /// in bounds, leaves classed, internals not.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty tree".into());
+        }
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![0usize];
+        while let Some(i) = stack.pop() {
+            if i >= self.nodes.len() {
+                return Err(format!("child index {i} out of bounds"));
+            }
+            if seen[i] {
+                return Err(format!("node {i} reachable twice"));
+            }
+            seen[i] = true;
+            let n = &self.nodes[i];
+            if n.is_leaf() {
+                if n.leaf_class as usize >= self.n_classes {
+                    return Err(format!("leaf {i} class {} out of range", n.leaf_class));
+                }
+            } else {
+                if n.feat < 0 || n.feat as usize >= self.n_features {
+                    return Err(format!("node {i} feature {} out of range", n.feat));
+                }
+                stack.push(n.left as usize);
+                stack.push(n.right as usize);
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("unreachable nodes present".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    use super::*;
+
+    /// leaf helper
+    pub fn leaf(class: i32) -> Node {
+        Node { feat: -1, thr: 0.0, left: -1, right: -1, leaf_class: class, n_samples: 1 }
+    }
+
+    /// internal helper
+    pub fn split(feat: i32, thr: f32, left: i32, right: i32) -> Node {
+        Node { feat, thr, left, right, leaf_class: -1, n_samples: 1 }
+    }
+
+    /// Depth-2 demo tree:
+    ///   n0: x0 <= 0.5 ? n1 : n2
+    ///   n1: x1 <= 0.25 ? leaf(0) : leaf(1)
+    ///   n2: leaf(2)
+    pub fn demo_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                split(0, 0.5, 1, 2),
+                split(1, 0.25, 3, 4),
+                leaf(2),
+                leaf(0),
+                leaf(1),
+            ],
+            n_features: 2,
+            n_classes: 3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+
+    #[test]
+    fn predict_routes_correctly() {
+        let t = demo_tree();
+        assert_eq!(t.predict(&[0.4, 0.2]), 0);
+        assert_eq!(t.predict(&[0.4, 0.3]), 1);
+        assert_eq!(t.predict(&[0.6, 0.0]), 2);
+        // boundary: <= goes left
+        assert_eq!(t.predict(&[0.5, 0.25]), 0);
+    }
+
+    #[test]
+    fn structure_queries() {
+        let t = demo_tree();
+        assert_eq!(t.n_comparators(), 2);
+        assert_eq!(t.n_leaves(), 3);
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.comparator_nodes(), vec![0, 1]);
+        assert_eq!(t.leaf_nodes(), vec![2, 3, 4]);
+        assert_eq!(t.leaf_classes(), vec![2, 0, 1]);
+        assert_eq!(t.comparator_features(), vec![0, 1]);
+        assert_eq!(t.comparator_thresholds(), vec![0.5, 0.25]);
+    }
+
+    #[test]
+    fn leaf_paths_match_routing() {
+        let t = demo_tree();
+        let paths = t.leaf_paths();
+        // leaf order: node2 (right of root), node3, node4
+        assert_eq!(paths[0], vec![(0, false)]);
+        assert_eq!(paths[1], vec![(0, true), (1, true)]);
+        assert_eq!(paths[2], vec![(0, true), (1, false)]);
+    }
+
+    #[test]
+    fn validate_accepts_good_rejects_bad() {
+        let t = demo_tree();
+        assert!(t.validate().is_ok());
+        let mut bad = demo_tree();
+        bad.nodes[1].left = 0; // cycle
+        assert!(bad.validate().is_err());
+        let mut bad2 = demo_tree();
+        bad2.nodes[2].leaf_class = 99;
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn accuracy_counts_matches() {
+        let t = demo_tree();
+        let x = [0.4f32, 0.2, 0.6, 0.9];
+        let y = [0u32, 0];
+        assert_eq!(t.accuracy(&x, &y, 2), 0.5);
+    }
+}

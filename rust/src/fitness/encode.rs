@@ -1,0 +1,271 @@
+//! Tensor encoding for the XLA accuracy engine.
+//!
+//! Packs a [`Problem`] into the padded, bucket-shaped operands of the AOT
+//! artifact (see `python/compile/model.py` for the contract):
+//!
+//! * chromosome-independent tensors (`xsel`, `labels`, `valid`, `wleaf`,
+//!   `bias`, `onehot`) are built **once** per problem and reused across
+//!   generations;
+//! * chromosome-dependent tensors (`thr`, `scale`) are packed per batch of
+//!   P approximations.
+//!
+//! Padding conventions (must match the kernel docstring):
+//! padded comparators → zero `wleaf` row; padded leaves → `bias = 1e6`;
+//! padded samples → `valid = 0`.
+
+use super::Problem;
+use crate::hw::synth::TreeApprox;
+
+/// Shape bucket (mirrors `meta.json`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bucket {
+    pub name: String,
+    pub s: usize,
+    pub n: usize,
+    pub l: usize,
+    pub c: usize,
+    pub p: usize,
+}
+
+impl Bucket {
+    /// Does a problem fit this bucket?
+    pub fn fits(&self, problem: &Problem) -> bool {
+        problem.n_test <= self.s
+            && problem.n_comparators() <= self.n
+            && problem.tree.n_leaves() <= self.l
+            && problem.tree.n_classes <= self.c
+    }
+}
+
+/// The chromosome-independent operand set for one (problem, bucket) pair.
+#[derive(Clone, Debug)]
+pub struct StaticTensors {
+    pub bucket: Bucket,
+    pub xsel: Vec<f32>,   // [S, N]
+    pub labels: Vec<f32>, // [S]
+    pub valid: Vec<f32>,  // [S]
+    pub wleaf: Vec<f32>,  // [N, L]
+    pub bias: Vec<f32>,   // [L]
+    pub onehot: Vec<f32>, // [L, C]
+}
+
+/// Build the static tensors for `problem` padded to `bucket`.
+pub fn encode_static(problem: &Problem, bucket: &Bucket) -> StaticTensors {
+    assert!(bucket.fits(problem), "problem does not fit bucket {bucket:?}");
+    let (s, n, l, c) = (bucket.s, bucket.n, bucket.l, bucket.c);
+    let feats = problem.tree.comparator_features();
+    let n_used = feats.len();
+
+    // xsel: gather the slot's feature per sample.
+    let mut xsel = vec![0f32; s * n];
+    for smp in 0..problem.n_test {
+        let row = &problem.test_x[smp * problem.n_features..(smp + 1) * problem.n_features];
+        for (j, &f) in feats.iter().enumerate() {
+            xsel[smp * n + j] = row[f];
+        }
+    }
+    let mut labels = vec![0f32; s];
+    let mut valid = vec![0f32; s];
+    for smp in 0..problem.n_test {
+        labels[smp] = problem.labels[smp] as f32;
+        valid[smp] = 1.0;
+    }
+
+    // Tree structure tensors.
+    let paths = problem.tree.leaf_paths();
+    let classes = problem.tree.leaf_classes();
+    let mut wleaf = vec![0f32; n * l];
+    let mut bias = vec![1e6f32; l];
+    let mut onehot = vec![0f32; l * c];
+    for (leaf, path) in paths.iter().enumerate() {
+        let mut b = 0f32;
+        for &(slot, sense) in path {
+            wleaf[slot * l + leaf] = if sense { -1.0 } else { 1.0 };
+            if sense {
+                b += 1.0;
+            }
+        }
+        bias[leaf] = b;
+        onehot[leaf * c + classes[leaf] as usize] = 1.0;
+    }
+    debug_assert_eq!(paths.len(), problem.tree.n_leaves());
+    let _ = n_used;
+
+    StaticTensors {
+        bucket: bucket.clone(),
+        xsel,
+        labels,
+        valid,
+        wleaf,
+        bias,
+        onehot,
+    }
+}
+
+/// Pack up to `bucket.p` approximations into the (thr, scale) operands.
+/// Short batches are padded by repeating the first entry (results past
+/// `batch.len()` are discarded by the caller).
+pub fn pack_population(
+    problem: &Problem,
+    bucket: &Bucket,
+    batch: &[TreeApprox],
+) -> (Vec<f32>, Vec<f32>) {
+    assert!(!batch.is_empty() && batch.len() <= bucket.p);
+    let (p, n) = (bucket.p, bucket.n);
+    let n_comp = problem.n_comparators();
+    let mut thr = vec![0f32; p * n];
+    let mut scale = vec![1f32; p * n];
+    for row in 0..p {
+        let approx = &batch[row.min(batch.len() - 1)];
+        assert_eq!(approx.bits.len(), n_comp);
+        for j in 0..n_comp {
+            thr[row * n + j] = approx.thr_int[j] as f32;
+            scale[row * n + j] = (1u32 << approx.bits[j]) as f32;
+        }
+        // Padded comparator slots keep thr=0/scale=1; their wleaf rows are
+        // zero so they never influence the mismatch counts.
+    }
+    (thr, scale)
+}
+
+/// Native re-implementation of the artifact's math (used to verify the
+/// XLA runtime end-to-end and as a vectorized second oracle in tests).
+pub fn reference_accuracy(st: &StaticTensors, thr: &[f32], scale: &[f32], p_rows: usize) -> Vec<f64> {
+    let b = &st.bucket;
+    let (s, n, l, c) = (b.s, b.n, b.l, b.c);
+    let denom: f32 = st.valid.iter().sum::<f32>().max(1.0);
+    let mut out = Vec::with_capacity(p_rows);
+    for row in 0..p_rows {
+        let thr_row = &thr[row * n..(row + 1) * n];
+        let scale_row = &scale[row * n..(row + 1) * n];
+        let mut correct = 0f32;
+        for smp in 0..s {
+            if st.valid[smp] == 0.0 {
+                continue;
+            }
+            // comparator bits
+            let mut cmp = vec![0f32; n];
+            for j in 0..n {
+                let x = st.xsel[smp * n + j];
+                let q = (x * scale_row[j]).floor().min(scale_row[j] - 1.0);
+                cmp[j] = if q <= thr_row[j] { 1.0 } else { 0.0 };
+            }
+            // leaf mismatch + argmax class
+            let mut best_class = 0usize;
+            let mut best_score = f32::NEG_INFINITY;
+            let mut scores = vec![0f32; c];
+            for leaf in 0..l {
+                let mut mis = st.bias[leaf];
+                for j in 0..n {
+                    mis += cmp[j] * st.wleaf[j * l + leaf];
+                }
+                if mis == 0.0 {
+                    for cls in 0..c {
+                        scores[cls] += st.onehot[leaf * c + cls];
+                    }
+                }
+            }
+            for (cls, &sc) in scores.iter().enumerate() {
+                if sc > best_score {
+                    best_score = sc;
+                    best_class = cls;
+                }
+            }
+            if best_class as f32 == st.labels[smp] {
+                correct += 1.0;
+            }
+        }
+        out.push((correct / denom) as f64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::native::NativeEngine;
+    use crate::fitness::testutil::small_problem;
+    use crate::fitness::AccuracyEngine;
+    use crate::hw::{AreaLut, EgtLibrary};
+    use crate::util::rng::Pcg64;
+
+    fn bucket_small() -> Bucket {
+        Bucket { name: "small".into(), s: 256, n: 64, l: 64, c: 16, p: 32 }
+    }
+
+    #[test]
+    fn bucket_fit_logic() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        assert!(bucket_small().fits(&p));
+        let tiny = Bucket { name: "t".into(), s: 4, n: 2, l: 2, c: 2, p: 8 };
+        assert!(!tiny.fits(&p));
+    }
+
+    #[test]
+    fn static_tensors_wellformed() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let st = encode_static(&p, &bucket_small());
+        assert_eq!(st.xsel.len(), 256 * 64);
+        assert_eq!(st.valid.iter().sum::<f32>() as usize, p.n_test);
+        // Exactly one onehot entry per real leaf.
+        let ones = st.onehot.iter().filter(|&&v| v == 1.0).count();
+        assert_eq!(ones, p.tree.n_leaves());
+        // Padded leaves unreachable.
+        for leaf in p.tree.n_leaves()..64 {
+            assert!(st.bias[leaf] >= 1e6);
+        }
+    }
+
+    /// The dense tensor formulation must agree exactly with the native
+    /// tree walk on every chromosome — this is the contract the XLA
+    /// artifact is trusted to implement.
+    #[test]
+    fn dense_reference_matches_tree_walk() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let bucket = bucket_small();
+        let st = encode_static(&p, &bucket);
+        let mut rng = Pcg64::seeded(0xD0);
+        let n = p.n_comparators();
+        let batch: Vec<crate::hw::synth::TreeApprox> = (0..5)
+            .map(|_| {
+                let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+                let thr_int: Vec<u32> = (0..n)
+                    .map(|j| {
+                        let t = crate::quant::int_threshold(p.thresholds[j], bits[j]);
+                        crate::quant::substitute(t, rng.int_in(-5, 5) as i32, bits[j])
+                    })
+                    .collect();
+                crate::hw::synth::TreeApprox { bits, thr_int }
+            })
+            .collect();
+        let (thr, scale) = pack_population(&p, &bucket, &batch);
+        let dense = reference_accuracy(&st, &thr, &scale, batch.len());
+        let mut engine = NativeEngine::with_threads(1);
+        let walk = engine.batch_accuracy(&p, &batch);
+        for i in 0..batch.len() {
+            assert!(
+                (dense[i] - walk[i]).abs() < 1e-6,
+                "chromosome {i}: dense {} walk {}",
+                dense[i],
+                walk[i]
+            );
+        }
+    }
+
+    #[test]
+    fn pack_pads_by_repetition() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let bucket = bucket_small();
+        let one = vec![crate::hw::synth::TreeApprox::exact(&p.tree)];
+        let (thr, scale) = pack_population(&p, &bucket, &one);
+        let n = bucket.n;
+        for row in 1..bucket.p {
+            assert_eq!(&thr[row * n..row * n + 4], &thr[..4]);
+            assert_eq!(&scale[row * n..row * n + 4], &scale[..4]);
+        }
+    }
+}

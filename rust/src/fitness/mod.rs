@@ -1,0 +1,312 @@
+//! Fitness evaluation: the two objectives of the genetic search.
+//!
+//! * **Area** (minimize): the paper's high-level estimate — Σ over
+//!   comparators of the area-LUT entry for (precision, substituted
+//!   threshold), plus the tree's fixed routing/encoder logic measured once
+//!   from the exact synthesis.  No EDA run per candidate.
+//! * **Classification error** (minimize): accuracy of the quantized tree on
+//!   the held-out test set, via a pluggable [`AccuracyEngine`]:
+//!   [`native::NativeEngine`] (tree walk, CPU baseline/test oracle) or the
+//!   coordinator's XLA engine (AOT artifact over PJRT).
+//!
+//! [`FitnessEvaluator`] glues both behind the GA's batched
+//! [`crate::ga::Evaluator`] trait, with a phenotype-keyed fitness cache.
+
+pub mod encode;
+pub mod native;
+
+use std::collections::HashMap;
+
+use crate::data::Dataset;
+use crate::dt::Tree;
+use crate::ga::{Chromosome, DecodeContext, Evaluator};
+use crate::hw::synth::{self, TreeApprox, FEATURE_BITS};
+use crate::hw::{AreaLut, EgtLibrary};
+use crate::quant;
+
+/// One optimization problem: a trained tree + its held-out test set +
+/// precomputed structures shared by every fitness evaluation.
+pub struct Problem {
+    pub tree: Tree,
+    pub name: String,
+    /// 8-bit feature codes of the test set, row-major `[s, n_features]`.
+    pub test_codes: Vec<u32>,
+    /// Raw [0,1] features of the test set (XLA tensor packing).
+    pub test_x: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub n_test: usize,
+    pub n_features: usize,
+    /// Float threshold per comparator slot.
+    pub thresholds: Vec<f32>,
+    /// Comparator slot per node index (-1 for leaves).
+    pub slot_of_node: Vec<i32>,
+    /// Fixed (chromosome-independent) logic area: exact-synthesis area
+    /// minus the exact comparators' LUT sum.
+    pub routing_offset_mm2: f64,
+    /// Exact-baseline full synthesis report (Table I row).
+    pub exact_report: crate::hw::HwReport,
+    /// Substitution margin bound (paper: 5).
+    pub margin_max: u32,
+}
+
+impl Problem {
+    /// Precompute everything fitness needs. Runs one exact synthesis (the
+    /// Table I baseline) to calibrate the routing offset.
+    pub fn new(
+        name: &str,
+        tree: Tree,
+        test: &Dataset,
+        lut: &AreaLut,
+        lib: &EgtLibrary,
+        margin_max: u32,
+    ) -> Problem {
+        assert_eq!(test.n_features, tree.n_features);
+        let n_test = test.n_samples;
+        let test_codes: Vec<u32> = test
+            .x
+            .iter()
+            .map(|&x| quant::code(x, FEATURE_BITS))
+            .collect();
+        let thresholds = tree.comparator_thresholds();
+
+        let mut slot_of_node = vec![-1i32; tree.nodes.len()];
+        for (slot, node) in tree.comparator_nodes().into_iter().enumerate() {
+            slot_of_node[node] = slot as i32;
+        }
+
+        let exact = TreeApprox::exact(&tree);
+        let exact_report = synth::synth_tree(&tree, &exact).netlist.report(lib);
+        let exact_lut_sum: f64 = exact
+            .bits
+            .iter()
+            .zip(&exact.thr_int)
+            .map(|(&b, &t)| lut.area(b, t))
+            .sum();
+        let routing_offset_mm2 = (exact_report.area_mm2 - exact_lut_sum).max(0.0);
+
+        Problem {
+            name: name.to_string(),
+            test_x: test.x.clone(),
+            labels: test.y.clone(),
+            n_test,
+            n_features: test.n_features,
+            thresholds,
+            slot_of_node,
+            routing_offset_mm2,
+            exact_report,
+            margin_max,
+            tree,
+            test_codes,
+        }
+    }
+
+    pub fn n_comparators(&self) -> usize {
+        self.thresholds.len()
+    }
+
+    /// High-level area estimate of one approximation (the GA objective).
+    ///
+    /// Refinement over the plain LUT sum (§Perf / estimate-fidelity
+    /// ablation): a comparator whose substituted threshold saturates at
+    /// `2^b − 1` is *constant-true* — synthesis then removes the dead right
+    /// subtree and its share of path/encoder logic.  The estimate walks the
+    /// tree with constant comparators folded, sums the LUT over *reachable*
+    /// comparators only, and scales the fixed routing offset by the
+    /// reachable-leaf fraction.  This is still a pure high-level model (no
+    /// netlist is built), but it tracks the synthesized area far better on
+    /// heavily-approximated designs (see bench_ablations).
+    pub fn estimate_area(&self, lut: &AreaLut, approx: &TreeApprox) -> f64 {
+        let mut comps = 0.0f64;
+        let mut reachable_leaves = 0usize;
+        let mut stack = vec![0usize];
+        while let Some(i) = stack.pop() {
+            let node = &self.tree.nodes[i];
+            if node.is_leaf() {
+                reachable_leaves += 1;
+                continue;
+            }
+            let slot = self.slot_of_node[i] as usize;
+            let (b, t) = (approx.bits[slot], approx.thr_int[slot]);
+            if t == crate::quant::levels(b) - 1 {
+                // Constant-true comparator: zero area, right subtree dead.
+                stack.push(node.left as usize);
+            } else {
+                comps += lut.area(b, t);
+                stack.push(node.left as usize);
+                stack.push(node.right as usize);
+            }
+        }
+        let leaf_frac = reachable_leaves as f64 / self.tree.n_leaves().max(1) as f64;
+        comps + self.routing_offset_mm2 * leaf_frac
+    }
+
+    pub fn decode_context<'a>(&'a self, lut: &'a AreaLut) -> DecodeContext<'a> {
+        DecodeContext {
+            thresholds: &self.thresholds,
+            lut,
+            margin_max: self.margin_max,
+        }
+    }
+}
+
+/// Batched accuracy oracle over concrete approximations.
+pub trait AccuracyEngine {
+    fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Vec<f64>;
+    /// Human-readable engine id (logs / benches).
+    fn name(&self) -> &'static str;
+}
+
+/// Evaluation counters (exposed through coordinator metrics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalStats {
+    pub requested: usize,
+    pub cache_hits: usize,
+    pub engine_evals: usize,
+}
+
+/// The GA-facing evaluator: decode → (cache | engine) → objectives.
+pub struct FitnessEvaluator<'a, E: AccuracyEngine> {
+    pub problem: &'a Problem,
+    pub lut: &'a AreaLut,
+    pub engine: E,
+    cache: HashMap<u64, [f64; 2]>,
+    pub stats: EvalStats,
+}
+
+impl<'a, E: AccuracyEngine> FitnessEvaluator<'a, E> {
+    pub fn new(problem: &'a Problem, lut: &'a AreaLut, engine: E) -> Self {
+        FitnessEvaluator { problem, lut, engine, cache: HashMap::new(), stats: EvalStats::default() }
+    }
+}
+
+impl<'a, E: AccuracyEngine> Evaluator for FitnessEvaluator<'a, E> {
+    fn evaluate(&mut self, pop: &[Chromosome]) -> Vec<[f64; 2]> {
+        let ctx = self.problem.decode_context(self.lut);
+        self.stats.requested += pop.len();
+
+        // Decode once; split into cache hits and misses.
+        let decoded: Vec<(u64, TreeApprox)> = pop
+            .iter()
+            .map(|c| {
+                let approx = c.decode(&ctx);
+                (Chromosome::phenotype_key_of(&approx), approx)
+            })
+            .collect();
+        let mut out: Vec<Option<[f64; 2]>> = decoded
+            .iter()
+            .map(|(key, _)| self.cache.get(key).copied())
+            .collect();
+        self.stats.cache_hits += out.iter().filter(|o| o.is_some()).count();
+
+        // Deduplicate misses by phenotype within the batch, too.
+        let mut unique: Vec<(u64, usize)> = Vec::new(); // (key, representative idx)
+        let mut key_pos: HashMap<u64, usize> = HashMap::new();
+        for i in 0..pop.len() {
+            if out[i].is_none() && !key_pos.contains_key(&decoded[i].0) {
+                key_pos.insert(decoded[i].0, unique.len());
+                unique.push((decoded[i].0, i));
+            }
+        }
+        if !unique.is_empty() {
+            let batch: Vec<TreeApprox> =
+                unique.iter().map(|&(_, i)| decoded[i].1.clone()).collect();
+            let accs = self.engine.batch_accuracy(self.problem, &batch);
+            assert_eq!(accs.len(), batch.len());
+            self.stats.engine_evals += batch.len();
+            for ((key, i), acc) in unique.iter().zip(accs) {
+                let area = self.problem.estimate_area(self.lut, &decoded[*i].1);
+                self.cache.insert(*key, [1.0 - acc, area]);
+            }
+            for i in 0..pop.len() {
+                if out[i].is_none() {
+                    out[i] = self.cache.get(&decoded[i].0).copied();
+                }
+            }
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    use super::*;
+    use crate::data::generators;
+    use crate::dt::{train, TrainConfig};
+
+    /// A small, fast real problem (Seeds) shared by fitness/coordinator
+    /// tests.
+    pub fn small_problem(lut: &AreaLut) -> Problem {
+        let lib = EgtLibrary::default();
+        let spec = generators::spec("seeds").unwrap();
+        let data = generators::generate(spec, 42);
+        let (train_d, test_d) = data.split(0.3, 42);
+        let tree = train(&train_d, &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 });
+        Problem::new("seeds", tree, &test_d, lut, &lib, 5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::small_problem;
+    use super::*;
+
+    #[test]
+    fn problem_construction_consistent() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        assert_eq!(p.n_comparators(), p.tree.n_comparators());
+        assert_eq!(p.test_codes.len(), p.n_test * p.n_features);
+        assert!(p.routing_offset_mm2 >= 0.0);
+        assert!(p.exact_report.area_mm2 > 0.0);
+        // Estimated exact area == exact synthesis area by construction.
+        let exact = TreeApprox::exact(&p.tree);
+        let est = p.estimate_area(&lut, &exact);
+        assert!((est - p.exact_report.area_mm2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn estimate_area_monotone_in_precision() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let n = p.n_comparators();
+        let mk = |bits: u8| TreeApprox {
+            bits: vec![bits; n],
+            thr_int: p.thresholds.iter().map(|&t| quant::int_threshold(t, bits)).collect(),
+        };
+        assert!(p.estimate_area(&lut, &mk(2)) < p.estimate_area(&lut, &mk(8)));
+    }
+
+    #[test]
+    fn evaluator_caches_phenotypes() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let mut ev = FitnessEvaluator::new(&p, &lut, native::NativeEngine::default());
+        let pop: Vec<Chromosome> = vec![Chromosome::exact(p.n_comparators()); 6];
+        let objs = ev.evaluate(&pop);
+        assert!(objs.iter().all(|o| o == &objs[0]));
+        assert_eq!(ev.stats.engine_evals, 1, "5 of 6 identical → 1 engine eval");
+        // Second round: all hits.
+        ev.evaluate(&pop);
+        assert_eq!(ev.stats.engine_evals, 1);
+        // First call: 6 misses collapsed to 1 engine eval (0 cache hits);
+        // second call: all 6 hit the cache.
+        assert_eq!(ev.stats.cache_hits, 6);
+    }
+
+    #[test]
+    fn exact_chromosome_matches_plain_tree_accuracy() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let mut ev = FitnessEvaluator::new(&p, &lut, native::NativeEngine::default());
+        let objs = ev.evaluate(&[Chromosome::exact(p.n_comparators())]);
+        let acc8 = 1.0 - objs[0][0];
+        // 8-bit quantization of [0,1] features barely moves accuracy; the
+        // exact float-tree accuracy is the reference.
+        let float_acc = p.tree.accuracy(
+            &p.test_x,
+            &p.labels,
+            p.n_features,
+        );
+        assert!((acc8 - float_acc).abs() < 0.08, "acc8={acc8} float={float_acc}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Native accuracy engine: per-sample quantized tree walk.
+//!
+//! This is the formulation the paper's own Python framework uses (and its
+//! 3.08 ms/chromosome HAR headline refers to).  It serves three roles here:
+//! the test oracle the XLA engine is checked against, the CPU baseline the
+//! hot-path bench compares engines on, and a fallback when artifacts are
+//! absent.  Work is sharded across the thread pool by chromosome.
+
+use super::{AccuracyEngine, Problem};
+use crate::hw::synth::{TreeApprox, FEATURE_BITS};
+use crate::util::pool;
+
+/// Tree-walk engine; `threads = 0` → auto.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeEngine {
+    pub threads: usize,
+}
+
+impl NativeEngine {
+    pub fn with_threads(threads: usize) -> Self {
+        NativeEngine { threads }
+    }
+
+    /// Accuracy of one approximation (public: used directly by benches).
+    pub fn accuracy_one(problem: &Problem, approx: &TreeApprox) -> f64 {
+        let nf = problem.n_features;
+        let mut correct = 0usize;
+        for s in 0..problem.n_test {
+            let codes = &problem.test_codes[s * nf..(s + 1) * nf];
+            if predict(problem, approx, codes) == problem.labels[s] {
+                correct += 1;
+            }
+        }
+        correct as f64 / problem.n_test.max(1) as f64
+    }
+}
+
+/// Quantized walk using the problem's precomputed node→slot map.
+#[inline]
+pub fn predict(problem: &Problem, approx: &TreeApprox, codes: &[u32]) -> u32 {
+    let mut i = 0usize;
+    loop {
+        let n = &problem.tree.nodes[i];
+        if n.is_leaf() {
+            return n.leaf_class as u32;
+        }
+        let slot = problem.slot_of_node[i] as usize;
+        let code_b = codes[n.feat as usize] >> (FEATURE_BITS - approx.bits[slot]);
+        i = if code_b <= approx.thr_int[slot] {
+            n.left as usize
+        } else {
+            n.right as usize
+        };
+    }
+}
+
+impl AccuracyEngine for NativeEngine {
+    fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Vec<f64> {
+        let threads = if self.threads == 0 { pool::default_threads() } else { self.threads };
+        pool::par_map(batch, threads, |approx| Self::accuracy_one(problem, approx))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::testutil::small_problem;
+    use crate::hw::{AreaLut, EgtLibrary};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn walk_matches_synth_predict_codes() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let mut rng = Pcg64::seeded(0x51);
+        let n = p.n_comparators();
+        for _ in 0..10 {
+            let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+            let thr_int: Vec<u32> = (0..n)
+                .map(|j| crate::quant::int_threshold(p.thresholds[j], bits[j]))
+                .collect();
+            let approx = TreeApprox { bits, thr_int };
+            for s in (0..p.n_test).step_by(7) {
+                let codes = &p.test_codes[s * p.n_features..(s + 1) * p.n_features];
+                assert_eq!(
+                    predict(&p, &approx, codes),
+                    crate::hw::synth::predict_codes(&p.tree, &approx, codes)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single_and_is_thread_invariant() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let mut rng = Pcg64::seeded(0x52);
+        let n = p.n_comparators();
+        let batch: Vec<TreeApprox> = (0..9)
+            .map(|_| {
+                let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+                let thr_int: Vec<u32> = (0..n)
+                    .map(|j| {
+                        let t = crate::quant::int_threshold(p.thresholds[j], bits[j]);
+                        crate::quant::substitute(t, rng.int_in(-5, 5) as i32, bits[j])
+                    })
+                    .collect();
+                TreeApprox { bits, thr_int }
+            })
+            .collect();
+        let mut e1 = NativeEngine::with_threads(1);
+        let mut e4 = NativeEngine::with_threads(4);
+        let a1 = e1.batch_accuracy(&p, &batch);
+        let a4 = e4.batch_accuracy(&p, &batch);
+        assert_eq!(a1, a4);
+        for (i, approx) in batch.iter().enumerate() {
+            assert_eq!(a1[i], NativeEngine::accuracy_one(&p, approx));
+            assert!((0.0..=1.0).contains(&a1[i]));
+        }
+    }
+}

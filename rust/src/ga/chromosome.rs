@@ -1,0 +1,210 @@
+//! Chromosome encoding/decoding (paper Fig. 3).
+//!
+//! "It contains 2N genes, where N is the number of comparators in the
+//! targeted bespoke classifier.  For every comparator, two genes are
+//! stored: the precision of its input feature and threshold, and the margin
+//! m by which to alter the threshold value, in order to substitute it with
+//! a hardware-friendlier one."
+//!
+//! Genes are real-coded in [0, 1] (the representation SBX/polynomial
+//! mutation operate on) and decoded to the discrete phenotype:
+//!
+//! * gene `2j`   → precision `bits_j ∈ [MIN_BITS, MAX_BITS]`
+//! * gene `2j+1` → margin `m_j ∈ [0, margin_max]`; the threshold is then
+//!   replaced by the *cheapest* integer within ±m_j (area-LUT argmin) —
+//!   the area-driven replacement of §III-A.
+
+use crate::hw::synth::TreeApprox;
+use crate::hw::AreaLut;
+use crate::quant::{self, MAX_BITS, MIN_BITS};
+use crate::util::rng::Pcg64;
+
+/// Everything needed to decode genes into a concrete [`TreeApprox`].
+pub struct DecodeContext<'a> {
+    /// Float thresholds of the trained tree's comparator slots.
+    pub thresholds: &'a [f32],
+    /// Comparator area oracle (drives the substitution argmin).
+    pub lut: &'a AreaLut,
+    /// Maximum substitution margin (paper: ±5).
+    pub margin_max: u32,
+}
+
+/// A real-coded individual. `genes.len() == 2 * n_comparators`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Chromosome {
+    pub genes: Vec<f64>,
+}
+
+impl Chromosome {
+    pub fn random(rng: &mut Pcg64, n_comparators: usize) -> Chromosome {
+        Chromosome { genes: (0..2 * n_comparators).map(|_| rng.f64()).collect() }
+    }
+
+    /// The all-exact individual: 8 bits, margin 0 (the paper's baseline as
+    /// a chromosome; seeding it keeps the baseline in the initial front).
+    pub fn exact(n_comparators: usize) -> Chromosome {
+        let mut genes = Vec::with_capacity(2 * n_comparators);
+        for _ in 0..n_comparators {
+            genes.push(0.999_999); // decodes to MAX_BITS
+            genes.push(0.0); // margin 0
+        }
+        Chromosome { genes }
+    }
+
+    /// Uniform-precision individual: every comparator at `bits`, margin
+    /// gene at `margin_gene` (0.0 → no substitution, ~1.0 → full margin).
+    /// These are the "ladder" anchors seeded into initial populations:
+    /// coarse uniform quantization is the strongest known-good region of
+    /// the space, and the GA refines per-comparator from there.
+    pub fn uniform(n_comparators: usize, bits: u8, margin_gene: f64) -> Chromosome {
+        assert!((MIN_BITS..=MAX_BITS).contains(&bits));
+        // Center of the decode bucket for `bits`.
+        let g_bits = (bits - MIN_BITS) as f64 / 7.0 + 0.5 / 7.0;
+        let mut genes = Vec::with_capacity(2 * n_comparators);
+        for _ in 0..n_comparators {
+            genes.push(g_bits);
+            genes.push(margin_gene.clamp(0.0, 1.0));
+        }
+        Chromosome { genes }
+    }
+
+    pub fn n_comparators(&self) -> usize {
+        self.genes.len() / 2
+    }
+
+    /// Decoded precision of comparator `j`.
+    pub fn bits(&self, j: usize) -> u8 {
+        decode_range(self.genes[2 * j], MIN_BITS as u32, MAX_BITS as u32) as u8
+    }
+
+    /// Decoded substitution margin of comparator `j`.
+    pub fn margin(&self, j: usize, margin_max: u32) -> u32 {
+        decode_range(self.genes[2 * j + 1], 0, margin_max)
+    }
+
+    /// Decode to the concrete per-comparator approximation (Fig. 3b: float
+    /// threshold → fixed point at `bits` → integer → area-driven
+    /// substitution within ±margin).
+    pub fn decode(&self, ctx: &DecodeContext) -> TreeApprox {
+        let n = self.n_comparators();
+        assert_eq!(n, ctx.thresholds.len());
+        let mut bits = Vec::with_capacity(n);
+        let mut thr_int = Vec::with_capacity(n);
+        for j in 0..n {
+            let b = self.bits(j);
+            let t = quant::int_threshold(ctx.thresholds[j], b);
+            let m = self.margin(j, ctx.margin_max);
+            let (t_sub, _) = ctx.lut.cheapest_in_margin(b, t, m);
+            bits.push(b);
+            thr_int.push(t_sub);
+        }
+        TreeApprox { bits, thr_int }
+    }
+
+    /// Stable cache key over the *phenotype* (two chromosomes that decode
+    /// identically share fitness).
+    pub fn phenotype_key(&self, ctx: &DecodeContext) -> u64 {
+        Self::phenotype_key_of(&self.decode(ctx))
+    }
+
+    /// Key over an already-decoded phenotype (avoids re-decoding when the
+    /// caller needs both — the fitness evaluator's hot path).
+    pub fn phenotype_key_of(approx: &TreeApprox) -> u64 {
+        let mut bytes = Vec::with_capacity(approx.bits.len() * 5);
+        for (b, t) in approx.bits.iter().zip(&approx.thr_int) {
+            bytes.push(*b);
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        crate::util::rng::fnv1a(&bytes)
+    }
+}
+
+/// Map a [0,1) gene onto the inclusive integer range [lo, hi].
+#[inline]
+fn decode_range(g: f64, lo: u32, hi: u32) -> u32 {
+    let span = (hi - lo + 1) as f64;
+    let v = lo as f64 + (g.clamp(0.0, 1.0) * span).floor();
+    (v as u32).min(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::EgtLibrary;
+
+    fn ctx_fixture() -> (Vec<f32>, AreaLut) {
+        (vec![0.31, 0.62, 0.05, 0.97], AreaLut::build(&EgtLibrary::default()))
+    }
+
+    #[test]
+    fn decode_range_covers_bounds() {
+        assert_eq!(decode_range(0.0, 2, 8), 2);
+        assert_eq!(decode_range(0.999_999, 2, 8), 8);
+        assert_eq!(decode_range(1.0, 2, 8), 8);
+        // Uniform-ish: each of 7 values gets 1/7 of the interval.
+        assert_eq!(decode_range(0.142, 2, 8), 2);
+        assert_eq!(decode_range(0.143, 2, 8), 3);
+    }
+
+    #[test]
+    fn exact_chromosome_is_baseline() {
+        let (thr, lut) = ctx_fixture();
+        let ctx = DecodeContext { thresholds: &thr, lut: &lut, margin_max: 5 };
+        let c = Chromosome::exact(4);
+        let approx = c.decode(&ctx);
+        assert!(approx.bits.iter().all(|&b| b == MAX_BITS));
+        for (j, &t) in approx.thr_int.iter().enumerate() {
+            assert_eq!(t, quant::int_threshold(thr[j], MAX_BITS), "slot {j}");
+        }
+    }
+
+    #[test]
+    fn decode_respects_margin() {
+        let (thr, lut) = ctx_fixture();
+        let ctx = DecodeContext { thresholds: &thr, lut: &lut, margin_max: 5 };
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..50 {
+            let c = Chromosome::random(&mut rng, 4);
+            let approx = c.decode(&ctx);
+            for j in 0..4 {
+                let t0 = quant::int_threshold(thr[j], approx.bits[j]) as i64;
+                let m = c.margin(j, 5) as i64;
+                let d = (approx.thr_int[j] as i64 - t0).abs();
+                assert!(d <= m, "slot {j}: moved {d} > margin {m}");
+                assert!(approx.thr_int[j] < (1u32 << approx.bits[j]));
+            }
+        }
+    }
+
+    #[test]
+    fn substitution_never_increases_area() {
+        let (thr, lut) = ctx_fixture();
+        let ctx = DecodeContext { thresholds: &thr, lut: &lut, margin_max: 5 };
+        let mut rng = Pcg64::seeded(9);
+        for _ in 0..50 {
+            let c = Chromosome::random(&mut rng, 4);
+            let approx = c.decode(&ctx);
+            for j in 0..4 {
+                let t0 = quant::int_threshold(thr[j], approx.bits[j]);
+                assert!(
+                    lut.area(approx.bits[j], approx.thr_int[j]) <= lut.area(approx.bits[j], t0)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn phenotype_key_stable_and_discriminating() {
+        let (thr, lut) = ctx_fixture();
+        let ctx = DecodeContext { thresholds: &thr, lut: &lut, margin_max: 5 };
+        let a = Chromosome::exact(4);
+        let mut b = Chromosome::exact(4);
+        assert_eq!(a.phenotype_key(&ctx), b.phenotype_key(&ctx));
+        // Tiny gene change within the same decode bucket: same key.
+        b.genes[0] = 0.999;
+        assert_eq!(a.phenotype_key(&ctx), b.phenotype_key(&ctx));
+        // Crossing a decode boundary changes the key.
+        b.genes[0] = 0.0;
+        assert_ne!(a.phenotype_key(&ctx), b.phenotype_key(&ctx));
+    }
+}

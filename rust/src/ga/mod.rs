@@ -1,0 +1,15 @@
+//! Genetic optimization (paper §III-B): NSGA-II over dual-approximation
+//! chromosomes.
+//!
+//! * [`chromosome`] — the 2N-gene real-coded encoding of Fig. 3a: per
+//!   comparator a precision gene (2–8 bits) and a substitution-margin gene
+//!   (0..±m), decoded through the precision-conversion module of Fig. 3b.
+//! * [`nsga2`] — elitist non-dominated sorting GA: binary tournament on the
+//!   crowded comparison, simulated binary crossover, polynomial mutation,
+//!   fast non-dominated sort + crowding-distance truncation.
+
+pub mod chromosome;
+pub mod nsga2;
+
+pub use chromosome::{Chromosome, DecodeContext};
+pub use nsga2::{run as run_nsga2, Evaluator, GenStats, NsgaConfig, NsgaResult, ScoredIndividual};

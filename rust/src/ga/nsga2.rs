@@ -1,0 +1,524 @@
+//! NSGA-II (Deb et al., 2002) — the paper's design-space explorer.
+//!
+//! Standard elitist loop: binary tournament selection under the crowded
+//! comparison operator, simulated binary crossover (SBX), polynomial
+//! mutation, fast non-dominated sorting of the combined parent+child pool,
+//! and crowding-distance truncation of the last admitted front.
+//!
+//! Objectives are **minimized** and fixed at two for this framework:
+//! `[1 − accuracy, estimated area]`.  Evaluation is population-batched
+//! through the [`Evaluator`] trait so the coordinator can pack chromosomes
+//! into fixed-size XLA executions.
+
+use super::chromosome::Chromosome;
+use crate::util::rng::Pcg64;
+
+/// Batched fitness oracle. Returns one `[f64; 2]` (minimized) per input.
+pub trait Evaluator {
+    fn evaluate(&mut self, pop: &[Chromosome]) -> Vec<[f64; 2]>;
+}
+
+/// NSGA-II hyper-parameters (paper defaults in `Default`).
+#[derive(Clone, Copy, Debug)]
+pub struct NsgaConfig {
+    pub pop_size: usize,
+    pub generations: usize,
+    /// SBX crossover probability / distribution index.
+    pub p_crossover: f64,
+    pub eta_crossover: f64,
+    /// Per-gene mutation probability (None → 1/n_genes) / distribution index.
+    pub p_mutation: Option<f64>,
+    pub eta_mutation: f64,
+    pub seed: u64,
+    /// Seed the exact (8-bit, margin-0) baseline into the initial
+    /// population so the search starts from the paper's reference design.
+    pub seed_exact: bool,
+    /// Additionally seed the uniform-precision ladder (2..8 bits, with and
+    /// without substitution margin) — strong anchors that make large
+    /// chromosomes (hundreds of genes) tractable at small GA budgets.
+    pub seed_ladder: bool,
+}
+
+impl Default for NsgaConfig {
+    fn default() -> Self {
+        NsgaConfig {
+            pop_size: 48,
+            generations: 30,
+            p_crossover: 0.9,
+            eta_crossover: 15.0,
+            p_mutation: None,
+            eta_mutation: 20.0,
+            seed: 0xA1D7,
+            seed_exact: true,
+            seed_ladder: true,
+        }
+    }
+}
+
+/// A chromosome with its objective vector.
+#[derive(Clone, Debug)]
+pub struct ScoredIndividual {
+    pub chromosome: Chromosome,
+    pub objectives: [f64; 2],
+}
+
+/// Per-generation telemetry.
+#[derive(Clone, Copy, Debug)]
+pub struct GenStats {
+    pub generation: usize,
+    pub best_error: f64,
+    pub best_area: f64,
+    pub front_size: usize,
+    pub evaluations: usize,
+}
+
+/// Final result: last population + telemetry.
+#[derive(Clone, Debug)]
+pub struct NsgaResult {
+    pub population: Vec<ScoredIndividual>,
+    pub history: Vec<GenStats>,
+    pub evaluations: usize,
+}
+
+impl NsgaResult {
+    /// The non-dominated subset of the final population, sorted by error.
+    pub fn pareto_front(&self) -> Vec<ScoredIndividual> {
+        let objs: Vec<[f64; 2]> = self.population.iter().map(|s| s.objectives).collect();
+        let fronts = fast_non_dominated_sort(&objs);
+        let mut front: Vec<ScoredIndividual> =
+            fronts[0].iter().map(|&i| self.population[i].clone()).collect();
+        front.sort_by(|a, b| a.objectives[0].partial_cmp(&b.objectives[0]).unwrap());
+        front.dedup_by(|a, b| a.objectives == b.objectives);
+        front
+    }
+}
+
+/// Run NSGA-II for `cfg.generations`.
+pub fn run(n_comparators: usize, cfg: &NsgaConfig, eval: &mut dyn Evaluator) -> NsgaResult {
+    let mut rng = Pcg64::new(cfg.seed, 0x6A);
+    let n_genes = 2 * n_comparators;
+    let pm = cfg.p_mutation.unwrap_or(1.0 / n_genes as f64);
+
+    let mut pop: Vec<Chromosome> =
+        (0..cfg.pop_size).map(|_| Chromosome::random(&mut rng, n_comparators)).collect();
+    let mut slot = 0usize;
+    if cfg.seed_exact && slot < pop.len() {
+        pop[slot] = Chromosome::exact(n_comparators);
+        slot += 1;
+    }
+    if cfg.seed_ladder {
+        for bits in (crate::quant::MIN_BITS..=crate::quant::MAX_BITS).rev() {
+            for margin_gene in [0.999, 0.0] {
+                if slot < pop.len() {
+                    pop[slot] = Chromosome::uniform(n_comparators, bits, margin_gene);
+                    slot += 1;
+                }
+            }
+        }
+    }
+    let mut objs = eval.evaluate(&pop);
+    let mut evaluations = pop.len();
+    let mut history = Vec::with_capacity(cfg.generations);
+
+    for generation in 0..cfg.generations {
+        // Selection ranks for the current population.
+        let (rank, crowd) = rank_and_crowding(&objs);
+
+        // Offspring.
+        let mut children = Vec::with_capacity(cfg.pop_size);
+        while children.len() < cfg.pop_size {
+            let p1 = tournament(&mut rng, &rank, &crowd);
+            let p2 = tournament(&mut rng, &rank, &crowd);
+            let (mut c1, mut c2) = sbx(&mut rng, &pop[p1], &pop[p2], cfg.p_crossover, cfg.eta_crossover);
+            mutate(&mut rng, &mut c1, pm, cfg.eta_mutation);
+            mutate(&mut rng, &mut c2, pm, cfg.eta_mutation);
+            children.push(c1);
+            if children.len() < cfg.pop_size {
+                children.push(c2);
+            }
+        }
+        let child_objs = eval.evaluate(&children);
+        evaluations += children.len();
+
+        // Elitist environmental selection over the combined pool.
+        let mut all: Vec<Chromosome> = pop;
+        all.extend(children);
+        let mut all_objs = objs;
+        all_objs.extend(child_objs);
+        let selected = environmental_selection(&all_objs, cfg.pop_size);
+        pop = selected.iter().map(|&i| all[i].clone()).collect();
+        objs = selected.iter().map(|&i| all_objs[i]).collect();
+
+        let fronts = fast_non_dominated_sort(&objs);
+        history.push(GenStats {
+            generation,
+            best_error: objs.iter().map(|o| o[0]).fold(f64::INFINITY, f64::min),
+            best_area: objs.iter().map(|o| o[1]).fold(f64::INFINITY, f64::min),
+            front_size: fronts[0].len(),
+            evaluations,
+        });
+    }
+
+    NsgaResult {
+        population: pop
+            .into_iter()
+            .zip(objs)
+            .map(|(chromosome, objectives)| ScoredIndividual { chromosome, objectives })
+            .collect(),
+        history,
+        evaluations,
+    }
+}
+
+// ---- NSGA-II primitives (public for property tests) ----------------------
+
+/// Does `a` Pareto-dominate `b` (minimization)?
+#[inline]
+pub fn dominates(a: &[f64; 2], b: &[f64; 2]) -> bool {
+    a[0] <= b[0] && a[1] <= b[1] && (a[0] < b[0] || a[1] < b[1])
+}
+
+/// Fast non-dominated sort; returns fronts of indices, best first.
+pub fn fast_non_dominated_sort(objs: &[[f64; 2]]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut dom_count = vec![0usize; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&objs[i], &objs[j]) {
+                dominated_by[i].push(j);
+                dom_count[j] += 1;
+            } else if dominates(&objs[j], &objs[i]) {
+                dominated_by[j].push(i);
+                dom_count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dom_count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                dom_count[j] -= 1;
+                if dom_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Crowding distance of each member of `front` (index-aligned with it).
+pub fn crowding_distance(objs: &[[f64; 2]], front: &[usize]) -> Vec<f64> {
+    let k = front.len();
+    let mut dist = vec![0.0f64; k];
+    if k <= 2 {
+        return vec![f64::INFINITY; k];
+    }
+    for obj in 0..2 {
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| {
+            objs[front[a]][obj].partial_cmp(&objs[front[b]][obj]).unwrap()
+        });
+        let lo = objs[front[order[0]]][obj];
+        let hi = objs[front[order[k - 1]]][obj];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[k - 1]] = f64::INFINITY;
+        let span = hi - lo;
+        if span <= 0.0 {
+            continue;
+        }
+        for w in 1..k - 1 {
+            let prev = objs[front[order[w - 1]]][obj];
+            let next = objs[front[order[w + 1]]][obj];
+            dist[order[w]] += (next - prev) / span;
+        }
+    }
+    dist
+}
+
+/// Per-individual (rank, crowding) for tournament selection.
+fn rank_and_crowding(objs: &[[f64; 2]]) -> (Vec<usize>, Vec<f64>) {
+    let fronts = fast_non_dominated_sort(objs);
+    let mut rank = vec![0usize; objs.len()];
+    let mut crowd = vec![0f64; objs.len()];
+    for (r, front) in fronts.iter().enumerate() {
+        let d = crowding_distance(objs, front);
+        for (pos, &i) in front.iter().enumerate() {
+            rank[i] = r;
+            crowd[i] = d[pos];
+        }
+    }
+    (rank, crowd)
+}
+
+/// Binary tournament under the crowded-comparison operator.
+fn tournament(rng: &mut Pcg64, rank: &[usize], crowd: &[f64]) -> usize {
+    let a = rng.below(rank.len() as u64) as usize;
+    let b = rng.below(rank.len() as u64) as usize;
+    if rank[a] < rank[b] || (rank[a] == rank[b] && crowd[a] > crowd[b]) {
+        a
+    } else {
+        b
+    }
+}
+
+/// Indices of the `target` individuals surviving elitist truncation.
+pub fn environmental_selection(objs: &[[f64; 2]], target: usize) -> Vec<usize> {
+    let fronts = fast_non_dominated_sort(objs);
+    let mut selected = Vec::with_capacity(target);
+    for front in fronts {
+        if selected.len() + front.len() <= target {
+            selected.extend(&front);
+            if selected.len() == target {
+                break;
+            }
+        } else {
+            // Partial: take the most crowded-distant members.
+            let d = crowding_distance(objs, &front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+            for &w in order.iter().take(target - selected.len()) {
+                selected.push(front[w]);
+            }
+            break;
+        }
+    }
+    selected
+}
+
+/// Simulated binary crossover on [0,1]-bounded genes.
+fn sbx(
+    rng: &mut Pcg64,
+    p1: &Chromosome,
+    p2: &Chromosome,
+    pc: f64,
+    eta: f64,
+) -> (Chromosome, Chromosome) {
+    let mut c1 = p1.clone();
+    let mut c2 = p2.clone();
+    if !rng.chance(pc) {
+        return (c1, c2);
+    }
+    for g in 0..c1.genes.len() {
+        if !rng.chance(0.5) {
+            continue;
+        }
+        let (x1, x2) = (p1.genes[g], p2.genes[g]);
+        if (x1 - x2).abs() < 1e-14 {
+            continue;
+        }
+        let u: f64 = rng.f64();
+        let beta = if u <= 0.5 {
+            (2.0 * u).powf(1.0 / (eta + 1.0))
+        } else {
+            (1.0 / (2.0 * (1.0 - u))).powf(1.0 / (eta + 1.0))
+        };
+        let v1 = 0.5 * ((1.0 + beta) * x1 + (1.0 - beta) * x2);
+        let v2 = 0.5 * ((1.0 - beta) * x1 + (1.0 + beta) * x2);
+        c1.genes[g] = v1.clamp(0.0, 1.0);
+        c2.genes[g] = v2.clamp(0.0, 1.0);
+    }
+    (c1, c2)
+}
+
+/// Polynomial mutation on [0,1]-bounded genes.
+fn mutate(rng: &mut Pcg64, c: &mut Chromosome, pm: f64, eta: f64) {
+    for g in 0..c.genes.len() {
+        if !rng.chance(pm) {
+            continue;
+        }
+        let x = c.genes[g];
+        let u: f64 = rng.f64();
+        let delta = if u < 0.5 {
+            (2.0 * u + (1.0 - 2.0 * u) * (1.0 - x).powf(eta + 1.0)).powf(1.0 / (eta + 1.0)) - 1.0
+        } else {
+            1.0 - (2.0 * (1.0 - u) + 2.0 * (u - 0.5) * x.powf(eta + 1.0)).powf(1.0 / (eta + 1.0))
+        };
+        c.genes[g] = (x + delta).clamp(0.0, 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+
+    /// Toy evaluator: minimize (Σ genes of even slots, Σ (1-g) of odd
+    /// slots) — a clean two-objective trade-off.
+    struct Toy;
+    impl Evaluator for Toy {
+        fn evaluate(&mut self, pop: &[Chromosome]) -> Vec<[f64; 2]> {
+            pop.iter()
+                .map(|c| {
+                    let a: f64 = c.genes.iter().step_by(2).sum();
+                    let b: f64 = c.genes.iter().skip(1).step_by(2).map(|g| 1.0 - g).sum();
+                    [a, b]
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn dominates_relation() {
+        assert!(dominates(&[0.0, 0.0], &[1.0, 1.0]));
+        assert!(dominates(&[0.0, 1.0], &[0.0, 2.0]));
+        assert!(!dominates(&[0.0, 2.0], &[1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "not strict");
+    }
+
+    #[test]
+    fn fronts_partition_and_are_mutually_nondominating() {
+        check(
+            "nds-invariants",
+            PropConfig { cases: 40, seed: 7 },
+            |rng| {
+                let n = 3 + rng.below(40) as usize;
+                (0..n)
+                    .map(|_| [rng.f64(), rng.f64()])
+                    .collect::<Vec<[f64; 2]>>()
+            },
+            |objs| {
+                let fronts = fast_non_dominated_sort(objs);
+                let total: usize = fronts.iter().map(|f| f.len()).sum();
+                if total != objs.len() {
+                    return Err(format!("partition broken: {total} != {}", objs.len()));
+                }
+                // no member of front k dominates another member of front k
+                for f in &fronts {
+                    for &i in f {
+                        for &j in f {
+                            if i != j && dominates(&objs[i], &objs[j]) {
+                                return Err(format!("{i} dominates {j} in same front"));
+                            }
+                        }
+                    }
+                }
+                // every member of front k+1 is dominated by someone in front k
+                for w in 1..fronts.len() {
+                    for &j in &fronts[w] {
+                        let dominated = fronts[w - 1]
+                            .iter()
+                            .any(|&i| dominates(&objs[i], &objs[j]));
+                        if !dominated {
+                            return Err(format!("front {w} member {j} undominated by front {}", w - 1));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn crowding_extremes_infinite() {
+        let objs = vec![[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]];
+        let front: Vec<usize> = (0..4).collect();
+        let d = crowding_distance(&objs, &front);
+        assert_eq!(d[0], f64::INFINITY);
+        assert_eq!(d[3], f64::INFINITY);
+        assert!(d[1].is_finite() && d[1] > 0.0);
+        // symmetric spacing → equal interior distances
+        assert!((d[1] - d[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn environmental_selection_is_elitist() {
+        check(
+            "selection-elitist",
+            PropConfig { cases: 30, seed: 11 },
+            |rng| {
+                let n = 8 + rng.below(40) as usize;
+                (0..n).map(|_| [rng.f64(), rng.f64()]).collect::<Vec<[f64; 2]>>()
+            },
+            |objs| {
+                let target = objs.len() / 2;
+                let sel = environmental_selection(objs, target);
+                if sel.len() != target {
+                    return Err(format!("selected {} != {target}", sel.len()));
+                }
+                let mut uniq = sel.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                if uniq.len() != sel.len() {
+                    return Err("duplicate selection".into());
+                }
+                // every front-0 member must survive (when it fits)
+                let fronts = fast_non_dominated_sort(objs);
+                if fronts[0].len() <= target {
+                    for &i in &fronts[0] {
+                        if !sel.contains(&i) {
+                            return Err(format!("front-0 member {i} dropped"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sbx_and_mutation_stay_in_bounds() {
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..200 {
+            let p1 = Chromosome::random(&mut rng, 6);
+            let p2 = Chromosome::random(&mut rng, 6);
+            let (c1, mut c2) = sbx(&mut rng, &p1, &p2, 1.0, 15.0);
+            mutate(&mut rng, &mut c2, 0.5, 20.0);
+            for g in c1.genes.iter().chain(c2.genes.iter()) {
+                assert!((0.0..=1.0).contains(g));
+            }
+        }
+    }
+
+    #[test]
+    fn nsga2_converges_on_toy_problem() {
+        let cfg = NsgaConfig {
+            pop_size: 32,
+            generations: 30,
+            seed: 1,
+            seed_exact: false,
+            ..Default::default()
+        };
+        let res = run(4, &cfg, &mut Toy);
+        assert_eq!(res.population.len(), 32);
+        assert_eq!(res.history.len(), 30);
+        // The extremes of the Pareto set are reachable: error → 0, area → 0.
+        let front = res.pareto_front();
+        let best_a = front.iter().map(|s| s.objectives[0]).fold(f64::INFINITY, f64::min);
+        let best_b = front.iter().map(|s| s.objectives[1]).fold(f64::INFINITY, f64::min);
+        assert!(best_a < 0.4, "obj0 {best_a}");
+        assert!(best_b < 0.4, "obj1 {best_b}");
+        // Monotone improvement in evaluations count.
+        assert_eq!(res.evaluations, 32 + 30 * 32);
+    }
+
+    #[test]
+    fn nsga2_deterministic_in_seed() {
+        let cfg = NsgaConfig { pop_size: 16, generations: 5, seed: 9, ..Default::default() };
+        let a = run(3, &cfg, &mut Toy);
+        let b = run(3, &cfg, &mut Toy);
+        let oa: Vec<[f64; 2]> = a.population.iter().map(|s| s.objectives).collect();
+        let ob: Vec<[f64; 2]> = b.population.iter().map(|s| s.objectives).collect();
+        assert_eq!(oa, ob);
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated_and_sorted() {
+        let cfg = NsgaConfig { pop_size: 24, generations: 10, seed: 2, ..Default::default() };
+        let res = run(4, &cfg, &mut Toy);
+        let front = res.pareto_front();
+        for w in 1..front.len() {
+            assert!(front[w].objectives[0] >= front[w - 1].objectives[0]);
+        }
+        for a in &front {
+            for b in &front {
+                assert!(!dominates(&a.objectives, &b.objectives) || a.objectives == b.objectives);
+            }
+        }
+    }
+}

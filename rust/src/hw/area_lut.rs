@@ -1,0 +1,122 @@
+//! Exhaustive bespoke-comparator characterization (paper §III-B).
+//!
+//! "We store the comparator area measurements from our exhaustive
+//! experiment to create a look-up table of area measurements for different
+//! input precisions and integer coefficient values."  The GA consults this
+//! LUT for its area objective (Σ over comparators) instead of synthesizing
+//! every candidate — the exact high-level-estimation trick the paper uses
+//! to keep fitness evaluation off the EDA tools.
+
+use super::egt::EgtLibrary;
+use super::synth::synth_comparator;
+use crate::quant::{levels, MAX_BITS, MIN_BITS};
+use crate::util::pool;
+
+/// Area (mm²) of every bespoke comparator: indexed by precision (2..=8
+/// bits) and hardwired integer threshold.
+#[derive(Clone, Debug)]
+pub struct AreaLut {
+    /// `tables[b - MIN_BITS][t]` = area of the b-bit comparator with
+    /// threshold t.
+    tables: Vec<Vec<f64>>,
+}
+
+impl AreaLut {
+    /// Exhaustively synthesize all (precision, threshold) comparators.
+    /// 2²+2³+…+2⁸ = 508 synth runs; parallelized across precisions.
+    pub fn build(lib: &EgtLibrary) -> AreaLut {
+        let bits_range: Vec<u8> = (MIN_BITS..=MAX_BITS).collect();
+        let tables = pool::par_map(&bits_range, pool::default_threads(), |&bits| {
+            (0..levels(bits))
+                .map(|t| synth_comparator(bits, t).area_mm2(lib))
+                .collect::<Vec<f64>>()
+        });
+        AreaLut { tables }
+    }
+
+    /// Area of one comparator configuration.
+    #[inline]
+    pub fn area(&self, bits: u8, t: u32) -> f64 {
+        debug_assert!((MIN_BITS..=MAX_BITS).contains(&bits));
+        self.tables[(bits - MIN_BITS) as usize][t as usize]
+    }
+
+    /// The full area curve at one precision (Fig. 4 series).
+    pub fn curve(&self, bits: u8) -> &[f64] {
+        &self.tables[(bits - MIN_BITS) as usize]
+    }
+
+    /// Cheapest threshold within ±`margin` of `t` (clamped to range):
+    /// the "hardware-friendlier coefficient in its vicinity".
+    pub fn cheapest_in_margin(&self, bits: u8, t: u32, margin: u32) -> (u32, f64) {
+        let max = levels(bits) - 1;
+        let lo = t.saturating_sub(margin);
+        let hi = (t + margin).min(max);
+        let mut best = (t, self.area(bits, t));
+        for cand in lo..=hi {
+            let a = self.area(bits, cand);
+            if a < best.1 || (a == best.1 && (cand as i64 - t as i64).abs() < (best.0 as i64 - t as i64).abs()) {
+                best = (cand, a);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lut() -> AreaLut {
+        AreaLut::build(&EgtLibrary::default())
+    }
+
+    #[test]
+    fn lut_matches_direct_synthesis() {
+        let lib = EgtLibrary::default();
+        let lut = lut();
+        for &(bits, t) in &[(2u8, 1u32), (4, 7), (6, 33), (8, 170), (8, 0), (8, 255)] {
+            let direct = synth_comparator(bits, t).area_mm2(&lib);
+            assert_eq!(lut.area(bits, t), direct, "bits={bits} t={t}");
+        }
+    }
+
+    #[test]
+    fn curves_have_expected_shapes() {
+        let lut = lut();
+        for bits in MIN_BITS..=MAX_BITS {
+            let curve = lut.curve(bits);
+            assert_eq!(curve.len(), levels(bits) as usize);
+            // All-ones threshold is free; curve is non-constant.
+            assert_eq!(curve[curve.len() - 1], 0.0);
+            assert!(curve.iter().any(|&a| a > 0.0));
+        }
+        // Higher precision costs more on average (Fig. 4a vs 4b).
+        let mean = |bits: u8| {
+            let c = lut.curve(bits);
+            c.iter().sum::<f64>() / c.len() as f64
+        };
+        assert!(mean(6) < mean(8));
+        assert!(mean(2) < mean(6));
+    }
+
+    #[test]
+    fn cheapest_in_margin_finds_cheaper_neighbours() {
+        let lut = lut();
+        // 0b10000000 = 128: expensive pattern; 127 = 0b01111111 is cheap.
+        let (t, a) = lut.cheapest_in_margin(8, 128, 5);
+        assert!(a <= lut.area(8, 128));
+        assert!((123..=133).contains(&t));
+        // margin 0 returns the original.
+        assert_eq!(lut.cheapest_in_margin(8, 77, 0).0, 77);
+    }
+
+    #[test]
+    fn cheapest_in_margin_clamps_at_bounds() {
+        let lut = lut();
+        let (t0, _) = lut.cheapest_in_margin(4, 0, 5);
+        assert!(t0 <= 5);
+        let (t1, _) = lut.cheapest_in_margin(4, 15, 5);
+        assert!(t1 >= 10 && t1 <= 15);
+    }
+}

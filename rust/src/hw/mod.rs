@@ -1,0 +1,46 @@
+//! Printed-electronics hardware substrate (substitution #2 in DESIGN.md §3).
+//!
+//! The paper synthesizes bespoke decision-tree RTL with Synopsys Design
+//! Compiler against an inkjet-printed Electrolyte-Gated-Transistor (EGT)
+//! PDK, and measures power with PrimeTime.  Neither tool nor PDK exists in
+//! this image, so this module implements the part of that flow the paper's
+//! results actually depend on:
+//!
+//! * [`egt`] — an EGT standard-cell library with per-cell area/power/delay
+//!   calibrated to the published EGT regime (Bleier et al., ISCA'20).
+//! * [`netlist`] — a gate-level netlist IR whose *builder* performs the
+//!   boolean simplifications Design Compiler would: constant folding,
+//!   double-negation elimination, structural hashing (CSE).
+//! * [`synth`] — bespoke synthesis: hardwired-constant comparators (the
+//!   source of the non-linear area(threshold) curve of Fig. 4) and full
+//!   tree netlists (comparator bank → shared-prefix path logic → class
+//!   encoder → output register).
+//! * [`opt`] — the peephole/tech-mapping pass (INV absorption into
+//!   NAND/NOR/XNOR, DeMorgan rewrites, dead-gate sweep).
+//! * [`power`] — static-dominated EGT power model with signal-probability
+//!   activity estimation for the (tiny) dynamic component.
+//! * [`area_lut`] — the exhaustive bespoke-comparator characterization the
+//!   genetic algorithm uses as its area oracle (paper §III-B).
+//! * [`rtl`] — Verilog emission for exact and approximate bespoke trees.
+
+pub mod area_lut;
+pub mod egt;
+pub mod netlist;
+pub mod opt;
+pub mod power;
+pub mod rtl;
+pub mod synth;
+pub mod vote;
+
+pub use area_lut::AreaLut;
+pub use egt::{CellKind, EgtLibrary};
+pub use netlist::{Netlist, Sig};
+
+/// Synthesis report for one circuit (the numbers Table I / Table II report).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HwReport {
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    pub delay_ms: f64,
+    pub n_cells: usize,
+}

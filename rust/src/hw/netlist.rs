@@ -1,0 +1,485 @@
+//! Gate-level netlist IR with a simplifying builder.
+//!
+//! The builder performs, *as gates are created*, the local boolean
+//! optimizations a synthesis tool applies to bespoke (constant-laden) RTL:
+//!
+//! * constant folding (`x & 0 = 0`, `x | 1 = 1`, `x ^ 1 = !x`, …)
+//! * idempotence / complement rules (`x & x = x`, `x & !x = 0`, …)
+//! * double-negation elimination and INV absorption into NAND/NOR/XNOR
+//! * DeMorgan rewrites that shrink transistor count
+//!   (`!x & !y → NOR(x,y)`, `!x | !y → NAND(x,y)`)
+//! * structural hashing (CSE) with commutative canonicalization
+//!
+//! Gates only reference earlier signals, so evaluation and timing are a
+//! single forward pass.  Metrics count *live* gates (reachable from an
+//! output) — the dead-gate sweep mirror's DC's `compile` cleanup.
+
+use std::collections::HashMap;
+
+use super::egt::{CellKind, EgtLibrary};
+use super::HwReport;
+
+/// A signal: constant, primary input, or gate output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Sig {
+    Const(bool),
+    Input(u32),
+    Gate(u32),
+}
+
+/// One gate instance. `Inv`/`Buf`/`Dff` use only `a`.
+#[derive(Clone, Copy, Debug)]
+pub struct Gate {
+    pub kind: CellKind,
+    pub a: Sig,
+    pub b: Sig,
+}
+
+/// A combinational netlist with optional registered outputs.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub n_inputs: usize,
+    pub gates: Vec<Gate>,
+    pub outputs: Vec<Sig>,
+    /// Structural-hash table for CSE.
+    cse: HashMap<(CellKind, Sig, Sig), Sig>,
+    /// Memoized inverter outputs: sig -> !sig.
+    inv_of: HashMap<Sig, Sig>,
+}
+
+impl Netlist {
+    pub fn new(n_inputs: usize) -> Self {
+        Netlist { n_inputs, ..Default::default() }
+    }
+
+    pub fn input(&self, i: usize) -> Sig {
+        assert!(i < self.n_inputs);
+        Sig::Input(i as u32)
+    }
+
+    pub fn set_outputs(&mut self, outs: Vec<Sig>) {
+        self.outputs = outs;
+    }
+
+    // ---- raw gate creation (CSE'd) -------------------------------------
+
+    fn emit(&mut self, kind: CellKind, a: Sig, b: Sig) -> Sig {
+        // Canonicalize commutative operand order for hashing.
+        let (a, b) = match kind {
+            CellKind::Inv | CellKind::Buf | CellKind::Dff => (a, b),
+            _ => {
+                if a <= b {
+                    (a, b)
+                } else {
+                    (b, a)
+                }
+            }
+        };
+        if let Some(&s) = self.cse.get(&(kind, a, b)) {
+            return s;
+        }
+        let id = self.gates.len() as u32;
+        self.gates.push(Gate { kind, a, b });
+        let s = Sig::Gate(id);
+        self.cse.insert((kind, a, b), s);
+        s
+    }
+
+    fn gate(&self, s: Sig) -> Option<&Gate> {
+        match s {
+            Sig::Gate(i) => Some(&self.gates[i as usize]),
+            _ => None,
+        }
+    }
+
+    /// Known complement of `s`, if any (without creating gates).
+    fn complement_of(&self, s: Sig) -> Option<Sig> {
+        if let Sig::Const(v) = s {
+            return Some(Sig::Const(!v));
+        }
+        if let Some(g) = self.gate(s) {
+            if g.kind == CellKind::Inv {
+                return Some(g.a);
+            }
+        }
+        self.inv_of.get(&s).copied()
+    }
+
+    fn are_complements(&self, a: Sig, b: Sig) -> bool {
+        self.complement_of(a) == Some(b) || self.complement_of(b) == Some(a)
+    }
+
+    // ---- simplifying boolean constructors ------------------------------
+
+    pub fn not(&mut self, x: Sig) -> Sig {
+        if let Some(c) = self.complement_of(x) {
+            return c;
+        }
+        // INV absorption: invert the producing gate's kind instead of
+        // stacking an inverter (equal or lower cost, one fewer level).
+        if let Some(g) = self.gate(x).copied() {
+            let flipped = match g.kind {
+                CellKind::And2 => Some(CellKind::Nand2),
+                CellKind::Nand2 => Some(CellKind::And2),
+                CellKind::Or2 => Some(CellKind::Nor2),
+                CellKind::Nor2 => Some(CellKind::Or2),
+                CellKind::Xor2 => Some(CellKind::Xnor2),
+                CellKind::Xnor2 => Some(CellKind::Xor2),
+                _ => None,
+            };
+            if let Some(k) = flipped {
+                let s = self.emit(k, g.a, g.b);
+                self.inv_of.insert(x, s);
+                self.inv_of.insert(s, x);
+                return s;
+            }
+        }
+        let s = self.emit(CellKind::Inv, x, x);
+        self.inv_of.insert(x, s);
+        self.inv_of.insert(s, x);
+        s
+    }
+
+    pub fn and(&mut self, a: Sig, b: Sig) -> Sig {
+        match (a, b) {
+            (Sig::Const(false), _) | (_, Sig::Const(false)) => return Sig::Const(false),
+            (Sig::Const(true), x) | (x, Sig::Const(true)) => return x,
+            _ => {}
+        }
+        if a == b {
+            return a;
+        }
+        if self.are_complements(a, b) {
+            return Sig::Const(false);
+        }
+        // DeMorgan shrink: !x & !y = NOR(x, y)  (4T vs 6T).
+        if let (Some(xa), Some(xb)) = (self.inverted_operand(a), self.inverted_operand(b)) {
+            return self.emit(CellKind::Nor2, xa, xb);
+        }
+        self.emit(CellKind::And2, a, b)
+    }
+
+    pub fn or(&mut self, a: Sig, b: Sig) -> Sig {
+        match (a, b) {
+            (Sig::Const(true), _) | (_, Sig::Const(true)) => return Sig::Const(true),
+            (Sig::Const(false), x) | (x, Sig::Const(false)) => return x,
+            _ => {}
+        }
+        if a == b {
+            return a;
+        }
+        if self.are_complements(a, b) {
+            return Sig::Const(true);
+        }
+        // DeMorgan shrink: !x | !y = NAND(x, y).
+        if let (Some(xa), Some(xb)) = (self.inverted_operand(a), self.inverted_operand(b)) {
+            return self.emit(CellKind::Nand2, xa, xb);
+        }
+        self.emit(CellKind::Or2, a, b)
+    }
+
+    pub fn nand(&mut self, a: Sig, b: Sig) -> Sig {
+        let x = self.and(a, b);
+        self.not(x)
+    }
+
+    pub fn nor(&mut self, a: Sig, b: Sig) -> Sig {
+        let x = self.or(a, b);
+        self.not(x)
+    }
+
+    pub fn xor(&mut self, a: Sig, b: Sig) -> Sig {
+        match (a, b) {
+            (Sig::Const(false), x) | (x, Sig::Const(false)) => return x,
+            (Sig::Const(true), x) | (x, Sig::Const(true)) => return self.not(x),
+            _ => {}
+        }
+        if a == b {
+            return Sig::Const(false);
+        }
+        if self.are_complements(a, b) {
+            return Sig::Const(true);
+        }
+        self.emit(CellKind::Xor2, a, b)
+    }
+
+    pub fn xnor(&mut self, a: Sig, b: Sig) -> Sig {
+        let x = self.xor(a, b);
+        self.not(x)
+    }
+
+    /// Register a signal through a DFF (output staging, paper's registered
+    /// class outputs).
+    pub fn dff(&mut self, d: Sig) -> Sig {
+        self.emit(CellKind::Dff, d, d)
+    }
+
+    /// If `s` is an inverter (or has a cheaper complement already built),
+    /// return the un-inverted source — used by the DeMorgan rules. Only
+    /// returns signals that already exist (never creates gates).
+    fn inverted_operand(&self, s: Sig) -> Option<Sig> {
+        if let Some(g) = self.gate(s) {
+            if g.kind == CellKind::Inv {
+                return Some(g.a);
+            }
+        }
+        None
+    }
+
+    // ---- evaluation -----------------------------------------------------
+
+    /// Evaluate all outputs for one input assignment (test/verification
+    /// path; DFFs are transparent here — we check combinational function).
+    pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
+        assert_eq!(inputs.len(), self.n_inputs);
+        let mut vals = vec![false; self.gates.len()];
+        let get = |vals: &Vec<bool>, s: Sig| -> bool {
+            match s {
+                Sig::Const(v) => v,
+                Sig::Input(i) => inputs[i as usize],
+                Sig::Gate(i) => vals[i as usize],
+            }
+        };
+        for (i, g) in self.gates.iter().enumerate() {
+            let a = get(&vals, g.a);
+            let b = get(&vals, g.b);
+            vals[i] = match g.kind {
+                CellKind::Inv => !a,
+                CellKind::Buf | CellKind::Dff => a,
+                CellKind::And2 => a & b,
+                CellKind::Nand2 => !(a & b),
+                CellKind::Or2 => a | b,
+                CellKind::Nor2 => !(a | b),
+                CellKind::Xor2 => a ^ b,
+                CellKind::Xnor2 => !(a ^ b),
+            };
+        }
+        self.outputs.iter().map(|&o| get(&vals, o)).collect()
+    }
+
+    // ---- metrics ---------------------------------------------------------
+
+    /// Which gates are reachable from the outputs (dead-gate sweep).
+    pub fn live_mask(&self) -> Vec<bool> {
+        let mut live = vec![false; self.gates.len()];
+        let mut stack: Vec<u32> = self
+            .outputs
+            .iter()
+            .filter_map(|&s| match s {
+                Sig::Gate(i) => Some(i),
+                _ => None,
+            })
+            .collect();
+        while let Some(i) = stack.pop() {
+            if live[i as usize] {
+                continue;
+            }
+            live[i as usize] = true;
+            let g = &self.gates[i as usize];
+            for s in [g.a, g.b] {
+                if let Sig::Gate(j) = s {
+                    if !live[j as usize] {
+                        stack.push(j);
+                    }
+                }
+            }
+        }
+        live
+    }
+
+    /// Live cell-count histogram (BTreeMap: deterministic iteration, so
+    /// float metric sums are reproducible).
+    pub fn cell_counts(&self) -> std::collections::BTreeMap<CellKind, usize> {
+        let live = self.live_mask();
+        let mut m = std::collections::BTreeMap::new();
+        for (g, &l) in self.gates.iter().zip(&live) {
+            if l {
+                *m.entry(g.kind).or_insert(0) += 1;
+            }
+        }
+        m
+    }
+
+    /// Area of live gates, mm².
+    pub fn area_mm2(&self, lib: &EgtLibrary) -> f64 {
+        self.cell_counts()
+            .into_iter()
+            .map(|(k, n)| lib.area(k) * n as f64)
+            .sum()
+    }
+
+    /// Critical-path delay over live gates, ms.
+    pub fn delay_ms(&self, lib: &EgtLibrary) -> f64 {
+        let live = self.live_mask();
+        let mut arrival = vec![0f64; self.gates.len()];
+        let get = |arrival: &Vec<f64>, s: Sig| -> f64 {
+            match s {
+                Sig::Gate(i) => arrival[i as usize],
+                _ => 0.0,
+            }
+        };
+        let mut worst: f64 = 0.0;
+        for (i, g) in self.gates.iter().enumerate() {
+            if !live[i] {
+                continue;
+            }
+            let t = lib.delay(g.kind) + get(&arrival, g.a).max(get(&arrival, g.b));
+            arrival[i] = t;
+            worst = worst.max(t);
+        }
+        worst
+    }
+
+    /// Full synthesis report (power via [`super::power`]).
+    pub fn report(&self, lib: &EgtLibrary) -> HwReport {
+        HwReport {
+            area_mm2: self.area_mm2(lib),
+            power_mw: super::power::power_mw(self, lib),
+            delay_ms: self.delay_ms(lib),
+            n_cells: self.live_mask().iter().filter(|&&l| l).count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exhaustively compare a netlist output against a boolean spec.
+    pub fn assert_equiv(nl: &Netlist, spec: impl Fn(&[bool]) -> Vec<bool>) {
+        let n = nl.n_inputs;
+        assert!(n <= 16, "too many inputs for exhaustive check");
+        for m in 0u32..(1 << n) {
+            let inputs: Vec<bool> = (0..n).map(|i| (m >> i) & 1 == 1).collect();
+            assert_eq!(nl.eval(&inputs), spec(&inputs), "inputs {inputs:?}");
+        }
+    }
+
+    #[test]
+    fn constant_folding() {
+        let mut nl = Netlist::new(1);
+        let x = nl.input(0);
+        assert_eq!(nl.and(x, Sig::Const(false)), Sig::Const(false));
+        assert_eq!(nl.and(x, Sig::Const(true)), x);
+        assert_eq!(nl.or(x, Sig::Const(true)), Sig::Const(true));
+        assert_eq!(nl.or(x, Sig::Const(false)), x);
+        assert_eq!(nl.xor(x, Sig::Const(false)), x);
+        assert_eq!(nl.and(x, x), x);
+        assert_eq!(nl.xor(x, x), Sig::Const(false));
+        assert_eq!(nl.gates.len(), 0, "no gates for folded ops");
+    }
+
+    #[test]
+    fn complements_fold() {
+        let mut nl = Netlist::new(1);
+        let x = nl.input(0);
+        let nx = nl.not(x);
+        assert_eq!(nl.not(nx), x, "double negation");
+        assert_eq!(nl.and(x, nx), Sig::Const(false));
+        assert_eq!(nl.or(x, nx), Sig::Const(true));
+        assert_eq!(nl.xor(x, nx), Sig::Const(true));
+    }
+
+    #[test]
+    fn cse_dedups() {
+        let mut nl = Netlist::new(2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let g1 = nl.and(a, b);
+        let g2 = nl.and(b, a); // commuted
+        assert_eq!(g1, g2);
+        assert_eq!(nl.gates.len(), 1);
+    }
+
+    #[test]
+    fn inv_absorption_produces_nand() {
+        let mut nl = Netlist::new(2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let g = nl.and(a, b);
+        let n = nl.not(g);
+        let kinds = nl.cell_counts();
+        nl.set_outputs(vec![n]);
+        assert_eq!(nl.gates[match n { Sig::Gate(i) => i as usize, _ => 99 }].kind, CellKind::Nand2);
+        assert!(!kinds.contains_key(&CellKind::Inv) || kinds[&CellKind::Inv] == 0);
+        assert_equiv(&nl, |ins| vec![!(ins[0] & ins[1])]);
+    }
+
+    #[test]
+    fn demorgan_shrinks() {
+        let mut nl = Netlist::new(2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let na = nl.not(a);
+        let nb = nl.not(b);
+        let g = nl.and(na, nb);
+        nl.set_outputs(vec![g]);
+        assert_equiv(&nl, |ins| vec![!ins[0] & !ins[1]]);
+        // The AND of two inverters must have become a NOR.
+        let counts = nl.cell_counts();
+        assert_eq!(counts.get(&CellKind::Nor2), Some(&1));
+        assert_eq!(counts.get(&CellKind::And2), None);
+    }
+
+    #[test]
+    fn dead_gates_not_counted() {
+        let lib = EgtLibrary::default();
+        let mut nl = Netlist::new(2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let live = nl.and(a, b);
+        let _dead = nl.xor(a, b);
+        nl.set_outputs(vec![live]);
+        assert_eq!(nl.live_mask().iter().filter(|&&l| l).count(), 1);
+        assert!((nl.area_mm2(&lib) - lib.area(CellKind::And2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delay_is_critical_path() {
+        let lib = EgtLibrary::default();
+        let mut nl = Netlist::new(3);
+        let (a, b, c) = (nl.input(0), nl.input(1), nl.input(2));
+        let g1 = nl.and(a, b);
+        let g2 = nl.or(g1, c); // depth 2 path
+        nl.set_outputs(vec![g2]);
+        let want = lib.delay(CellKind::And2) + lib.delay(CellKind::Or2);
+        assert!((nl.delay_ms(&lib) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_expression_equivalence() {
+        // Build random expressions through the simplifying builder and
+        // check against direct boolean evaluation.
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(0xE0);
+        for _case in 0..50 {
+            let n_in = 4;
+            let mut nl = Netlist::new(n_in);
+            // spec expressions as closures over input vectors
+            let mut sigs: Vec<Sig> = (0..n_in).map(|i| nl.input(i)).collect();
+            let mut specs: Vec<Box<dyn Fn(&[bool]) -> bool>> = (0..n_in)
+                .map(|i| Box::new(move |ins: &[bool]| ins[i]) as _)
+                .collect();
+            for _ in 0..12 {
+                let op = rng.below(4);
+                let i = rng.below(sigs.len() as u64) as usize;
+                let j = rng.below(sigs.len() as u64) as usize;
+                let (si, sj) = (sigs[i], sigs[j]);
+                let (s, f): (Sig, Box<dyn Fn(&[bool]) -> bool>) = {
+                    let fi = unsafe { &*(specs[i].as_ref() as *const dyn Fn(&[bool]) -> bool) };
+                    let fj = unsafe { &*(specs[j].as_ref() as *const dyn Fn(&[bool]) -> bool) };
+                    match op {
+                        0 => (nl.and(si, sj), Box::new(move |x: &[bool]| fi(x) & fj(x))),
+                        1 => (nl.or(si, sj), Box::new(move |x: &[bool]| fi(x) | fj(x))),
+                        2 => (nl.xor(si, sj), Box::new(move |x: &[bool]| fi(x) ^ fj(x))),
+                        _ => (nl.not(si), Box::new(move |x: &[bool]| !fi(x))),
+                    }
+                };
+                sigs.push(s);
+                specs.push(f);
+            }
+            let out = *sigs.last().unwrap();
+            nl.set_outputs(vec![out]);
+            for m in 0u32..16 {
+                let ins: Vec<bool> = (0..4).map(|k| (m >> k) & 1 == 1).collect();
+                assert_eq!(nl.eval(&ins)[0], specs.last().unwrap()(&ins), "case {_case} m={m}");
+            }
+        }
+    }
+}

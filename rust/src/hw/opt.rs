@@ -1,0 +1,123 @@
+//! Peephole resynthesis pass.
+//!
+//! The builder in [`super::netlist`] simplifies greedily as gates are
+//! created, but some rewrites only become visible once the whole cone
+//! exists (e.g. an inverter created before its DeMorgan partner).  This
+//! pass replays the live gates, in topological order, through a fresh
+//! simplifying builder — a fixpoint-style cleanup analogous to an
+//! incremental `compile` in Design Compiler.  Iterating until the live cell
+//! count stops improving gives the final "synthesized" netlist.
+
+use super::egt::CellKind;
+use super::netlist::{Netlist, Sig};
+
+/// One resynthesis replay.
+pub fn resynthesize(nl: &Netlist) -> Netlist {
+    let mut out = Netlist::new(nl.n_inputs);
+    let live = nl.live_mask();
+    // Map old signal -> new signal.
+    let mut map: Vec<Option<Sig>> = vec![None; nl.gates.len()];
+    let translate = |map: &Vec<Option<Sig>>, s: Sig| -> Sig {
+        match s {
+            Sig::Gate(i) => map[i as usize].expect("topological order violated"),
+            other => other,
+        }
+    };
+    for (i, g) in nl.gates.iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        let a = translate(&map, g.a);
+        let b = translate(&map, g.b);
+        let s = match g.kind {
+            CellKind::Inv => out.not(a),
+            CellKind::Buf => a,
+            CellKind::And2 => out.and(a, b),
+            CellKind::Nand2 => out.nand(a, b),
+            CellKind::Or2 => out.or(a, b),
+            CellKind::Nor2 => out.nor(a, b),
+            CellKind::Xor2 => out.xor(a, b),
+            CellKind::Xnor2 => out.xnor(a, b),
+            CellKind::Dff => out.dff(a),
+        };
+        map[i] = Some(s);
+    }
+    let outs = nl.outputs.iter().map(|&o| translate(&map, o)).collect();
+    out.set_outputs(outs);
+    out
+}
+
+/// Resynthesize until the live cell count stops shrinking (max 4 rounds —
+/// it converges in 1–2 on everything we generate).
+pub fn optimize(nl: &Netlist) -> Netlist {
+    let mut cur = resynthesize(nl);
+    let mut count = cur.live_mask().iter().filter(|&&l| l).count();
+    for _ in 0..3 {
+        let next = resynthesize(&cur);
+        let next_count = next.live_mask().iter().filter(|&&l| l).count();
+        if next_count >= count {
+            break;
+        }
+        cur = next;
+        count = next_count;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Random netlists: optimize() must preserve the function and never
+    /// increase live cell count.
+    #[test]
+    fn optimize_preserves_function_and_shrinks() {
+        let mut rng = Pcg64::seeded(0x0907);
+        for case in 0..40 {
+            let n_in = 5;
+            let mut nl = Netlist::new(n_in);
+            let mut sigs: Vec<Sig> = (0..n_in).map(|i| nl.input(i)).collect();
+            for _ in 0..20 {
+                let i = rng.below(sigs.len() as u64) as usize;
+                let j = rng.below(sigs.len() as u64) as usize;
+                let s = match rng.below(6) {
+                    0 => nl.and(sigs[i], sigs[j]),
+                    1 => nl.or(sigs[i], sigs[j]),
+                    2 => nl.xor(sigs[i], sigs[j]),
+                    3 => nl.nand(sigs[i], sigs[j]),
+                    4 => nl.nor(sigs[i], sigs[j]),
+                    _ => nl.not(sigs[i]),
+                };
+                sigs.push(s);
+            }
+            let outs: Vec<Sig> = (0..3)
+                .map(|_| sigs[rng.below(sigs.len() as u64) as usize])
+                .collect();
+            nl.set_outputs(outs);
+
+            let opt = optimize(&nl);
+            let before = nl.live_mask().iter().filter(|&&l| l).count();
+            let after = opt.live_mask().iter().filter(|&&l| l).count();
+            assert!(after <= before, "case {case}: {after} > {before}");
+            for m in 0u32..(1 << n_in) {
+                let ins: Vec<bool> = (0..n_in).map(|k| (m >> k) & 1 == 1).collect();
+                assert_eq!(nl.eval(&ins), opt.eval(&ins), "case {case} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn optimize_is_idempotent_on_fixpoint() {
+        let mut nl = Netlist::new(2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let g = nl.nand(a, b);
+        nl.set_outputs(vec![g]);
+        let once = optimize(&nl);
+        let twice = optimize(&once);
+        assert_eq!(
+            once.live_mask().iter().filter(|&&l| l).count(),
+            twice.live_mask().iter().filter(|&&l| l).count()
+        );
+    }
+}

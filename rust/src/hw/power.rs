@@ -1,0 +1,133 @@
+//! EGT power model (PrimeTime stand-in).
+//!
+//! Printed EGT logic draws power mostly *statically* (ratioed logic keeps a
+//! resistive path active), which is why the paper's Table I/II power tracks
+//! area almost linearly (≈0.045 mW/mm² on every row).  We model:
+//!
+//!   P = Σ_cells static(cell)  +  Σ_cells α(cell) · dynamic(cell)
+//!
+//! with switching activity α estimated by propagating signal probabilities
+//! (inputs uniform, independence assumption) — the same first-order model
+//! vectorless PrimeTime runs use.
+
+use super::egt::{CellKind, EgtLibrary};
+use super::netlist::{Netlist, Sig};
+
+/// Signal probability of every gate output (P[out = 1]), inputs at 0.5.
+pub fn signal_probabilities(nl: &Netlist) -> Vec<f64> {
+    let mut p = vec![0.5f64; nl.gates.len()];
+    let get = |p: &Vec<f64>, s: Sig| -> f64 {
+        match s {
+            Sig::Const(true) => 1.0,
+            Sig::Const(false) => 0.0,
+            Sig::Input(_) => 0.5,
+            Sig::Gate(i) => p[i as usize],
+        }
+    };
+    for (i, g) in nl.gates.iter().enumerate() {
+        let a = get(&p, g.a);
+        let b = get(&p, g.b);
+        p[i] = match g.kind {
+            CellKind::Inv => 1.0 - a,
+            CellKind::Buf | CellKind::Dff => a,
+            CellKind::And2 => a * b,
+            CellKind::Nand2 => 1.0 - a * b,
+            CellKind::Or2 => a + b - a * b,
+            CellKind::Nor2 => 1.0 - (a + b - a * b),
+            CellKind::Xor2 => a + b - 2.0 * a * b,
+            CellKind::Xnor2 => 1.0 - (a + b - 2.0 * a * b),
+        };
+    }
+    p
+}
+
+/// Total power of the live netlist, mW.
+pub fn power_mw(nl: &Netlist, lib: &EgtLibrary) -> f64 {
+    let live = nl.live_mask();
+    let probs = signal_probabilities(nl);
+    let mut uw = 0.0;
+    for (i, g) in nl.gates.iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        let cell = lib.cell(g.kind);
+        let p1 = probs[i];
+        let activity = 2.0 * p1 * (1.0 - p1); // toggle probability surrogate
+        uw += cell.static_uw + activity * cell.dynamic_uw;
+    }
+    uw * 1e-3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probabilities_basic_gates() {
+        let mut nl = Netlist::new(2);
+        let (a, b) = (nl.input(0), nl.input(1));
+        let g_and = nl.and(a, b);
+        let g_or = nl.or(a, b);
+        let g_xor = nl.xor(a, b);
+        nl.set_outputs(vec![g_and, g_or, g_xor]);
+        let p = signal_probabilities(&nl);
+        let idx = |s: Sig| match s {
+            Sig::Gate(i) => i as usize,
+            _ => unreachable!(),
+        };
+        assert!((p[idx(g_and)] - 0.25).abs() < 1e-12);
+        assert!((p[idx(g_or)] - 0.75).abs() < 1e-12);
+        assert!((p[idx(g_xor)] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_scales_with_live_area() {
+        let lib = EgtLibrary::default();
+        let mut small = Netlist::new(2);
+        let (a, b) = (small.input(0), small.input(1));
+        let g = small.and(a, b);
+        small.set_outputs(vec![g]);
+
+        let mut big = Netlist::new(4);
+        let ins: Vec<Sig> = (0..4).map(|i| big.input(i)).collect();
+        let g1 = big.and(ins[0], ins[1]);
+        let g2 = big.or(ins[2], ins[3]);
+        let g3 = big.xor(g1, g2);
+        big.set_outputs(vec![g3]);
+
+        assert!(power_mw(&big, &lib) > power_mw(&small, &lib));
+    }
+
+    #[test]
+    fn static_dominates() {
+        // EGT: dynamic at relaxed clocks must be a small fraction.
+        let lib = EgtLibrary::default();
+        let mut nl = Netlist::new(3);
+        let (a, b, c) = (nl.input(0), nl.input(1), nl.input(2));
+        let g1 = nl.and(a, b);
+        let g2 = nl.xor(g1, c);
+        nl.set_outputs(vec![g2]);
+        let total = power_mw(&nl, &lib);
+        let static_only: f64 = nl
+            .cell_counts()
+            .into_iter()
+            .map(|(k, n)| lib.static_power_uw(k) * n as f64)
+            .sum::<f64>()
+            * 1e-3;
+        assert!(static_only / total > 0.9, "static share {}", static_only / total);
+    }
+
+    #[test]
+    fn power_area_ratio_matches_table1_band() {
+        let lib = EgtLibrary::default();
+        let mut nl = Netlist::new(8);
+        let ins: Vec<Sig> = (0..8).map(|i| nl.input(i)).collect();
+        let mut acc = ins[0];
+        for &i in &ins[1..] {
+            acc = nl.and(acc, i);
+        }
+        nl.set_outputs(vec![acc]);
+        let r = power_mw(&nl, &lib) / nl.area_mm2(&lib);
+        assert!((0.035..0.065).contains(&r), "mW/mm² = {r}");
+    }
+}

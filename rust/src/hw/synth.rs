@@ -1,0 +1,437 @@
+//! Bespoke synthesis: hardwired-constant comparators and full decision-tree
+//! netlists (the generator Design Compiler consumes in the paper's flow,
+//! fused with the synthesis itself in ours).
+//!
+//! ## Bespoke comparator
+//!
+//! A decision-tree node computes `x ≤ T` with T *hardwired*.  The LSB→MSB
+//! recurrence
+//!
+//! ```text
+//!   le' = (x_i < t_i) ∨ ((x_i == t_i) ∧ le)
+//!       = t_i ? (¬x_i ∨ le) : (¬x_i ∧ le),      le₀ = 1
+//! ```
+//!
+//! constant-folds at every bit: trailing 1-bits of T cost *nothing*
+//! (`¬x ∨ 1 = 1`), the first 0-bit collapses to a single inverter, and the
+//! remaining bits cost one INV+OR/AND each — which the builder's DeMorgan
+//! and absorption rules then map into NAND/NOR chains.  This bit-pattern
+//! dependence is exactly the non-linear area(T) behaviour of the paper's
+//! Fig. 4, and the reason threshold substitution (±m) finds cheaper
+//! neighbours.
+//!
+//! ## Bespoke tree
+//!
+//! Physical interface: each *used* feature arrives as an
+//! [`FEATURE_BITS`]-bit bus (code = ⌊x·2⁸⌋).  A comparator at precision
+//! `b` consumes the bus's top `b` bits — precision scaling is literally
+//! wiring fewer bits.  Path logic shares prefixes through per-node
+//! "arrival" signals (`arrive(left) = arrive ∧ cmp`), leaves OR into a
+//! binary class encoder, and class bits are registered through DFFs.
+
+use super::netlist::{Netlist, Sig};
+use super::opt;
+use crate::dt::Tree;
+
+/// Full-precision width of a feature input bus.
+pub const FEATURE_BITS: u8 = 8;
+
+/// Build `[x <= t]` over the `x` bit slice (LSB first). Hardwired `t`.
+pub fn le_const(nl: &mut Netlist, x: &[Sig], t: u32) -> Sig {
+    assert!(x.len() <= 31);
+    assert!(t < (1u32 << x.len()), "threshold {t} out of range for {} bits", x.len());
+    let mut le = Sig::Const(true);
+    for (i, &xi) in x.iter().enumerate() {
+        let nx = nl.not(xi);
+        le = if (t >> i) & 1 == 1 {
+            nl.or(nx, le)
+        } else {
+            nl.and(nx, le)
+        };
+    }
+    le
+}
+
+/// Standalone bespoke comparator netlist at `bits` precision with
+/// hardwired integer threshold `t` (the Fig. 4 / area-LUT unit).
+pub fn synth_comparator(bits: u8, t: u32) -> Netlist {
+    let mut nl = Netlist::new(bits as usize);
+    let x: Vec<Sig> = (0..bits as usize).map(|i| nl.input(i)).collect();
+    let out = le_const(&mut nl, &x, t);
+    nl.set_outputs(vec![out]);
+    opt::optimize(&nl)
+}
+
+/// A conventional (non-bespoke) b-bit comparator `x <= y` with *both*
+/// operands as inputs — the ~5× baseline the paper contrasts bespoke
+/// designs against (§II-B).
+pub fn synth_generic_comparator(bits: u8) -> Netlist {
+    let b = bits as usize;
+    let mut nl = Netlist::new(2 * b);
+    let x: Vec<Sig> = (0..b).map(|i| nl.input(i)).collect();
+    let y: Vec<Sig> = (0..b).map(|i| nl.input(b + i)).collect();
+    // le' = (x_i < y_i) | ((x_i == y_i) & le)
+    let mut le = Sig::Const(true);
+    for i in 0..b {
+        let nx = nl.not(x[i]);
+        let lt = nl.and(nx, y[i]);
+        let eq = nl.xnor(x[i], y[i]);
+        let keep = nl.and(eq, le);
+        le = nl.or(lt, keep);
+    }
+    nl.set_outputs(vec![le]);
+    opt::optimize(&nl)
+}
+
+/// Per-comparator approximation used when instantiating a tree netlist.
+#[derive(Clone, Debug)]
+pub struct TreeApprox {
+    /// Precision (2..=8 bits) of each comparator slot.
+    pub bits: Vec<u8>,
+    /// Integer threshold of each comparator slot at its precision
+    /// (already substituted toward its hardware-friendly neighbour).
+    pub thr_int: Vec<u32>,
+}
+
+impl TreeApprox {
+    /// The exact 8-bit baseline configuration for a tree ([1]'s design).
+    pub fn exact(tree: &Tree) -> TreeApprox {
+        let thr = tree.comparator_thresholds();
+        TreeApprox {
+            bits: vec![FEATURE_BITS; thr.len()],
+            thr_int: thr
+                .iter()
+                .map(|&t| crate::quant::int_threshold(t, FEATURE_BITS))
+                .collect(),
+        }
+    }
+}
+
+/// Result of tree synthesis: the netlist plus the feature→bus mapping.
+#[derive(Clone, Debug)]
+pub struct TreeCircuit {
+    pub netlist: Netlist,
+    /// Dense bus index per original feature id (only used features).
+    pub feature_bus: std::collections::BTreeMap<usize, usize>,
+    /// Output width (class-id bits).
+    pub class_bits: usize,
+}
+
+/// Synthesize the bespoke netlist of `tree` under `approx`.
+pub fn synth_tree(tree: &Tree, approx: &TreeApprox) -> TreeCircuit {
+    let comp_feats = tree.comparator_features();
+
+    // Dense feature bus mapping over used features.
+    let mut feature_bus = std::collections::BTreeMap::new();
+    for &f in &comp_feats {
+        let next = feature_bus.len();
+        feature_bus.entry(f).or_insert(next);
+    }
+    let mut nl = Netlist::new(feature_bus.len() * FEATURE_BITS as usize);
+    let outs = synth_tree_into(&mut nl, tree, approx, &feature_bus);
+    // Registered outputs (paper's designs are clocked at a relaxed 50 ms).
+    let regs: Vec<Sig> = outs.into_iter().map(|o| nl.dff(o)).collect();
+    let class_bits = regs.len();
+    nl.set_outputs(regs);
+
+    TreeCircuit {
+        netlist: opt::optimize(&nl),
+        feature_bus,
+        class_bits,
+    }
+}
+
+/// Instantiate one bespoke tree's combinational logic inside an existing
+/// netlist (shared feature buses) and return its unregistered class-bit
+/// signals.  Used by [`synth_tree`] and by the random-forest extension
+/// ([`crate::hw::vote`]), which shares buses between member trees.
+pub fn synth_tree_into(
+    nl: &mut Netlist,
+    tree: &Tree,
+    approx: &TreeApprox,
+    feature_bus: &std::collections::BTreeMap<usize, usize>,
+) -> Vec<Sig> {
+    let comp_feats = tree.comparator_features();
+    let n = comp_feats.len();
+    assert_eq!(approx.bits.len(), n);
+    assert_eq!(approx.thr_int.len(), n);
+
+    // Comparator bank. Slot j compares the top `bits[j]` bits of its
+    // feature bus against thr_int[j].
+    let cmp: Vec<Sig> = (0..n)
+        .map(|j| {
+            let b = approx.bits[j] as usize;
+            assert!((1..=FEATURE_BITS as usize).contains(&b));
+            assert!(approx.thr_int[j] < (1u32 << b));
+            let bus = feature_bus[&comp_feats[j]];
+            let base = bus * FEATURE_BITS as usize;
+            // Top b bits of the bus, LSB-first slice: bus bits [8-b .. 8).
+            let xs: Vec<Sig> = (FEATURE_BITS as usize - b..FEATURE_BITS as usize)
+                .map(|k| nl.input(base + k))
+                .collect();
+            le_const(nl, &xs, approx.thr_int[j])
+        })
+        .collect();
+
+    // Path logic: every leaf ANDs its root→leaf conditions.  A naive
+    // arrival chain (`arrive(left) = arrive ∧ cmp`) is area-minimal but its
+    // delay grows linearly with tree depth — deep grown-to-purity trees
+    // would miss the paper's relaxed 50 ms clock.  We reduce each leaf's
+    // condition list as a *balanced* AND tree instead (logarithmic depth,
+    // the restructuring a timing-driven `compile` performs); structural
+    // hashing still shares the aligned prefix subtrees between sibling
+    // leaves, so the area overhead over the chain form stays small.
+    let leaf_sig: std::collections::HashMap<usize, Sig> = {
+        let paths = tree.leaf_paths();
+        tree.leaf_nodes()
+            .into_iter()
+            .zip(paths)
+            .map(|(leaf, path)| {
+                let mut conds: Vec<Sig> = path
+                    .iter()
+                    .map(|&(slot, sense)| if sense { cmp[slot] } else { nl.not(cmp[slot]) })
+                    .collect();
+                // Pairwise balanced reduction, prefix-aligned for CSE.
+                while conds.len() > 1 {
+                    let mut next = Vec::with_capacity(conds.len().div_ceil(2));
+                    for pair in conds.chunks(2) {
+                        next.push(if pair.len() == 2 {
+                            nl.and(pair[0], pair[1])
+                        } else {
+                            pair[0]
+                        });
+                    }
+                    conds = next;
+                }
+                (leaf, conds.pop().unwrap_or(Sig::Const(true)))
+            })
+            .collect()
+    };
+
+    // Binary class encoder: bit m = OR of leaves whose class sets bit m,
+    // reduced as a balanced tree (same timing argument as the path ANDs).
+    let class_bits = bits_for_classes(tree.n_classes);
+    let leaf_order = tree.leaf_nodes();
+    let mut outs = Vec::with_capacity(class_bits);
+    for m in 0..class_bits {
+        let mut terms: Vec<Sig> = leaf_order
+            .iter()
+            .filter(|&&leaf| (tree.nodes[leaf].leaf_class as u32 >> m) & 1 == 1)
+            .map(|leaf| leaf_sig[leaf])
+            .collect();
+        while terms.len() > 1 {
+            let mut next = Vec::with_capacity(terms.len().div_ceil(2));
+            for pair in terms.chunks(2) {
+                next.push(if pair.len() == 2 { nl.or(pair[0], pair[1]) } else { pair[0] });
+            }
+            terms = next;
+        }
+        outs.push(terms.pop().unwrap_or(Sig::Const(false)));
+    }
+    outs
+}
+
+/// Bits needed to encode `n` class ids.
+pub fn bits_for_classes(n: usize) -> usize {
+    (usize::BITS - (n.max(2) - 1).leading_zeros()) as usize
+}
+
+/// Reference prediction on feature *codes* (8-bit ints) with the same
+/// precision-truncation semantics the hardware uses — the oracle the
+/// netlist is verified against, and the core of the native fitness engine.
+pub fn predict_codes(tree: &Tree, approx: &TreeApprox, codes: &[u32]) -> u32 {
+    let comp_slot: std::collections::HashMap<usize, usize> = tree
+        .comparator_nodes()
+        .into_iter()
+        .enumerate()
+        .map(|(slot, node)| (node, slot))
+        .collect();
+    let mut i = 0usize;
+    loop {
+        let n = &tree.nodes[i];
+        if n.is_leaf() {
+            return n.leaf_class as u32;
+        }
+        let j = comp_slot[&i];
+        let code_b = codes[n.feat as usize] >> (FEATURE_BITS - approx.bits[j]);
+        i = if code_b <= approx.thr_int[j] {
+            n.left as usize
+        } else {
+            n.right as usize
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators;
+    use crate::dt::{train, TrainConfig};
+    use crate::hw::egt::EgtLibrary;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn le_const_exhaustive_all_thresholds() {
+        // Every (bits, T) pair up to 6 bits, every input: netlist == spec.
+        for bits in 1..=6u8 {
+            for t in 0..(1u32 << bits) {
+                let nl = synth_comparator(bits, t);
+                for x in 0..(1u32 << bits) {
+                    let ins: Vec<bool> = (0..bits).map(|i| (x >> i) & 1 == 1).collect();
+                    assert_eq!(
+                        nl.eval(&ins)[0],
+                        x <= t,
+                        "bits={bits} t={t} x={x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn le_const_8bit_spot_checks() {
+        for &t in &[0u32, 1, 127, 128, 200, 254, 255] {
+            let nl = synth_comparator(8, t);
+            for &x in &[0u32, 1, t.saturating_sub(1), t, (t + 1).min(255), 255] {
+                let ins: Vec<bool> = (0..8).map(|i| (x >> i) & 1 == 1).collect();
+                assert_eq!(nl.eval(&ins)[0], x <= t, "t={t} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn comparator_area_depends_on_bit_pattern() {
+        let lib = EgtLibrary::default();
+        // All-ones threshold: always true, zero logic.
+        let free = synth_comparator(8, 255);
+        assert_eq!(free.area_mm2(&lib), 0.0);
+        // 0b01111111 vs 0b10101010: sparse patterns cost more.
+        let cheap = synth_comparator(8, 127).area_mm2(&lib);
+        let costly = synth_comparator(8, 0b10101010).area_mm2(&lib);
+        assert!(cheap < costly, "cheap={cheap} costly={costly}");
+    }
+
+    #[test]
+    fn bespoke_beats_generic_by_big_factor() {
+        // Paper §II-B: a generic 8-bit comparator is ~5× larger than its
+        // bespoke instances on average.
+        let lib = EgtLibrary::default();
+        let generic = synth_generic_comparator(8).area_mm2(&lib);
+        let mean_bespoke: f64 =
+            (0..256).map(|t| synth_comparator(8, t).area_mm2(&lib)).sum::<f64>() / 256.0;
+        let factor = generic / mean_bespoke;
+        assert!(factor > 3.0, "factor {factor}");
+    }
+
+    #[test]
+    fn generic_comparator_correct() {
+        let nl = synth_generic_comparator(4);
+        for x in 0..16u32 {
+            for y in 0..16u32 {
+                let mut ins = vec![false; 8];
+                for i in 0..4 {
+                    ins[i] = (x >> i) & 1 == 1;
+                    ins[4 + i] = (y >> i) & 1 == 1;
+                }
+                assert_eq!(nl.eval(&ins)[0], x <= y, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn class_bit_width() {
+        assert_eq!(bits_for_classes(2), 1);
+        assert_eq!(bits_for_classes(3), 2);
+        assert_eq!(bits_for_classes(4), 2);
+        assert_eq!(bits_for_classes(10), 4);
+        assert_eq!(bits_for_classes(13), 4);
+    }
+
+    /// Full tree netlist equals the code-level walk for random inputs and
+    /// random mixed-precision approximations.
+    #[test]
+    fn tree_netlist_matches_walk() {
+        let spec = generators::spec("seeds").unwrap();
+        let data = generators::generate(spec, 5);
+        let tree = train(&data, &TrainConfig { max_leaves: 12, min_samples_split: 2 });
+        let mut rng = Pcg64::seeded(0x7EE);
+
+        for case in 0..8 {
+            let n = tree.n_comparators();
+            let approx = if case == 0 {
+                TreeApprox::exact(&tree)
+            } else {
+                let bits: Vec<u8> =
+                    (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+                let thr = tree.comparator_thresholds();
+                let thr_int: Vec<u32> = (0..n)
+                    .map(|j| {
+                        let t = crate::quant::int_threshold(thr[j], bits[j]);
+                        crate::quant::substitute(t, rng.int_in(-5, 5) as i32, bits[j])
+                    })
+                    .collect();
+                TreeApprox { bits, thr_int }
+            };
+            let circuit = synth_tree(&tree, &approx);
+
+            for _ in 0..64 {
+                let codes: Vec<u32> =
+                    (0..data.n_features).map(|_| rng.below(256) as u32).collect();
+                // Pack the used-feature buses.
+                let mut ins = vec![false; circuit.netlist.n_inputs];
+                for (&feat, &bus) in &circuit.feature_bus {
+                    for k in 0..FEATURE_BITS as usize {
+                        ins[bus * FEATURE_BITS as usize + k] = (codes[feat] >> k) & 1 == 1;
+                    }
+                }
+                let out = circuit.netlist.eval(&ins);
+                let got: u32 = out
+                    .iter()
+                    .enumerate()
+                    .map(|(m, &b)| (b as u32) << m)
+                    .sum();
+                let want = predict_codes(&tree, &approx, &codes);
+                assert_eq!(got, want, "case {case} codes {codes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_report_in_printed_regime() {
+        let lib = EgtLibrary::default();
+        let spec = generators::spec("seeds").unwrap();
+        let data = generators::generate(spec, 42);
+        let (train_d, _) = data.split(0.3, 42);
+        let tree = train(&train_d, &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 });
+        let circuit = synth_tree(&tree, &TreeApprox::exact(&tree));
+        let rep = circuit.netlist.report(&lib);
+        // Seeds in Table I: 30.13 mm², 1.43 mW, 20.3 ms. Same order of
+        // magnitude is what the calibration targets.
+        assert!(rep.area_mm2 > 5.0 && rep.area_mm2 < 120.0, "area {}", rep.area_mm2);
+        assert!(rep.power_mw > 0.2 && rep.power_mw < 6.0, "power {}", rep.power_mw);
+        assert!(rep.delay_ms > 5.0 && rep.delay_ms < 60.0, "delay {}", rep.delay_ms);
+    }
+
+    #[test]
+    fn lower_precision_never_larger() {
+        // Truncating inputs can only remove logic for the same threshold
+        // pattern class; verify the aggregate trend on a real tree.
+        let lib = EgtLibrary::default();
+        let spec = generators::spec("vertebral").unwrap();
+        let data = generators::generate(spec, 9);
+        let tree = train(&data, &TrainConfig { max_leaves: 16, min_samples_split: 2 });
+        let n = tree.n_comparators();
+        let thr = tree.comparator_thresholds();
+        let area_at = |bits: u8| {
+            let approx = TreeApprox {
+                bits: vec![bits; n],
+                thr_int: thr.iter().map(|&t| crate::quant::int_threshold(t, bits)).collect(),
+            };
+            synth_tree(&tree, &approx).netlist.area_mm2(&lib)
+        };
+        let a2 = area_at(2);
+        let a4 = area_at(4);
+        let a8 = area_at(8);
+        assert!(a2 < a4 && a4 < a8, "a2={a2} a4={a4} a8={a8}");
+    }
+}

@@ -1,0 +1,270 @@
+//! Printed majority-vote stage for bespoke random forests.
+//!
+//! Combines K member-tree class outputs into a voted class id:
+//!
+//! ```text
+//! votes[c]  = Σ_k [class_k == c]          (equality decoders + popcount)
+//! class_out = argmax_c votes[c]           (comparator reduction tree)
+//! ```
+//!
+//! Building blocks are plain EGT gates: ripple-carry adders for the
+//! popcounts and the generic `a > b` comparator chain for the argmax — all
+//! constant-free, so this stage's area is fixed per (K, #classes) while the
+//! member trees shrink under approximation.
+
+use super::netlist::{Netlist, Sig};
+use super::opt;
+use super::synth::{self, bits_for_classes, TreeApprox, FEATURE_BITS};
+use crate::dt::forest::Forest;
+
+/// `[bus == value]` for a little-endian signal bus and a constant.
+pub fn equals_const(nl: &mut Netlist, bus: &[Sig], value: u32) -> Sig {
+    let mut acc = Sig::Const(true);
+    for (i, &b) in bus.iter().enumerate() {
+        let bit = if (value >> i) & 1 == 1 {
+            b
+        } else {
+            nl.not(b)
+        };
+        acc = nl.and(acc, bit);
+    }
+    acc
+}
+
+/// Ripple-carry add of two little-endian buses (unequal widths allowed);
+/// returns a bus one bit wider than the longer input.
+pub fn add(nl: &mut Netlist, a: &[Sig], b: &[Sig]) -> Vec<Sig> {
+    let width = a.len().max(b.len());
+    let mut out = Vec::with_capacity(width + 1);
+    let mut carry = Sig::Const(false);
+    for i in 0..width {
+        let x = a.get(i).copied().unwrap_or(Sig::Const(false));
+        let y = b.get(i).copied().unwrap_or(Sig::Const(false));
+        // full adder
+        let xy = nl.xor(x, y);
+        let sum = nl.xor(xy, carry);
+        let and1 = nl.and(x, y);
+        let and2 = nl.and(xy, carry);
+        carry = nl.or(and1, and2);
+        out.push(sum);
+    }
+    out.push(carry);
+    out
+}
+
+/// `[a > b]` for little-endian buses of equal width.
+pub fn greater_than(nl: &mut Netlist, a: &[Sig], b: &[Sig]) -> Sig {
+    assert_eq!(a.len(), b.len());
+    // gt' from LSB to MSB: gt = (a_i & !b_i) | ((a_i == b_i) & gt)
+    let mut gt = Sig::Const(false);
+    for i in 0..a.len() {
+        let nb = nl.not(b[i]);
+        let win = nl.and(a[i], nb);
+        let eq = nl.xnor(a[i], b[i]);
+        let keep = nl.and(eq, gt);
+        gt = nl.or(win, keep);
+    }
+    gt
+}
+
+/// 2:1 bus mux (`sel ? a : b`).
+fn mux_bus(nl: &mut Netlist, sel: Sig, a: &[Sig], b: &[Sig]) -> Vec<Sig> {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let ns = nl.not(sel);
+            let t1 = nl.and(sel, x);
+            let t2 = nl.and(ns, y);
+            nl.or(t1, t2)
+        })
+        .collect()
+}
+
+/// Result of forest synthesis.
+#[derive(Clone, Debug)]
+pub struct ForestCircuit {
+    pub netlist: Netlist,
+    pub feature_bus: std::collections::BTreeMap<usize, usize>,
+    pub class_bits: usize,
+}
+
+/// Synthesize a bespoke forest: member trees share feature buses; their
+/// class outputs feed the vote stage; the voted class id is registered.
+pub fn synth_forest(forest: &Forest, approxes: &[TreeApprox]) -> ForestCircuit {
+    assert_eq!(approxes.len(), forest.trees.len());
+    // Union feature-bus map across members.
+    let mut feature_bus = std::collections::BTreeMap::new();
+    for t in &forest.trees {
+        for f in t.comparator_features() {
+            let next = feature_bus.len();
+            feature_bus.entry(f).or_insert(next);
+        }
+    }
+    let mut nl = Netlist::new(feature_bus.len() * FEATURE_BITS as usize);
+
+    // Member trees.
+    let member_outs: Vec<Vec<Sig>> = forest
+        .trees
+        .iter()
+        .zip(approxes)
+        .map(|(t, a)| synth::synth_tree_into(&mut nl, t, a, &feature_bus))
+        .collect();
+
+    // Vote popcounts per class.
+    let k = forest.trees.len();
+    let count_bits = (usize::BITS - k.leading_zeros()) as usize;
+    let class_bits = bits_for_classes(forest.n_classes);
+    let mut votes: Vec<Vec<Sig>> = Vec::with_capacity(forest.n_classes);
+    for c in 0..forest.n_classes {
+        let mut total: Vec<Sig> = vec![];
+        for outs in &member_outs {
+            let is_c = equals_const(&mut nl, outs, c as u32);
+            total = if total.is_empty() {
+                vec![is_c]
+            } else {
+                add(&mut nl, &total, &[is_c])
+            };
+        }
+        total.resize(count_bits + 1, Sig::Const(false));
+        votes.push(total);
+    }
+
+    // Argmax reduction (left-biased: ties keep the lower class id).
+    let mut best_count = votes[0].clone();
+    let mut best_id: Vec<Sig> = (0..class_bits).map(|_| Sig::Const(false)).collect();
+    for c in 1..forest.n_classes {
+        let gt = greater_than(&mut nl, &votes[c], &best_count);
+        let c_bus: Vec<Sig> = (0..class_bits)
+            .map(|m| Sig::Const((c >> m) & 1 == 1))
+            .collect();
+        best_id = mux_bus(&mut nl, gt, &c_bus, &best_id);
+        best_count = mux_bus(&mut nl, gt, &votes[c], &best_count);
+    }
+
+    let regs: Vec<Sig> = best_id.into_iter().map(|o| nl.dff(o)).collect();
+    nl.set_outputs(regs);
+    ForestCircuit { netlist: opt::optimize(&nl), feature_bus, class_bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators;
+    use crate::dt::forest::{train_forest, ForestConfig};
+    use crate::hw::EgtLibrary;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn adder_exhaustive_3bit() {
+        for a in 0u32..8 {
+            for b in 0u32..8 {
+                let mut nl = Netlist::new(6);
+                let abus: Vec<Sig> = (0..3).map(|i| nl.input(i)).collect();
+                let bbus: Vec<Sig> = (0..3).map(|i| nl.input(3 + i)).collect();
+                let sum = add(&mut nl, &abus, &bbus);
+                nl.set_outputs(sum);
+                let mut ins = vec![false; 6];
+                for i in 0..3 {
+                    ins[i] = (a >> i) & 1 == 1;
+                    ins[3 + i] = (b >> i) & 1 == 1;
+                }
+                let out = nl.eval(&ins);
+                let got: u32 = out.iter().enumerate().map(|(i, &v)| (v as u32) << i).sum();
+                assert_eq!(got, a + b, "{a}+{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn greater_than_exhaustive_3bit() {
+        for a in 0u32..8 {
+            for b in 0u32..8 {
+                let mut nl = Netlist::new(6);
+                let abus: Vec<Sig> = (0..3).map(|i| nl.input(i)).collect();
+                let bbus: Vec<Sig> = (0..3).map(|i| nl.input(3 + i)).collect();
+                let gt = greater_than(&mut nl, &abus, &bbus);
+                nl.set_outputs(vec![gt]);
+                let mut ins = vec![false; 6];
+                for i in 0..3 {
+                    ins[i] = (a >> i) & 1 == 1;
+                    ins[3 + i] = (b >> i) & 1 == 1;
+                }
+                assert_eq!(nl.eval(&ins)[0], a > b, "{a}>{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn equals_const_exhaustive() {
+        for v in 0u32..8 {
+            for x in 0u32..8 {
+                let mut nl = Netlist::new(3);
+                let bus: Vec<Sig> = (0..3).map(|i| nl.input(i)).collect();
+                let eq = equals_const(&mut nl, &bus, v);
+                nl.set_outputs(vec![eq]);
+                let ins: Vec<bool> = (0..3).map(|i| (x >> i) & 1 == 1).collect();
+                assert_eq!(nl.eval(&ins)[0], x == v);
+            }
+        }
+    }
+
+    /// The synthesized forest circuit votes exactly like the software
+    /// forest on random inputs and random approximations.
+    #[test]
+    fn forest_netlist_matches_vote() {
+        let spec = generators::spec("seeds").unwrap();
+        let data = generators::generate(spec, 11);
+        let forest = train_forest(
+            &data,
+            &ForestConfig { n_trees: 3, max_leaves: 6, sample_frac: 1.0, seed: 5 },
+        );
+        let mut rng = Pcg64::seeded(0xF0);
+        for case in 0..4 {
+            let approx = if case == 0 {
+                forest.exact_approx()
+            } else {
+                let n = forest.n_comparators();
+                let thr = forest.thresholds();
+                let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+                let thr_int: Vec<u32> = (0..n)
+                    .map(|j| crate::quant::int_threshold(thr[j], bits[j]))
+                    .collect();
+                TreeApprox { bits, thr_int }
+            };
+            let parts = forest.split_approx(&approx);
+            let circuit = synth_forest(&forest, &parts);
+            for _ in 0..40 {
+                let codes: Vec<u32> =
+                    (0..data.n_features).map(|_| rng.below(256) as u32).collect();
+                let mut ins = vec![false; circuit.netlist.n_inputs];
+                for (&feat, &bus) in &circuit.feature_bus {
+                    for b in 0..FEATURE_BITS as usize {
+                        ins[bus * FEATURE_BITS as usize + b] = (codes[feat] >> b) & 1 == 1;
+                    }
+                }
+                let out = circuit.netlist.eval(&ins);
+                let got: u32 =
+                    out.iter().enumerate().map(|(m, &v)| (v as u32) << m).sum();
+                let want = forest.predict_codes(&parts, &codes);
+                assert_eq!(got, want, "case {case}");
+            }
+        }
+    }
+
+    #[test]
+    fn forest_circuit_report_scales_with_members() {
+        let spec = generators::spec("seeds").unwrap();
+        let data = generators::generate(spec, 11);
+        let lib = EgtLibrary::default();
+        let area_of = |k: usize| {
+            let f = train_forest(
+                &data,
+                &ForestConfig { n_trees: k, max_leaves: 6, sample_frac: 1.0, seed: 5 },
+            );
+            let parts = f.split_approx(&f.exact_approx());
+            synth_forest(&f, &parts).netlist.area_mm2(&lib)
+        };
+        assert!(area_of(5) > area_of(3));
+    }
+}

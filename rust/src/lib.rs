@@ -1,0 +1,32 @@
+//! # axdt — Approximate Decision Trees for Tiny Printed Circuits
+//!
+//! Production-shaped reproduction of *"Approximate Decision Trees For
+//! Machine Learning Classification on Tiny Printed Circuits"* (Balaskas,
+//! Zervakis, Siozios, Tahoori, Henkel — 2022) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * **L3 (this crate)** — the co-design framework: dataset substrate, CART
+//!   trainer, printed-EGT synthesis simulator + comparator area LUT,
+//!   NSGA-II, and the evaluation coordinator (router / batcher / cache)
+//!   that drives fitness through AOT-compiled XLA artifacts.
+//! * **L2/L1 (build-time python)** — the population accuracy-evaluation
+//!   graph and its Pallas kernel, lowered once to `artifacts/*.hlo.txt`.
+//!
+//! Python never runs at optimization time: `runtime` loads the HLO text via
+//! the PJRT C API and the whole search runs from this binary.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dt;
+pub mod fitness;
+pub mod ga;
+pub mod hw;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate version, surfaced by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

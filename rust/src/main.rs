@@ -1,0 +1,238 @@
+//! `axdt` — launcher for the approximate printed-decision-tree framework.
+//!
+//! ```text
+//! axdt repro table1|fig4|fig5|table2|all   regenerate the paper's artifacts
+//! axdt optimize                            run the NSGA-II co-design search
+//! axdt export-rtl                          emit bespoke Verilog for a design
+//! axdt info                                runtime / artifact / library info
+//! ```
+//!
+//! Python never runs here: accuracy fitness executes the AOT-compiled XLA
+//! artifacts through the PJRT runtime (`--engine xla`, the default), or the
+//! native tree-walk engine (`--engine native`).
+
+use std::io::Write as _;
+
+use anyhow::{anyhow, Context, Result};
+
+use axdt::config::RunConfig;
+use axdt::coordinator::{optimize_dataset, DatasetRun, EngineChoice, EvalService};
+use axdt::report;
+use axdt::util::cli::{flag, opt, usage, Args, OptSpec};
+
+const OPTS: &[OptSpec] = &[
+    opt("config", "JSON config file (defaults < config < flags)"),
+    opt("seed", "experiment seed (default 42)"),
+    opt("datasets", "comma list or 'all' (default all 10)"),
+    opt("pop", "NSGA-II population size (default 48)"),
+    opt("generations", "NSGA-II generations (default 30)"),
+    opt("margin", "threshold substitution margin (default 5)"),
+    opt("engine", "native | native-service | xla (default xla)"),
+    opt("artifacts", "artifact directory (default artifacts)"),
+    opt("threads", "worker threads (default: cores)"),
+    opt("loss", "Table II accuracy-loss budget (default 0.01)"),
+    opt("out", "output directory for JSON results (default results)"),
+    opt("dataset", "single dataset (export-rtl)"),
+    opt("rtl-out", "output .v path (export-rtl)"),
+    flag("verbose", "chatty progress"),
+    flag("help", "show usage"),
+];
+
+const COMMANDS: &[(&str, &str)] = &[
+    ("repro table1", "exact bespoke baselines for each dataset (Table I)"),
+    ("repro fig4", "comparator area-vs-threshold curves (Fig. 4)"),
+    ("repro fig5", "pareto fronts per dataset (Fig. 5)"),
+    ("repro table2", "best designs within the loss budget (Table II)"),
+    ("repro all", "everything above, in order"),
+    ("optimize", "co-design search; writes <out>/runs.json"),
+    ("export-rtl", "emit bespoke Verilog for the best design of --dataset"),
+    ("info", "platform, buckets, cell library, config"),
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("axdt error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, OPTS).map_err(|e| anyhow!("{e}\n\n{}", help()))?;
+    if args.has_flag("help") || args.command.is_empty() {
+        println!("{}", help());
+        return Ok(());
+    }
+    let cfg = RunConfig::resolve(&args)?;
+    if args.get("threads").is_some() {
+        std::env::set_var("AXDT_THREADS", cfg.threads.to_string());
+    }
+
+    match args.command.iter().map(String::as_str).collect::<Vec<_>>()[..] {
+        ["repro", "table1"] => {
+            let (text, _) = report::table1(&cfg.datasets, cfg.seed)?;
+            print!("{text}");
+        }
+        ["repro", "fig4"] => {
+            let (text, _, _) = report::fig4();
+            print!("{text}");
+        }
+        ["repro", "fig5"] => {
+            let runs = run_all(&cfg, args.has_flag("verbose"))?;
+            for r in &runs {
+                print!("{}", report::render_fig5(r));
+            }
+        }
+        ["repro", "table2"] => {
+            let runs = run_all(&cfg, args.has_flag("verbose"))?;
+            print!("{}", report::table2(&runs, cfg.accuracy_loss));
+        }
+        ["repro", "all"] => {
+            let (t1, _) = report::table1(&cfg.datasets, cfg.seed)?;
+            print!("{t1}\n");
+            let (f4, _, _) = report::fig4();
+            print!("{f4}\n");
+            let runs = run_all(&cfg, args.has_flag("verbose"))?;
+            for r in &runs {
+                print!("{}", report::render_fig5(r));
+            }
+            println!();
+            print!("{}", report::table2(&runs, cfg.accuracy_loss));
+            save_runs(&cfg, &runs)?;
+        }
+        ["optimize"] => {
+            let runs = run_all(&cfg, args.has_flag("verbose"))?;
+            for r in &runs {
+                print!("{}", report::render_fig5(r));
+            }
+            save_runs(&cfg, &runs)?;
+        }
+        ["export-rtl"] => {
+            let dataset = args
+                .get("dataset")
+                .ok_or_else(|| anyhow!("export-rtl needs --dataset"))?;
+            export_rtl(&cfg, dataset, args.get("rtl-out"))?;
+        }
+        ["info"] => info(&cfg)?,
+        _ => {
+            return Err(anyhow!("unknown command {:?}\n\n{}", args.command, help()));
+        }
+    }
+    Ok(())
+}
+
+fn help() -> String {
+    usage("axdt", COMMANDS, OPTS)
+}
+
+/// Run the optimization pipeline for every configured dataset, sharing one
+/// evaluation service when the engine needs it.
+fn run_all(cfg: &RunConfig, verbose: bool) -> Result<Vec<DatasetRun>> {
+    let engine = cfg.engine_choice();
+    let service = match engine {
+        EngineChoice::Native => None,
+        EngineChoice::NativeService => Some(EvalService::spawn_native(cfg.pop_size)),
+        EngineChoice::Xla => Some(
+            EvalService::spawn_xla(&cfg.artifact_dir)
+                .context("starting XLA eval service (did you run `make artifacts`?)")?,
+        ),
+    };
+    let opts = cfg.run_options();
+    let mut runs = Vec::new();
+    for d in &cfg.datasets {
+        if verbose {
+            eprintln!("[axdt] optimizing {d} (engine {:?})…", engine);
+        }
+        let run = optimize_dataset(d, &opts, service.as_ref())?;
+        if verbose {
+            eprintln!(
+                "[axdt]   {d}: front {} points, best area gain {:.2}x, {:.1}s",
+                run.front.len(),
+                run.area_gain(cfg.accuracy_loss).unwrap_or(1.0),
+                run.elapsed_s
+            );
+        }
+        runs.push(run);
+    }
+    if let Some(svc) = &service {
+        if verbose {
+            eprintln!("[axdt] eval service: {}", svc.metrics.render());
+        }
+        svc.shutdown();
+    }
+    Ok(runs)
+}
+
+fn save_runs(cfg: &RunConfig, runs: &[DatasetRun]) -> Result<()> {
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let path = format!("{}/runs.json", cfg.out_dir);
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{}", report::RunArchive { runs }.to_json())?;
+    let cfg_path = format!("{}/config.json", cfg.out_dir);
+    std::fs::write(&cfg_path, cfg.to_json())?;
+    eprintln!("[axdt] wrote {path} and {cfg_path}");
+    Ok(())
+}
+
+fn export_rtl(cfg: &RunConfig, dataset: &str, out: Option<&str>) -> Result<()> {
+    let mut one = cfg.clone();
+    one.datasets = vec![dataset.to_string()];
+    let runs = run_all(&one, false)?;
+    let run = &runs[0];
+    let point = run
+        .best_within_loss(cfg.accuracy_loss)
+        .ok_or_else(|| anyhow!("no design within loss budget {}", cfg.accuracy_loss))?;
+    let spec = axdt::data::generators::spec(dataset).unwrap();
+    let data = axdt::data::generators::generate(spec, cfg.seed);
+    let (train_d, _) = data.split(0.3, cfg.seed);
+    let tree = axdt::dt::train(
+        &train_d,
+        &axdt::dt::TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 },
+    );
+    let circuit = axdt::hw::synth::synth_tree(&tree, &point.approx);
+    let verilog = axdt::hw::rtl::export(&tree, &point.approx, &circuit, dataset);
+    match out {
+        Some(path) => {
+            std::fs::write(path, &verilog)?;
+            println!(
+                "wrote {path}: {} (acc {:.3}, {:.2} mm^2, {:.2} mW)",
+                dataset, point.accuracy, point.measured.area_mm2, point.measured.power_mw
+            );
+        }
+        None => print!("{verilog}"),
+    }
+    Ok(())
+}
+
+fn info(cfg: &RunConfig) -> Result<()> {
+    println!("axdt {} — approximate bespoke decision trees for printed circuits", axdt::VERSION);
+    println!("config: {}", cfg.to_json());
+    let lib = axdt::hw::EgtLibrary::default();
+    println!(
+        "EGT library: {:.3} mm^2/T, {:.2} uW/T, {:.2} ms base delay",
+        lib.mm2_per_transistor, lib.uw_per_transistor, lib.base_delay_ms
+    );
+    match axdt::runtime::ArtifactMeta::load(&cfg.artifact_dir) {
+        Ok(meta) => {
+            println!("artifacts ({}):", cfg.artifact_dir);
+            for (b, file) in &meta.buckets {
+                println!(
+                    "  {:<8} S={:<5} N={:<4} L={:<4} C={:<3} P={:<3} {}",
+                    b.name, b.s, b.n, b.l, b.c, b.p, file
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    println!("datasets:");
+    for s in axdt::data::generators::SPECS {
+        println!(
+            "  {:<13} {:>6} samples {:>4} features {:>3} classes (paper acc {:.3}, {} comparators)",
+            s.id, s.n_samples, s.n_features, s.n_classes, s.paper_accuracy, s.paper_comparators
+        );
+    }
+    Ok(())
+}

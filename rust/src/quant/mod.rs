@@ -1,0 +1,151 @@
+//! Fixed-point precision scaling (paper §III-A, Fig. 3b).
+//!
+//! The framework's "flexible threshold conversion module": float thresholds
+//! in [0, 1] are scaled to a per-comparator precision `b ∈ [MIN_BITS,
+//! MAX_BITS]`, converted to integers for (a) the area LUT lookup and (b) the
+//! hardware-friendly substitution within ±m, and back to fixed point for
+//! accuracy evaluation.  Feature codes use the same `b`-bit grid, so the
+//! comparator hardware compares two `b`-bit unsigned integers.
+
+/// Paper §IV: per-comparator precision varies between 2 and 8 bits.
+pub const MIN_BITS: u8 = 2;
+pub const MAX_BITS: u8 = 8;
+/// Paper §IV: threshold substitution margin ±5 (integer steps).
+pub const DEFAULT_MARGIN: i32 = 5;
+
+/// Number of representable codes at `bits` precision.
+#[inline]
+pub fn levels(bits: u8) -> u32 {
+    1u32 << bits
+}
+
+/// Quantize a [0, 1] feature to its `bits`-bit integer code:
+/// `min(floor(x · 2^b), 2^b − 1)` — identical to the Pallas kernel.
+#[inline]
+pub fn code(x: f32, bits: u8) -> u32 {
+    let scale = levels(bits) as f32;
+    let q = (x * scale).floor();
+    (q.max(0.0) as u32).min(levels(bits) - 1)
+}
+
+/// Convert a float threshold in [0, 1] to its `bits`-bit integer threshold.
+///
+/// `floor` keeps the comparator semantics aligned with `code`: the
+/// quantized rule `code(x) <= thr_int` approximates `x <= thr` from below.
+#[inline]
+pub fn int_threshold(thr: f32, bits: u8) -> u32 {
+    code(thr, bits)
+}
+
+/// Hardware-friendly substitution: move the integer threshold by `delta`
+/// (a gene in [−m, +m]), clamped to the representable range.
+#[inline]
+pub fn substitute(thr_int: u32, delta: i32, bits: u8) -> u32 {
+    let max = (levels(bits) - 1) as i64;
+    (thr_int as i64 + delta as i64).clamp(0, max) as u32
+}
+
+/// Fixed-point real value of an integer threshold (used when exporting
+/// designs / reporting; the kernel compares integer codes directly).
+#[inline]
+pub fn to_real(thr_int: u32, bits: u8) -> f32 {
+    thr_int as f32 / levels(bits) as f32
+}
+
+/// The quantized comparator decision: `code(x) <= thr_int`.
+#[inline]
+pub fn cmp_le(x: f32, thr_int: u32, bits: u8) -> bool {
+    code(x, bits) <= thr_int
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+
+    #[test]
+    fn code_bounds_and_monotonicity() {
+        for bits in MIN_BITS..=MAX_BITS {
+            assert_eq!(code(0.0, bits), 0);
+            assert_eq!(code(1.0, bits), levels(bits) - 1, "x=1 clamps");
+            let mut prev = 0;
+            for i in 0..=100 {
+                let c = code(i as f32 / 100.0, bits);
+                assert!(c >= prev, "monotone");
+                assert!(c < levels(bits));
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn code_exact_grid() {
+        // On the exact grid k/2^b the code is k.
+        for bits in MIN_BITS..=MAX_BITS {
+            for k in 0..levels(bits) {
+                let x = k as f32 / levels(bits) as f32;
+                assert_eq!(code(x, bits), k, "bits={bits} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn substitute_clamps() {
+        assert_eq!(substitute(0, -5, 4), 0);
+        assert_eq!(substitute(15, 5, 4), 15);
+        assert_eq!(substitute(7, 3, 4), 10);
+        assert_eq!(substitute(7, -3, 4), 4);
+    }
+
+    #[test]
+    fn cmp_matches_kernel_semantics() {
+        // Mirror of the kernel: min(floor(x*scale), scale-1) <= thr.
+        check(
+            "cmp-kernel-equiv",
+            PropConfig { cases: 256, seed: 0xC0DE },
+            |rng| {
+                let bits = rng.int_in(MIN_BITS as i64, MAX_BITS as i64) as u8;
+                let x = rng.f32();
+                let thr = rng.below(levels(bits) as u64) as u32;
+                (bits, x, thr)
+            },
+            |&(bits, x, thr)| {
+                let scale = levels(bits) as f32;
+                let kernel = (x * scale).floor().min(scale - 1.0) <= thr as f32;
+                if kernel == cmp_le(x, thr, bits) {
+                    Ok(())
+                } else {
+                    Err(format!("kernel={kernel} rust={}", cmp_le(x, thr, bits)))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn higher_precision_refines_threshold() {
+        // int_threshold at b+1 bits is 2x (or 2x+1) of the b-bit one.
+        check(
+            "precision-refinement",
+            PropConfig { cases: 128, seed: 0xBEEF },
+            |rng| (rng.f32(), rng.int_in(MIN_BITS as i64, (MAX_BITS - 1) as i64) as u8),
+            |&(thr, bits)| {
+                let lo = int_threshold(thr, bits);
+                let hi = int_threshold(thr, bits + 1);
+                if hi == 2 * lo || hi == 2 * lo + 1 {
+                    Ok(())
+                } else {
+                    Err(format!("lo={lo} hi={hi}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn to_real_inverts_on_grid() {
+        for bits in MIN_BITS..=MAX_BITS {
+            for k in (0..levels(bits)).step_by(3) {
+                assert_eq!(int_threshold(to_real(k, bits), bits), k);
+            }
+        }
+    }
+}

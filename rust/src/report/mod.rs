@@ -1,0 +1,337 @@
+//! Experiment regeneration: every table and figure of the paper.
+//!
+//! Shared by `cargo bench` targets, the `axdt repro` CLI subcommands and
+//! `examples/paper_repro.rs`.  Each function returns the formatted report
+//! (and machine-readable JSON via [`RunArchive`]) so callers decide where
+//! it goes.
+//!
+//! | paper artifact | function |
+//! |----------------|----------|
+//! | Table I        | [`table1`] |
+//! | Fig. 4 (a,b)   | [`fig4`]   |
+//! | Fig. 5 (a–j)   | [`fig5_run`] + [`render_fig5`] |
+//! | Table II       | [`table2`] |
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::coordinator::{optimize_dataset, DatasetRun, EvalService, RunOptions};
+use crate::data::generators::{self, DatasetSpec};
+use crate::dt::{train, TrainConfig};
+use crate::hw::synth::{self, TreeApprox};
+use crate::hw::{AreaLut, EgtLibrary, HwReport};
+use crate::util::json::Json;
+
+/// Blue Spark printed-battery budget (paper Table II highlighting).
+pub const BATTERY_MW: f64 = 3.0;
+/// Energy-harvester budget.
+pub const HARVESTER_MW: f64 = 0.1;
+
+/// One Table I row: the exact 8-bit bespoke baseline of a dataset.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub spec: &'static DatasetSpec,
+    pub accuracy: f64,
+    pub n_comparators: usize,
+    pub report: HwReport,
+}
+
+/// Build the exact baseline for one dataset (generate → train → synth).
+pub fn exact_baseline(dataset: &str, seed: u64) -> Result<Table1Row> {
+    let spec = generators::spec(dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+    let lib = EgtLibrary::default();
+    let data = generators::generate(spec, seed);
+    let (train_d, test_d) = data.split(0.3, seed);
+    let tree = train(
+        &train_d,
+        &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 },
+    );
+    let accuracy = tree.accuracy(&test_d.x, &test_d.y, test_d.n_features);
+    let circuit = synth::synth_tree(&tree, &TreeApprox::exact(&tree));
+    let report = circuit.netlist.report(&lib);
+    Ok(Table1Row { spec, accuracy, n_comparators: tree.n_comparators(), report })
+}
+
+/// Table I: evaluation of exact bespoke DT circuits.
+pub fn table1(datasets: &[String], seed: u64) -> Result<(String, Vec<Table1Row>)> {
+    let mut rows = Vec::new();
+    for d in datasets {
+        rows.push(exact_baseline(d, seed)?);
+    }
+    let mut out = String::new();
+    writeln!(out, "TABLE I: Evaluation of exact bespoke Decision Tree circuits").unwrap();
+    writeln!(
+        out,
+        "{:<12} {:>9} {:>9} {:>7} {:>7} {:>11} {:>12} {:>11} {:>12} {:>11}",
+        "Dataset", "Accuracy", "(paper)", "#Comp", "(paper)",
+        "Delay(ms)", "Area(mm^2)", "(paper)", "Power(mW)", "(paper)"
+    )
+    .unwrap();
+    for r in &rows {
+        writeln!(
+            out,
+            "{:<12} {:>9.3} {:>9.3} {:>7} {:>7} {:>11.1} {:>12.2} {:>11.2} {:>12.2} {:>11.2}",
+            r.spec.display,
+            r.accuracy,
+            r.spec.paper_accuracy,
+            r.n_comparators,
+            r.spec.paper_comparators,
+            r.report.delay_ms,
+            r.report.area_mm2,
+            r.spec.paper_area_mm2,
+            r.report.power_mw,
+            r.spec.paper_power_mw,
+        )
+        .unwrap();
+    }
+    Ok((out, rows))
+}
+
+/// Fig. 4: bespoke-comparator area vs. integer threshold at 6 and 8 bits.
+/// Returns (rendered text, 6-bit curve, 8-bit curve).
+pub fn fig4() -> (String, Vec<f64>, Vec<f64>) {
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+    let c6 = lut.curve(6).to_vec();
+    let c8 = lut.curve(8).to_vec();
+    let mut out = String::new();
+    writeln!(out, "FIG 4: bespoke comparator area (mm^2) vs threshold value").unwrap();
+    for (bits, curve) in [(6u8, &c6), (8u8, &c8)] {
+        let mean = curve.iter().sum::<f64>() / curve.len() as f64;
+        let max = curve.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        writeln!(
+            out,
+            "  ({}) {bits}-bit: {} thresholds, mean {mean:.3}, max {max:.3}",
+            if bits == 6 { 'a' } else { 'b' },
+            curve.len()
+        )
+        .unwrap();
+        writeln!(out, "{}", ascii_curve(curve, 64, 8)).unwrap();
+    }
+    (out, c6, c8)
+}
+
+/// Coarse ASCII rendition of an area curve (docs + quick eyeballing).
+pub fn ascii_curve(curve: &[f64], width: usize, height: usize) -> String {
+    let max = curve.iter().cloned().fold(f64::EPSILON, f64::max);
+    let bucket = curve.len().div_ceil(width);
+    let cols: Vec<f64> = curve
+        .chunks(bucket)
+        .map(|c| c.iter().sum::<f64>() / c.len() as f64)
+        .collect();
+    let mut grid = vec![vec![' '; cols.len()]; height];
+    for (x, &v) in cols.iter().enumerate() {
+        let h = ((v / max) * (height as f64 - 1.0)).round() as usize;
+        for row in grid.iter_mut().take(h + 1) {
+            // fill from bottom: grid[height-1-k]
+            let _ = row;
+        }
+        for k in 0..=h {
+            grid[height - 1 - k][x] = if k == h { '*' } else { '.' };
+        }
+    }
+    let mut s = String::new();
+    for row in grid {
+        s.push_str("    |");
+        s.extend(row);
+        s.push('\n');
+    }
+    s.push_str("    +");
+    s.push_str(&"-".repeat(cols.len()));
+    s.push('\n');
+    s
+}
+
+/// Run Fig. 5 optimization for one dataset.
+pub fn fig5_run(
+    dataset: &str,
+    opts: &RunOptions,
+    service: Option<&EvalService>,
+) -> Result<DatasetRun> {
+    optimize_dataset(dataset, opts, service)
+}
+
+/// Render one dataset's pareto front (paper Fig. 5 panel): normalized area
+/// (w.r.t. the exact baseline, as the paper normalizes) vs accuracy, for
+/// both the GA's estimated area and the fully synthesized measurement.
+pub fn render_fig5(run: &DatasetRun) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "FIG 5 ({}): baseline acc {:.3} area {:.2} mm^2 | engine={} evals={} elapsed={:.1}s",
+        run.spec.display,
+        run.baseline_accuracy,
+        run.baseline.area_mm2,
+        run.engine,
+        run.evaluations,
+        run.elapsed_s
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "    {:>9} {:>12} {:>12} {:>12} {:>11}",
+        "accuracy", "norm.est", "norm.area", "area(mm^2)", "power(mW)"
+    )
+    .unwrap();
+    for p in &run.front {
+        writeln!(
+            out,
+            "    {:>9.4} {:>12.3} {:>12.3} {:>12.2} {:>11.3}",
+            p.accuracy,
+            p.est_area_mm2 / run.baseline.area_mm2,
+            p.measured.area_mm2 / run.baseline.area_mm2,
+            p.measured.area_mm2,
+            p.measured.power_mw,
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Table II: best designs within an accuracy-loss budget, with battery /
+/// harvester feasibility highlighting.
+pub fn table2(runs: &[DatasetRun], loss: f64) -> String {
+    let mut out = String::new();
+    writeln!(out, "TABLE II: area/power at accuracy threshold {:.0}%", loss * 100.0).unwrap();
+    writeln!(
+        out,
+        "{:<12} {:>9} {:>12} {:>10} {:>11} {:>11} {:>9}",
+        "Dataset", "Accuracy", "Area(mm^2)", "NormArea", "Power(mW)", "NormPower", "Supply"
+    )
+    .unwrap();
+    let mut area_gains = Vec::new();
+    let mut power_gains = Vec::new();
+    for run in runs {
+        match run.best_within_loss(loss) {
+            None => {
+                writeln!(out, "{:<12} -- no design within budget --", run.spec.display).unwrap();
+            }
+            Some(p) => {
+                let na = p.measured.area_mm2 / run.baseline.area_mm2;
+                let np = p.measured.power_mw / run.baseline.power_mw;
+                area_gains.push(1.0 / na);
+                power_gains.push(1.0 / np);
+                let supply = if p.measured.power_mw < HARVESTER_MW {
+                    "harvest"
+                } else if p.measured.power_mw < BATTERY_MW {
+                    "battery"
+                } else {
+                    "ext"
+                };
+                writeln!(
+                    out,
+                    "{:<12} {:>9.2} {:>12.2} {:>10.3} {:>11.2} {:>11.3} {:>9}",
+                    run.spec.display, p.accuracy, p.measured.area_mm2, na,
+                    p.measured.power_mw, np, supply
+                )
+                .unwrap();
+            }
+        }
+    }
+    if !area_gains.is_empty() {
+        writeln!(
+            out,
+            "geo-mean gains: area {:.2}x  power {:.2}x   (paper: 3.2x / 3.4x)",
+            crate::util::stats::geomean(&area_gains),
+            crate::util::stats::geomean(&power_gains),
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Machine-readable archive of a batch of runs (written to `--out`).
+pub struct RunArchive<'a> {
+    pub runs: &'a [DatasetRun],
+}
+
+impl<'a> RunArchive<'a> {
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.runs
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("dataset", Json::str(r.spec.id)),
+                        ("baseline_accuracy", Json::num(r.baseline_accuracy)),
+                        ("baseline_area_mm2", Json::num(r.baseline.area_mm2)),
+                        ("baseline_power_mw", Json::num(r.baseline.power_mw)),
+                        ("baseline_delay_ms", Json::num(r.baseline.delay_ms)),
+                        ("n_comparators", Json::num(r.n_comparators as f64)),
+                        ("evaluations", Json::num(r.evaluations as f64)),
+                        ("elapsed_s", Json::num(r.elapsed_s)),
+                        ("engine", Json::str(r.engine)),
+                        (
+                            "front",
+                            Json::Arr(
+                                r.front
+                                    .iter()
+                                    .map(|p| {
+                                        Json::obj(vec![
+                                            ("accuracy", Json::num(p.accuracy)),
+                                            ("est_area_mm2", Json::num(p.est_area_mm2)),
+                                            ("area_mm2", Json::num(p.measured.area_mm2)),
+                                            ("power_mw", Json::num(p.measured.power_mw)),
+                                            ("delay_ms", Json::num(p.measured.delay_ms)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EngineChoice;
+
+    #[test]
+    fn table1_single_dataset() {
+        let (text, rows) = table1(&["seeds".into()], 42).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(text.contains("Seeds"));
+        assert!(rows[0].report.area_mm2 > 0.0);
+        assert_eq!(rows[0].n_comparators, rows[0].spec.max_leaves - 1);
+    }
+
+    #[test]
+    fn fig4_curves() {
+        let (text, c6, c8) = fig4();
+        assert_eq!(c6.len(), 64);
+        assert_eq!(c8.len(), 256);
+        assert!(text.contains("6-bit"));
+        assert!(text.contains("8-bit"));
+    }
+
+    #[test]
+    fn fig5_and_table2_render() {
+        let opts = RunOptions {
+            pop_size: 12,
+            generations: 4,
+            engine: EngineChoice::Native,
+            ..Default::default()
+        };
+        let run = fig5_run("seeds", &opts, None).unwrap();
+        let fig = render_fig5(&run);
+        assert!(fig.contains("FIG 5 (Seeds)"));
+        let t2 = table2(std::slice::from_ref(&run), 0.05);
+        assert!(t2.contains("TABLE II"));
+        let json = RunArchive { runs: std::slice::from_ref(&run) }.to_json().to_string();
+        assert!(json.contains("\"dataset\":\"seeds\""));
+        crate::util::json::Json::parse(&json).unwrap();
+    }
+
+    #[test]
+    fn ascii_curve_shape() {
+        let s = ascii_curve(&[0.0, 1.0, 0.5, 1.0], 4, 4);
+        assert!(s.contains('*'));
+        assert!(s.lines().count() == 5);
+    }
+}

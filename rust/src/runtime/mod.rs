@@ -1,0 +1,208 @@
+//! XLA/PJRT runtime: loads the AOT artifacts and executes them.
+//!
+//! This is the only place the `xla` crate is touched.  Artifacts are HLO
+//! *text* (see `python/compile/aot.py` for why not serialized protos),
+//! parsed with `HloModuleProto::from_text_file`, compiled once per shape
+//! bucket on the CPU PJRT client, and cached.
+//!
+//! Chromosome-independent operands (`xsel`, `wleaf`, …) are uploaded to
+//! device buffers **once per problem** ([`DeviceStatics`]) and reused every
+//! generation; only the per-batch `(thr, scale)` tensors cross the host
+//! boundary per execution (`execute_b`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::fitness::encode::{Bucket, StaticTensors};
+use crate::util::json::Json;
+
+/// Parsed `artifacts/meta.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub tile_s: usize,
+    pub buckets: Vec<(Bucket, String)>, // (shape, hlo file name)
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactMeta> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?}; run `make artifacts` first"))?;
+        let json = Json::parse(&text).context("parsing meta.json")?;
+        let tile_s = json
+            .get("tile_s")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("meta.json: missing tile_s"))?;
+        let buckets_obj = json
+            .get("buckets")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("meta.json: missing buckets"))?;
+        let mut buckets = Vec::new();
+        for (name, b) in buckets_obj {
+            let field = |k: &str| -> Result<usize> {
+                b.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("meta.json: bucket {name}: missing {k}"))
+            };
+            let bucket = Bucket {
+                name: name.clone(),
+                s: field("s")?,
+                n: field("n")?,
+                l: field("l")?,
+                c: field("c")?,
+                p: field("p")?,
+            };
+            let file = b
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("meta.json: bucket {name}: missing file"))?
+                .to_string();
+            buckets.push((bucket, file));
+        }
+        // Smallest-first so routing picks the tightest fit.
+        buckets.sort_by_key(|(b, _)| b.s * b.n);
+        Ok(ArtifactMeta { dir, tile_s, buckets })
+    }
+
+    /// Smallest bucket that fits the problem.
+    pub fn route(&self, problem: &crate::fitness::Problem) -> Option<&(Bucket, String)> {
+        self.buckets.iter().find(|(b, _)| b.fits(problem))
+    }
+}
+
+/// Static operands resident on the PJRT device.
+pub struct DeviceStatics {
+    pub bucket: Bucket,
+    xsel: xla::PjRtBuffer,
+    labels: xla::PjRtBuffer,
+    valid: xla::PjRtBuffer,
+    wleaf: xla::PjRtBuffer,
+    bias: xla::PjRtBuffer,
+    onehot: xla::PjRtBuffer,
+}
+
+/// The PJRT CPU client plus compiled executables per bucket.
+pub struct XlaRuntime {
+    pub meta: ArtifactMeta,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create the client and lazily-compilable runtime.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let meta = ArtifactMeta::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(XlaRuntime { meta, client, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for a bucket.
+    pub fn ensure_compiled(&mut self, bucket_name: &str) -> Result<()> {
+        if self.executables.contains_key(bucket_name) {
+            return Ok(());
+        }
+        let (_, file) = self
+            .meta
+            .buckets
+            .iter()
+            .find(|(b, _)| b.name == bucket_name)
+            .ok_or_else(|| anyhow!("unknown bucket {bucket_name}"))?;
+        let path = self.meta.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(to_anyhow)
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+        self.executables.insert(bucket_name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Upload a problem's static tensors to the device.
+    pub fn upload_statics(&self, st: &StaticTensors) -> Result<DeviceStatics> {
+        let b = &st.bucket;
+        let up = |data: &[f32], dims: &[usize]| -> Result<xla::PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer::<f32>(data, dims, None)
+                .map_err(to_anyhow)
+        };
+        Ok(DeviceStatics {
+            bucket: b.clone(),
+            xsel: up(&st.xsel, &[b.s, b.n])?,
+            labels: up(&st.labels, &[b.s])?,
+            valid: up(&st.valid, &[b.s])?,
+            wleaf: up(&st.wleaf, &[b.n, b.l])?,
+            bias: up(&st.bias, &[b.l])?,
+            onehot: up(&st.onehot, &[b.l, b.c])?,
+        })
+    }
+
+    /// Execute one population evaluation; returns P accuracies.
+    pub fn execute(
+        &mut self,
+        statics: &DeviceStatics,
+        thr: &[f32],
+        scale: &[f32],
+    ) -> Result<Vec<f32>> {
+        let b = statics.bucket.clone();
+        self.ensure_compiled(&b.name)?;
+        let exe = &self.executables[&b.name];
+        let thr_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(thr, &[b.p, b.n], None)
+            .map_err(to_anyhow)?;
+        let scale_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(scale, &[b.p, b.n], None)
+            .map_err(to_anyhow)?;
+        let args = [
+            &statics.xsel,
+            &statics.labels,
+            &statics.valid,
+            &thr_buf,
+            &scale_buf,
+            &statics.wleaf,
+            &statics.bias,
+            &statics.onehot,
+        ];
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args).map_err(to_anyhow)?;
+        let literal = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        // Lowered with return_tuple=True → 1-tuple.
+        let acc = literal.to_tuple1().map_err(to_anyhow)?;
+        acc.to_vec::<f32>().map_err(to_anyhow)
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+    #[test]
+    fn meta_parses_and_routes() {
+        let meta = ArtifactMeta::load(ART).expect("run `make artifacts` first");
+        assert!(meta.tile_s >= 128, "tile_s {}", meta.tile_s);
+        assert_eq!(meta.buckets.len(), 3);
+        assert_eq!(meta.buckets[0].0.name, "small");
+        // Buckets sorted by capacity.
+        assert!(meta.buckets[0].0.s <= meta.buckets[2].0.s);
+    }
+
+    // End-to-end runtime correctness is covered in rust/tests/ (integration),
+    // where a real problem is routed, uploaded and executed against the
+    // native oracle.
+}

@@ -1,0 +1,136 @@
+//! Criterion-shaped benchmark harness (criterion is not vendored).
+//!
+//! Benches under `rust/benches/` use `harness = false` and drive this:
+//! warmup, fixed-duration timed phase, mean/median/p99 reporting, and a
+//! machine-readable JSON line per benchmark for EXPERIMENTS.md tooling.
+//! Honors `--bench` / `--quick` flags that `cargo bench` passes through.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{fmt_duration_ns, Summary};
+
+/// One benchmark group, printed like `group/name ... mean ± sd`.
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    measure: Duration,
+    quick: bool,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        let argv: Vec<String> = std::env::args().collect();
+        let quick = argv.iter().any(|a| a == "--quick")
+            || std::env::var("AXDT_BENCH_QUICK").is_ok();
+        Bench {
+            group: group.to_string(),
+            warmup: Duration::from_millis(if quick { 20 } else { 200 }),
+            measure: Duration::from_millis(if quick { 100 } else { 1000 }),
+            quick,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Time `f` repeatedly; `f` returns a value that is black-boxed.
+    pub fn iter<R>(&mut self, name: &str, mut f: impl FnMut() -> R) {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        // Choose batch size so one sample is ~1ms..warmup time.
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let batch = ((1e-3 / per_iter).ceil() as u64).clamp(1, 1 << 20);
+
+        let mut summary = Summary::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure || summary.len() < 5 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            summary.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            if summary.len() >= 100_000 {
+                break;
+            }
+        }
+        self.report(name, summary);
+    }
+
+    /// Record a single already-measured duration (for long end-to-end runs
+    /// that cannot be iterated).
+    pub fn record_once(&mut self, name: &str, elapsed: Duration) {
+        let mut s = Summary::new();
+        s.push(elapsed.as_nanos() as f64);
+        self.report(name, s);
+    }
+
+    fn report(&mut self, name: &str, summary: Summary) {
+        let full = format!("{}/{}", self.group, name);
+        println!(
+            "bench {full:<52} mean {:>12}  p50 {:>12}  p99 {:>12}  (n={})",
+            fmt_duration_ns(summary.mean()),
+            fmt_duration_ns(summary.median()),
+            fmt_duration_ns(summary.percentile(0.99)),
+            summary.len(),
+        );
+        println!(
+            "BENCHJSON {{\"bench\":\"{full}\",\"mean_ns\":{:.1},\"p50_ns\":{:.1},\"p99_ns\":{:.1},\"n\":{}}}",
+            summary.mean(),
+            summary.median(),
+            summary.percentile(0.99),
+            summary.len(),
+        );
+        self.results.push((name.to_string(), summary));
+    }
+
+    /// Print a table row (used by the table/figure-regeneration benches,
+    /// which report paper metrics rather than wallclock).
+    pub fn row(&self, line: &str) {
+        println!("{line}");
+    }
+}
+
+/// `std::hint::black_box` wrapper (stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Should this bench run, given `cargo bench -- <filter>` argv?
+pub fn filter_allows(name: &str) -> bool {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let filters: Vec<&String> = argv
+        .iter()
+        .filter(|a| !a.starts_with("--"))
+        .collect();
+    filters.is_empty() || filters.iter().any(|f| name.contains(f.as_str()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("AXDT_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        b.iter("noop", || 1 + 1);
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].1.mean() > 0.0);
+    }
+
+    #[test]
+    fn record_once_works() {
+        let mut b = Bench::new("test");
+        b.record_once("one", Duration::from_millis(5));
+        assert_eq!(b.results[0].1.len(), 1);
+    }
+}

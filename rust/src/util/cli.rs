@@ -1,0 +1,213 @@
+//! Declarative CLI parsing for the `axdt` launcher (clap is not vendored).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments of one (sub)command invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({why})")]
+    BadValue { key: String, value: String, why: String },
+}
+
+/// Option specification used for validation + help.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+pub const fn opt(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, takes_value: true, help }
+}
+pub const fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, takes_value: false, help }
+}
+
+impl Args {
+    /// Parse `argv[1..]` against a spec. The first non-option tokens (before
+    /// any `--key`) are the subcommand path; later bare tokens are
+    /// positionals.
+    pub fn parse(argv: &[String], spec: &[OptSpec]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut i = 0;
+        let mut seen_opt = false;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                seen_opt = true;
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let s = spec
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if s.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    args.opts.insert(key, v);
+                } else {
+                    args.flags.push(key);
+                }
+            } else if !seen_opt && args.positional.is_empty() {
+                args.command.push(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        self.parse_or(name, default)
+    }
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        self.parse_or(name, default)
+    }
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        self.parse_or(name, default)
+    }
+    pub fn i64_or(&self, name: &str, default: i64) -> Result<i64, CliError> {
+        self.parse_or(name, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| CliError::BadValue {
+                key: name.to_string(),
+                value: v.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        }
+    }
+}
+
+/// Render a usage block for `--help`.
+pub fn usage(program: &str, commands: &[(&str, &str)], spec: &[OptSpec]) -> String {
+    let mut s = format!("usage: {program} <command> [options]\n\ncommands:\n");
+    for (c, h) in commands {
+        s.push_str(&format!("  {c:<18} {h}\n"));
+    }
+    s.push_str("\noptions:\n");
+    for o in spec {
+        let name = if o.takes_value {
+            format!("--{} <v>", o.name)
+        } else {
+            format!("--{}", o.name)
+        };
+        s.push_str(&format!("  {name:<22} {}\n", o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPEC: &[OptSpec] = &[
+        opt("seed", "rng seed"),
+        opt("datasets", "comma list"),
+        flag("verbose", "talk more"),
+    ];
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(
+            &sv(&["repro", "table1", "--seed", "42", "--verbose", "--datasets=seeds,cardio"]),
+            SPEC,
+        )
+        .unwrap();
+        assert_eq!(a.command, sv(&["repro", "table1"]));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 42);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.list_or("datasets", &[]), sv(&["seeds", "cardio"]));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--nope"]), SPEC),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--seed"]), SPEC),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = Args::parse(&sv(&["--seed", "abc"]), SPEC).unwrap();
+        assert!(a.u64_or("seed", 0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&["run"]), SPEC).unwrap();
+        assert_eq!(a.u64_or("seed", 7).unwrap(), 7);
+        assert_eq!(a.str_or("datasets", "all"), "all");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn positionals_after_options() {
+        let a = Args::parse(&sv(&["export", "--seed", "1", "out.v"]), SPEC).unwrap();
+        assert_eq!(a.command, sv(&["export"]));
+        assert_eq!(a.positional, sv(&["out.v"]));
+    }
+}

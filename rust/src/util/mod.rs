@@ -1,0 +1,25 @@
+//! Infrastructure substrates.
+//!
+//! This image's crate registry is offline and ships only the `xla` crate's
+//! dependency closure, so the usual ecosystem crates (rand, serde, clap,
+//! rayon, criterion, proptest) are unavailable.  Everything the framework
+//! needs from them is implemented here, small and fully tested:
+//!
+//! * [`rng`] — deterministic PCG64 PRNG + distributions.
+//! * [`json`] — minimal JSON value model, parser and writer (artifact
+//!   metadata, config files, experiment reports).
+//! * [`cli`] — declarative command-line parsing for the `axdt` launcher.
+//! * [`pool`] — scoped thread pool with work-stealing-free static sharding.
+//! * [`stats`] — summary statistics used by benches and reports.
+//! * [`prop`] — a tiny property-testing harness (seeded generators, failure
+//!   reporting with the reproducing seed).
+//! * [`bench`] — a criterion-shaped benchmark harness (warmup, timed
+//!   iterations, mean/p50/p99 reporting) used by `cargo bench`.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

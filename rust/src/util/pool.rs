@@ -1,0 +1,132 @@
+//! Scoped parallel-map helpers over std threads (rayon is not vendored).
+//!
+//! Two entry points:
+//! * [`par_map`] — chunk-sharded parallel map for CPU-bound fitness /
+//!   synthesis work; preserves input order.
+//! * [`par_for_each_indexed`] — atomically work-stolen index loop for
+//!   irregular workloads (netlist synthesis time varies with threshold).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: `AXDT_THREADS` env override, else
+/// available parallelism, clamped to [1, 64].
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("AXDT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 64)
+}
+
+/// Parallel map preserving order. `f` must be `Sync`; items are processed in
+/// contiguous chunks, one chunk set per worker.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().map(&f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let out_slices = Mutex::new(
+        out.chunks_mut(n.div_ceil(threads))
+            .enumerate()
+            .collect::<Vec<_>>(),
+    );
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let taken = out_slices.lock().unwrap().pop();
+                match taken {
+                    None => break,
+                    Some((chunk_idx, slot)) => {
+                        let chunk = n.div_ceil(threads);
+                        let start = chunk_idx * chunk;
+                        for (j, s) in slot.iter_mut().enumerate() {
+                            *s = Some(f(&items[start + j]));
+                        }
+                    }
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
+}
+
+/// Work-stealing index loop: each worker repeatedly claims the next index.
+pub fn par_for_each_indexed<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<u64> = (0..1000).collect();
+        for threads in [1, 2, 3, 8] {
+            let ys = par_map(&xs, threads, |&x| x * x);
+            assert_eq!(ys, xs.iter().map(|&x| x * x).collect::<Vec<_>>(), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let e: Vec<u32> = vec![];
+        assert!(par_map(&e, 4, |&x| x).is_empty());
+        assert_eq!(par_map(&[5u32], 4, |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn par_for_each_covers_all_indices_once() {
+        let n = 10_000;
+        let counters: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_for_each_indexed(n, 8, |i| {
+            counters[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counters.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

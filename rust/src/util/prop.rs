@@ -1,0 +1,91 @@
+//! Tiny property-testing harness (proptest is not vendored).
+//!
+//! Runs a property over `cases` seeded random inputs; on failure it reports
+//! the reproducing seed so `AXDT_PROP_SEED=<seed>` replays exactly that
+//! case.  Shrinking is intentionally out of scope — failures carry the full
+//! generated value via `Debug`.
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        let seed = std::env::var("AXDT_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA1D7);
+        PropConfig { cases: 64, seed }
+    }
+}
+
+/// Check `prop(gen(rng))` for `cfg.cases` generated values.
+/// Panics (test failure) with the case index + seed on the first violation.
+pub fn check<T, G, P>(name: &str, cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::new(cfg.seed, case as u64);
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay with AXDT_PROP_SEED={}):\n  {msg}\n  input: {value:#?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn check_default<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            "sum-commutes",
+            PropConfig { cases: 16, seed: 1 },
+            |rng| (rng.int_in(-100, 100), rng.int_in(-100, 100)),
+            |&(a, b)| {
+                n += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        assert_eq!(n, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            PropConfig { cases: 4, seed: 2 },
+            |rng| rng.next_u64(),
+            |_| Err("nope".into()),
+        );
+    }
+}

