@@ -1,0 +1,19 @@
+# Convenience targets. The default rust build needs none of these — see
+# README.md for the build matrix.
+
+.PHONY: artifacts test bench clean
+
+# Lower the L2 accuracy-evaluation graph to HLO text artifacts consumed by
+# the XLA backend (`--features xla`). Requires jax in the python env.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench
+
+clean:
+	cargo clean
+	rm -rf artifacts results

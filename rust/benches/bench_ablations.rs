@@ -62,7 +62,8 @@ fn main() {
                     })
                     .collect();
                 let approx = TreeApprox { bits: vec![bits; n], thr_int };
-                let acc = engine.batch_accuracy(&problem, std::slice::from_ref(&approx))[0];
+                let acc =
+                    engine.batch_accuracy(&problem, std::slice::from_ref(&approx)).unwrap()[0];
                 if acc >= baseline_acc - 0.01 {
                     uniform_best = uniform_best.min(problem.estimate_area(&lut, &approx));
                 }

@@ -64,11 +64,13 @@ fn main() {
         // is this divided by 32).
         let mut native = NativeEngine::default();
         b.iter(&format!("native_batch32/{dataset}"), || {
-            black_box(native.batch_accuracy(&p, &batch32))
+            black_box(native.batch_accuracy(&p, &batch32).unwrap())
         });
     }
 
-    // XLA path (skip silently when artifacts are absent).
+    // XLA path (compiled only with `--features xla`; skip silently when the
+    // feature is off or artifacts are absent).
+    #[cfg(feature = "xla")]
     match EvalService::spawn_xla("artifacts") {
         Err(e) => b.row(&format!("xla: skipped ({e})")),
         Ok(svc) => {
@@ -82,10 +84,10 @@ fn main() {
                 // Warm (compile + first exec) before timing.
                 let _ = engine.batch_accuracy(&p, &batch32[..1]);
                 b.iter(&format!("xla_exec_pop32/{dataset}"), || {
-                    black_box(engine.batch_accuracy(&p, &batch32))
+                    black_box(engine.batch_accuracy(&p, &batch32).unwrap())
                 });
                 b.iter(&format!("xla_exec_pop1/{dataset}"), || {
-                    black_box(engine.batch_accuracy(&p, &batch32[..1]))
+                    black_box(engine.batch_accuracy(&p, &batch32[..1]).unwrap())
                 });
             }
             b.row(&format!("eval service: {}", svc.metrics.render()));
@@ -93,6 +95,8 @@ fn main() {
             svc.shutdown();
         }
     }
+    #[cfg(not(feature = "xla"))]
+    b.row("xla: skipped (built without the `xla` feature)");
 
     // Coordinator overhead: service round-trip vs direct native call.
     let p = Arc::new(problem_for("seeds"));
@@ -101,10 +105,10 @@ fn main() {
     let batch = random_batch(&p, 32, 9);
     let mut direct = NativeEngine::default();
     b.iter("coordinator_overhead/direct_batch32", || {
-        black_box(direct.batch_accuracy(&p, &batch))
+        black_box(direct.batch_accuracy(&p, &batch).unwrap())
     });
     b.iter("coordinator_overhead/service_batch32", || {
-        black_box(via_service.batch_accuracy(&p, &batch))
+        black_box(via_service.batch_accuracy(&p, &batch).unwrap())
     });
     svc.shutdown();
 }

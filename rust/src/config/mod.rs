@@ -11,6 +11,17 @@ use crate::coordinator::EngineChoice;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
+/// Default engine name: the XLA artifact path when it is compiled in,
+/// otherwise the service-backed native engine (same routing/batching
+/// machinery, no PJRT dependency).
+pub fn default_engine() -> &'static str {
+    if cfg!(feature = "xla") {
+        "xla"
+    } else {
+        "native-service"
+    }
+}
+
 /// Fully resolved run configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -37,7 +48,7 @@ impl Default for RunConfig {
             pop_size: 48,
             generations: 30,
             margin_max: 5,
-            engine: "xla".into(),
+            engine: default_engine().into(),
             artifact_dir: "artifacts".into(),
             threads: 0, // auto
             accuracy_loss: 0.01,

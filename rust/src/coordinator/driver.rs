@@ -31,11 +31,20 @@ pub enum EngineChoice {
 }
 
 impl EngineChoice {
+    /// Parse a CLI/config engine name.  `"xla"` only resolves when the
+    /// binary was built with the `xla` cargo feature; otherwise it is a
+    /// clear error instead of a runtime failure deep in the run.
     pub fn parse(s: &str) -> Result<EngineChoice> {
         match s {
             "native" => Ok(EngineChoice::Native),
             "native-service" => Ok(EngineChoice::NativeService),
+            #[cfg(feature = "xla")]
             "xla" => Ok(EngineChoice::Xla),
+            #[cfg(not(feature = "xla"))]
+            "xla" => Err(anyhow!(
+                "engine 'xla' requires a build with `--features xla` (this binary \
+                 was built without it); use 'native' or 'native-service'"
+            )),
             other => Err(anyhow!("unknown engine '{other}' (native|native-service|xla)")),
         }
     }
@@ -166,8 +175,16 @@ pub fn optimize_dataset(
             })?;
             let engine = XlaEngine::register(service, Arc::clone(&problem))?;
             let mut ev = FitnessEvaluator::new(&problem, &lut, engine);
+            let result = run_ga(n_comparators, &ga_cfg, &mut ev);
+            // A failed batch poisons the run's fitness values: fail this
+            // dataset instead of reporting a front built on placeholders.
+            if let Some(e) = ev.take_error() {
+                return Err(e.context(format!(
+                    "accuracy engine failed while optimizing '{dataset_id}'"
+                )));
+            }
             (
-                run_ga(n_comparators, &ga_cfg, &mut ev),
+                result,
                 if opts.engine == EngineChoice::Xla { "xla" } else { "native-service" },
             )
         }

@@ -21,12 +21,15 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context as _, Result};
 
 use super::metrics::Metrics;
-use crate::fitness::encode::{self, Bucket, StaticTensors};
+use crate::fitness::encode::Bucket;
+#[cfg(feature = "xla")]
+use crate::fitness::encode::{self, StaticTensors};
 use crate::fitness::{native::NativeEngine, AccuracyEngine, Problem};
 use crate::hw::synth::TreeApprox;
+#[cfg(feature = "xla")]
 use crate::runtime::{DeviceStatics, XlaRuntime};
 
 /// Bounded queue depth (jobs in flight before senders block).
@@ -51,6 +54,7 @@ trait Backend {
 
 /// Backend-side registration state.
 enum RegisteredProblem {
+    #[cfg(feature = "xla")]
     Xla { statics: DeviceStatics },
     Native { width: usize },
 }
@@ -58,6 +62,7 @@ enum RegisteredProblem {
 impl RegisteredProblem {
     fn bucket(&self) -> Option<&Bucket> {
         match self {
+            #[cfg(feature = "xla")]
             RegisteredProblem::Xla { statics } => Some(&statics.bucket),
             RegisteredProblem::Native { .. } => None,
         }
@@ -66,6 +71,7 @@ impl RegisteredProblem {
     /// Population width the backend executes at (batch-splitting unit).
     fn width(&self) -> usize {
         match self {
+            #[cfg(feature = "xla")]
             RegisteredProblem::Xla { statics } => statics.bucket.p,
             RegisteredProblem::Native { width } => *width,
         }
@@ -73,10 +79,12 @@ impl RegisteredProblem {
 }
 
 /// PJRT-backed backend.
+#[cfg(feature = "xla")]
 struct XlaBackend {
     runtime: XlaRuntime,
 }
 
+#[cfg(feature = "xla")]
 impl Backend for XlaBackend {
     fn register(&mut self, problem: &Arc<Problem>) -> Result<RegisteredProblem> {
         let (bucket, _) = self
@@ -138,7 +146,7 @@ impl Backend for NativeBackend {
         problem: &Problem,
         chunk: &[TreeApprox],
     ) -> Result<Vec<f64>> {
-        Ok(self.engine.batch_accuracy(problem, chunk))
+        self.engine.batch_accuracy(problem, chunk)
     }
 
     fn name(&self) -> &'static str {
@@ -146,9 +154,19 @@ impl Backend for NativeBackend {
     }
 }
 
-/// Problem handle returned by registration.
+/// Problem handle returned by registration.  Carries the issuing service's
+/// token so an id presented to a *different* service is rejected even when
+/// its index happens to be in range there.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub struct ProblemId(u64);
+pub struct ProblemId {
+    service: u32,
+    index: u32,
+}
+
+/// Process-unique service tokens (0 is never issued, so a forged
+/// `ProblemId` default can't match).
+static NEXT_SERVICE_TOKEN: std::sync::atomic::AtomicU32 =
+    std::sync::atomic::AtomicU32::new(1);
 
 enum Msg {
     Register {
@@ -174,11 +192,24 @@ impl EvalService {
     /// Spawn a service over the PJRT runtime (artifacts required).  The
     /// runtime is constructed *inside* the worker thread (the PJRT client
     /// is not `Send`); construction failure is reported synchronously.
+    #[cfg(feature = "xla")]
     pub fn spawn_xla(artifact_dir: impl AsRef<std::path::Path>) -> Result<EvalService> {
         let dir = artifact_dir.as_ref().to_path_buf();
         Self::spawn_factory(move || {
             Ok(Box::new(XlaBackend { runtime: XlaRuntime::new(dir)? }) as Box<dyn Backend>)
         })
+    }
+
+    /// Feature-off stand-in: the XLA backend is not compiled into this
+    /// build, so spawning it is a clear, synchronous error instead of a
+    /// missing symbol at every call site.
+    #[cfg(not(feature = "xla"))]
+    pub fn spawn_xla(_artifact_dir: impl AsRef<std::path::Path>) -> Result<EvalService> {
+        Err(anyhow!(
+            "this binary was built without the `xla` cargo feature, so the XLA \
+             eval service is unavailable; rebuild with `cargo build --features xla` \
+             or use `--engine native` / `--engine native-service`"
+        ))
     }
 
     /// Spawn a service over the native engine (tests / no-artifact runs).
@@ -197,6 +228,7 @@ impl EvalService {
         let (tx, rx) = mpsc::sync_channel::<Msg>(QUEUE_DEPTH);
         let metrics = Arc::new(Metrics::default());
         let m = Arc::clone(&metrics);
+        let token = NEXT_SERVICE_TOKEN.fetch_add(1, Ordering::Relaxed);
         let (init_tx, init_rx) = mpsc::sync_channel::<Result<()>>(1);
         std::thread::Builder::new()
             .name("axdt-eval-service".into())
@@ -217,7 +249,10 @@ impl EvalService {
                         Msg::Shutdown => break,
                         Msg::Register { problem, reply } => {
                             let res = backend.register(&problem).map(|reg| {
-                                let id = ProblemId(problems.len() as u64);
+                                let id = ProblemId {
+                                    service: token,
+                                    index: problems.len() as u32,
+                                };
                                 let bucket = reg.bucket().cloned();
                                 problems.push((problem, reg));
                                 m.problems.fetch_add(1, Ordering::Relaxed);
@@ -226,7 +261,26 @@ impl EvalService {
                             let _ = reply.send(res);
                         }
                         Msg::Eval { id, batch, reply } => {
-                            let (problem, reg) = &problems[id.0 as usize];
+                            // A stale or foreign id must not kill the worker
+                            // thread (which would wedge every other client)
+                            // NOR silently evaluate against the wrong
+                            // problem: reply with an error and keep serving.
+                            if id.service != token {
+                                let _ = reply.send(Err(anyhow!(
+                                    "{id:?} was issued by a different EvalService \
+                                     (this service has {} registered problem(s))",
+                                    problems.len()
+                                )));
+                                continue;
+                            }
+                            let Some((problem, reg)) = problems.get(id.index as usize) else {
+                                let _ = reply.send(Err(anyhow!(
+                                    "unknown {id:?}: this eval service has {} registered \
+                                     problem(s)",
+                                    problems.len()
+                                )));
+                                continue;
+                            };
                             let width = reg.width();
                             let mut out = Vec::with_capacity(batch.len());
                             let mut failed = None;
@@ -294,26 +348,45 @@ pub struct XlaEngine {
     service: EvalService,
     id: ProblemId,
     problem_name: String,
+    /// Bucket the problem routed to (None for the native backend) — kept
+    /// for error messages.
+    bucket_name: String,
 }
 
 impl XlaEngine {
     /// Register `problem` with the service and wrap the handle.
     pub fn register(service: &EvalService, problem: Arc<Problem>) -> Result<XlaEngine> {
         let name = problem.name.clone();
-        let (id, _bucket) = service.register(problem)?;
-        Ok(XlaEngine { service: service.clone(), id, problem_name: name })
+        let (id, bucket) = service.register(problem)?;
+        let bucket_name = match &bucket {
+            Some(b) => format!("{} (P={})", b.name, b.p),
+            None => "native".to_string(),
+        };
+        Ok(XlaEngine { service: service.clone(), id, problem_name: name, bucket_name })
     }
 }
 
 impl AccuracyEngine for XlaEngine {
-    fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Vec<f64> {
-        assert_eq!(
-            problem.name, self.problem_name,
-            "engine registered for a different problem"
-        );
-        self.service
-            .eval(self.id, batch.to_vec())
-            .expect("eval service failure")
+    /// Batched accuracy through the service.  Failures (stale id, backend
+    /// execution error, service shutdown) propagate as `Err` naming the
+    /// problem and its bucket instead of aborting the whole process — a
+    /// multi-dataset optimization run survives one failing dataset.
+    fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Result<Vec<f64>> {
+        if problem.name != self.problem_name {
+            return Err(anyhow!(
+                "engine registered for problem '{}' but asked to evaluate '{}'",
+                self.problem_name,
+                problem.name
+            ));
+        }
+        self.service.eval(self.id, batch.to_vec()).with_context(|| {
+            format!(
+                "eval service failed on a batch of {} for problem '{}' (bucket {})",
+                batch.len(),
+                self.problem_name,
+                self.bucket_name
+            )
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -353,7 +426,7 @@ mod tests {
         let batch = random_batch(&p, 21, 3); // 21 > width → multiple chunks
         let got = svc.eval(id, batch.clone()).unwrap();
         let mut direct = NativeEngine::default();
-        let want = direct.batch_accuracy(&p, &batch);
+        let want = direct.batch_accuracy(&p, &batch).unwrap();
         assert_eq!(got, want);
         // 21 chromosomes at width 8 → 3 executions, last padded 8-5=3... the
         // native backend pads to chunk len, so waste is 0 but execs == 3.
@@ -376,7 +449,7 @@ mod tests {
                 let batch = random_batch(&p, 10, 100 + t);
                 let got = svc.eval(id, batch.clone()).unwrap();
                 let mut direct = NativeEngine::default();
-                let want = direct.batch_accuracy(&p, &batch);
+                let want = direct.batch_accuracy(&p, &batch).unwrap();
                 assert_eq!(got, want);
             }));
         }
@@ -397,4 +470,8 @@ mod tests {
         assert_eq!(svc.metrics.executions.load(Ordering::Relaxed), 0);
         svc.shutdown();
     }
+
+    // Error-path contracts (invalid/stale ProblemId, requests after
+    // shutdown, width-1 batching parity) are pinned through the public API
+    // in rust/tests/service_errors.rs.
 }

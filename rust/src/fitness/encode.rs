@@ -244,7 +244,7 @@ mod tests {
         let (thr, scale) = pack_population(&p, &bucket, &batch);
         let dense = reference_accuracy(&st, &thr, &scale, batch.len());
         let mut engine = NativeEngine::with_threads(1);
-        let walk = engine.batch_accuracy(&p, &batch);
+        let walk = engine.batch_accuracy(&p, &batch).unwrap();
         for i in 0..batch.len() {
             assert!(
                 (dense[i] - walk[i]).abs() < 1e-6,

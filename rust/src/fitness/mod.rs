@@ -17,6 +17,8 @@ pub mod native;
 
 use std::collections::HashMap;
 
+use anyhow::Result;
+
 use crate::data::Dataset;
 use crate::dt::Tree;
 use crate::ga::{Chromosome, DecodeContext, Evaluator};
@@ -150,8 +152,13 @@ impl Problem {
 }
 
 /// Batched accuracy oracle over concrete approximations.
+///
+/// `Err` means the engine could not evaluate the batch (backend execution
+/// failure, service shutdown, stale registration) — callers must surface
+/// it rather than fabricate fitness.  The native engine never fails; the
+/// service-backed engines do.
 pub trait AccuracyEngine {
-    fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Vec<f64>;
+    fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Result<Vec<f64>>;
     /// Human-readable engine id (logs / benches).
     fn name(&self) -> &'static str;
 }
@@ -165,17 +172,38 @@ pub struct EvalStats {
 }
 
 /// The GA-facing evaluator: decode → (cache | engine) → objectives.
+///
+/// The GA's [`Evaluator`] trait is infallible, so engine failures are
+/// absorbed here: the first error is stored (see [`Self::take_error`]),
+/// the affected chromosomes get pessimistic objectives (`error = 1`, real
+/// area estimate) so the generation can finish, and no further engine
+/// calls are issued.  The driver checks for a stored error after the run
+/// and fails that dataset without fabricating results.
 pub struct FitnessEvaluator<'a, E: AccuracyEngine> {
     pub problem: &'a Problem,
     pub lut: &'a AreaLut,
     pub engine: E,
     cache: HashMap<u64, [f64; 2]>,
     pub stats: EvalStats,
+    error: Option<anyhow::Error>,
 }
 
 impl<'a, E: AccuracyEngine> FitnessEvaluator<'a, E> {
     pub fn new(problem: &'a Problem, lut: &'a AreaLut, engine: E) -> Self {
-        FitnessEvaluator { problem, lut, engine, cache: HashMap::new(), stats: EvalStats::default() }
+        FitnessEvaluator {
+            problem,
+            lut,
+            engine,
+            cache: HashMap::new(),
+            stats: EvalStats::default(),
+            error: None,
+        }
+    }
+
+    /// First engine failure observed during evaluation, if any.  Taking it
+    /// re-arms the evaluator (subsequent batches will hit the engine again).
+    pub fn take_error(&mut self) -> Option<anyhow::Error> {
+        self.error.take()
     }
 }
 
@@ -207,23 +235,34 @@ impl<'a, E: AccuracyEngine> Evaluator for FitnessEvaluator<'a, E> {
                 unique.push((decoded[i].0, i));
             }
         }
-        if !unique.is_empty() {
+        if !unique.is_empty() && self.error.is_none() {
             let batch: Vec<TreeApprox> =
                 unique.iter().map(|&(_, i)| decoded[i].1.clone()).collect();
-            let accs = self.engine.batch_accuracy(self.problem, &batch);
-            assert_eq!(accs.len(), batch.len());
-            self.stats.engine_evals += batch.len();
-            for ((key, i), acc) in unique.iter().zip(accs) {
-                let area = self.problem.estimate_area(self.lut, &decoded[*i].1);
-                self.cache.insert(*key, [1.0 - acc, area]);
-            }
-            for i in 0..pop.len() {
-                if out[i].is_none() {
-                    out[i] = self.cache.get(&decoded[i].0).copied();
+            match self.engine.batch_accuracy(self.problem, &batch) {
+                Ok(accs) => {
+                    assert_eq!(accs.len(), batch.len());
+                    self.stats.engine_evals += batch.len();
+                    for ((key, i), acc) in unique.iter().zip(accs) {
+                        let area = self.problem.estimate_area(self.lut, &decoded[*i].1);
+                        self.cache.insert(*key, [1.0 - acc, area]);
+                    }
+                    for i in 0..pop.len() {
+                        if out[i].is_none() {
+                            out[i] = self.cache.get(&decoded[i].0).copied();
+                        }
+                    }
                 }
+                Err(e) => self.error = Some(e),
             }
         }
-        out.into_iter().map(|o| o.unwrap()).collect()
+        // Unresolved entries (engine failure) get pessimistic objectives —
+        // never cached — so the generation completes without fake wins.
+        out.into_iter()
+            .zip(&decoded)
+            .map(|(o, (_, approx))| {
+                o.unwrap_or_else(|| [1.0, self.problem.estimate_area(self.lut, approx)])
+            })
+            .collect()
     }
 }
 
@@ -291,6 +330,38 @@ mod tests {
         // First call: 6 misses collapsed to 1 engine eval (0 cache hits);
         // second call: all 6 hit the cache.
         assert_eq!(ev.stats.cache_hits, 6);
+    }
+
+    /// An engine failure must surface through [`FitnessEvaluator::take_error`]
+    /// with pessimistic (never cached, never winning) objectives — not a
+    /// panic that kills the whole optimization process.
+    #[test]
+    fn engine_failure_is_stored_not_panicked() {
+        struct FailingEngine;
+        impl AccuracyEngine for FailingEngine {
+            fn batch_accuracy(
+                &mut self,
+                _problem: &Problem,
+                _batch: &[TreeApprox],
+            ) -> Result<Vec<f64>> {
+                Err(anyhow::anyhow!("backend exploded"))
+            }
+            fn name(&self) -> &'static str {
+                "failing"
+            }
+        }
+
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let mut ev = FitnessEvaluator::new(&p, &lut, FailingEngine);
+        let pop = vec![Chromosome::exact(p.n_comparators()); 3];
+        let objs = ev.evaluate(&pop);
+        assert_eq!(objs.len(), pop.len());
+        assert!(objs.iter().all(|o| o[0] == 1.0), "worst-case error objective");
+        assert_eq!(ev.stats.engine_evals, 0);
+        let err = ev.take_error().expect("failure must be stored");
+        assert!(format!("{err}").contains("exploded"));
+        assert!(ev.take_error().is_none(), "take_error drains");
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! hot-path bench compares engines on, and a fallback when artifacts are
 //! absent.  Work is sharded across the thread pool by chromosome.
 
+use anyhow::Result;
+
 use super::{AccuracyEngine, Problem};
 use crate::hw::synth::{TreeApprox, FEATURE_BITS};
 use crate::util::pool;
@@ -55,9 +57,10 @@ pub fn predict(problem: &Problem, approx: &TreeApprox, codes: &[u32]) -> u32 {
 }
 
 impl AccuracyEngine for NativeEngine {
-    fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Vec<f64> {
+    /// Infallible: the tree walk has no backend to lose.
+    fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Result<Vec<f64>> {
         let threads = if self.threads == 0 { pool::default_threads() } else { self.threads };
-        pool::par_map(batch, threads, |approx| Self::accuracy_one(problem, approx))
+        Ok(pool::par_map(batch, threads, |approx| Self::accuracy_one(problem, approx)))
     }
 
     fn name(&self) -> &'static str {
@@ -114,8 +117,8 @@ mod tests {
             .collect();
         let mut e1 = NativeEngine::with_threads(1);
         let mut e4 = NativeEngine::with_threads(4);
-        let a1 = e1.batch_accuracy(&p, &batch);
-        let a4 = e4.batch_accuracy(&p, &batch);
+        let a1 = e1.batch_accuracy(&p, &batch).unwrap();
+        let a4 = e4.batch_accuracy(&p, &batch).unwrap();
         assert_eq!(a1, a4);
         for (i, approx) in batch.iter().enumerate() {
             assert_eq!(a1[i], NativeEngine::accuracy_one(&p, approx));

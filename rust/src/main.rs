@@ -8,8 +8,9 @@
 //! ```
 //!
 //! Python never runs here: accuracy fitness executes the AOT-compiled XLA
-//! artifacts through the PJRT runtime (`--engine xla`, the default), or the
-//! native tree-walk engine (`--engine native`).
+//! artifacts through the PJRT runtime (`--engine xla`, the default when the
+//! binary is built with `--features xla`), or the native tree-walk engine
+//! (`--engine native` / `--engine native-service`, the offline default).
 
 use std::io::Write as _;
 
@@ -27,7 +28,7 @@ const OPTS: &[OptSpec] = &[
     opt("pop", "NSGA-II population size (default 48)"),
     opt("generations", "NSGA-II generations (default 30)"),
     opt("margin", "threshold substitution margin (default 5)"),
-    opt("engine", "native | native-service | xla (default xla)"),
+    opt("engine", "native | native-service | xla (default: xla if built in, else native-service)"),
     opt("artifacts", "artifact directory (default artifacts)"),
     opt("threads", "worker threads (default: cores)"),
     opt("loss", "Table II accuracy-loss budget (default 0.01)"),
@@ -81,34 +82,38 @@ fn run(argv: &[String]) -> Result<()> {
             print!("{text}");
         }
         ["repro", "fig5"] => {
-            let runs = run_all(&cfg, args.has_flag("verbose"))?;
+            let (runs, failed) = run_all(&cfg, args.has_flag("verbose"))?;
             for r in &runs {
                 print!("{}", report::render_fig5(r));
             }
+            partial_failure(&failed)?;
         }
         ["repro", "table2"] => {
-            let runs = run_all(&cfg, args.has_flag("verbose"))?;
+            let (runs, failed) = run_all(&cfg, args.has_flag("verbose"))?;
             print!("{}", report::table2(&runs, cfg.accuracy_loss));
+            partial_failure(&failed)?;
         }
         ["repro", "all"] => {
             let (t1, _) = report::table1(&cfg.datasets, cfg.seed)?;
             print!("{t1}\n");
             let (f4, _, _) = report::fig4();
             print!("{f4}\n");
-            let runs = run_all(&cfg, args.has_flag("verbose"))?;
+            let (runs, failed) = run_all(&cfg, args.has_flag("verbose"))?;
             for r in &runs {
                 print!("{}", report::render_fig5(r));
             }
             println!();
             print!("{}", report::table2(&runs, cfg.accuracy_loss));
             save_runs(&cfg, &runs)?;
+            partial_failure(&failed)?;
         }
         ["optimize"] => {
-            let runs = run_all(&cfg, args.has_flag("verbose"))?;
+            let (runs, failed) = run_all(&cfg, args.has_flag("verbose"))?;
             for r in &runs {
                 print!("{}", report::render_fig5(r));
             }
             save_runs(&cfg, &runs)?;
+            partial_failure(&failed)?;
         }
         ["export-rtl"] => {
             let dataset = args
@@ -128,9 +133,26 @@ fn help() -> String {
     usage("axdt", COMMANDS, OPTS)
 }
 
+/// Surface a partial multi-dataset failure as a non-zero exit — after the
+/// completed runs have been rendered and archived — so pipelines wrapping
+/// `axdt` don't mistake an incomplete reproduction for success.
+fn partial_failure(failed: &[String]) -> Result<()> {
+    if failed.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!(
+            "{} dataset run(s) failed: {} (completed runs were reported/saved above)",
+            failed.len(),
+            failed.join(", ")
+        ))
+    }
+}
+
 /// Run the optimization pipeline for every configured dataset, sharing one
-/// evaluation service when the engine needs it.
-fn run_all(cfg: &RunConfig, verbose: bool) -> Result<Vec<DatasetRun>> {
+/// evaluation service when the engine needs it.  Returns the completed runs
+/// plus the ids of datasets that failed (callers decide how to surface
+/// those once their reports are out).
+fn run_all(cfg: &RunConfig, verbose: bool) -> Result<(Vec<DatasetRun>, Vec<String>)> {
     let engine = cfg.engine_choice();
     let service = match engine {
         EngineChoice::Native => None,
@@ -142,20 +164,30 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<Vec<DatasetRun>> {
     };
     let opts = cfg.run_options();
     let mut runs = Vec::new();
+    let mut failed: Vec<String> = Vec::new();
     for d in &cfg.datasets {
         if verbose {
             eprintln!("[axdt] optimizing {d} (engine {:?})…", engine);
         }
-        let run = optimize_dataset(d, &opts, service.as_ref())?;
-        if verbose {
-            eprintln!(
-                "[axdt]   {d}: front {} points, best area gain {:.2}x, {:.1}s",
-                run.front.len(),
-                run.area_gain(cfg.accuracy_loss).unwrap_or(1.0),
-                run.elapsed_s
-            );
+        // One failing dataset (e.g. a backend execution error) must not
+        // abort the remaining datasets of a multi-dataset run.
+        match optimize_dataset(d, &opts, service.as_ref()) {
+            Ok(run) => {
+                if verbose {
+                    eprintln!(
+                        "[axdt]   {d}: front {} points, best area gain {:.2}x, {:.1}s",
+                        run.front.len(),
+                        run.area_gain(cfg.accuracy_loss).unwrap_or(1.0),
+                        run.elapsed_s
+                    );
+                }
+                runs.push(run);
+            }
+            Err(e) => {
+                eprintln!("[axdt] {d}: optimization failed: {e:#}");
+                failed.push(d.clone());
+            }
         }
-        runs.push(run);
     }
     if let Some(svc) = &service {
         if verbose {
@@ -163,7 +195,19 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<Vec<DatasetRun>> {
         }
         svc.shutdown();
     }
-    Ok(runs)
+    if runs.is_empty() {
+        return Err(anyhow!("all {} dataset run(s) failed", failed.len()));
+    }
+    if !failed.is_empty() {
+        eprintln!(
+            "[axdt] completed {}/{} datasets ({} failed: {})",
+            runs.len(),
+            cfg.datasets.len(),
+            failed.len(),
+            failed.join(", ")
+        );
+    }
+    Ok((runs, failed))
 }
 
 fn save_runs(cfg: &RunConfig, runs: &[DatasetRun]) -> Result<()> {
@@ -180,7 +224,8 @@ fn save_runs(cfg: &RunConfig, runs: &[DatasetRun]) -> Result<()> {
 fn export_rtl(cfg: &RunConfig, dataset: &str, out: Option<&str>) -> Result<()> {
     let mut one = cfg.clone();
     one.datasets = vec![dataset.to_string()];
-    let runs = run_all(&one, false)?;
+    let (runs, failed) = run_all(&one, false)?;
+    partial_failure(&failed)?;
     let run = &runs[0];
     let point = run
         .best_within_loss(cfg.accuracy_loss)

@@ -1,21 +1,30 @@
 //! XLA/PJRT runtime: loads the AOT artifacts and executes them.
 //!
-//! This is the only place the `xla` crate is touched.  Artifacts are HLO
-//! *text* (see `python/compile/aot.py` for why not serialized protos),
-//! parsed with `HloModuleProto::from_text_file`, compiled once per shape
-//! bucket on the CPU PJRT client, and cached.
+//! This is the only place the `xla` crate is touched, and everything that
+//! does is gated behind the optional `xla` cargo feature — the default
+//! build is pure native Rust and must compile offline.  [`ArtifactMeta`]
+//! (plain JSON parsing of `artifacts/meta.json`) stays available in every
+//! build: routing decisions and the `axdt info` command need it without a
+//! PJRT client.
 //!
-//! Chromosome-independent operands (`xsel`, `wleaf`, …) are uploaded to
-//! device buffers **once per problem** ([`DeviceStatics`]) and reused every
-//! generation; only the per-batch `(thr, scale)` tensors cross the host
-//! boundary per execution (`execute_b`).
+//! With the feature enabled: artifacts are HLO *text* (see
+//! `python/compile/aot.py` for why not serialized protos), parsed with
+//! `HloModuleProto::from_text_file`, compiled once per shape bucket on the
+//! CPU PJRT client, and cached.  Chromosome-independent operands (`xsel`,
+//! `wleaf`, …) are uploaded to device buffers **once per problem**
+//! ([`DeviceStatics`]) and reused every generation; only the per-batch
+//! `(thr, scale)` tensors cross the host boundary per execution
+//! (`execute_b`).
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::fitness::encode::{Bucket, StaticTensors};
+use crate::fitness::encode::Bucket;
+#[cfg(feature = "xla")]
+use crate::fitness::encode::StaticTensors;
 use crate::util::json::Json;
 
 /// Parsed `artifacts/meta.json`.
@@ -75,6 +84,7 @@ impl ArtifactMeta {
 }
 
 /// Static operands resident on the PJRT device.
+#[cfg(feature = "xla")]
 pub struct DeviceStatics {
     pub bucket: Bucket,
     xsel: xla::PjRtBuffer,
@@ -86,12 +96,14 @@ pub struct DeviceStatics {
 }
 
 /// The PJRT CPU client plus compiled executables per bucket.
+#[cfg(feature = "xla")]
 pub struct XlaRuntime {
     pub meta: ArtifactMeta,
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl XlaRuntime {
     /// Create the client and lazily-compilable runtime.
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<XlaRuntime> {
@@ -182,6 +194,7 @@ impl XlaRuntime {
     }
 }
 
+#[cfg(feature = "xla")]
 fn to_anyhow(e: xla::Error) -> anyhow::Error {
     anyhow!("{e}")
 }
@@ -194,6 +207,13 @@ mod tests {
 
     #[test]
     fn meta_parses_and_routes() {
+        if !Path::new(ART).join("meta.json").exists() {
+            eprintln!(
+                "skipping meta_parses_and_routes: {ART}/meta.json not found \
+                 (run `make artifacts` to generate the AOT artifacts)"
+            );
+            return;
+        }
         let meta = ArtifactMeta::load(ART).expect("run `make artifacts` first");
         assert!(meta.tile_s >= 128, "tile_s {}", meta.tile_s);
         assert_eq!(meta.buckets.len(), 3);

@@ -1,22 +1,50 @@
 //! Cross-layer integration tests: the AOT XLA artifact (L1/L2) against the
 //! native rust oracle (L3), through the full coordinator machinery.
 //!
-//! Requires `make artifacts` (meta.json + *.hlo.txt). These tests ARE the
-//! proof that the three layers compute the same function.
+//! The `xla_*` tests compile only with `--features xla` and additionally
+//! skip themselves (with a message) when `artifacts/meta.json` is absent or
+//! the PJRT runtime cannot start — run `make artifacts` and vendor a real
+//! `xla` binding to exercise them.  When they do run, they ARE the proof
+//! that the three layers compute the same function.
 
 use std::sync::Arc;
 
+#[cfg(feature = "xla")]
 use axdt::coordinator::{EvalService, XlaEngine};
 use axdt::data::generators;
 use axdt::dt::{train, TrainConfig};
 use axdt::fitness::native::NativeEngine;
-use axdt::fitness::{AccuracyEngine, FitnessEvaluator, Problem};
+use axdt::fitness::{FitnessEvaluator, Problem};
 use axdt::ga::{run_nsga2, Chromosome, NsgaConfig};
+#[cfg(feature = "xla")]
 use axdt::hw::synth::TreeApprox;
 use axdt::hw::{AreaLut, EgtLibrary};
+#[cfg(feature = "xla")]
 use axdt::util::rng::Pcg64;
 
+#[cfg(feature = "xla")]
+use axdt::fitness::AccuracyEngine;
+
+#[cfg(feature = "xla")]
 const ART: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+/// Spawn the XLA eval service, or skip the calling test with a reason:
+/// missing artifacts (run `make artifacts`) or an unvendored/unavailable
+/// PJRT runtime.
+#[cfg(feature = "xla")]
+fn spawn_xla_or_skip() -> Option<EvalService> {
+    if !std::path::Path::new(ART).join("meta.json").exists() {
+        eprintln!("skipping: {ART}/meta.json not found; run `make artifacts` first");
+        return None;
+    }
+    match EvalService::spawn_xla(ART) {
+        Ok(svc) => Some(svc),
+        Err(e) => {
+            eprintln!("skipping: XLA eval service unavailable ({e:#})");
+            None
+        }
+    }
+}
 
 fn problem_for(dataset: &str, seed: u64) -> Problem {
     let lib = EgtLibrary::default();
@@ -31,6 +59,7 @@ fn problem_for(dataset: &str, seed: u64) -> Problem {
     Problem::new(spec.id, tree, &test_d, &lut, &lib, 5)
 }
 
+#[cfg(feature = "xla")]
 fn random_batch(p: &Problem, count: usize, seed: u64) -> Vec<TreeApprox> {
     let mut rng = Pcg64::seeded(seed);
     let n = p.n_comparators();
@@ -52,8 +81,9 @@ fn random_batch(p: &Problem, count: usize, seed: u64) -> Vec<TreeApprox> {
 /// shape buckets), the XLA artifact and the native tree walk agree on every
 /// chromosome to f32 precision.
 #[test]
+#[cfg(feature = "xla")]
 fn xla_engine_matches_native_oracle() {
-    let svc = EvalService::spawn_xla(ART).expect("artifacts present");
+    let Some(svc) = spawn_xla_or_skip() else { return };
     // seeds → small bucket, cardio → medium, har would be large (slow; the
     // large bucket is covered by the quick variant below).
     for (dataset, n_chrom) in [("seeds", 40), ("vertebral", 12), ("cardio", 8)] {
@@ -61,8 +91,8 @@ fn xla_engine_matches_native_oracle() {
         let mut xla = XlaEngine::register(&svc, Arc::clone(&problem)).unwrap();
         let mut native = NativeEngine::default();
         let batch = random_batch(&problem, n_chrom, 7);
-        let a_xla = xla.batch_accuracy(&problem, &batch);
-        let a_nat = native.batch_accuracy(&problem, &batch);
+        let a_xla = xla.batch_accuracy(&problem, &batch).unwrap();
+        let a_nat = native.batch_accuracy(&problem, &batch).unwrap();
         for i in 0..batch.len() {
             assert!(
                 (a_xla[i] - a_nat[i]).abs() < 1e-5,
@@ -77,12 +107,13 @@ fn xla_engine_matches_native_oracle() {
 
 /// Exact chromosome through the artifact == 8-bit baseline accuracy.
 #[test]
+#[cfg(feature = "xla")]
 fn xla_exact_baseline_accuracy() {
-    let svc = EvalService::spawn_xla(ART).unwrap();
+    let Some(svc) = spawn_xla_or_skip() else { return };
     let problem = Arc::new(problem_for("seeds", 42));
     let mut xla = XlaEngine::register(&svc, Arc::clone(&problem)).unwrap();
     let exact = TreeApprox::exact(&problem.tree);
-    let acc = xla.batch_accuracy(&problem, &[exact.clone()])[0];
+    let acc = xla.batch_accuracy(&problem, &[exact.clone()]).unwrap()[0];
     let want = NativeEngine::accuracy_one(&problem, &exact);
     assert!((acc - want).abs() < 1e-5, "xla {acc} native {want}");
     svc.shutdown();
@@ -91,8 +122,9 @@ fn xla_exact_baseline_accuracy() {
 /// A short NSGA-II run with the XLA engine produces a sane front whose
 /// accuracies re-verify against the native engine.
 #[test]
+#[cfg(feature = "xla")]
 fn ga_over_xla_engine_front_verifies() {
-    let svc = EvalService::spawn_xla(ART).unwrap();
+    let Some(svc) = spawn_xla_or_skip() else { return };
     let lib = EgtLibrary::default();
     let lut = AreaLut::build(&lib);
     let problem = Arc::new(problem_for("seeds", 42));
@@ -100,6 +132,12 @@ fn ga_over_xla_engine_front_verifies() {
     let mut ev = FitnessEvaluator::new(&problem, &lut, engine);
     let cfg = NsgaConfig { pop_size: 16, generations: 5, seed: 3, ..Default::default() };
     let res = run_nsga2(problem.n_comparators(), &cfg, &mut ev);
+    // Surface a mid-run engine failure directly instead of letting the
+    // pessimistic placeholder objectives fail the accuracy asserts below
+    // with a baffling numeric mismatch.
+    if let Some(e) = ev.take_error() {
+        panic!("eval engine failed mid-run: {e:#}");
+    }
     let front = res.pareto_front();
     assert!(!front.is_empty());
 
@@ -107,7 +145,7 @@ fn ga_over_xla_engine_front_verifies() {
     let mut native = NativeEngine::default();
     for s in &front {
         let approx = s.chromosome.decode(&ctx);
-        let acc_native = native.batch_accuracy(&problem, &[approx])[0];
+        let acc_native = native.batch_accuracy(&problem, &[approx]).unwrap()[0];
         let acc_ga = 1.0 - s.objectives[0];
         assert!(
             (acc_native - acc_ga).abs() < 1e-5,
@@ -121,14 +159,15 @@ fn ga_over_xla_engine_front_verifies() {
 
 /// Batches wider than the artifact population width split + pad correctly.
 #[test]
+#[cfg(feature = "xla")]
 fn xla_batch_splitting_consistency() {
-    let svc = EvalService::spawn_xla(ART).unwrap();
+    let Some(svc) = spawn_xla_or_skip() else { return };
     let problem = Arc::new(problem_for("seeds", 42));
     let mut xla = XlaEngine::register(&svc, Arc::clone(&problem)).unwrap();
     // 45 chromosomes: one full 32-slot execution plus a padded 13-slot one.
     let batch = random_batch(&problem, 45, 11);
-    let whole = xla.batch_accuracy(&problem, &batch);
-    let first = xla.batch_accuracy(&problem, &batch[..7]);
+    let whole = xla.batch_accuracy(&problem, &batch).unwrap();
+    let first = xla.batch_accuracy(&problem, &batch[..7]).unwrap();
     assert_eq!(&whole[..7], &first[..], "same chromosomes, same answers");
     let waste = svc.metrics.padding_waste();
     assert!(waste > 0.0, "tail chunk must have been padded");

@@ -1,0 +1,118 @@
+//! Error-path integration tests for the evaluation service, via the public
+//! API only and with no artifacts required (native backend).
+//!
+//! These pin the contracts restored in ISSUE 1: an invalid/stale
+//! [`ProblemId`] is rejected with `Err` instead of panicking the worker
+//! thread (which wedged every client blocked on its reply channel),
+//! register/eval after `shutdown()` return `Err` instead of hanging, and
+//! the `width = 1` batching edge stays bit-identical to the direct engine.
+//!
+//! [`ProblemId`]: axdt::coordinator::service::ProblemId
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use axdt::coordinator::EvalService;
+use axdt::data::generators;
+use axdt::dt::{train, TrainConfig};
+use axdt::fitness::native::NativeEngine;
+use axdt::fitness::{AccuracyEngine, Problem};
+use axdt::hw::synth::TreeApprox;
+use axdt::hw::{AreaLut, EgtLibrary};
+use axdt::util::rng::Pcg64;
+
+fn seeds_problem() -> Arc<Problem> {
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+    let spec = generators::spec("seeds").unwrap();
+    let data = generators::generate(spec, 42);
+    let (train_d, test_d) = data.split(0.3, 42);
+    let tree = train(
+        &train_d,
+        &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 },
+    );
+    Arc::new(Problem::new(spec.id, tree, &test_d, &lut, &lib, 5))
+}
+
+fn random_batch(p: &Problem, count: usize, seed: u64) -> Vec<TreeApprox> {
+    let mut rng = Pcg64::seeded(seed);
+    let n = p.n_comparators();
+    (0..count)
+        .map(|_| {
+            let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+            let thr_int: Vec<u32> = (0..n)
+                .map(|j| axdt::quant::int_threshold(p.thresholds[j], bits[j]))
+                .collect();
+            TreeApprox { bits, thr_int }
+        })
+        .collect()
+}
+
+/// A `ProblemId` issued by one service must be rejected by another — both
+/// when its index is out of range there (the seed panicked the worker and
+/// wedged every client) AND when it happens to be in range (which would
+/// silently evaluate against the wrong problem without the service token).
+#[test]
+fn stale_problem_id_is_rejected_and_worker_survives() {
+    let a = EvalService::spawn_native(8);
+    let b = EvalService::spawn_native(8);
+    let p = seeds_problem();
+
+    let (id_a, _) = a.register(Arc::clone(&p)).unwrap();
+    let (id_b0, _) = b.register(Arc::clone(&p)).unwrap();
+    let (id_b1, _) = b.register(Arc::clone(&p)).unwrap();
+    assert_ne!(id_a, id_b0, "ids carry the issuing service's token");
+
+    let batch = random_batch(&p, 4, 7);
+
+    // In-range foreign id (index 0 exists on `a` too): token mismatch.
+    let err = a.eval(id_b0, batch.clone()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("different EvalService"), "{msg}");
+
+    // Out-of-range foreign id (index 1 does not exist on `a`): also Err,
+    // never a worker panic.
+    assert!(a.eval(id_b1, batch.clone()).is_err());
+
+    // The worker thread must still be alive and correct afterwards.
+    let got = a.eval(id_a, batch.clone()).unwrap();
+    let mut direct = NativeEngine::default();
+    assert_eq!(got, direct.batch_accuracy(&p, &batch).unwrap());
+
+    a.shutdown();
+    b.shutdown();
+}
+
+/// Shutdown is queued FIFO ahead of later requests, so register/eval after
+/// `shutdown()` must deterministically return `Err` — never block forever
+/// on a reply that will not come.
+#[test]
+fn requests_after_shutdown_return_err_not_hang() {
+    let svc = EvalService::spawn_native(4);
+    let p = seeds_problem();
+    let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+    svc.shutdown();
+
+    assert!(svc.register(Arc::clone(&p)).is_err());
+    assert!(svc.eval(id, random_batch(&p, 2, 11)).is_err());
+    // Idempotent: a second shutdown on a dead service is a no-op.
+    svc.shutdown();
+}
+
+/// `width = 1` degenerates batching into one execution per chromosome and
+/// must still match the direct native engine exactly.
+#[test]
+fn width_one_service_parity_with_direct_engine() {
+    let svc = EvalService::spawn_native(1);
+    let p = seeds_problem();
+    let (id, bucket) = svc.register(Arc::clone(&p)).unwrap();
+    assert!(bucket.is_none(), "native backend routes to no bucket");
+
+    let batch = random_batch(&p, 6, 13);
+    let got = svc.eval(id, batch.clone()).unwrap();
+    let mut direct = NativeEngine::default();
+    assert_eq!(got, direct.batch_accuracy(&p, &batch).unwrap());
+    assert_eq!(svc.metrics.executions.load(Ordering::Relaxed), 6);
+    assert_eq!(svc.metrics.padding_waste(), 0.0);
+    svc.shutdown();
+}
