@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use axdt::coordinator::{EvalService, XlaEngine};
+use axdt::coordinator::{EvalService, PoolOptions, XlaEngine};
 use axdt::data::generators;
 use axdt::dt::{train, TrainConfig};
 use axdt::fitness::native::NativeEngine;
@@ -20,6 +20,12 @@ use axdt::hw::synth::TreeApprox;
 use axdt::hw::{AreaLut, EgtLibrary};
 use axdt::util::bench::{black_box, Bench};
 use axdt::util::rng::Pcg64;
+
+/// Single worker, no coalescing: the seed service's dispatch behavior,
+/// which is what the latency comparisons here are calibrated against.
+fn latency_opts() -> PoolOptions {
+    PoolOptions { workers: 1, coalesce_window_us: 0, engine_threads: 0 }
+}
 
 fn problem_for(dataset: &str) -> Problem {
     let lib = EgtLibrary::default();
@@ -70,8 +76,10 @@ fn main() {
 
     // XLA path (compiled only with `--features xla`; skip silently when the
     // feature is off or artifacts are absent).
+    // Coalescing off: this bench measures per-request latency, and a
+    // sub-width batch would otherwise wait out the merge window.
     #[cfg(feature = "xla")]
-    match EvalService::spawn_xla("artifacts") {
+    match EvalService::spawn_xla_with("artifacts", &latency_opts()) {
         Err(e) => b.row(&format!("xla: skipped ({e})")),
         Ok(svc) => {
             for dataset in ["seeds", "har"] {
@@ -100,7 +108,7 @@ fn main() {
 
     // Coordinator overhead: service round-trip vs direct native call.
     let p = Arc::new(problem_for("seeds"));
-    let svc = EvalService::spawn_native(32);
+    let svc = EvalService::spawn_native_with(32, &latency_opts());
     let mut via_service = XlaEngine::register(&svc, Arc::clone(&p)).unwrap();
     let batch = random_batch(&p, 32, 9);
     let mut direct = NativeEngine::default();

@@ -1,0 +1,143 @@
+//! Shard-pool scaling bench: eval-service throughput with 1 vs N workers
+//! on a synthetic multi-driver workload, and padding waste with the
+//! coalescer off vs on.
+//!
+//! The workload models the production shape: several GA drivers (one per
+//! dataset), each hammering its own registered problem with
+//! population-sized batches.  Problems hash-pin to shards, so with N
+//! workers the drivers fan out across backends; with 1 worker they
+//! serialize behind it.  Each worker's native engine is pinned to a
+//! single thread (`engine_threads: 1`) so the bench isolates service-level
+//! scaling — the realistic regime, since a real accelerator backend is
+//! serial per device/client.
+//!
+//! Acceptance (ISSUE 2): >= 2x throughput with --workers 4 over
+//! --workers 1, and strictly less padding waste with coalescing on.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use axdt::coordinator::{EvalService, PoolOptions};
+use axdt::fitness::Problem;
+use axdt::util::bench::Bench;
+use axdt::util::testbed::{named_problem, random_batch, DRIVER_NAMES};
+
+/// Drive `DRIVER_NAMES.len()` concurrent drivers for `iters` rounds each;
+/// returns chromosome evaluations per second.
+fn multi_driver_throughput(workers: usize, width: usize, iters: usize) -> (f64, String) {
+    let svc = EvalService::spawn_native_with(
+        width,
+        &PoolOptions { workers, coalesce_window_us: 200, engine_threads: 1 },
+    );
+    let registered: Vec<(Arc<Problem>, _)> = DRIVER_NAMES
+        .iter()
+        .map(|name| {
+            let p = named_problem(name);
+            let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+            (p, id)
+        })
+        .collect();
+    if workers > 1 {
+        // The comparison is only meaningful if the driver problems really
+        // fan out; guard against the name list drifting off-spread.
+        let shards: std::collections::BTreeSet<usize> =
+            registered.iter().map(|(_, id)| id.shard()).collect();
+        assert!(shards.len() >= 3, "driver names no longer spread: {shards:?}");
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for (t, (p, id)) in registered.iter().enumerate() {
+            let svc = svc.clone();
+            let p = Arc::clone(p);
+            let id = *id;
+            s.spawn(move || {
+                let batch = random_batch(&p, width, 7 + t as u64);
+                for _ in 0..iters {
+                    svc.eval(id, batch.clone()).unwrap();
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let evals = (DRIVER_NAMES.len() * iters * width) as f64;
+    let report = svc.metrics.render();
+    svc.shutdown();
+    (evals / dt, report)
+}
+
+/// 4 drivers hammer ONE problem with sub-width batches (5 at width 32):
+/// with the window off every request pads 5→32 alone; with it on,
+/// concurrent batches merge before padding.
+fn padding_waste(window_us: u64, rounds: usize) -> (f64, String) {
+    let width = 32;
+    let svc = EvalService::spawn_native_with(
+        width,
+        &PoolOptions { workers: 1, coalesce_window_us: window_us, engine_threads: 1 },
+    );
+    let p = named_problem("seeds");
+    let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+    std::thread::scope(|s| {
+        for d in 0..4u64 {
+            let svc = svc.clone();
+            let p = Arc::clone(&p);
+            s.spawn(move || {
+                let batch = random_batch(&p, 5, 100 + d);
+                for _ in 0..rounds {
+                    svc.eval(id, batch.clone()).unwrap();
+                }
+            });
+        }
+    });
+    let waste = svc.metrics.padding_waste();
+    let report = svc.metrics.render();
+    svc.shutdown();
+    (waste, report)
+}
+
+fn main() {
+    let b = Bench::new("shard");
+    let quick = b.quick();
+    let width = 32;
+    let iters = if quick { 30 } else { 150 };
+
+    let mut throughput = Vec::new();
+    for workers in [1usize, 4] {
+        let (thr, report) = multi_driver_throughput(workers, width, iters);
+        throughput.push(thr);
+        b.row(&format!(
+            "shard/throughput workers={workers}: {thr:.0} evals/s \
+             ({} drivers x {iters} iters x {width} batch)",
+            DRIVER_NAMES.len()
+        ));
+        b.row(&format!("shard/metrics workers={workers}: {report}"));
+        println!(
+            "BENCHJSON {{\"bench\":\"shard/throughput_w{workers}\",\"evals_per_s\":{thr:.1}}}"
+        );
+    }
+    let speedup = throughput[1] / throughput[0];
+    b.row(&format!(
+        "shard/speedup workers4_vs_workers1 = {speedup:.2}x (acceptance target >= 2x)"
+    ));
+    println!("BENCHJSON {{\"bench\":\"shard/speedup_4v1\",\"x\":{speedup:.3}}}");
+
+    let rounds = if quick { 40 } else { 150 };
+    let (waste_off, report_off) = padding_waste(0, rounds);
+    let (waste_on, report_on) = padding_waste(500, rounds);
+    b.row(&format!(
+        "shard/padding uncoalesced: waste={:.1}% ({report_off})",
+        100.0 * waste_off
+    ));
+    b.row(&format!(
+        "shard/padding coalesced(500us): waste={:.1}% ({report_on})",
+        100.0 * waste_on
+    ));
+    b.row(&format!(
+        "shard/coalescing padding waste {:.1}% -> {:.1}% (strictly less: {})",
+        100.0 * waste_off,
+        100.0 * waste_on,
+        waste_on < waste_off
+    ));
+    println!(
+        "BENCHJSON {{\"bench\":\"shard/padding_waste\",\"uncoalesced\":{waste_off:.4},\"coalesced\":{waste_on:.4}}}"
+    );
+}

@@ -7,7 +7,7 @@
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::EngineChoice;
+use crate::coordinator::{EngineChoice, PoolOptions};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -33,6 +33,10 @@ pub struct RunConfig {
     pub engine: String,
     pub artifact_dir: String,
     pub threads: usize,
+    /// Eval-service workers (shards); 0 = auto (see [`Self::pool_options`]).
+    pub workers: usize,
+    /// Eval-service coalescing window in microseconds (0 = off).
+    pub coalesce_window_us: u64,
     pub accuracy_loss: f64,
     pub out_dir: String,
 }
@@ -51,6 +55,8 @@ impl Default for RunConfig {
             engine: default_engine().into(),
             artifact_dir: "artifacts".into(),
             threads: 0, // auto
+            workers: 0, // auto
+            coalesce_window_us: 200,
             accuracy_loss: 0.01,
             out_dir: "results".into(),
         }
@@ -82,6 +88,9 @@ impl RunConfig {
         cfg.engine = args.str_or("engine", &cfg.engine);
         cfg.artifact_dir = args.str_or("artifacts", &cfg.artifact_dir);
         cfg.threads = args.usize_or("threads", cfg.threads)?;
+        cfg.workers = args.usize_or("workers", cfg.workers)?;
+        cfg.coalesce_window_us =
+            args.u64_or("coalesce-window-us", cfg.coalesce_window_us)?;
         cfg.accuracy_loss = args.f64_or("loss", cfg.accuracy_loss)?;
         cfg.out_dir = args.str_or("out", &cfg.out_dir);
         cfg.validate()?;
@@ -104,11 +113,35 @@ impl RunConfig {
         if !(0.0..=1.0).contains(&self.accuracy_loss) {
             return Err(anyhow!("loss must be in [0,1]"));
         }
+        if self.workers > 64 {
+            return Err(anyhow!("workers must be in [0, 64] (0 = auto)"));
+        }
+        if self.coalesce_window_us > 1_000_000 {
+            return Err(anyhow!("coalesce-window-us must be <= 1000000 (1 s)"));
+        }
         Ok(())
     }
 
     pub fn engine_choice(&self) -> EngineChoice {
         EngineChoice::parse(&self.engine).expect("validated")
+    }
+
+    /// Pool sizing for this run's eval service.  An explicit `--workers`
+    /// wins; auto (0) caps the native default at the dataset count — a
+    /// problem pins to exactly one shard, so more workers than datasets
+    /// would idle, and a single-dataset run keeps the full thread budget
+    /// inside one worker's engine (the seed service's behavior).
+    pub fn pool_options(&self) -> PoolOptions {
+        let workers = if self.workers == 0 && self.engine_choice() != EngineChoice::Xla {
+            crate::util::pool::default_threads().min(self.datasets.len()).max(1)
+        } else {
+            self.workers
+        };
+        PoolOptions {
+            workers,
+            coalesce_window_us: self.coalesce_window_us,
+            engine_threads: 0,
+        }
     }
 
     pub fn run_options(&self) -> crate::coordinator::RunOptions {
@@ -134,6 +167,8 @@ impl RunConfig {
             ("engine", Json::str(self.engine.clone())),
             ("artifact_dir", Json::str(self.artifact_dir.clone())),
             ("threads", Json::num(self.threads as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("coalesce_window_us", Json::num(self.coalesce_window_us as f64)),
             ("accuracy_loss", Json::num(self.accuracy_loss)),
             ("out_dir", Json::str(self.out_dir.clone())),
         ])
@@ -162,6 +197,9 @@ impl RunConfig {
             engine: get_str("engine", &d.engine),
             artifact_dir: get_str("artifact_dir", &d.artifact_dir),
             threads: get_num("threads", d.threads as f64) as usize,
+            workers: get_num("workers", d.workers as f64) as usize,
+            coalesce_window_us: get_num("coalesce_window_us", d.coalesce_window_us as f64)
+                as u64,
             accuracy_loss: get_num("accuracy_loss", d.accuracy_loss),
             out_dir: get_str("out_dir", &d.out_dir),
         };
@@ -184,6 +222,8 @@ mod tests {
         opt("engine", ""),
         opt("artifacts", ""),
         opt("threads", ""),
+        opt("workers", ""),
+        opt("coalesce-window-us", ""),
         opt("loss", ""),
         opt("out", ""),
         opt("config", ""),
@@ -236,6 +276,37 @@ mod tests {
         let mut cfg3 = RunConfig::default();
         cfg3.pop_size = 2;
         assert!(cfg3.validate().is_err());
+    }
+
+    #[test]
+    fn scaling_knobs_parse_validate_and_round_trip() {
+        let args = Args::parse(
+            &sv(&["optimize", "--workers", "4", "--coalesce-window-us", "500"]),
+            SPEC,
+        )
+        .unwrap();
+        let cfg = RunConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.coalesce_window_us, 500);
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // Explicit workers flow straight through to the pool.
+        let po = cfg.pool_options();
+        assert_eq!(po.workers, 4);
+        assert_eq!(po.coalesce_window_us, 500);
+
+        // Auto sizing caps native workers at the dataset count.
+        let mut auto = RunConfig::default();
+        auto.engine = "native-service".into();
+        auto.datasets = sv(&["seeds"]);
+        assert_eq!(auto.pool_options().workers, 1);
+
+        let mut bad = RunConfig::default();
+        bad.workers = 100;
+        assert!(bad.validate().is_err());
+        let mut bad2 = RunConfig::default();
+        bad2.coalesce_window_us = 2_000_000;
+        assert!(bad2.validate().is_err());
     }
 
     #[test]

@@ -280,6 +280,32 @@ mod tests {
         svc.shutdown();
     }
 
+    /// A sharded, coalescing pool must stay bit-identical to the direct
+    /// native engine: routing, chunk merging and padding never change the
+    /// per-chromosome arithmetic.
+    #[test]
+    fn seeds_pipeline_via_sharded_coalescing_service_matches_native() {
+        use crate::coordinator::shard::PoolOptions;
+        let svc = EvalService::spawn_native_with(
+            8,
+            &PoolOptions { workers: 4, coalesce_window_us: 150, engine_threads: 1 },
+        );
+        let a = optimize_dataset("seeds", &quick_opts(), None).unwrap();
+        let b = optimize_dataset(
+            "seeds",
+            &RunOptions { engine: EngineChoice::NativeService, ..quick_opts() },
+            Some(&svc),
+        )
+        .unwrap();
+        assert_eq!(a.front.len(), b.front.len());
+        for (pa, pb) in a.front.iter().zip(&b.front) {
+            assert_eq!(pa.accuracy, pb.accuracy);
+            assert_eq!(pa.est_area_mm2, pb.est_area_mm2);
+        }
+        assert!(svc.metrics.executions.load(std::sync::atomic::Ordering::Relaxed) > 0);
+        svc.shutdown();
+    }
+
     #[test]
     fn best_within_loss_selection() {
         let run = optimize_dataset("seeds", &quick_opts(), None).unwrap();

@@ -1,14 +1,50 @@
 //! Coordinator metrics: lock-free counters + latency aggregation.
+//!
+//! One [`Metrics`] instance is shared by every worker of an eval-service
+//! pool.  Global counters (executions, chromosomes, padding) aggregate
+//! across shards; [`ShardMetrics`] adds per-shard queue depth and
+//! execution counts so a skewed hash-route or a stuck worker is visible
+//! in the run report.  The coalescer records how each execution was
+//! flushed ([`FlushKind`]) and how many client requests it merged.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::stats::Summary;
 
+/// How a batch left the coalescer and hit the backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushKind {
+    /// Pending work reached the artifact width P.
+    Full,
+    /// The coalescing window expired on a sub-width batch.
+    Deadline,
+    /// Coalescing disabled: the request's tail was dispatched immediately.
+    Immediate,
+    /// Shutdown/disconnect drain of still-pending work (not a window
+    /// expiry, so it does not count toward `deadline_flushes`).
+    Drain,
+}
+
+/// Per-shard counters (one per pool worker).
+#[derive(Debug, Default)]
+pub struct ShardMetrics {
+    /// Jobs currently queued on this shard (incremented at the client
+    /// facade, decremented when the worker dequeues; approximate around
+    /// shutdown, when queued jobs are dropped).
+    pub queue_depth: AtomicU64,
+    /// Highest queue depth observed.
+    pub queue_peak: AtomicU64,
+    /// Backend executions issued by this shard's worker.
+    pub executions: AtomicU64,
+    /// Chromosomes this shard evaluated (pre-padding).
+    pub chromosomes: AtomicU64,
+}
+
 /// Shared counters for the evaluation service.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    /// XLA executions issued.
+    /// Backend executions issued.
     pub executions: AtomicU64,
     /// Chromosomes whose fitness was computed (pre-padding).
     pub chromosomes: AtomicU64,
@@ -16,20 +52,103 @@ pub struct Metrics {
     pub padded_slots: AtomicU64,
     /// Problems registered.
     pub problems: AtomicU64,
+    /// Executions that merged >= 2 client requests into one batch.
+    pub coalesced_executions: AtomicU64,
+    /// Client requests that rode a coalesced execution.
+    pub coalesced_requests: AtomicU64,
+    /// Width-full coalescer flushes.
+    pub full_flushes: AtomicU64,
+    /// Deadline-expiry coalescer flushes.
+    pub deadline_flushes: AtomicU64,
     /// Per-execution latency (ns).
     latency: Mutex<Summary>,
+    /// Real (pre-padding) width of each executed batch.
+    batch_width: Mutex<Summary>,
+    /// Per-shard counters (empty for a legacy/default instance).
+    shards: Vec<ShardMetrics>,
 }
 
 impl Metrics {
+    /// Metrics for a pool of `n` shards.
+    pub fn with_shards(n: usize) -> Metrics {
+        Metrics {
+            shards: (0..n).map(|_| ShardMetrics::default()).collect(),
+            ..Metrics::default()
+        }
+    }
+
+    /// Per-shard counters (empty when the instance predates the pool).
+    pub fn shards(&self) -> &[ShardMetrics] {
+        &self.shards
+    }
+
     pub fn record_execution(&self, real: usize, padded: usize, elapsed_ns: u64) {
         self.executions.fetch_add(1, Ordering::Relaxed);
         self.chromosomes.fetch_add(real as u64, Ordering::Relaxed);
         self.padded_slots.fetch_add((padded - real) as u64, Ordering::Relaxed);
         self.latency.lock().unwrap().push(elapsed_ns as f64);
+        self.batch_width.lock().unwrap().push(real as f64);
+    }
+
+    /// Full record for one pool execution: global counters, the issuing
+    /// shard's counters, and the coalescer's flush bookkeeping.
+    pub fn record_shard_execution(
+        &self,
+        shard: usize,
+        real: usize,
+        padded: usize,
+        elapsed_ns: u64,
+        merged_requests: usize,
+        kind: FlushKind,
+    ) {
+        self.record_execution(real, padded, elapsed_ns);
+        if merged_requests >= 2 {
+            self.coalesced_executions.fetch_add(1, Ordering::Relaxed);
+            self.coalesced_requests.fetch_add(merged_requests as u64, Ordering::Relaxed);
+        }
+        match kind {
+            FlushKind::Full => {
+                self.full_flushes.fetch_add(1, Ordering::Relaxed);
+            }
+            FlushKind::Deadline => {
+                self.deadline_flushes.fetch_add(1, Ordering::Relaxed);
+            }
+            FlushKind::Immediate | FlushKind::Drain => {}
+        }
+        if let Some(s) = self.shards.get(shard) {
+            s.executions.fetch_add(1, Ordering::Relaxed);
+            s.chromosomes.fetch_add(real as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// A job was queued on `shard` (called by the client facade).
+    pub fn shard_enqueued(&self, shard: usize) {
+        if let Some(s) = self.shards.get(shard) {
+            let depth = s.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+            s.queue_peak.fetch_max(depth, Ordering::Relaxed);
+        }
+    }
+
+    /// A job left `shard`'s queue (dequeued by the worker, or the send
+    /// failed after the enqueue was counted).
+    pub fn shard_dequeued(&self, shard: usize) {
+        if let Some(s) = self.shards.get(shard) {
+            // Saturating: shutdown can drop queued jobs without a dequeue.
+            let _ = s.queue_depth.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |d| d.checked_sub(1),
+            );
+        }
     }
 
     pub fn latency_summary(&self) -> Summary {
         self.latency.lock().unwrap().clone()
+    }
+
+    /// Distribution of real (pre-padding) executed batch widths.
+    pub fn batch_width_summary(&self) -> Summary {
+        self.batch_width.lock().unwrap().clone()
     }
 
     /// Fraction of executed chromosome slots that were padding.
@@ -43,17 +162,40 @@ impl Metrics {
         }
     }
 
-    /// One-line human summary.
+    /// One-line human summary (the run report's eval-service line).
     pub fn render(&self) -> String {
         let lat = self.latency_summary();
-        format!(
-            "execs={} chromosomes={} padding_waste={:.1}% exec_latency_p50={} p99={}",
+        let width = self.batch_width_summary();
+        let mut s = format!(
+            "execs={} chromosomes={} padding_waste={:.1}% batch_width_p50={:.0} \
+             coalesced={} (reqs {}, full {}, deadline {}) exec_latency_p50={} p99={}",
             self.executions.load(Ordering::Relaxed),
             self.chromosomes.load(Ordering::Relaxed),
             100.0 * self.padding_waste(),
+            if width.is_empty() { 0.0 } else { width.median() },
+            self.coalesced_executions.load(Ordering::Relaxed),
+            self.coalesced_requests.load(Ordering::Relaxed),
+            self.full_flushes.load(Ordering::Relaxed),
+            self.deadline_flushes.load(Ordering::Relaxed),
             crate::util::stats::fmt_duration_ns(lat.median()),
             crate::util::stats::fmt_duration_ns(lat.percentile(0.99)),
-        )
+        );
+        if !self.shards.is_empty() {
+            s.push_str(" shards=[");
+            for (i, sh) in self.shards.iter().enumerate() {
+                if i > 0 {
+                    s.push(' ');
+                }
+                s.push_str(&format!(
+                    "{}:execs={},qpeak={}",
+                    i,
+                    sh.executions.load(Ordering::Relaxed),
+                    sh.queue_peak.load(Ordering::Relaxed),
+                ));
+            }
+            s.push(']');
+        }
+        s
     }
 }
 
@@ -72,5 +214,38 @@ mod tests {
         assert!((m.padding_waste() - 2.0 / 64.0).abs() < 1e-12);
         assert_eq!(m.latency_summary().len(), 2);
         assert!(m.render().contains("execs=2"));
+    }
+
+    #[test]
+    fn shard_records_split_by_worker() {
+        let m = Metrics::with_shards(2);
+        m.record_shard_execution(0, 8, 8, 1_000, 1, FlushKind::Full);
+        m.record_shard_execution(1, 3, 8, 2_000, 2, FlushKind::Deadline);
+        assert_eq!(m.executions.load(Ordering::Relaxed), 2);
+        assert_eq!(m.shards()[0].executions.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shards()[1].executions.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shards()[1].chromosomes.load(Ordering::Relaxed), 3);
+        assert_eq!(m.coalesced_executions.load(Ordering::Relaxed), 1);
+        assert_eq!(m.coalesced_requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.full_flushes.load(Ordering::Relaxed), 1);
+        assert_eq!(m.deadline_flushes.load(Ordering::Relaxed), 1);
+        assert_eq!(m.padded_slots.load(Ordering::Relaxed), 5);
+        assert!(m.render().contains("shards=["));
+    }
+
+    #[test]
+    fn queue_gauge_tracks_depth_and_peak() {
+        let m = Metrics::with_shards(1);
+        m.shard_enqueued(0);
+        m.shard_enqueued(0);
+        m.shard_dequeued(0);
+        assert_eq!(m.shards()[0].queue_depth.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shards()[0].queue_peak.load(Ordering::Relaxed), 2);
+        // Saturates instead of wrapping when shutdown drops queued jobs.
+        m.shard_dequeued(0);
+        m.shard_dequeued(0);
+        assert_eq!(m.shards()[0].queue_depth.load(Ordering::Relaxed), 0);
+        // Out-of-range shard indices are ignored (legacy Metrics::default()).
+        Metrics::default().shard_enqueued(3);
     }
 }

@@ -1,20 +1,29 @@
-//! L3 coordinator: the evaluation service and the optimization driver.
+//! L3 coordinator: the sharded evaluation service and the optimization
+//! driver.
 //!
 //! The paper's framework is an optimization *service*: many GA populations
 //! (one per dataset, possibly concurrent) need fitness evaluated, and the
 //! expensive part — accuracy over the test set — runs on an accelerator
 //! artifact with fixed shapes.  The coordinator owns that traffic:
 //!
-//! * [`service::EvalService`] — a leader thread that owns the PJRT runtime;
-//!   clients register problems (routing them to a shape bucket, uploading
-//!   static tensors once) and submit chromosome batches over channels.  The
-//!   service splits/pads batches to the artifact's population width,
-//!   executes, and replies.  Tokio is not available in this image, so the
-//!   event loop is plain `std::sync::mpsc` + threads.
-//! * [`service::XlaEngine`] — the client-side [`AccuracyEngine`] facade that
-//!   makes the service pluggable wherever the native engine is.
-//! * [`metrics::Metrics`] — execution counters (executions, chromosomes,
-//!   padding waste, cache traffic, latency) surfaced by the CLI.
+//! * [`shard::EvalShardPool`] — N worker threads, each owning its own
+//!   backend instance (its own PJRT client for XLA).  Problems hash-route
+//!   to a stable shard ([`shard::ProblemId`] records it), and each worker
+//!   fronts its backend with a coalescer that merges sub-width batches
+//!   from concurrent drivers into one padded execution (flushing on
+//!   width-full or a small deadline).  Tokio is not available in this
+//!   image, so the event loops are plain `std::sync::mpsc` + threads.
+//! * [`service::EvalService`] — the thin client facade over the pool:
+//!   seed-era call sites unchanged, plus the [`shard::PoolOptions`] knobs
+//!   (`--workers`, `--coalesce-window-us`) and typed
+//!   [`service::ServiceError`] results.
+//! * [`service::XlaEngine`] — the client-side [`AccuracyEngine`] facade
+//!   that makes the service pluggable wherever the native engine is; it
+//!   transparently re-registers once and retries on a stale
+//!   [`shard::ProblemId`].
+//! * [`metrics::Metrics`] / [`metrics::ShardMetrics`] — execution counters
+//!   (executions, chromosomes, padding waste, coalesced-batch widths,
+//!   per-shard queue depth, latency) surfaced in the run report.
 //! * [`driver`] — the per-dataset pipeline: generate → split → train →
 //!   [`crate::fitness::Problem`] → NSGA-II → pareto front with *measured*
 //!   (fully synthesized) area/power for every front design.
@@ -24,7 +33,9 @@
 pub mod driver;
 pub mod metrics;
 pub mod service;
+pub mod shard;
 
 pub use driver::{optimize_dataset, DatasetRun, EngineChoice, ParetoPoint, RunOptions};
-pub use metrics::Metrics;
-pub use service::{EvalService, XlaEngine};
+pub use metrics::{FlushKind, Metrics, ShardMetrics};
+pub use service::{EvalService, ServiceError, XlaEngine};
+pub use shard::{EvalShardPool, PoolOptions, ProblemId};

@@ -1,203 +1,118 @@
-//! The evaluation service: leader thread, routing, dynamic batching.
+//! The evaluation service facade: typed errors, client retry, and the
+//! [`AccuracyEngine`] adapter over the sharded worker pool.
 //!
-//! One worker thread owns the backend (the PJRT runtime, or the native
-//! engine in tests/fallback).  Clients talk to it over an mpsc channel:
+//! The actual workers live in [`super::shard`]: [`EvalService`] is a thin,
+//! cheaply-cloneable handle that keeps the seed service's call sites
+//! (`spawn_native`/`spawn_xla`, `register`, `eval`, `shutdown`) while the
+//! pool underneath scales to N workers with cross-driver batch
+//! coalescing.  The `*_with` constructors expose the pool knobs
+//! ([`PoolOptions`]: `--workers`, `--coalesce-window-us`).
 //!
-//! ```text
-//!  GA driver (dataset A) ──┐                 ┌─ route → bucket, statics
-//!  GA driver (dataset B) ──┼──> job queue ───┤  split/pad to P
-//!  benches / CLI        ──┘    (mpsc)        └─ execute → reply channel
-//! ```
-//!
-//! Registration uploads a problem's static tensors once; each job then
-//! carries only the decoded approximations.  Batches larger than the
-//! artifact width P are split; the tail chunk is padded (and the padding
-//! recorded in [`Metrics`]).  Backpressure is the bounded job queue: with
-//! `QUEUE_DEPTH` jobs in flight, senders block — GA drivers naturally
-//! throttle to the evaluator's throughput.
+//! Error handling is typed end to end: the pool speaks [`ServiceError`],
+//! the facade's `register`/`eval` wrap it into `anyhow` for existing
+//! callers, and [`XlaEngine`] heals stale registrations transparently
+//! (re-register once + retry) before surfacing anything.
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{anyhow, Context as _, Result};
 
 use super::metrics::Metrics;
+use super::shard::{EvalShardPool, PoolOptions};
 use crate::fitness::encode::Bucket;
-#[cfg(feature = "xla")]
-use crate::fitness::encode::{self, StaticTensors};
-use crate::fitness::{native::NativeEngine, AccuracyEngine, Problem};
+use crate::fitness::{AccuracyEngine, Problem};
 use crate::hw::synth::TreeApprox;
-#[cfg(feature = "xla")]
-use crate::runtime::{DeviceStatics, XlaRuntime};
 
-/// Bounded queue depth (jobs in flight before senders block).
-const QUEUE_DEPTH: usize = 16;
+pub use super::shard::ProblemId;
 
-/// What actually evaluates a padded population batch.
+/// Typed service-layer failure (the ROADMAP's error-hardening item).
 ///
-/// Not `Send`: the PJRT client wraps an `Rc`.  Backends are therefore
-/// *constructed inside* the service thread (see [`EvalService::spawn_xla`]).
-trait Backend {
-    fn register(&mut self, problem: &Arc<Problem>) -> Result<RegisteredProblem>;
-    fn eval(
-        &mut self,
-        reg: &RegisteredProblem,
-        problem: &Problem,
-        chunk: &[TreeApprox],
-    ) -> Result<Vec<f64>>;
-    /// Backend id (surfaced in logs / metrics lines).
-    #[allow(dead_code)]
-    fn name(&self) -> &'static str;
+/// The `Display` fragments existing callers match on (foreign-id
+/// detection, shutdown, the feature-off message) are kept stable with the
+/// seed's stringly errors; `UnknownProblemId` now names the owning shard
+/// instead of the whole service, since the count it reports is per-shard.
+#[derive(Clone, Debug)]
+pub enum ServiceError {
+    /// The id was issued by a different service/pool instance.
+    ForeignProblemId { id: ProblemId, registered: usize },
+    /// The id's token matches this service but nothing is registered at
+    /// its index (e.g. a handle that outlived a restart).
+    UnknownProblemId { id: ProblemId, registered: usize },
+    /// The worker threads are gone (after `shutdown()` or a crash).
+    ServiceDown,
+    /// A worker dropped the reply channel without answering.
+    ReplyDropped,
+    /// The backend failed to register or execute (routing, compile,
+    /// upload, execution); the detail preserves the backend's message.
+    Backend { detail: String },
+    /// This binary was built without the `xla` cargo feature.
+    XlaUnavailable,
 }
 
-/// Backend-side registration state.
-enum RegisteredProblem {
-    #[cfg(feature = "xla")]
-    Xla { statics: DeviceStatics },
-    Native { width: usize },
-}
-
-impl RegisteredProblem {
-    fn bucket(&self) -> Option<&Bucket> {
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            #[cfg(feature = "xla")]
-            RegisteredProblem::Xla { statics } => Some(&statics.bucket),
-            RegisteredProblem::Native { .. } => None,
+            ServiceError::ForeignProblemId { id, registered } => write!(
+                f,
+                "{id:?} was issued by a different EvalService (this service has \
+                 {registered} registered problem(s))"
+            ),
+            ServiceError::UnknownProblemId { id, registered } => write!(
+                f,
+                "unknown {id:?}: its shard has {registered} registered problem(s)"
+            ),
+            ServiceError::ServiceDown => write!(f, "eval service is down"),
+            ServiceError::ReplyDropped => write!(f, "eval service dropped reply"),
+            ServiceError::Backend { detail } => write!(f, "{detail}"),
+            ServiceError::XlaUnavailable => write!(
+                f,
+                "this binary was built without the `xla` cargo feature, so the XLA \
+                 eval service is unavailable; rebuild with `cargo build --features xla` \
+                 or use `--engine native` / `--engine native-service`"
+            ),
         }
     }
+}
 
-    /// Population width the backend executes at (batch-splitting unit).
-    fn width(&self) -> usize {
-        match self {
-            #[cfg(feature = "xla")]
-            RegisteredProblem::Xla { statics } => statics.bucket.p,
-            RegisteredProblem::Native { width } => *width,
-        }
+impl std::error::Error for ServiceError {}
+
+impl ServiceError {
+    /// Stale-registration failures a client can heal by re-registering.
+    pub fn is_stale_id(&self) -> bool {
+        matches!(
+            self,
+            ServiceError::ForeignProblemId { .. } | ServiceError::UnknownProblemId { .. }
+        )
     }
 }
 
-/// PJRT-backed backend.
-#[cfg(feature = "xla")]
-struct XlaBackend {
-    runtime: XlaRuntime,
-}
-
-#[cfg(feature = "xla")]
-impl Backend for XlaBackend {
-    fn register(&mut self, problem: &Arc<Problem>) -> Result<RegisteredProblem> {
-        let (bucket, _) = self
-            .runtime
-            .meta
-            .route(problem)
-            .ok_or_else(|| {
-                anyhow!(
-                    "no bucket fits problem '{}' (n_test={}, n_comp={}, leaves={})",
-                    problem.name,
-                    problem.n_test,
-                    problem.n_comparators(),
-                    problem.tree.n_leaves()
-                )
-            })?
-            .clone();
-        self.runtime.ensure_compiled(&bucket.name)?;
-        let st: StaticTensors = encode::encode_static(problem, &bucket);
-        let statics = self.runtime.upload_statics(&st)?;
-        Ok(RegisteredProblem::Xla { statics })
-    }
-
-    fn eval(
-        &mut self,
-        reg: &RegisteredProblem,
-        problem: &Problem,
-        chunk: &[TreeApprox],
-    ) -> Result<Vec<f64>> {
-        let RegisteredProblem::Xla { statics } = reg else {
-            return Err(anyhow!("backend mismatch"));
-        };
-        let bucket = statics.bucket.clone();
-        let (thr, scale) = encode::pack_population(problem, &bucket, chunk);
-        let acc = self.runtime.execute(statics, &thr, &scale)?;
-        Ok(acc.iter().take(chunk.len()).map(|&a| a as f64).collect())
-    }
-
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-}
-
-/// Native backend: same service machinery, tree-walk arithmetic.  Used by
-/// unit tests (no artifacts needed) and `--engine native-service`.
-struct NativeBackend {
-    engine: NativeEngine,
-    /// Emulated artifact width, so batching/padding paths are exercised.
-    pub width: usize,
-}
-
-impl Backend for NativeBackend {
-    fn register(&mut self, _problem: &Arc<Problem>) -> Result<RegisteredProblem> {
-        Ok(RegisteredProblem::Native { width: self.width })
-    }
-
-    fn eval(
-        &mut self,
-        _reg: &RegisteredProblem,
-        problem: &Problem,
-        chunk: &[TreeApprox],
-    ) -> Result<Vec<f64>> {
-        self.engine.batch_accuracy(problem, chunk)
-    }
-
-    fn name(&self) -> &'static str {
-        "native-service"
-    }
-}
-
-/// Problem handle returned by registration.  Carries the issuing service's
-/// token so an id presented to a *different* service is rejected even when
-/// its index happens to be in range there.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub struct ProblemId {
-    service: u32,
-    index: u32,
-}
-
-/// Process-unique service tokens (0 is never issued, so a forged
-/// `ProblemId` default can't match).
-static NEXT_SERVICE_TOKEN: std::sync::atomic::AtomicU32 =
-    std::sync::atomic::AtomicU32::new(1);
-
-enum Msg {
-    Register {
-        problem: Arc<Problem>,
-        reply: mpsc::SyncSender<Result<(ProblemId, Option<Bucket>)>>,
-    },
-    Eval {
-        id: ProblemId,
-        batch: Vec<TreeApprox>,
-        reply: mpsc::SyncSender<Result<Vec<f64>>>,
-    },
-    Shutdown,
-}
-
-/// Client handle to the evaluation service (cheap to clone).
+/// Client handle to the evaluation service (cheap to clone): a facade
+/// over [`EvalShardPool`].
 #[derive(Clone)]
 pub struct EvalService {
-    tx: mpsc::SyncSender<Msg>,
+    pool: EvalShardPool,
     pub metrics: Arc<Metrics>,
 }
 
 impl EvalService {
-    /// Spawn a service over the PJRT runtime (artifacts required).  The
-    /// runtime is constructed *inside* the worker thread (the PJRT client
-    /// is not `Send`); construction failure is reported synchronously.
+    /// Spawn a service over the PJRT runtime (artifacts required) with
+    /// default pool sizing (1 worker per device).  Each worker constructs
+    /// its own runtime *inside* its thread (the PJRT client is not
+    /// `Send`); construction failure is reported synchronously.
     #[cfg(feature = "xla")]
     pub fn spawn_xla(artifact_dir: impl AsRef<std::path::Path>) -> Result<EvalService> {
-        let dir = artifact_dir.as_ref().to_path_buf();
-        Self::spawn_factory(move || {
-            Ok(Box::new(XlaBackend { runtime: XlaRuntime::new(dir)? }) as Box<dyn Backend>)
-        })
+        Self::spawn_xla_with(artifact_dir, &PoolOptions::default())
+    }
+
+    /// [`Self::spawn_xla`] with explicit pool sizing/coalescing knobs.
+    #[cfg(feature = "xla")]
+    pub fn spawn_xla_with(
+        artifact_dir: impl AsRef<std::path::Path>,
+        opts: &PoolOptions,
+    ) -> Result<EvalService> {
+        let pool = EvalShardPool::spawn_xla(artifact_dir, opts)?;
+        let metrics = Arc::clone(&pool.metrics);
+        Ok(EvalService { pool, metrics })
     }
 
     /// Feature-off stand-in: the XLA backend is not compiled into this
@@ -205,185 +120,146 @@ impl EvalService {
     /// missing symbol at every call site.
     #[cfg(not(feature = "xla"))]
     pub fn spawn_xla(_artifact_dir: impl AsRef<std::path::Path>) -> Result<EvalService> {
-        Err(anyhow!(
-            "this binary was built without the `xla` cargo feature, so the XLA \
-             eval service is unavailable; rebuild with `cargo build --features xla` \
-             or use `--engine native` / `--engine native-service`"
-        ))
+        Err(ServiceError::XlaUnavailable.into())
     }
 
-    /// Spawn a service over the native engine (tests / no-artifact runs).
+    /// Feature-off stand-in for [`Self::spawn_xla_with`].
+    #[cfg(not(feature = "xla"))]
+    pub fn spawn_xla_with(
+        _artifact_dir: impl AsRef<std::path::Path>,
+        _opts: &PoolOptions,
+    ) -> Result<EvalService> {
+        Err(ServiceError::XlaUnavailable.into())
+    }
+
+    /// Spawn a service over the native engine (tests / no-artifact runs)
+    /// with seed-compatible sizing: one worker whose engine keeps the full
+    /// thread budget, exactly like the pre-pool service.  Sharding is
+    /// opt-in via [`Self::spawn_native_with`] (the `--workers` knob).
     /// `width` emulates the artifact population width for batching.
     pub fn spawn_native(width: usize) -> EvalService {
-        Self::spawn_factory(move || {
-            Ok(Box::new(NativeBackend { engine: NativeEngine::default(), width })
-                as Box<dyn Backend>)
-        })
-        .expect("native backend construction cannot fail")
+        Self::spawn_native_with(width, &PoolOptions { workers: 1, ..PoolOptions::default() })
     }
 
-    fn spawn_factory(
-        factory: impl FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
-    ) -> Result<EvalService> {
-        let (tx, rx) = mpsc::sync_channel::<Msg>(QUEUE_DEPTH);
-        let metrics = Arc::new(Metrics::default());
-        let m = Arc::clone(&metrics);
-        let token = NEXT_SERVICE_TOKEN.fetch_add(1, Ordering::Relaxed);
-        let (init_tx, init_rx) = mpsc::sync_channel::<Result<()>>(1);
-        std::thread::Builder::new()
-            .name("axdt-eval-service".into())
-            .spawn(move || {
-                let mut backend = match factory() {
-                    Ok(b) => {
-                        let _ = init_tx.send(Ok(()));
-                        b
-                    }
-                    Err(e) => {
-                        let _ = init_tx.send(Err(e));
-                        return;
-                    }
-                };
-                let mut problems: Vec<(Arc<Problem>, RegisteredProblem)> = Vec::new();
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        Msg::Shutdown => break,
-                        Msg::Register { problem, reply } => {
-                            let res = backend.register(&problem).map(|reg| {
-                                let id = ProblemId {
-                                    service: token,
-                                    index: problems.len() as u32,
-                                };
-                                let bucket = reg.bucket().cloned();
-                                problems.push((problem, reg));
-                                m.problems.fetch_add(1, Ordering::Relaxed);
-                                (id, bucket)
-                            });
-                            let _ = reply.send(res);
-                        }
-                        Msg::Eval { id, batch, reply } => {
-                            // A stale or foreign id must not kill the worker
-                            // thread (which would wedge every other client)
-                            // NOR silently evaluate against the wrong
-                            // problem: reply with an error and keep serving.
-                            if id.service != token {
-                                let _ = reply.send(Err(anyhow!(
-                                    "{id:?} was issued by a different EvalService \
-                                     (this service has {} registered problem(s))",
-                                    problems.len()
-                                )));
-                                continue;
-                            }
-                            let Some((problem, reg)) = problems.get(id.index as usize) else {
-                                let _ = reply.send(Err(anyhow!(
-                                    "unknown {id:?}: this eval service has {} registered \
-                                     problem(s)",
-                                    problems.len()
-                                )));
-                                continue;
-                            };
-                            let width = reg.width();
-                            let mut out = Vec::with_capacity(batch.len());
-                            let mut failed = None;
-                            for chunk in batch.chunks(width.max(1)) {
-                                let t0 = Instant::now();
-                                match backend.eval(reg, problem, chunk) {
-                                    Ok(accs) => {
-                                        m.record_execution(
-                                            chunk.len(),
-                                            width.max(chunk.len()),
-                                            t0.elapsed().as_nanos() as u64,
-                                        );
-                                        out.extend(accs);
-                                    }
-                                    Err(e) => {
-                                        failed = Some(e);
-                                        break;
-                                    }
-                                }
-                            }
-                            let _ = reply.send(match failed {
-                                Some(e) => Err(e),
-                                None => Ok(out),
-                            });
-                        }
-                    }
-                }
-            })
-            .expect("spawn eval service");
-        init_rx
-            .recv()
-            .map_err(|_| anyhow!("eval service died during init"))??;
-        Ok(EvalService { tx, metrics })
+    /// [`Self::spawn_native`] with explicit pool sizing/coalescing knobs.
+    pub fn spawn_native_with(width: usize, opts: &PoolOptions) -> EvalService {
+        let pool = EvalShardPool::spawn_native(width, opts);
+        let metrics = Arc::clone(&pool.metrics);
+        EvalService { pool, metrics }
     }
 
-    /// Register a problem: routes it to a bucket and uploads statics.
+    /// The sharded pool behind this facade.
+    pub fn pool(&self) -> &EvalShardPool {
+        &self.pool
+    }
+
+    /// Number of shard workers serving this handle.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Register a problem: hash-routes it to its shard, routes it to a
+    /// bucket there, and uploads statics once.
     pub fn register(&self, problem: Arc<Problem>) -> Result<(ProblemId, Option<Bucket>)> {
-        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Msg::Register { problem, reply: reply_tx })
-            .map_err(|_| anyhow!("eval service is down"))?;
-        reply_rx.recv().map_err(|_| anyhow!("eval service dropped reply"))?
+        Ok(self.register_typed(problem)?)
     }
 
-    /// Evaluate a batch (blocking until the service replies).
+    /// Typed-result variant of [`Self::register`].
+    pub fn register_typed(
+        &self,
+        problem: Arc<Problem>,
+    ) -> Result<(ProblemId, Option<Bucket>), ServiceError> {
+        self.pool.register(problem)
+    }
+
+    /// Evaluate a batch (blocking until the owning shard replies).
     pub fn eval(&self, id: ProblemId, batch: Vec<TreeApprox>) -> Result<Vec<f64>> {
-        if batch.is_empty() {
-            return Ok(Vec::new());
-        }
-        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Msg::Eval { id, batch, reply: reply_tx })
-            .map_err(|_| anyhow!("eval service is down"))?;
-        reply_rx.recv().map_err(|_| anyhow!("eval service dropped reply"))?
+        Ok(self.eval_typed(id, batch)?)
     }
 
-    /// Ask the worker to exit (idempotent; dropping all handles also works).
+    /// Typed-result variant of [`Self::eval`] (lets clients distinguish
+    /// recoverable stale-id failures from backend ones).
+    pub fn eval_typed(
+        &self,
+        id: ProblemId,
+        batch: Vec<TreeApprox>,
+    ) -> Result<Vec<f64>, ServiceError> {
+        self.pool.eval(id, batch)
+    }
+
+    /// Ask the workers to drain pending jobs and exit (idempotent;
+    /// dropping all handles also works).
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        self.pool.shutdown()
+    }
+}
+
+fn bucket_label(bucket: &Option<Bucket>) -> String {
+    match bucket {
+        Some(b) => format!("{} (P={})", b.name, b.p),
+        None => "native".to_string(),
     }
 }
 
 /// Client-side [`AccuracyEngine`] facade over the service.
 pub struct XlaEngine {
     service: EvalService,
+    /// Kept for transparent re-registration on a stale [`ProblemId`].
+    problem: Arc<Problem>,
     id: ProblemId,
-    problem_name: String,
-    /// Bucket the problem routed to (None for the native backend) — kept
-    /// for error messages.
+    /// Bucket the problem routed to ("native" for the native backend) —
+    /// kept for error messages.
     bucket_name: String,
 }
 
 impl XlaEngine {
     /// Register `problem` with the service and wrap the handle.
     pub fn register(service: &EvalService, problem: Arc<Problem>) -> Result<XlaEngine> {
-        let name = problem.name.clone();
-        let (id, bucket) = service.register(problem)?;
-        let bucket_name = match &bucket {
-            Some(b) => format!("{} (P={})", b.name, b.p),
-            None => "native".to_string(),
-        };
-        Ok(XlaEngine { service: service.clone(), id, problem_name: name, bucket_name })
+        let (id, bucket) = service.register_typed(Arc::clone(&problem))?;
+        Ok(XlaEngine {
+            service: service.clone(),
+            problem,
+            id,
+            bucket_name: bucket_label(&bucket),
+        })
+    }
+
+    /// The pool shard this engine's problem is pinned to.
+    pub fn shard(&self) -> usize {
+        self.id.shard()
     }
 }
 
 impl AccuracyEngine for XlaEngine {
-    /// Batched accuracy through the service.  Failures (stale id, backend
-    /// execution error, service shutdown) propagate as `Err` naming the
-    /// problem and its bucket instead of aborting the whole process — a
-    /// multi-dataset optimization run survives one failing dataset.
+    /// Batched accuracy through the service.  A stale registration
+    /// (foreign/unknown [`ProblemId`], e.g. after a service failover) is
+    /// healed transparently: re-register once and retry before surfacing
+    /// anything.  Remaining failures (backend execution error, service
+    /// shutdown) propagate as `Err` naming the problem and its bucket
+    /// instead of aborting the whole process — a multi-dataset
+    /// optimization run survives one failing dataset.
     fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Result<Vec<f64>> {
-        if problem.name != self.problem_name {
+        if problem.name != self.problem.name {
             return Err(anyhow!(
                 "engine registered for problem '{}' but asked to evaluate '{}'",
-                self.problem_name,
+                self.problem.name,
                 problem.name
             ));
         }
-        self.service.eval(self.id, batch.to_vec()).with_context(|| {
+        let res = match self.service.eval_typed(self.id, batch.to_vec()) {
+            Err(e) if e.is_stale_id() => {
+                let (id, bucket) = self.service.register_typed(Arc::clone(&self.problem))?;
+                self.id = id;
+                self.bucket_name = bucket_label(&bucket);
+                self.service.eval_typed(self.id, batch.to_vec())
+            }
+            other => other,
+        };
+        res.with_context(|| {
             format!(
                 "eval service failed on a batch of {} for problem '{}' (bucket {})",
                 batch.len(),
-                self.problem_name,
+                self.problem.name,
                 self.bucket_name
             )
         })
@@ -397,9 +273,11 @@ impl AccuracyEngine for XlaEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fitness::native::NativeEngine;
     use crate::fitness::testutil::small_problem;
     use crate::hw::{AreaLut, EgtLibrary};
     use crate::util::rng::Pcg64;
+    use std::sync::atomic::Ordering;
 
     fn random_batch(p: &Problem, n: usize, seed: u64) -> Vec<TreeApprox> {
         let mut rng = Pcg64::seeded(seed);
@@ -428,8 +306,9 @@ mod tests {
         let mut direct = NativeEngine::default();
         let want = direct.batch_accuracy(&p, &batch).unwrap();
         assert_eq!(got, want);
-        // 21 chromosomes at width 8 → 3 executions, last padded 8-5=3... the
-        // native backend pads to chunk len, so waste is 0 but execs == 3.
+        // 21 chromosomes at width 8 from a single client → 2 full flushes
+        // + the 5-tail after the coalescing window: 3 executions, exactly
+        // like the seed service's split.
         assert_eq!(svc.metrics.executions.load(Ordering::Relaxed), 3);
         svc.shutdown();
     }
@@ -456,7 +335,12 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert!(svc.metrics.executions.load(Ordering::Relaxed) >= 4);
+        // 40 chromosomes at width 16: fully coalesced → 3 executions;
+        // fully serialized (each request alone) → 4.  Never more, never
+        // fewer, and nothing is lost.
+        let execs = svc.metrics.executions.load(Ordering::Relaxed);
+        assert!((3..=4).contains(&execs), "execs={execs}");
+        assert_eq!(svc.metrics.chromosomes.load(Ordering::Relaxed), 40);
         svc.shutdown();
     }
 
@@ -471,7 +355,38 @@ mod tests {
         svc.shutdown();
     }
 
+    /// A stale [`ProblemId`] — wrong service token (failover) or an
+    /// unknown index on the right service — heals transparently: the
+    /// engine re-registers once and retries instead of surfacing the
+    /// error to the GA.
+    #[test]
+    fn stale_id_triggers_transparent_reregister() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = Arc::new(small_problem(&lut));
+        let svc = EvalService::spawn_native(8);
+        let mut engine = XlaEngine::register(&svc, Arc::clone(&p)).unwrap();
+        let good_id = engine.id;
+        let batch = random_batch(&p, 5, 17);
+        let mut direct = NativeEngine::default();
+        let want = direct.batch_accuracy(&p, &batch).unwrap();
+
+        // Foreign token (token 0 is never issued).
+        engine.id = ProblemId { service: 0, shard: 0, index: 0 };
+        assert_eq!(engine.batch_accuracy(&p, &batch).unwrap(), want);
+        assert_ne!(engine.id, good_id, "a fresh registration was taken");
+        assert_eq!(engine.id.shard(), good_id.shard(), "re-registration stays pinned");
+
+        // Unknown index on the correct service.
+        engine.id = ProblemId { index: 4096, ..engine.id };
+        assert_eq!(engine.batch_accuracy(&p, &batch).unwrap(), want);
+
+        // Initial + two healing re-registrations.
+        assert_eq!(svc.metrics.problems.load(Ordering::Relaxed), 3);
+        svc.shutdown();
+    }
+
     // Error-path contracts (invalid/stale ProblemId, requests after
     // shutdown, width-1 batching parity) are pinned through the public API
-    // in rust/tests/service_errors.rs.
+    // in rust/tests/service_errors.rs; pool routing/coalescing contracts
+    // in rust/tests/shard_pool.rs.
 }

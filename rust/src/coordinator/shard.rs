@@ -1,0 +1,847 @@
+//! Sharded evaluation pool: N backend workers + cross-driver coalescing.
+//!
+//! The seed service ran exactly one worker thread per backend, which made
+//! the evaluation service the throughput ceiling of every GA-driven search
+//! (ROADMAP: multi-worker sharding, batch coalescing).  This module owns
+//! the scaled-up machinery:
+//!
+//! ```text
+//!  GA driver (dataset A) ──┐  route by ProblemId.shard   ┌─ worker 0 (backend 0)
+//!  GA driver (dataset B) ──┼──────────────────────────────┤  worker 1 (backend 1)
+//!  benches / CLI        ──┘   (FNV-1a(problem) % N)       └─ worker k: Coalescer → execute
+//! ```
+//!
+//! * [`EvalShardPool`] spawns N workers; each constructs its **own**
+//!   backend instance inside its thread (the PJRT client is not `Send`,
+//!   and per-worker clients are exactly how the pool scales past a single
+//!   PJRT client).
+//! * Registration hash-routes a problem to a stable shard
+//!   (FNV-1a of the problem name, mod N).  The returned [`ProblemId`]
+//!   records the shard, pinning every later job to the worker that holds
+//!   the problem's device buffers.
+//! * Each worker fronts its backend with a **coalescer**: sub-width
+//!   batches from concurrent drivers queue per problem and are merged into
+//!   one padded execution, flushing when the artifact width P fills or a
+//!   small deadline (`coalesce_window_us`) expires.  This converts the
+//!   padding waste the metrics record into useful work.  A window of 0
+//!   disables merging (legacy per-request dispatch).
+//!
+//! Clients normally reach this through the [`EvalService`] facade.
+//!
+//! [`EvalService`]: super::service::EvalService
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::{FlushKind, Metrics};
+use super::service::ServiceError;
+use crate::fitness::encode::Bucket;
+#[cfg(feature = "xla")]
+use crate::fitness::encode::{self, StaticTensors};
+use crate::fitness::{native::NativeEngine, AccuracyEngine, Problem};
+use crate::hw::synth::TreeApprox;
+#[cfg(feature = "xla")]
+use crate::runtime::{DeviceStatics, XlaRuntime};
+use crate::util::pool;
+
+/// Bounded per-worker queue depth (jobs in flight before senders block).
+const QUEUE_DEPTH: usize = 16;
+
+/// What actually evaluates a padded population batch.
+///
+/// Not `Send`: the PJRT client wraps an `Rc`.  Backends are therefore
+/// *constructed inside* each worker thread by the spawn factory.
+pub(crate) trait Backend {
+    fn register(&mut self, problem: &Arc<Problem>) -> Result<RegisteredProblem>;
+    fn eval(
+        &mut self,
+        reg: &RegisteredProblem,
+        problem: &Problem,
+        chunk: &[TreeApprox],
+    ) -> Result<Vec<f64>>;
+    /// Backend id (surfaced in logs / metrics lines).
+    #[allow(dead_code)]
+    fn name(&self) -> &'static str;
+}
+
+/// Backend-side registration state.
+pub(crate) enum RegisteredProblem {
+    #[cfg(feature = "xla")]
+    Xla { statics: DeviceStatics },
+    Native { width: usize },
+}
+
+impl RegisteredProblem {
+    fn bucket(&self) -> Option<&Bucket> {
+        match self {
+            #[cfg(feature = "xla")]
+            RegisteredProblem::Xla { statics } => Some(&statics.bucket),
+            RegisteredProblem::Native { .. } => None,
+        }
+    }
+
+    /// Population width the backend executes at (batch-splitting unit).
+    fn width(&self) -> usize {
+        match self {
+            #[cfg(feature = "xla")]
+            RegisteredProblem::Xla { statics } => statics.bucket.p,
+            RegisteredProblem::Native { width } => *width,
+        }
+    }
+}
+
+/// PJRT-backed backend (one PJRT client per worker).
+#[cfg(feature = "xla")]
+struct XlaBackend {
+    runtime: XlaRuntime,
+}
+
+#[cfg(feature = "xla")]
+impl Backend for XlaBackend {
+    fn register(&mut self, problem: &Arc<Problem>) -> Result<RegisteredProblem> {
+        let (bucket, _) = self
+            .runtime
+            .meta
+            .route(problem)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no bucket fits problem '{}' (n_test={}, n_comp={}, leaves={})",
+                    problem.name,
+                    problem.n_test,
+                    problem.n_comparators(),
+                    problem.tree.n_leaves()
+                )
+            })?
+            .clone();
+        self.runtime.ensure_compiled(&bucket.name)?;
+        let st: StaticTensors = encode::encode_static(problem, &bucket);
+        let statics = self.runtime.upload_statics(&st)?;
+        Ok(RegisteredProblem::Xla { statics })
+    }
+
+    fn eval(
+        &mut self,
+        reg: &RegisteredProblem,
+        problem: &Problem,
+        chunk: &[TreeApprox],
+    ) -> Result<Vec<f64>> {
+        let RegisteredProblem::Xla { statics } = reg else {
+            return Err(anyhow!("backend mismatch"));
+        };
+        let bucket = statics.bucket.clone();
+        let (thr, scale) = encode::pack_population(problem, &bucket, chunk);
+        let acc = self.runtime.execute(statics, &thr, &scale)?;
+        Ok(acc.iter().take(chunk.len()).map(|&a| a as f64).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Native backend: same pool machinery, tree-walk arithmetic.  Used by
+/// unit tests (no artifacts needed) and `--engine native-service`.
+struct NativeBackend {
+    engine: NativeEngine,
+    /// Emulated artifact width, so batching/padding paths are exercised.
+    width: usize,
+}
+
+impl Backend for NativeBackend {
+    fn register(&mut self, _problem: &Arc<Problem>) -> Result<RegisteredProblem> {
+        Ok(RegisteredProblem::Native { width: self.width })
+    }
+
+    fn eval(
+        &mut self,
+        _reg: &RegisteredProblem,
+        problem: &Problem,
+        chunk: &[TreeApprox],
+    ) -> Result<Vec<f64>> {
+        self.engine.batch_accuracy(problem, chunk)
+    }
+
+    fn name(&self) -> &'static str {
+        "native-service"
+    }
+}
+
+/// Problem handle returned by registration.  Carries the issuing pool's
+/// token (so an id presented to a *different* pool is rejected even when
+/// its index happens to be in range there) and the shard the problem is
+/// pinned to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProblemId {
+    pub(crate) service: u32,
+    pub(crate) shard: u32,
+    pub(crate) index: u32,
+}
+
+impl ProblemId {
+    /// The pool shard (worker) this problem is pinned to.
+    pub fn shard(&self) -> usize {
+        self.shard as usize
+    }
+}
+
+/// Process-unique pool tokens (0 is never issued, so a forged
+/// `ProblemId` default can't match).
+static NEXT_POOL_TOKEN: AtomicU32 = AtomicU32::new(1);
+
+/// Sizing/behavior knobs for an [`EvalShardPool`] (CLI: `--workers`,
+/// `--coalesce-window-us`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolOptions {
+    /// Worker (shard) count.  0 = auto: one per core for the native
+    /// backend, one per device (currently 1, the CPU PJRT client) for XLA.
+    /// Clamped to [1, 64].
+    pub workers: usize,
+    /// Coalescing window in microseconds: how long a sub-width batch may
+    /// wait for concurrent drivers' work before a padded flush.  0 turns
+    /// coalescing off (every request dispatches immediately).
+    pub coalesce_window_us: u64,
+    /// Native-engine threads per worker.  0 = auto (total thread budget /
+    /// workers), so `workers=1` keeps the seed service's full batch-level
+    /// parallelism.  Ignored by the XLA backend.
+    pub engine_threads: usize,
+}
+
+impl Default for PoolOptions {
+    fn default() -> Self {
+        PoolOptions { workers: 0, coalesce_window_us: 200, engine_threads: 0 }
+    }
+}
+
+impl PoolOptions {
+    /// Resolved worker count for the native backend.
+    pub fn native_workers(&self) -> usize {
+        if self.workers == 0 {
+            pool::default_threads()
+        } else {
+            self.workers.clamp(1, 64)
+        }
+    }
+
+    /// Resolved worker count for the XLA backend (1 per device; the CPU
+    /// PJRT client exposes one).
+    pub fn xla_workers(&self) -> usize {
+        if self.workers == 0 {
+            1
+        } else {
+            self.workers.clamp(1, 64)
+        }
+    }
+}
+
+enum Msg {
+    Register {
+        problem: Arc<Problem>,
+        reply: mpsc::SyncSender<Result<(ProblemId, Option<Bucket>), ServiceError>>,
+    },
+    Eval {
+        id: ProblemId,
+        batch: Vec<TreeApprox>,
+        reply: mpsc::SyncSender<Result<Vec<f64>, ServiceError>>,
+    },
+    Shutdown,
+}
+
+/// Client handle to a pool of shard workers (cheap to clone; dropping all
+/// clones shuts the workers down after they drain pending work).
+#[derive(Clone)]
+pub struct EvalShardPool {
+    token: u32,
+    txs: Vec<mpsc::SyncSender<Msg>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl EvalShardPool {
+    /// Spawn a native-backed pool (tests / no-artifact runs).  `width`
+    /// emulates the artifact population width for batching.
+    pub fn spawn_native(width: usize, opts: &PoolOptions) -> EvalShardPool {
+        let workers = opts.native_workers();
+        let engine_threads = if opts.engine_threads == 0 {
+            (pool::default_threads() / workers).max(1)
+        } else {
+            opts.engine_threads
+        };
+        Self::spawn(workers, opts.coalesce_window_us, move |_shard| {
+            Ok(Box::new(NativeBackend {
+                engine: NativeEngine::with_threads(engine_threads),
+                width,
+            }) as Box<dyn Backend>)
+        })
+        .expect("native backend construction cannot fail")
+    }
+
+    /// Spawn a PJRT-backed pool (artifacts required); each worker builds
+    /// its own `XlaRuntime`/client, which is what lets the pool scale past
+    /// a single PJRT client.
+    #[cfg(feature = "xla")]
+    pub fn spawn_xla(
+        artifact_dir: impl AsRef<std::path::Path>,
+        opts: &PoolOptions,
+    ) -> Result<EvalShardPool> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        Self::spawn(opts.xla_workers(), opts.coalesce_window_us, move |_shard| {
+            Ok(Box::new(XlaBackend { runtime: XlaRuntime::new(dir.clone())? })
+                as Box<dyn Backend>)
+        })
+    }
+
+    fn spawn(
+        workers: usize,
+        window_us: u64,
+        factory: impl Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
+    ) -> Result<EvalShardPool> {
+        let workers = workers.max(1);
+        let window = (window_us > 0).then_some(Duration::from_micros(window_us));
+        let metrics = Arc::new(Metrics::with_shards(workers));
+        let token = NEXT_POOL_TOKEN.fetch_add(1, Ordering::Relaxed);
+        let factory: Arc<dyn Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync> =
+            Arc::new(factory);
+        let mut txs = Vec::with_capacity(workers);
+        let mut inits = Vec::with_capacity(workers);
+        for shard in 0..workers {
+            let (tx, rx) = mpsc::sync_channel::<Msg>(QUEUE_DEPTH);
+            let (init_tx, init_rx) = mpsc::sync_channel::<Result<()>>(1);
+            let f = Arc::clone(&factory);
+            let m = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name(format!("axdt-eval-shard-{shard}"))
+                .spawn(move || {
+                    let backend = match f(shard) {
+                        Ok(b) => {
+                            let _ = init_tx.send(Ok(()));
+                            b
+                        }
+                        Err(e) => {
+                            let _ = init_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    worker_loop(backend, rx, token, shard as u32, window, m);
+                })
+                .expect("spawn eval shard worker");
+            txs.push(tx);
+            inits.push(init_rx);
+        }
+        for init_rx in inits {
+            init_rx
+                .recv()
+                .map_err(|_| anyhow!("eval shard worker died during init"))??;
+        }
+        Ok(EvalShardPool { token, txs, metrics })
+    }
+
+    /// Number of shard workers.
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Stable shard for a problem name: FNV-1a mod worker count.  Stable
+    /// within a pool by construction (the hash is pinned, not
+    /// `DefaultHasher`), so re-registration lands on the worker that
+    /// already holds the problem's device buffers.
+    pub fn shard_for(&self, name: &str) -> usize {
+        (fnv1a(name.as_bytes()) % self.txs.len() as u64) as usize
+    }
+
+    /// Register a problem on its shard: routes it to a bucket and uploads
+    /// statics on the owning worker.
+    pub fn register(
+        &self,
+        problem: Arc<Problem>,
+    ) -> Result<(ProblemId, Option<Bucket>), ServiceError> {
+        let shard = self.shard_for(&problem.name);
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.txs[shard]
+            .send(Msg::Register { problem, reply: reply_tx })
+            .map_err(|_| ServiceError::ServiceDown)?;
+        reply_rx.recv().map_err(|_| ServiceError::ReplyDropped)?
+    }
+
+    /// Evaluate a batch (blocking until the owning shard replies).
+    pub fn eval(
+        &self,
+        id: ProblemId,
+        batch: Vec<TreeApprox>,
+    ) -> Result<Vec<f64>, ServiceError> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        if id.service != self.token {
+            return Err(ServiceError::ForeignProblemId {
+                id,
+                registered: self.metrics.problems.load(Ordering::Relaxed) as usize,
+            });
+        }
+        // Ids we issued are in range; clamp defensively for forged ones.
+        let shard = (id.shard as usize).min(self.txs.len() - 1);
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.metrics.shard_enqueued(shard);
+        if self.txs[shard].send(Msg::Eval { id, batch, reply: reply_tx }).is_err() {
+            self.metrics.shard_dequeued(shard);
+            return Err(ServiceError::ServiceDown);
+        }
+        reply_rx.recv().map_err(|_| ServiceError::ReplyDropped)?
+    }
+
+    /// Ask every worker to drain pending work and exit (idempotent;
+    /// dropping all handles also works).
+    pub fn shutdown(&self) {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Shutdown);
+        }
+    }
+}
+
+/// FNV-1a, pinned (routing must never change across Rust releases).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+// ---- worker side (coalescer) ----------------------------------------------
+
+/// One client eval request being assembled across >= 1 executions.
+struct RequestState {
+    reply: mpsc::SyncSender<Result<Vec<f64>, ServiceError>>,
+    results: Vec<f64>,
+    remaining: usize,
+}
+
+/// A request's chromosomes queued on its problem (consumed from `next`).
+struct QueuedSlice {
+    req: Rc<RefCell<RequestState>>,
+    items: Vec<TreeApprox>,
+    next: usize,
+}
+
+/// Per-problem coalescer state: FIFO of queued slices plus the armed
+/// flush deadline (set when the oldest pending sub-width work arrived).
+#[derive(Default)]
+struct ProblemQueue {
+    queue: VecDeque<QueuedSlice>,
+    pending: usize,
+    deadline: Option<Instant>,
+}
+
+fn worker_loop(
+    mut backend: Box<dyn Backend>,
+    rx: mpsc::Receiver<Msg>,
+    token: u32,
+    shard: u32,
+    window: Option<Duration>,
+    metrics: Arc<Metrics>,
+) {
+    let mut problems: Vec<(Arc<Problem>, RegisteredProblem)> = Vec::new();
+    let mut queues: Vec<ProblemQueue> = Vec::new();
+    loop {
+        // Wait for work, bounded by the earliest armed coalescer deadline.
+        let next_deadline = queues.iter().filter_map(|q| q.deadline).min();
+        let msg = match next_deadline {
+            // Invariant: no deadline => nothing pending, so a disconnect
+            // here cannot strand queued work.
+            None => match rx.recv() {
+                Ok(m) => m,
+                Err(_) => return,
+            },
+            Some(deadline) => {
+                let now = Instant::now();
+                if deadline <= now {
+                    flush_expired(backend.as_mut(), &problems, &mut queues, shard, &metrics);
+                    continue;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(m) => m,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        flush_expired(backend.as_mut(), &problems, &mut queues, shard, &metrics);
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        flush_all(backend.as_mut(), &problems, &mut queues, shard, &metrics);
+                        return;
+                    }
+                }
+            }
+        };
+        match msg {
+            Msg::Shutdown => {
+                // In-flight jobs still get their replies: drain the
+                // coalescer before exiting.
+                flush_all(backend.as_mut(), &problems, &mut queues, shard, &metrics);
+                return;
+            }
+            Msg::Register { problem, reply } => {
+                let res = match backend.register(&problem) {
+                    Ok(reg) => {
+                        let id = ProblemId {
+                            service: token,
+                            shard,
+                            index: problems.len() as u32,
+                        };
+                        let bucket = reg.bucket().cloned();
+                        problems.push((problem, reg));
+                        queues.push(ProblemQueue::default());
+                        metrics.problems.fetch_add(1, Ordering::Relaxed);
+                        Ok((id, bucket))
+                    }
+                    Err(e) => Err(ServiceError::Backend { detail: format!("{e:#}") }),
+                };
+                let _ = reply.send(res);
+            }
+            Msg::Eval { id, batch, reply } => {
+                metrics.shard_dequeued(shard as usize);
+                let idx = id.index as usize;
+                // A stale or foreign id must not kill the worker thread
+                // (which would wedge every other client) NOR silently
+                // evaluate against the wrong problem.
+                if id.service != token || id.shard != shard || idx >= problems.len() {
+                    let _ = reply.send(Err(ServiceError::UnknownProblemId {
+                        id,
+                        registered: problems.len(),
+                    }));
+                    continue;
+                }
+                if batch.is_empty() {
+                    let _ = reply.send(Ok(Vec::new()));
+                    continue;
+                }
+                let n = batch.len();
+                let req = Rc::new(RefCell::new(RequestState {
+                    reply,
+                    results: Vec::with_capacity(n),
+                    remaining: n,
+                }));
+                queues[idx].pending += n;
+                queues[idx].queue.push_back(QueuedSlice { req, items: batch, next: 0 });
+                let width = problems[idx].1.width().max(1);
+                while queues[idx].pending >= width {
+                    execute_chunk(
+                        backend.as_mut(),
+                        &problems[idx],
+                        &mut queues[idx],
+                        width,
+                        FlushKind::Full,
+                        shard,
+                        &metrics,
+                    );
+                }
+                match window {
+                    None => {
+                        // Coalescing off: dispatch the tail immediately.
+                        let take = queues[idx].pending;
+                        if take > 0 {
+                            execute_chunk(
+                                backend.as_mut(),
+                                &problems[idx],
+                                &mut queues[idx],
+                                take,
+                                FlushKind::Immediate,
+                                shard,
+                                &metrics,
+                            );
+                        }
+                    }
+                    Some(w) => {
+                        if queues[idx].pending > 0 && queues[idx].deadline.is_none() {
+                            queues[idx].deadline = Some(Instant::now() + w);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn flush_expired(
+    backend: &mut dyn Backend,
+    problems: &[(Arc<Problem>, RegisteredProblem)],
+    queues: &mut [ProblemQueue],
+    shard: u32,
+    metrics: &Metrics,
+) {
+    let now = Instant::now();
+    for idx in 0..queues.len() {
+        if queues[idx].deadline.is_some_and(|d| d <= now) {
+            let take = queues[idx].pending;
+            execute_chunk(
+                backend,
+                &problems[idx],
+                &mut queues[idx],
+                take,
+                FlushKind::Deadline,
+                shard,
+                metrics,
+            );
+        }
+    }
+}
+
+fn flush_all(
+    backend: &mut dyn Backend,
+    problems: &[(Arc<Problem>, RegisteredProblem)],
+    queues: &mut [ProblemQueue],
+    shard: u32,
+    metrics: &Metrics,
+) {
+    for idx in 0..queues.len() {
+        while queues[idx].pending > 0 {
+            let take = queues[idx].pending;
+            execute_chunk(
+                backend,
+                &problems[idx],
+                &mut queues[idx],
+                take,
+                FlushKind::Drain,
+                shard,
+                metrics,
+            );
+        }
+    }
+}
+
+/// Pop up to `take` queued chromosomes for one problem, execute them as a
+/// single backend batch, and distribute results (or the failure) to every
+/// contributing request.
+fn execute_chunk(
+    backend: &mut dyn Backend,
+    problem_entry: &(Arc<Problem>, RegisteredProblem),
+    pq: &mut ProblemQueue,
+    take: usize,
+    kind: FlushKind,
+    shard: u32,
+    metrics: &Metrics,
+) {
+    let (problem, reg) = problem_entry;
+    let width = reg.width().max(1);
+    // Never hand the backend more than one artifact width at once, even if
+    // an invariant slips (callers keep pending < width between flushes).
+    let take = take.min(pq.pending).min(width);
+    if take == 0 {
+        pq.deadline = None;
+        return;
+    }
+    let mut chunk: Vec<TreeApprox> = Vec::with_capacity(take);
+    let mut contributors: Vec<(Rc<RefCell<RequestState>>, usize)> = Vec::new();
+    while chunk.len() < take {
+        let front = pq.queue.front_mut().expect("pending count matches queued items");
+        let n = (take - chunk.len()).min(front.items.len() - front.next);
+        chunk.extend_from_slice(&front.items[front.next..front.next + n]);
+        front.next += n;
+        contributors.push((Rc::clone(&front.req), n));
+        if front.next == front.items.len() {
+            pq.queue.pop_front();
+        }
+    }
+    pq.pending -= take;
+    if pq.pending == 0 {
+        pq.deadline = None;
+    }
+    let t0 = Instant::now();
+    let res = backend.eval(reg, problem.as_ref(), &chunk).and_then(|accs| {
+        // A short result must fail the requests, not panic the worker
+        // (which would wedge every client of this shard).
+        if accs.len() == chunk.len() {
+            Ok(accs)
+        } else {
+            Err(anyhow!(
+                "backend returned {} accuracies for a chunk of {}",
+                accs.len(),
+                chunk.len()
+            ))
+        }
+    });
+    match res {
+        Ok(accs) => {
+            metrics.record_shard_execution(
+                shard as usize,
+                chunk.len(),
+                width.max(chunk.len()),
+                t0.elapsed().as_nanos() as u64,
+                contributors.len(),
+                kind,
+            );
+            let mut off = 0usize;
+            for (req, n) in contributors {
+                let mut r = req.borrow_mut();
+                r.results.extend_from_slice(&accs[off..off + n]);
+                off += n;
+                r.remaining -= n;
+                if r.remaining == 0 {
+                    let results = std::mem::take(&mut r.results);
+                    let _ = r.reply.send(Ok(results));
+                }
+            }
+        }
+        Err(e) => {
+            // Every contributor's fitness is poisoned: fail them all and
+            // purge their queued tails so they are not executed (and
+            // double-replied) later.  Other requests keep their place.
+            let err = ServiceError::Backend { detail: format!("{e:#}") };
+            let dead: Vec<*const RefCell<RequestState>> =
+                contributors.iter().map(|(r, _)| Rc::as_ptr(r)).collect();
+            for (req, _) in &contributors {
+                let mut r = req.borrow_mut();
+                r.remaining = 0;
+                let _ = r.reply.send(Err(err.clone()));
+            }
+            let mut purged = 0usize;
+            let kept: VecDeque<QueuedSlice> = pq
+                .queue
+                .drain(..)
+                .filter(|s| {
+                    if dead.contains(&Rc::as_ptr(&s.req)) {
+                        purged += s.items.len() - s.next;
+                        false
+                    } else {
+                        true
+                    }
+                })
+                .collect();
+            pq.queue = kept;
+            pq.pending -= purged;
+            if pq.pending == 0 {
+                pq.deadline = None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::testutil::small_problem;
+    use crate::hw::{AreaLut, EgtLibrary};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Mutex;
+
+    /// Fake backend recording every executed chunk width.
+    struct CountingBackend {
+        width: usize,
+        chunks: Arc<Mutex<Vec<usize>>>,
+    }
+
+    impl Backend for CountingBackend {
+        fn register(&mut self, _p: &Arc<Problem>) -> Result<RegisteredProblem> {
+            Ok(RegisteredProblem::Native { width: self.width })
+        }
+        fn eval(
+            &mut self,
+            _reg: &RegisteredProblem,
+            _p: &Problem,
+            chunk: &[TreeApprox],
+        ) -> Result<Vec<f64>> {
+            self.chunks.lock().unwrap().push(chunk.len());
+            Ok(vec![0.25; chunk.len()])
+        }
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+    }
+
+    fn seeds() -> Arc<Problem> {
+        Arc::new(small_problem(&AreaLut::build(&EgtLibrary::default())))
+    }
+
+    #[test]
+    fn fnv_route_is_pinned() {
+        // The empty-input value is the FNV offset basis; routing stability
+        // across releases is a hard requirement (device-buffer pinning).
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"seeds"), fnv1a(b"seeds"));
+        assert_ne!(fnv1a(b"seeds"), fnv1a(b"cardio"));
+    }
+
+    #[test]
+    fn uncoalesced_chunking_matches_legacy_split() {
+        let chunks = Arc::new(Mutex::new(Vec::new()));
+        let c = Arc::clone(&chunks);
+        let pool = EvalShardPool::spawn(1, 0, move |_| {
+            Ok(Box::new(CountingBackend { width: 8, chunks: Arc::clone(&c) })
+                as Box<dyn Backend>)
+        })
+        .unwrap();
+        let p = seeds();
+        let (id, bucket) = pool.register(Arc::clone(&p)).unwrap();
+        assert!(bucket.is_none());
+        let batch = vec![TreeApprox::exact(&p.tree); 21];
+        let got = pool.eval(id, batch).unwrap();
+        assert_eq!(got, vec![0.25; 21]);
+        // 21 at width 8: two full chunks + the immediate tail, like the
+        // seed service.
+        assert_eq!(*chunks.lock().unwrap(), vec![8, 8, 5]);
+        assert_eq!(pool.metrics.full_flushes.load(Ordering::Relaxed), 2);
+        assert_eq!(pool.metrics.deadline_flushes.load(Ordering::Relaxed), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn backend_error_fails_request_and_worker_survives() {
+        struct FlakyBackend {
+            width: usize,
+            fail: Arc<AtomicBool>,
+        }
+        impl Backend for FlakyBackend {
+            fn register(&mut self, _p: &Arc<Problem>) -> Result<RegisteredProblem> {
+                Ok(RegisteredProblem::Native { width: self.width })
+            }
+            fn eval(
+                &mut self,
+                _reg: &RegisteredProblem,
+                _p: &Problem,
+                chunk: &[TreeApprox],
+            ) -> Result<Vec<f64>> {
+                if self.fail.load(Ordering::Relaxed) {
+                    Err(anyhow!("injected backend failure"))
+                } else {
+                    Ok(vec![0.5; chunk.len()])
+                }
+            }
+            fn name(&self) -> &'static str {
+                "flaky"
+            }
+        }
+
+        let fail = Arc::new(AtomicBool::new(true));
+        let f = Arc::clone(&fail);
+        let pool = EvalShardPool::spawn(1, 0, move |_| {
+            Ok(Box::new(FlakyBackend { width: 8, fail: Arc::clone(&f) })
+                as Box<dyn Backend>)
+        })
+        .unwrap();
+        let p = seeds();
+        let (id, _) = pool.register(Arc::clone(&p)).unwrap();
+        let batch = vec![TreeApprox::exact(&p.tree); 3];
+        let err = pool.eval(id, batch.clone()).unwrap_err();
+        assert!(format!("{err}").contains("injected backend failure"), "{err}");
+        // The worker survives and serves the next request.
+        fail.store(false, Ordering::Relaxed);
+        assert_eq!(pool.eval(id, batch).unwrap(), vec![0.5; 3]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_options_resolve_worker_counts() {
+        let auto = PoolOptions::default();
+        assert!(auto.native_workers() >= 1);
+        assert_eq!(auto.xla_workers(), 1);
+        let fixed = PoolOptions { workers: 4, ..PoolOptions::default() };
+        assert_eq!(fixed.native_workers(), 4);
+        assert_eq!(fixed.xla_workers(), 4);
+        let huge = PoolOptions { workers: 1000, ..PoolOptions::default() };
+        assert_eq!(huge.native_workers(), 64);
+    }
+}

@@ -154,9 +154,11 @@ impl Problem {
 /// Batched accuracy oracle over concrete approximations.
 ///
 /// `Err` means the engine could not evaluate the batch (backend execution
-/// failure, service shutdown, stale registration) — callers must surface
-/// it rather than fabricate fitness.  The native engine never fails; the
-/// service-backed engines do.
+/// failure, service shutdown) — callers must surface it rather than
+/// fabricate fitness.  The native engine never fails; the service-backed
+/// engines can, though they heal what is recoverable first (the
+/// coordinator's `XlaEngine` transparently re-registers once and retries
+/// on a stale registration before surfacing `Err`).
 pub trait AccuracyEngine {
     fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Result<Vec<f64>>;
     /// Human-readable engine id (logs / benches).

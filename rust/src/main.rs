@@ -31,6 +31,8 @@ const OPTS: &[OptSpec] = &[
     opt("engine", "native | native-service | xla (default: xla if built in, else native-service)"),
     opt("artifacts", "artifact directory (default artifacts)"),
     opt("threads", "worker threads (default: cores)"),
+    opt("workers", "eval-service shard workers (0 = auto, max 64)"),
+    opt("coalesce-window-us", "eval coalescing window in us (0 = off, default 200)"),
     opt("loss", "Table II accuracy-loss budget (default 0.01)"),
     opt("out", "output directory for JSON results (default results)"),
     opt("dataset", "single dataset (export-rtl)"),
@@ -149,29 +151,95 @@ fn partial_failure(failed: &[String]) -> Result<()> {
 }
 
 /// Run the optimization pipeline for every configured dataset, sharing one
-/// evaluation service when the engine needs it.  Returns the completed runs
-/// plus the ids of datasets that failed (callers decide how to surface
-/// those once their reports are out).
+/// sharded evaluation service when the engine needs it.  Service-backed
+/// runs drive datasets concurrently, bounded to the pool's worker count by
+/// a token channel (no barrier: a slow dataset never stalls the rest) —
+/// problems hash-pin to shards, so datasets fan out across workers instead
+/// of queueing behind one.  (Batch coalescing pays off when several
+/// clients evaluate the *same* problem concurrently — multi-tenant
+/// serving, benches — see `coordinator::shard`.)  Returns the completed
+/// runs plus the ids of datasets that failed (callers decide how to
+/// surface those once their reports are out).
 fn run_all(cfg: &RunConfig, verbose: bool) -> Result<(Vec<DatasetRun>, Vec<String>)> {
     let engine = cfg.engine_choice();
+    let pool_opts = cfg.pool_options();
     let service = match engine {
         EngineChoice::Native => None,
-        EngineChoice::NativeService => Some(EvalService::spawn_native(cfg.pop_size)),
+        EngineChoice::NativeService => {
+            Some(EvalService::spawn_native_with(cfg.pop_size, &pool_opts))
+        }
         EngineChoice::Xla => Some(
-            EvalService::spawn_xla(&cfg.artifact_dir)
+            EvalService::spawn_xla_with(&cfg.artifact_dir, &pool_opts)
                 .context("starting XLA eval service (did you run `make artifacts`?)")?,
         ),
     };
     let opts = cfg.run_options();
+    let drivers = service
+        .as_ref()
+        .map_or(1, |s| s.workers())
+        .min(cfg.datasets.len())
+        .max(1);
+    // One failing dataset (e.g. a backend execution error) must not abort
+    // the remaining datasets of a multi-dataset run.
+    let mut results: Vec<(String, Result<DatasetRun>)> = Vec::new();
+    if drivers > 1 {
+        // `drivers` tokens bound the concurrency; each thread claims one
+        // before optimizing and returns it after, so finished slots are
+        // rehanded to waiting datasets immediately.
+        let (token_tx, token_rx) = std::sync::mpsc::channel::<()>();
+        for _ in 0..drivers {
+            token_tx.send(()).expect("token channel open");
+        }
+        let token_rx = std::sync::Arc::new(std::sync::Mutex::new(token_rx));
+        // Returns its token on drop, so a panicking driver cannot strand
+        // the datasets still waiting for a slot.
+        struct TokenGuard(std::sync::mpsc::Sender<()>);
+        impl Drop for TokenGuard {
+            fn drop(&mut self) {
+                let _ = self.0.send(());
+            }
+        }
+        let handles: Vec<_> = cfg
+            .datasets
+            .iter()
+            .map(|d| {
+                let d = d.clone();
+                let opts = opts.clone();
+                let service = service.clone();
+                let token_tx = token_tx.clone();
+                let token_rx = std::sync::Arc::clone(&token_rx);
+                std::thread::spawn(move || {
+                    token_rx.lock().unwrap().recv().expect("token channel open");
+                    let _token = TokenGuard(token_tx);
+                    if verbose {
+                        eprintln!("[axdt] optimizing {d} (engine {engine:?})…");
+                    }
+                    let run = optimize_dataset(&d, &opts, service.as_ref());
+                    (d, run)
+                })
+            })
+            .collect();
+        drop(token_tx);
+        for (h, d) in handles.into_iter().zip(&cfg.datasets) {
+            // A panicking driver counts as that dataset failing; it must
+            // not discard every other dataset's completed run.
+            results.push(match h.join() {
+                Ok(r) => r,
+                Err(_) => (d.clone(), Err(anyhow!("driver thread panicked"))),
+            });
+        }
+    } else {
+        for d in &cfg.datasets {
+            if verbose {
+                eprintln!("[axdt] optimizing {d} (engine {engine:?})…");
+            }
+            results.push((d.clone(), optimize_dataset(d, &opts, service.as_ref())));
+        }
+    }
     let mut runs = Vec::new();
     let mut failed: Vec<String> = Vec::new();
-    for d in &cfg.datasets {
-        if verbose {
-            eprintln!("[axdt] optimizing {d} (engine {:?})…", engine);
-        }
-        // One failing dataset (e.g. a backend execution error) must not
-        // abort the remaining datasets of a multi-dataset run.
-        match optimize_dataset(d, &opts, service.as_ref()) {
+    for (d, res) in results {
+        match res {
             Ok(run) => {
                 if verbose {
                     eprintln!(
@@ -185,14 +253,17 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<(Vec<DatasetRun>, Vec<Strin
             }
             Err(e) => {
                 eprintln!("[axdt] {d}: optimization failed: {e:#}");
-                failed.push(d.clone());
+                failed.push(d);
             }
         }
     }
     if let Some(svc) = &service {
-        if verbose {
-            eprintln!("[axdt] eval service: {}", svc.metrics.render());
-        }
+        eprintln!(
+            "[axdt] eval service ({} worker(s), {} driver(s)): {}",
+            svc.workers(),
+            drivers,
+            svc.metrics.render()
+        );
         svc.shutdown();
     }
     if runs.is_empty() {

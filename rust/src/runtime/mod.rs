@@ -15,6 +15,12 @@
 //! ([`DeviceStatics`]) and reused every generation; only the per-batch
 //! `(thr, scale)` tensors cross the host boundary per execution
 //! (`execute_b`).
+//!
+//! An `XlaRuntime` (client + executable cache + uploaded statics) is
+//! deliberately single-threaded and `!Send`: scaling comes from the
+//! coordinator's shard pool, where **each worker constructs its own
+//! runtime** inside its thread and problems are hash-pinned to the worker
+//! that holds their device buffers (see `coordinator::shard`).
 
 #[cfg(feature = "xla")]
 use std::collections::HashMap;

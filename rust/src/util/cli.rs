@@ -153,7 +153,9 @@ pub fn usage(program: &str, commands: &[(&str, &str)], spec: &[OptSpec]) -> Stri
         } else {
             format!("--{}", o.name)
         };
-        s.push_str(&format!("  {name:<22} {}\n", o.help));
+        // 26 columns: fits the longest current option
+        // (`--coalesce-window-us <v>`) without ragged help text.
+        s.push_str(&format!("  {name:<26} {}\n", o.help));
     }
     s
 }

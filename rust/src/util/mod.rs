@@ -9,12 +9,17 @@
 //! * [`json`] — minimal JSON value model, parser and writer (artifact
 //!   metadata, config files, experiment reports).
 //! * [`cli`] — declarative command-line parsing for the `axdt` launcher.
-//! * [`pool`] — scoped thread pool with work-stealing-free static sharding.
+//! * [`pool`] — scoped parallel-map helpers with dynamic work claiming
+//!   (chunk queue for `par_map`, atomic next-index work stealing for
+//!   `par_for_each_indexed`).
 //! * [`stats`] — summary statistics used by benches and reports.
 //! * [`prop`] — a tiny property-testing harness (seeded generators, failure
 //!   reporting with the reproducing seed).
 //! * [`bench`] — a criterion-shaped benchmark harness (warmup, timed
 //!   iterations, mean/p50/p99 reporting) used by `cargo bench`.
+//! * [`testbed`] — shared eval-service workload scaffolding (named
+//!   problems, random approximation batches) for integration tests and
+//!   benches.
 
 pub mod bench;
 pub mod cli;
@@ -23,3 +28,4 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod testbed;

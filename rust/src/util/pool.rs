@@ -1,10 +1,12 @@
 //! Scoped parallel-map helpers over std threads (rayon is not vendored).
 //!
-//! Two entry points:
-//! * [`par_map`] — chunk-sharded parallel map for CPU-bound fitness /
-//!   synthesis work; preserves input order.
-//! * [`par_for_each_indexed`] — atomically work-stolen index loop for
-//!   irregular workloads (netlist synthesis time varies with threshold).
+//! Two entry points, both *dynamically* scheduled (neither statically
+//! pre-assigns work to a worker):
+//! * [`par_map`] — parallel map over contiguous chunks that idle workers
+//!   claim from a shared queue; preserves input order.
+//! * [`par_for_each_indexed`] — work-stealing index loop (each worker
+//!   atomically claims the next index) for irregular workloads (netlist
+//!   synthesis time varies with threshold).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -23,8 +25,10 @@ pub fn default_threads() -> usize {
         .clamp(1, 64)
 }
 
-/// Parallel map preserving order. `f` must be `Sync`; items are processed in
-/// contiguous chunks, one chunk set per worker.
+/// Parallel map preserving order. `f` must be `Sync`; items are split into
+/// `threads` contiguous chunks that workers claim dynamically from a shared
+/// queue, so a slow chunk cannot strand the unclaimed ones behind one
+/// worker.
 pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,

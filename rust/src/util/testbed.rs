@@ -1,0 +1,72 @@
+//! Shared eval-service workload scaffolding for integration tests and
+//! benches.
+//!
+//! Not `#[cfg(test)]`-gated (benches link the library normally), unlike
+//! `fitness::testutil`.  Keeping this in one place matters because the
+//! driver-name list encodes a routing contract the shard-pool tests and
+//! `bench_shard` both depend on: the pinned FNV-1a route of these names
+//! spreads them 2-per-shard over a 4-worker pool.
+
+use std::sync::Arc;
+
+use crate::data::generators;
+use crate::dt::{train, TrainConfig};
+use crate::fitness::Problem;
+use crate::hw::synth::TreeApprox;
+use crate::hw::{AreaLut, EgtLibrary};
+use crate::quant;
+use crate::util::rng::Pcg64;
+
+/// 8 names whose pinned FNV-1a route spreads 2-per-shard over 4 workers
+/// (shards 1,2,3,0,1,2,3,0) — the multi-driver workload for shard tests
+/// and `bench_shard`.
+pub const DRIVER_NAMES: [&str; 8] =
+    ["drv0", "drv1", "drv2", "drv3", "drv4", "drv5", "drv6", "drv7"];
+
+/// The seeds problem under a custom name, so hash-routing can be driven
+/// deterministically (the route depends only on the name).
+pub fn named_problem(name: &str) -> Arc<Problem> {
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+    let spec = generators::spec("seeds").unwrap();
+    let data = generators::generate(spec, 42);
+    let (train_d, test_d) = data.split(0.3, 42);
+    let tree = train(
+        &train_d,
+        &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 },
+    );
+    Arc::new(Problem::new(name, tree, &test_d, &lut, &lib, 5))
+}
+
+/// `count` random mixed-precision approximations of `p`'s tree.
+pub fn random_batch(p: &Problem, count: usize, seed: u64) -> Vec<TreeApprox> {
+    let mut rng = Pcg64::seeded(seed);
+    let n = p.n_comparators();
+    (0..count)
+        .map(|_| {
+            let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+            let thr_int: Vec<u32> = (0..n)
+                .map(|j| quant::int_threshold(p.thresholds[j], bits[j]))
+                .collect();
+            TreeApprox { bits, thr_int }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaffolding_is_deterministic() {
+        let p = named_problem("x");
+        assert_eq!(p.name, "x");
+        let a = random_batch(&p, 4, 9);
+        let b = random_batch(&p, 4, 9);
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.bits, y.bits);
+            assert_eq!(x.thr_int, y.thr_int);
+        }
+    }
+}
