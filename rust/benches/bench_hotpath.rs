@@ -24,7 +24,7 @@ use axdt::util::rng::Pcg64;
 /// Single worker, no coalescing: the seed service's dispatch behavior,
 /// which is what the latency comparisons here are calibrated against.
 fn latency_opts() -> PoolOptions {
-    PoolOptions { workers: 1, coalesce_window_us: 0, engine_threads: 0 }
+    PoolOptions { workers: 1, coalesce_window_us: 0, engine_threads: 0, ..PoolOptions::default() }
 }
 
 fn problem_for(dataset: &str) -> Problem {

@@ -14,20 +14,26 @@
 //! Acceptance (ISSUE 2): >= 2x throughput with --workers 4 over
 //! --workers 1, and strictly less padding waste with coalescing on.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use axdt::coordinator::{EvalService, PoolOptions};
-use axdt::fitness::Problem;
+use axdt::coordinator::{EvalService, PoolOptions, XlaEngine};
+use axdt::fitness::{AccuracyEngine, Problem};
 use axdt::util::bench::Bench;
-use axdt::util::testbed::{named_problem, random_batch, DRIVER_NAMES};
+use axdt::util::testbed::{named_problem, random_batch, spawn_killable_native, DRIVER_NAMES};
 
 /// Drive `DRIVER_NAMES.len()` concurrent drivers for `iters` rounds each;
 /// returns chromosome evaluations per second.
 fn multi_driver_throughput(workers: usize, width: usize, iters: usize) -> (f64, String) {
     let svc = EvalService::spawn_native_with(
         width,
-        &PoolOptions { workers, coalesce_window_us: 200, engine_threads: 1 },
+        &PoolOptions {
+            workers,
+            coalesce_window_us: 200,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
     );
     let registered: Vec<(Arc<Problem>, _)> = DRIVER_NAMES
         .iter()
@@ -72,7 +78,12 @@ fn padding_waste(window_us: u64, rounds: usize) -> (f64, String) {
     let width = 32;
     let svc = EvalService::spawn_native_with(
         width,
-        &PoolOptions { workers: 1, coalesce_window_us: window_us, engine_threads: 1 },
+        &PoolOptions {
+            workers: 1,
+            coalesce_window_us: window_us,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
     );
     let p = named_problem("seeds");
     let (id, _) = svc.register(Arc::clone(&p)).unwrap();
@@ -92,6 +103,55 @@ fn padding_waste(window_us: u64, rounds: usize) -> (f64, String) {
     let report = svc.metrics.render();
     svc.shutdown();
     (waste, report)
+}
+
+/// Failover cost: the multi-driver workload with one of 4 workers killed
+/// a quarter of the way in.  Drivers go through the `XlaEngine` facade,
+/// so the dead shard's drivers heal (re-register onto survivors) instead
+/// of erroring — throughput degrades toward 3/4 of the healthy pool, it
+/// does not collapse to zero.
+fn failover_throughput(width: usize, iters: usize) -> (f64, String) {
+    let kill = Arc::new(AtomicU64::new(0));
+    let pool = spawn_killable_native(
+        width,
+        &PoolOptions {
+            workers: 4,
+            coalesce_window_us: 200,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
+        Arc::clone(&kill),
+    );
+    let svc = EvalService::from_pool(pool);
+    let engines: Vec<(Arc<Problem>, XlaEngine)> = DRIVER_NAMES
+        .iter()
+        .map(|name| {
+            let p = named_problem(name);
+            let engine = XlaEngine::register(&svc, Arc::clone(&p)).unwrap();
+            (p, engine)
+        })
+        .collect();
+    let victim = engines[0].1.shard() as u64 + 1;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for (t, (p, mut engine)) in engines.into_iter().enumerate() {
+            let kill = Arc::clone(&kill);
+            s.spawn(move || {
+                let batch = random_batch(&p, width, 7 + t as u64);
+                for i in 0..iters {
+                    if t == 0 && i == iters / 4 {
+                        kill.store(victim, Ordering::SeqCst);
+                    }
+                    engine.batch_accuracy(&p, &batch).unwrap();
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let evals = (DRIVER_NAMES.len() * iters * width) as f64;
+    let report = svc.metrics.render();
+    svc.shutdown();
+    (evals / dt, report)
 }
 
 fn main() {
@@ -119,6 +179,18 @@ fn main() {
         "shard/speedup workers4_vs_workers1 = {speedup:.2}x (acceptance target >= 2x)"
     ));
     println!("BENCHJSON {{\"bench\":\"shard/speedup_4v1\",\"x\":{speedup:.3}}}");
+
+    let (thr_failover, report) = failover_throughput(width, iters);
+    let retained = thr_failover / throughput[1];
+    b.row(&format!(
+        "shard/failover 1-of-4 workers killed at 25%: {thr_failover:.0} evals/s \
+         ({:.0}% of healthy 4-worker throughput; all drivers completed)",
+        100.0 * retained
+    ));
+    b.row(&format!("shard/failover metrics: {report}"));
+    println!(
+        "BENCHJSON {{\"bench\":\"shard/failover_throughput\",\"evals_per_s\":{thr_failover:.1},\"retained_vs_healthy\":{retained:.3}}}"
+    );
 
     let rounds = if quick { 40 } else { 150 };
     let (waste_off, report_off) = padding_waste(0, rounds);

@@ -37,6 +37,8 @@ pub struct RunConfig {
     pub workers: usize,
     /// Eval-service coalescing window in microseconds (0 = off).
     pub coalesce_window_us: u64,
+    /// Respawn a dead eval-shard worker once (`--respawn-shards`).
+    pub respawn_shards: bool,
     pub accuracy_loss: f64,
     pub out_dir: String,
 }
@@ -57,6 +59,7 @@ impl Default for RunConfig {
             threads: 0, // auto
             workers: 0, // auto
             coalesce_window_us: 200,
+            respawn_shards: false,
             accuracy_loss: 0.01,
             out_dir: "results".into(),
         }
@@ -91,6 +94,9 @@ impl RunConfig {
         cfg.workers = args.usize_or("workers", cfg.workers)?;
         cfg.coalesce_window_us =
             args.u64_or("coalesce-window-us", cfg.coalesce_window_us)?;
+        if args.has_flag("respawn-shards") {
+            cfg.respawn_shards = true;
+        }
         cfg.accuracy_loss = args.f64_or("loss", cfg.accuracy_loss)?;
         cfg.out_dir = args.str_or("out", &cfg.out_dir);
         cfg.validate()?;
@@ -141,6 +147,7 @@ impl RunConfig {
             workers,
             coalesce_window_us: self.coalesce_window_us,
             engine_threads: 0,
+            respawn: self.respawn_shards,
         }
     }
 
@@ -169,6 +176,7 @@ impl RunConfig {
             ("threads", Json::num(self.threads as f64)),
             ("workers", Json::num(self.workers as f64)),
             ("coalesce_window_us", Json::num(self.coalesce_window_us as f64)),
+            ("respawn_shards", Json::Bool(self.respawn_shards)),
             ("accuracy_loss", Json::num(self.accuracy_loss)),
             ("out_dir", Json::str(self.out_dir.clone())),
         ])
@@ -200,6 +208,10 @@ impl RunConfig {
             workers: get_num("workers", d.workers as f64) as usize,
             coalesce_window_us: get_num("coalesce_window_us", d.coalesce_window_us as f64)
                 as u64,
+            respawn_shards: j
+                .get("respawn_shards")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.respawn_shards),
             accuracy_loss: get_num("accuracy_loss", d.accuracy_loss),
             out_dir: get_str("out_dir", &d.out_dir),
         };
@@ -224,6 +236,7 @@ mod tests {
         opt("threads", ""),
         opt("workers", ""),
         opt("coalesce-window-us", ""),
+        flag("respawn-shards", ""),
         opt("loss", ""),
         opt("out", ""),
         opt("config", ""),
@@ -281,19 +294,31 @@ mod tests {
     #[test]
     fn scaling_knobs_parse_validate_and_round_trip() {
         let args = Args::parse(
-            &sv(&["optimize", "--workers", "4", "--coalesce-window-us", "500"]),
+            &sv(&[
+                "optimize",
+                "--workers",
+                "4",
+                "--coalesce-window-us",
+                "500",
+                "--respawn-shards",
+            ]),
             SPEC,
         )
         .unwrap();
         let cfg = RunConfig::resolve(&args).unwrap();
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.coalesce_window_us, 500);
+        assert!(cfg.respawn_shards);
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
-        // Explicit workers flow straight through to the pool.
+        // Explicit workers and the respawn opt-in flow straight through to
+        // the pool.
         let po = cfg.pool_options();
         assert_eq!(po.workers, 4);
         assert_eq!(po.coalesce_window_us, 500);
+        assert!(po.respawn);
+        // A config without the key keeps the default (off).
+        assert!(!RunConfig::from_json("{}").unwrap().respawn_shards);
 
         // Auto sizing caps native workers at the dataset count.
         let mut auto = RunConfig::default();

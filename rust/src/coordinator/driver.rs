@@ -102,12 +102,18 @@ pub struct DatasetRun {
 
 impl DatasetRun {
     /// Smallest-area front design within `loss` of the baseline accuracy
-    /// (Table II uses loss = 0.01).
+    /// (Table II uses loss = 0.01).  NaN-safe: a NaN accuracy (either
+    /// sign) fails the `>=` filter, non-finite areas are filtered out
+    /// before `min_by` (a negative NaN would otherwise sort BELOW every
+    /// finite area under `total_cmp` and win), and `total_cmp` itself
+    /// cannot panic like the old `partial_cmp(..).unwrap()` did.
     pub fn best_within_loss(&self, loss: f64) -> Option<&ParetoPoint> {
         self.front
             .iter()
-            .filter(|p| p.accuracy >= self.baseline_accuracy - loss)
-            .min_by(|a, b| a.measured.area_mm2.partial_cmp(&b.measured.area_mm2).unwrap())
+            .filter(|p| {
+                p.accuracy >= self.baseline_accuracy - loss && p.measured.area_mm2.is_finite()
+            })
+            .min_by(|a, b| a.measured.area_mm2.total_cmp(&b.measured.area_mm2))
     }
 
     /// Area reduction factor (baseline / best-within-loss), as in §IV.
@@ -206,7 +212,9 @@ pub fn optimize_dataset(
             }
         })
         .collect();
-    front.sort_by(|a, b| b.accuracy.partial_cmp(&a.accuracy).unwrap());
+    // total_cmp: a NaN accuracy (e.g. a degenerate candidate) must not
+    // panic the whole run after the GA already finished.
+    front.sort_by(|a, b| b.accuracy.total_cmp(&a.accuracy));
 
     Ok(DatasetRun {
         spec,
@@ -288,7 +296,12 @@ mod tests {
         use crate::coordinator::shard::PoolOptions;
         let svc = EvalService::spawn_native_with(
             8,
-            &PoolOptions { workers: 4, coalesce_window_us: 150, engine_threads: 1 },
+            &PoolOptions {
+                workers: 4,
+                coalesce_window_us: 150,
+                engine_threads: 1,
+                ..PoolOptions::default()
+            },
         );
         let a = optimize_dataset("seeds", &quick_opts(), None).unwrap();
         let b = optimize_dataset(
@@ -325,5 +338,57 @@ mod tests {
     #[test]
     fn unknown_dataset_rejected() {
         assert!(optimize_dataset("nope", &quick_opts(), None).is_err());
+    }
+
+    /// A NaN-producing candidate (degenerate accuracy or area) used to
+    /// panic `best_within_loss`/the front sort via
+    /// `partial_cmp(..).unwrap()`.  With `total_cmp` the selection is
+    /// deterministic and a NaN design can never be picked.
+    #[test]
+    fn nan_candidates_neither_panic_nor_win_selection() {
+        let spec = generators::spec("seeds").unwrap();
+        let report = |area: f64| HwReport {
+            area_mm2: area,
+            power_mw: 1.0,
+            delay_ms: 1.0,
+            n_cells: 10,
+        };
+        let point = |accuracy: f64, area: f64| ParetoPoint {
+            accuracy,
+            est_area_mm2: area,
+            measured: report(area),
+            approx: TreeApprox { bits: vec![8], thr_int: vec![0] },
+        };
+        let run = DatasetRun {
+            spec,
+            float_accuracy: 0.9,
+            baseline_accuracy: 0.9,
+            baseline: report(2.0),
+            n_comparators: 1,
+            front: vec![
+                point(0.90, 1.0),         // legitimate best
+                point(f64::NAN, 0.1),     // NaN accuracy: filtered out
+                point(-f64::NAN, 0.1),    // negative-NaN accuracy: same
+                point(0.95, f64::NAN),    // NaN area: filtered out
+                point(0.95, -f64::NAN),   // negative NaN sorts below every
+                                          // finite area — must not win
+                point(0.95, f64::INFINITY), // non-finite area: filtered out
+            ],
+            history: Vec::new(),
+            evaluations: 0,
+            elapsed_s: 0.0,
+            engine: "native",
+        };
+        let best = run.best_within_loss(0.01).expect("finite candidate survives");
+        assert_eq!(best.measured.area_mm2, 1.0, "non-finite areas must not win min_by");
+        let gain = run.area_gain(0.01).unwrap();
+        assert!(gain.is_finite() && (gain - 2.0).abs() < 1e-12, "gain {gain}");
+
+        // A front with no finite-area design within the loss budget yields
+        // None (no design), never a garbage selection or a panic.
+        let mut all_nan = run.clone();
+        all_nan.front = vec![point(0.95, f64::NAN), point(0.95, -f64::NAN)];
+        assert!(all_nan.best_within_loss(0.01).is_none());
+        assert!(all_nan.area_gain(0.01).is_none());
     }
 }

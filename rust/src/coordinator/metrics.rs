@@ -7,10 +7,19 @@
 //! in the run report.  The coalescer records how each execution was
 //! flushed ([`FlushKind`]) and how many client requests it merged.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
 use crate::util::stats::Summary;
+
+/// Lock a mutex, recovering from poison: a thread that panicked while
+/// holding it must not cascade panics into every other client (the
+/// coordinator's mutexes guard monotonic aggregates and swappable
+/// senders, so the worst a poisoned write leaves behind is one partial
+/// sample).  Shared with `coordinator::shard` for its slot senders.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// How a batch left the coalescer and hit the backend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,7 +40,9 @@ pub enum FlushKind {
 pub struct ShardMetrics {
     /// Jobs currently queued on this shard (incremented at the client
     /// facade, decremented when the worker dequeues; approximate around
-    /// shutdown, when queued jobs are dropped).
+    /// shutdown and worker death, where a send racing the final channel
+    /// drop can leave a charge behind — the gauge saturates at 0, never
+    /// wraps).
     pub queue_depth: AtomicU64,
     /// Highest queue depth observed.
     pub queue_peak: AtomicU64,
@@ -39,6 +50,9 @@ pub struct ShardMetrics {
     pub executions: AtomicU64,
     /// Chromosomes this shard evaluated (pre-padding).
     pub chromosomes: AtomicU64,
+    /// True while this shard's worker is dead (its backend panicked);
+    /// cleared again by a successful `--respawn-shards` respawn.
+    pub down: AtomicBool,
 }
 
 /// Shared counters for the evaluation service.
@@ -60,6 +74,13 @@ pub struct Metrics {
     pub full_flushes: AtomicU64,
     /// Deadline-expiry coalescer flushes.
     pub deadline_flushes: AtomicU64,
+    /// Shard-worker deaths (a backend panic killed the worker).
+    pub shard_deaths: AtomicU64,
+    /// Requests answered with `ShardDown` because their shard's worker
+    /// died with them in flight, coalescing, or queued.
+    pub stranded_requests: AtomicU64,
+    /// Dead workers successfully respawned (`--respawn-shards`).
+    pub respawns: AtomicU64,
     /// Per-execution latency (ns).
     latency: Mutex<Summary>,
     /// Real (pre-padding) width of each executed batch.
@@ -86,8 +107,8 @@ impl Metrics {
         self.executions.fetch_add(1, Ordering::Relaxed);
         self.chromosomes.fetch_add(real as u64, Ordering::Relaxed);
         self.padded_slots.fetch_add((padded - real) as u64, Ordering::Relaxed);
-        self.latency.lock().unwrap().push(elapsed_ns as f64);
-        self.batch_width.lock().unwrap().push(real as f64);
+        lock_recover(&self.latency).push(elapsed_ns as f64);
+        lock_recover(&self.batch_width).push(real as f64);
     }
 
     /// Full record for one pool execution: global counters, the issuing
@@ -142,13 +163,36 @@ impl Metrics {
         }
     }
 
+    /// A shard's worker died: count it and flag the shard for `render`.
+    pub fn shard_died(&self, shard: usize) {
+        self.shard_deaths.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = self.shards.get(shard) {
+            s.down.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// A dead shard's worker was respawned and serves again.
+    pub fn shard_respawned(&self, shard: usize) {
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = self.shards.get(shard) {
+            s.down.store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// `n` requests were answered with `ShardDown` by a dying worker.
+    pub fn record_stranded(&self, n: u64) {
+        if n > 0 {
+            self.stranded_requests.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
     pub fn latency_summary(&self) -> Summary {
-        self.latency.lock().unwrap().clone()
+        lock_recover(&self.latency).clone()
     }
 
     /// Distribution of real (pre-padding) executed batch widths.
     pub fn batch_width_summary(&self) -> Summary {
-        self.batch_width.lock().unwrap().clone()
+        lock_recover(&self.batch_width).clone()
     }
 
     /// Fraction of executed chromosome slots that were padding.
@@ -187,13 +231,23 @@ impl Metrics {
                     s.push(' ');
                 }
                 s.push_str(&format!(
-                    "{}:execs={},qpeak={}",
+                    "{}:execs={},qpeak={}{}",
                     i,
                     sh.executions.load(Ordering::Relaxed),
                     sh.queue_peak.load(Ordering::Relaxed),
+                    if sh.down.load(Ordering::Relaxed) { ",down" } else { "" },
                 ));
             }
             s.push(']');
+        }
+        let deaths = self.shard_deaths.load(Ordering::Relaxed);
+        if deaths > 0 {
+            s.push_str(&format!(
+                " deaths={} stranded={} respawns={}",
+                deaths,
+                self.stranded_requests.load(Ordering::Relaxed),
+                self.respawns.load(Ordering::Relaxed),
+            ));
         }
         s
     }
@@ -231,6 +285,48 @@ mod tests {
         assert_eq!(m.deadline_flushes.load(Ordering::Relaxed), 1);
         assert_eq!(m.padded_slots.load(Ordering::Relaxed), 5);
         assert!(m.render().contains("shards=["));
+    }
+
+    /// A thread that panics while holding a metrics mutex poisons it; the
+    /// other clients' record/summary calls must recover, not cascade the
+    /// panic into every GA driver sharing the service.
+    #[test]
+    fn poisoned_mutexes_recover_instead_of_cascading() {
+        let m = std::sync::Arc::new(Metrics::default());
+        m.record_execution(8, 8, 1_000);
+        let m2 = std::sync::Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.latency.lock().unwrap();
+            let _guard2 = m2.batch_width.lock().unwrap();
+            panic!("poison both metrics mutexes");
+        })
+        .join();
+        // All four lock sites keep working on the poisoned mutexes.
+        m.record_execution(4, 8, 2_000);
+        assert_eq!(m.latency_summary().len(), 2);
+        assert_eq!(m.batch_width_summary().len(), 2);
+        assert!(m.render().contains("execs=2"));
+    }
+
+    #[test]
+    fn death_counters_and_render_flags() {
+        let m = Metrics::with_shards(2);
+        m.shard_died(1);
+        m.record_stranded(3);
+        assert_eq!(m.shard_deaths.load(Ordering::Relaxed), 1);
+        assert_eq!(m.stranded_requests.load(Ordering::Relaxed), 3);
+        assert!(m.shards()[1].down.load(Ordering::Relaxed));
+        let r = m.render();
+        assert!(r.contains("1:execs=0,qpeak=0,down"), "{r}");
+        assert!(r.contains("deaths=1 stranded=3 respawns=0"), "{r}");
+        m.shard_respawned(1);
+        assert!(!m.shards()[1].down.load(Ordering::Relaxed));
+        assert!(m.render().contains("respawns=1"));
+        // Zero strandings are not counted; out-of-range shards ignored.
+        m.record_stranded(0);
+        assert_eq!(m.stranded_requests.load(Ordering::Relaxed), 3);
+        m.shard_died(9);
+        assert_eq!(m.shard_deaths.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //!   from concurrent drivers into one padded execution (flushing on
 //!   width-full or a small deadline).  Tokio is not available in this
 //!   image, so the event loops are plain `std::sync::mpsc` + threads.
+//!   Workers are panic-safe: a backend panic downs only its shard (typed
+//!   [`service::ServiceError::ShardDown`] to everyone it strands),
+//!   registrations re-route to live shards, and `--respawn-shards` opts
+//!   into one replacement worker per shard.
 //! * [`service::EvalService`] — the thin client facade over the pool:
 //!   seed-era call sites unchanged, plus the [`shard::PoolOptions`] knobs
 //!   (`--workers`, `--coalesce-window-us`) and typed

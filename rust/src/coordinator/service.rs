@@ -38,6 +38,10 @@ pub enum ServiceError {
     /// The id's token matches this service but nothing is registered at
     /// its index (e.g. a handle that outlived a restart).
     UnknownProblemId { id: ProblemId, registered: usize },
+    /// The shard's worker died (its backend panicked).  Registrations
+    /// re-route to live shards, so clients heal by re-registering — this
+    /// is a stale-id error, not a terminal one.
+    ShardDown { shard: usize },
     /// The worker threads are gone (after `shutdown()` or a crash).
     ServiceDown,
     /// A worker dropped the reply channel without answering.
@@ -61,6 +65,11 @@ impl std::fmt::Display for ServiceError {
                 f,
                 "unknown {id:?}: its shard has {registered} registered problem(s)"
             ),
+            ServiceError::ShardDown { shard } => write!(
+                f,
+                "eval shard {shard} is down (its worker died); re-register to \
+                 route to a live shard"
+            ),
             ServiceError::ServiceDown => write!(f, "eval service is down"),
             ServiceError::ReplyDropped => write!(f, "eval service dropped reply"),
             ServiceError::Backend { detail } => write!(f, "{detail}"),
@@ -78,10 +87,14 @@ impl std::error::Error for ServiceError {}
 
 impl ServiceError {
     /// Stale-registration failures a client can heal by re-registering.
+    /// `ShardDown` belongs here: registration re-routes around the dead
+    /// shard, so re-register-and-retry lands the problem on a survivor.
     pub fn is_stale_id(&self) -> bool {
         matches!(
             self,
-            ServiceError::ForeignProblemId { .. } | ServiceError::UnknownProblemId { .. }
+            ServiceError::ForeignProblemId { .. }
+                | ServiceError::UnknownProblemId { .. }
+                | ServiceError::ShardDown { .. }
         )
     }
 }
@@ -143,7 +156,13 @@ impl EvalService {
 
     /// [`Self::spawn_native`] with explicit pool sizing/coalescing knobs.
     pub fn spawn_native_with(width: usize, opts: &PoolOptions) -> EvalService {
-        let pool = EvalShardPool::spawn_native(width, opts);
+        Self::from_pool(EvalShardPool::spawn_native(width, opts))
+    }
+
+    /// Wrap an already-spawned pool.  This is how the failover suites
+    /// drive panic-injection pools (`util::testbed`) through the same
+    /// facade as production spawns.
+    pub fn from_pool(pool: EvalShardPool) -> EvalService {
         let metrics = Arc::clone(&pool.metrics);
         EvalService { pool, metrics }
     }

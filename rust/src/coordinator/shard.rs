@@ -1,4 +1,5 @@
-//! Sharded evaluation pool: N backend workers + cross-driver coalescing.
+//! Sharded evaluation pool: N backend workers + cross-driver coalescing +
+//! shard failover.
 //!
 //! The seed service ran exactly one worker thread per backend, which made
 //! the evaluation service the throughput ceiling of every GA-driven search
@@ -26,21 +27,44 @@
 //!   padding waste the metrics record into useful work.  A window of 0
 //!   disables merging (legacy per-request dispatch).
 //!
+//! # Failover
+//!
+//! A backend panic must not strand a long multi-dataset run (the search
+//! spaces take thousands of evaluations per dataset).  Worker loops
+//! therefore treat a panicking backend as a *shard death*, not a process
+//! problem:
+//!
+//! * every backend call runs under `catch_unwind`; on panic the worker
+//!   marks its shard dead, answers every in-flight, coalescing, and queued
+//!   request with a typed [`ServiceError::ShardDown`] (never a silently
+//!   dropped reply channel), zeroes its queue-depth gauge, and exits;
+//! * [`EvalShardPool::register`] re-routes problems whose home shard is
+//!   dead to the rendezvous-best **live** shard (scored by a pinned FNV-1a
+//!   of name+shard, so survivors' routes never move);
+//! * clients heal transparently: `ShardDown` is a stale-id error, so the
+//!   [`XlaEngine`] re-register-and-retry path lands the problem on a live
+//!   shard and repeats the failed batch — a run loses at most the
+//!   in-flight generation, never a dataset;
+//! * with [`PoolOptions::respawn`] (CLI `--respawn-shards`) the dying
+//!   worker spawns ONE replacement from the retained backend factory;
+//!   after a second death the shard stays permanently dead.
+//!
 //! Clients normally reach this through the [`EvalService`] facade.
 //!
 //! [`EvalService`]: super::service::EvalService
+//! [`XlaEngine`]: super::service::XlaEngine
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::metrics::{FlushKind, Metrics};
+use super::metrics::{lock_recover, FlushKind, Metrics};
 use super::service::ServiceError;
 use crate::fitness::encode::Bucket;
 #[cfg(feature = "xla")]
@@ -196,7 +220,7 @@ impl ProblemId {
 static NEXT_POOL_TOKEN: AtomicU32 = AtomicU32::new(1);
 
 /// Sizing/behavior knobs for an [`EvalShardPool`] (CLI: `--workers`,
-/// `--coalesce-window-us`).
+/// `--coalesce-window-us`, `--respawn-shards`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PoolOptions {
     /// Worker (shard) count.  0 = auto: one per core for the native
@@ -211,32 +235,39 @@ pub struct PoolOptions {
     /// workers), so `workers=1` keeps the seed service's full batch-level
     /// parallelism.  Ignored by the XLA backend.
     pub engine_threads: usize,
+    /// Respawn a dead shard's worker once from the retained backend
+    /// factory (CLI `--respawn-shards`); after a second death the shard is
+    /// permanently dead.  Off by default: a panicking backend usually
+    /// deserves a postmortem before it is restarted.
+    pub respawn: bool,
 }
 
 impl Default for PoolOptions {
     fn default() -> Self {
-        PoolOptions { workers: 0, coalesce_window_us: 200, engine_threads: 0 }
+        PoolOptions {
+            workers: 0,
+            coalesce_window_us: 200,
+            engine_threads: 0,
+            respawn: false,
+        }
     }
 }
 
 impl PoolOptions {
-    /// Resolved worker count for the native backend.
+    /// Resolved worker count for the native backend, clamped to [1, 64]
+    /// on BOTH the auto and the explicit path (the documented contract;
+    /// `default_threads` also clamps today, but this method must not lean
+    /// on that).
     pub fn native_workers(&self) -> usize {
-        if self.workers == 0 {
-            pool::default_threads()
-        } else {
-            self.workers.clamp(1, 64)
-        }
+        let w = if self.workers == 0 { pool::default_threads() } else { self.workers };
+        w.clamp(1, 64)
     }
 
     /// Resolved worker count for the XLA backend (1 per device; the CPU
-    /// PJRT client exposes one).
+    /// PJRT client exposes one), clamped to [1, 64].
     pub fn xla_workers(&self) -> usize {
-        if self.workers == 0 {
-            1
-        } else {
-            self.workers.clamp(1, 64)
-        }
+        let w = if self.workers == 0 { 1 } else { self.workers };
+        w.clamp(1, 64)
     }
 }
 
@@ -253,12 +284,82 @@ enum Msg {
     Shutdown,
 }
 
+const SHARD_ALIVE: u8 = 0;
+const SHARD_DEAD: u8 = 1;
+
+/// Client-visible state of one shard: the current sender to its worker
+/// (swapped by a respawn) and a liveness flag the dying worker flips
+/// BEFORE it answers anyone with `ShardDown`, so routing decisions made
+/// after an error see the death.
+struct ShardSlot {
+    tx: Mutex<mpsc::SyncSender<Msg>>,
+    state: AtomicU8,
+    /// Latched forever by the first death (survives a respawn flipping
+    /// `state` back to alive).  Reply-channel failures on a shard that
+    /// has EVER died map to the healable `ShardDown` — an instantaneous
+    /// liveness read can miss a death that a completed respawn already
+    /// papered over — while shards with no death history keep reporting
+    /// the genuine-bug `ReplyDropped`.
+    died_once: AtomicBool,
+    /// Latched by the first death; a shard is respawned at most once.
+    respawn_attempted: AtomicBool,
+    /// Total problems ever registered on this shard, across worker
+    /// incarnations.  A respawned worker starts issuing `ProblemId`
+    /// indices from here, so an id issued before the death can never
+    /// alias a post-respawn registration (it must fail `UnknownProblemId`
+    /// and heal, not silently evaluate against the wrong problem).
+    issued: AtomicU32,
+}
+
+impl ShardSlot {
+    fn is_alive(&self) -> bool {
+        self.state.load(Ordering::Acquire) == SHARD_ALIVE
+    }
+
+    fn ever_died(&self) -> bool {
+        self.died_once.load(Ordering::Acquire)
+    }
+
+    /// Typed error for a reply channel that died without an answer.
+    /// Shards with any death history map to the healable `ShardDown` (an
+    /// instantaneous liveness read can miss a death that a completed
+    /// respawn already papered over); shards that never died report the
+    /// genuine-bug `ReplyDropped`.  Shared by `register` and `eval` so
+    /// their error typing cannot diverge.
+    fn reply_dropped_error(&self, shard: usize) -> ServiceError {
+        if self.is_alive() && !self.ever_died() {
+            ServiceError::ReplyDropped
+        } else {
+            ServiceError::ShardDown { shard }
+        }
+    }
+
+    /// Clone the current sender (never hold the slot lock across a
+    /// blocking channel send).
+    fn sender(&self) -> mpsc::SyncSender<Msg> {
+        lock_recover(&self.tx).clone()
+    }
+}
+
+/// State shared by every pool handle AND (weakly) by the workers: the
+/// slots, and the backend factory retained for respawns.
+struct PoolShared {
+    token: u32,
+    window: Option<Duration>,
+    respawn: bool,
+    metrics: Arc<Metrics>,
+    factory: Box<dyn Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync>,
+    slots: Vec<ShardSlot>,
+}
+
 /// Client handle to a pool of shard workers (cheap to clone; dropping all
-/// clones shuts the workers down after they drain pending work).
+/// clones shuts the workers down after they drain pending work — workers
+/// only hold the shared state weakly, so they cannot keep their own
+/// senders alive).
 #[derive(Clone)]
 pub struct EvalShardPool {
     token: u32,
-    txs: Vec<mpsc::SyncSender<Msg>>,
+    shared: Arc<PoolShared>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -272,7 +373,7 @@ impl EvalShardPool {
         } else {
             opts.engine_threads
         };
-        Self::spawn(workers, opts.coalesce_window_us, move |_shard| {
+        Self::spawn(workers, opts.coalesce_window_us, opts.respawn, move |_shard| {
             Ok(Box::new(NativeBackend {
                 engine: NativeEngine::with_threads(engine_threads),
                 width,
@@ -290,89 +391,155 @@ impl EvalShardPool {
         opts: &PoolOptions,
     ) -> Result<EvalShardPool> {
         let dir = artifact_dir.as_ref().to_path_buf();
-        Self::spawn(opts.xla_workers(), opts.coalesce_window_us, move |_shard| {
+        Self::spawn(opts.xla_workers(), opts.coalesce_window_us, opts.respawn, move |_shard| {
             Ok(Box::new(XlaBackend { runtime: XlaRuntime::new(dir.clone())? })
                 as Box<dyn Backend>)
         })
     }
 
-    fn spawn(
+    pub(crate) fn spawn(
         workers: usize,
         window_us: u64,
+        respawn: bool,
         factory: impl Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     ) -> Result<EvalShardPool> {
         let workers = workers.max(1);
         let window = (window_us > 0).then_some(Duration::from_micros(window_us));
         let metrics = Arc::new(Metrics::with_shards(workers));
         let token = NEXT_POOL_TOKEN.fetch_add(1, Ordering::Relaxed);
-        let factory: Arc<dyn Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync> =
-            Arc::new(factory);
-        let mut txs = Vec::with_capacity(workers);
-        let mut inits = Vec::with_capacity(workers);
-        for shard in 0..workers {
+        let mut slots = Vec::with_capacity(workers);
+        let mut rxs = Vec::with_capacity(workers);
+        for _ in 0..workers {
             let (tx, rx) = mpsc::sync_channel::<Msg>(QUEUE_DEPTH);
-            let (init_tx, init_rx) = mpsc::sync_channel::<Result<()>>(1);
-            let f = Arc::clone(&factory);
-            let m = Arc::clone(&metrics);
-            std::thread::Builder::new()
-                .name(format!("axdt-eval-shard-{shard}"))
-                .spawn(move || {
-                    let backend = match f(shard) {
-                        Ok(b) => {
-                            let _ = init_tx.send(Ok(()));
-                            b
-                        }
-                        Err(e) => {
-                            let _ = init_tx.send(Err(e));
-                            return;
-                        }
-                    };
-                    worker_loop(backend, rx, token, shard as u32, window, m);
-                })
-                .expect("spawn eval shard worker");
-            txs.push(tx);
-            inits.push(init_rx);
+            slots.push(ShardSlot {
+                tx: Mutex::new(tx),
+                state: AtomicU8::new(SHARD_ALIVE),
+                died_once: AtomicBool::new(false),
+                respawn_attempted: AtomicBool::new(false),
+                issued: AtomicU32::new(0),
+            });
+            rxs.push(rx);
         }
+        let shared = Arc::new(PoolShared {
+            token,
+            window,
+            respawn,
+            metrics: Arc::clone(&metrics),
+            factory: Box::new(factory),
+            slots,
+        });
+        let inits: Vec<_> = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(shard, rx)| spawn_worker(Arc::downgrade(&shared), shard, rx))
+            .collect();
         for init_rx in inits {
             init_rx
                 .recv()
                 .map_err(|_| anyhow!("eval shard worker died during init"))??;
         }
-        Ok(EvalShardPool { token, txs, metrics })
+        Ok(EvalShardPool { token, shared, metrics })
     }
 
-    /// Number of shard workers.
+    /// Number of shard workers (live or dead).
     pub fn workers(&self) -> usize {
-        self.txs.len()
+        self.shared.slots.len()
     }
 
-    /// Stable shard for a problem name: FNV-1a mod worker count.  Stable
-    /// within a pool by construction (the hash is pinned, not
-    /// `DefaultHasher`), so re-registration lands on the worker that
-    /// already holds the problem's device buffers.
+    /// Number of shard workers currently serving.
+    pub fn live_workers(&self) -> usize {
+        self.shared.slots.iter().filter(|s| s.is_alive()).count()
+    }
+
+    /// Whether `shard`'s worker is serving: false once its backend has
+    /// panicked, true again after a successful `--respawn-shards` respawn.
+    pub fn shard_alive(&self, shard: usize) -> bool {
+        self.shared.slots.get(shard).is_some_and(|s| s.is_alive())
+    }
+
+    /// Home shard for a problem name: FNV-1a mod worker count, ignoring
+    /// liveness.  Stable within a pool by construction (the hash is
+    /// pinned, not `DefaultHasher`), so re-registration lands on the
+    /// worker that already holds the problem's device buffers.
+    /// [`Self::register`] falls back to a live shard when the home worker
+    /// is dead.
     pub fn shard_for(&self, name: &str) -> usize {
-        (fnv1a(name.as_bytes()) % self.txs.len() as u64) as usize
+        (fnv1a(name.as_bytes()) % self.shared.slots.len() as u64) as usize
+    }
+
+    /// Routing with failover: the home shard when it is alive, else the
+    /// rendezvous-best live shard.  Survivors' routes never move (their
+    /// home shard is still alive), and every client deterministically
+    /// picks the same fallback for a given dead-set.
+    fn route_live(&self, name: &str) -> Result<usize, ServiceError> {
+        let slots = &self.shared.slots;
+        let home = self.shard_for(name);
+        if slots[home].is_alive() {
+            return Ok(home);
+        }
+        let mut best: Option<(u64, usize)> = None;
+        for (shard, slot) in slots.iter().enumerate() {
+            if !slot.is_alive() {
+                continue;
+            }
+            let score = rendezvous_score(name, shard);
+            let better = match best {
+                None => true,
+                Some((bs, _)) => score > bs,
+            };
+            if better {
+                best = Some((score, shard));
+            }
+        }
+        best.map(|(_, shard)| shard).ok_or(ServiceError::ServiceDown)
     }
 
     /// Register a problem on its shard: routes it to a bucket and uploads
-    /// statics on the owning worker.
+    /// statics on the owning worker.  A dead home shard re-routes to the
+    /// rendezvous-best live shard; a shard dying *between* routing and the
+    /// reply is retried against the survivors (bounded by the worker
+    /// count — each retry requires a fresh death).  A send failure with
+    /// the slot alive is retried too: it is either the respawn swapping
+    /// the sender mid-send (the retry reaches the new worker) or a real
+    /// shutdown (every retry fails the same way and `ServiceDown` stands).
     pub fn register(
         &self,
         problem: Arc<Problem>,
     ) -> Result<(ProblemId, Option<Bucket>), ServiceError> {
-        let shard = self.shard_for(&problem.name);
-        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        self.txs[shard]
-            .send(Msg::Register { problem, reply: reply_tx })
-            .map_err(|_| ServiceError::ServiceDown)?;
-        reply_rx.recv().map_err(|_| ServiceError::ReplyDropped)?
+        let mut last = ServiceError::ServiceDown;
+        for _attempt in 0..self.shared.slots.len() + 1 {
+            let shard = self.route_live(&problem.name)?;
+            let slot = &self.shared.slots[shard];
+            let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+            let sent = slot
+                .sender()
+                .send(Msg::Register { problem: Arc::clone(&problem), reply: reply_tx });
+            let res = match sent {
+                Err(_) if slot.is_alive() => Err(ServiceError::ServiceDown),
+                Err(_) => Err(ServiceError::ShardDown { shard }),
+                Ok(()) => match reply_rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => Err(slot.reply_dropped_error(shard)),
+                },
+            };
+            match res {
+                Err(e @ (ServiceError::ShardDown { .. } | ServiceError::ServiceDown)) => {
+                    last = e;
+                }
+                other => return other,
+            }
+        }
+        Err(last)
     }
 
-    /// Evaluate a batch (blocking until the owning shard replies).
+    /// Evaluate a batch (blocking until the owning shard replies).  A dead
+    /// shard answers immediately with [`ServiceError::ShardDown`] — a
+    /// stale-id error, so engine clients heal by re-registering (which
+    /// routes to a live shard).
     pub fn eval(
         &self,
         id: ProblemId,
-        batch: Vec<TreeApprox>,
+        mut batch: Vec<TreeApprox>,
     ) -> Result<Vec<f64>, ServiceError> {
         if batch.is_empty() {
             return Ok(Vec::new());
@@ -383,22 +550,49 @@ impl EvalShardPool {
                 registered: self.metrics.problems.load(Ordering::Relaxed) as usize,
             });
         }
-        // Ids we issued are in range; clamp defensively for forged ones.
-        let shard = (id.shard as usize).min(self.txs.len() - 1);
-        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        self.metrics.shard_enqueued(shard);
-        if self.txs[shard].send(Msg::Eval { id, batch, reply: reply_tx }).is_err() {
-            self.metrics.shard_dequeued(shard);
-            return Err(ServiceError::ServiceDown);
+        // A forged/stale id naming a shard this pool never had is rejected
+        // up front — clamping it onto the last shard would mis-charge that
+        // shard's queue-depth gauge and evaluate on a worker that cannot
+        // know the problem.
+        let shard = id.shard as usize;
+        if shard >= self.shared.slots.len() {
+            return Err(ServiceError::UnknownProblemId { id, registered: 0 });
         }
-        reply_rx.recv().map_err(|_| ServiceError::ReplyDropped)?
+        let slot = &self.shared.slots[shard];
+        // Two attempts: a send can race a respawn swapping the sender (the
+        // old channel closes while the slot is already alive again).
+        for _attempt in 0..2 {
+            if !slot.is_alive() {
+                return Err(ServiceError::ShardDown { shard });
+            }
+            let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+            self.metrics.shard_enqueued(shard);
+            match slot.sender().send(Msg::Eval { id, batch, reply: reply_tx }) {
+                Ok(()) => {
+                    return match reply_rx.recv() {
+                        Ok(res) => res,
+                        Err(_) => Err(slot.reply_dropped_error(shard)),
+                    };
+                }
+                Err(mpsc::SendError(msg)) => {
+                    self.metrics.shard_dequeued(shard);
+                    let Msg::Eval { batch: b, .. } = msg else { unreachable!() };
+                    batch = b;
+                }
+            }
+        }
+        Err(if slot.is_alive() {
+            ServiceError::ServiceDown
+        } else {
+            ServiceError::ShardDown { shard }
+        })
     }
 
     /// Ask every worker to drain pending work and exit (idempotent;
     /// dropping all handles also works).
     pub fn shutdown(&self) {
-        for tx in &self.txs {
-            let _ = tx.send(Msg::Shutdown);
+        for slot in &self.shared.slots {
+            let _ = slot.sender().send(Msg::Shutdown);
         }
     }
 }
@@ -407,6 +601,19 @@ impl EvalShardPool {
 fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Pinned rendezvous score for (problem, shard): FNV-1a over the name
+/// bytes followed by the shard index (little-endian u64).  Only consulted
+/// for failover fallback, so the primary route stays the plain
+/// `fnv1a % N` the seed pool shipped with.
+fn rendezvous_score(name: &str, shard: usize) -> u64 {
+    let mut h = fnv1a(name.as_bytes());
+    for b in (shard as u64).to_le_bytes() {
         h ^= b as u64;
         h = h.wrapping_mul(0x0100_0000_01b3);
     }
@@ -438,14 +645,78 @@ struct ProblemQueue {
     deadline: Option<Instant>,
 }
 
-fn worker_loop(
-    mut backend: Box<dyn Backend>,
-    rx: mpsc::Receiver<Msg>,
+/// Everything a worker needs besides its backend and receiver.  The pool
+/// state is held weakly: worker threads must never keep their own senders
+/// alive once every client handle is gone (drop-based shutdown).
+struct WorkerCtx {
     token: u32,
     shard: u32,
+    /// First `ProblemId` index this worker incarnation issues (the
+    /// shard's all-time registration count at spawn).  Ids below it were
+    /// issued by a dead predecessor and must read as unknown.
+    index_base: u32,
     window: Option<Duration>,
     metrics: Arc<Metrics>,
-) {
+    shared: Weak<PoolShared>,
+}
+
+/// Spawn one shard worker thread; returns the receiver for its one-shot
+/// init result (backend construction happens inside the thread).  Used by
+/// the initial pool spawn and by the respawn path.
+fn spawn_worker(
+    shared: Weak<PoolShared>,
+    shard: usize,
+    rx: mpsc::Receiver<Msg>,
+) -> mpsc::Receiver<Result<()>> {
+    let (init_tx, init_rx) = mpsc::sync_channel::<Result<()>>(1);
+    std::thread::Builder::new()
+        .name(format!("axdt-eval-shard-{shard}"))
+        .spawn(move || {
+            // Construct the backend while briefly holding a strong ref,
+            // then drop it so the loop below runs with only the Weak.
+            let started = match shared.upgrade() {
+                Some(strong) => match (strong.factory)(shard) {
+                    Ok(backend) => {
+                        let ctx = WorkerCtx {
+                            token: strong.token,
+                            shard: shard as u32,
+                            index_base: strong.slots[shard].issued.load(Ordering::Acquire),
+                            window: strong.window,
+                            metrics: Arc::clone(&strong.metrics),
+                            shared: Weak::clone(&shared),
+                        };
+                        let _ = init_tx.send(Ok(()));
+                        Some((backend, ctx))
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        None
+                    }
+                },
+                // Pool handles already gone: nothing to serve.
+                None => None,
+            };
+            if let Some((backend, ctx)) = started {
+                worker_loop(backend, rx, ctx);
+            }
+        })
+        .expect("spawn eval shard worker");
+    init_rx
+}
+
+/// Flip the shard dead — BEFORE any `ShardDown` reply goes out, so a
+/// client that reacts to the error by re-registering already sees the
+/// death and routes to a survivor.
+fn mark_shard_dead(ctx: &WorkerCtx) {
+    if let Some(shared) = ctx.shared.upgrade() {
+        let slot = &shared.slots[ctx.shard as usize];
+        slot.died_once.store(true, Ordering::Release);
+        slot.state.store(SHARD_DEAD, Ordering::Release);
+    }
+    ctx.metrics.shard_died(ctx.shard as usize);
+}
+
+fn worker_loop(mut backend: Box<dyn Backend>, rx: mpsc::Receiver<Msg>, ctx: WorkerCtx) {
     let mut problems: Vec<(Arc<Problem>, RegisteredProblem)> = Vec::new();
     let mut queues: Vec<ProblemQueue> = Vec::new();
     loop {
@@ -461,17 +732,24 @@ fn worker_loop(
             Some(deadline) => {
                 let now = Instant::now();
                 if deadline <= now {
-                    flush_expired(backend.as_mut(), &problems, &mut queues, shard, &metrics);
+                    if !flush_expired(backend.as_mut(), &problems, &mut queues, &ctx) {
+                        return die(rx, &mut queues, &ctx, RespawnPolicy::IfConfigured);
+                    }
                     continue;
                 }
                 match rx.recv_timeout(deadline - now) {
                     Ok(m) => m,
                     Err(mpsc::RecvTimeoutError::Timeout) => {
-                        flush_expired(backend.as_mut(), &problems, &mut queues, shard, &metrics);
+                        if !flush_expired(backend.as_mut(), &problems, &mut queues, &ctx) {
+                            return die(rx, &mut queues, &ctx, RespawnPolicy::IfConfigured);
+                        }
                         continue;
                     }
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        flush_all(backend.as_mut(), &problems, &mut queues, shard, &metrics);
+                        // Every pool handle is gone: no respawn either.
+                        if !flush_all(backend.as_mut(), &problems, &mut queues, &ctx) {
+                            return die(rx, &mut queues, &ctx, RespawnPolicy::Never);
+                        }
                         return;
                     }
                 }
@@ -480,41 +758,72 @@ fn worker_loop(
         match msg {
             Msg::Shutdown => {
                 // In-flight jobs still get their replies: drain the
-                // coalescer before exiting.
-                flush_all(backend.as_mut(), &problems, &mut queues, shard, &metrics);
+                // coalescer before exiting.  A panic during THIS drain
+                // still answers everyone with `ShardDown`, but must not
+                // respawn a worker for a pool that was told to stop.
+                if !flush_all(backend.as_mut(), &problems, &mut queues, &ctx) {
+                    return die(rx, &mut queues, &ctx, RespawnPolicy::Never);
+                }
                 return;
             }
             Msg::Register { problem, reply } => {
-                let res = match backend.register(&problem) {
-                    Ok(reg) => {
-                        let id = ProblemId {
-                            service: token,
-                            shard,
-                            index: problems.len() as u32,
-                        };
+                match catch_unwind(AssertUnwindSafe(|| backend.register(&problem))) {
+                    Ok(Ok(reg)) => {
+                        let index = ctx.index_base + problems.len() as u32;
+                        let id = ProblemId { service: ctx.token, shard: ctx.shard, index };
                         let bucket = reg.bucket().cloned();
                         problems.push((problem, reg));
                         queues.push(ProblemQueue::default());
-                        metrics.problems.fetch_add(1, Ordering::Relaxed);
-                        Ok((id, bucket))
+                        // Advance the shard's all-time counter so a future
+                        // respawn starts past this id (no aliasing).
+                        if let Some(shared) = ctx.shared.upgrade() {
+                            shared.slots[ctx.shard as usize]
+                                .issued
+                                .store(index + 1, Ordering::Release);
+                        }
+                        ctx.metrics.problems.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply.send(Ok((id, bucket)));
                     }
-                    Err(e) => Err(ServiceError::Backend { detail: format!("{e:#}") }),
-                };
-                let _ = reply.send(res);
+                    Ok(Err(e)) => {
+                        let _ = reply
+                            .send(Err(ServiceError::Backend { detail: format!("{e:#}") }));
+                    }
+                    Err(_) => {
+                        // Backend panicked during registration: the worker
+                        // cannot continue on a possibly-broken backend.
+                        mark_shard_dead(&ctx);
+                        let _ = reply.send(Err(ServiceError::ShardDown {
+                            shard: ctx.shard as usize,
+                        }));
+                        ctx.metrics.record_stranded(1);
+                        return die(rx, &mut queues, &ctx, RespawnPolicy::IfConfigured);
+                    }
+                }
             }
             Msg::Eval { id, batch, reply } => {
-                metrics.shard_dequeued(shard as usize);
-                let idx = id.index as usize;
+                ctx.metrics.shard_dequeued(ctx.shard as usize);
                 // A stale or foreign id must not kill the worker thread
                 // (which would wedge every other client) NOR silently
-                // evaluate against the wrong problem.
-                if id.service != token || id.shard != shard || idx >= problems.len() {
-                    let _ = reply.send(Err(ServiceError::UnknownProblemId {
-                        id,
-                        registered: problems.len(),
-                    }));
-                    continue;
-                }
+                // evaluate against the wrong problem — including ids the
+                // shard's PREVIOUS incarnation issued: indices restart
+                // behind `index_base` after a respawn, so those read as
+                // unknown here and heal via re-registration.
+                let idx = match id.index.checked_sub(ctx.index_base) {
+                    Some(i)
+                        if id.service == ctx.token
+                            && id.shard == ctx.shard
+                            && (i as usize) < problems.len() =>
+                    {
+                        i as usize
+                    }
+                    _ => {
+                        let _ = reply.send(Err(ServiceError::UnknownProblemId {
+                            id,
+                            registered: problems.len(),
+                        }));
+                        continue;
+                    }
+                };
                 if batch.is_empty() {
                     let _ = reply.send(Ok(Vec::new()));
                     continue;
@@ -529,30 +838,32 @@ fn worker_loop(
                 queues[idx].queue.push_back(QueuedSlice { req, items: batch, next: 0 });
                 let width = problems[idx].1.width().max(1);
                 while queues[idx].pending >= width {
-                    execute_chunk(
+                    if !execute_chunk(
                         backend.as_mut(),
                         &problems[idx],
                         &mut queues[idx],
                         width,
                         FlushKind::Full,
-                        shard,
-                        &metrics,
-                    );
+                        &ctx,
+                    ) {
+                        return die(rx, &mut queues, &ctx, RespawnPolicy::IfConfigured);
+                    }
                 }
-                match window {
+                match ctx.window {
                     None => {
                         // Coalescing off: dispatch the tail immediately.
                         let take = queues[idx].pending;
-                        if take > 0 {
-                            execute_chunk(
+                        if take > 0
+                            && !execute_chunk(
                                 backend.as_mut(),
                                 &problems[idx],
                                 &mut queues[idx],
                                 take,
                                 FlushKind::Immediate,
-                                shard,
-                                &metrics,
-                            );
+                                &ctx,
+                            )
+                        {
+                            return die(rx, &mut queues, &ctx, RespawnPolicy::IfConfigured);
                         }
                     }
                     Some(w) => {
@@ -566,65 +877,168 @@ fn worker_loop(
     }
 }
 
+/// Whether a dying worker may spawn its one replacement.  `Never` is for
+/// deaths during a shutdown/disconnect drain: the pool is stopping, and a
+/// replacement would idle forever waiting for work that cannot come.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum RespawnPolicy {
+    IfConfigured,
+    Never,
+}
+
+/// Terminal path of a worker whose backend panicked: answer every request
+/// still queued in the coalescer or sitting in the channel with a typed
+/// [`ServiceError::ShardDown`] (never a silently dropped reply channel),
+/// return the queue-depth gauge to zero, and — when the pool opted in and
+/// `policy` allows — spawn ONE replacement worker from the retained
+/// factory.  A respawned worker starts with no registered problems and
+/// issues ids from the shard's all-time `issued` counter; stale ids heal
+/// through the clients' re-register path.
+fn die(
+    rx: mpsc::Receiver<Msg>,
+    queues: &mut [ProblemQueue],
+    ctx: &WorkerCtx,
+    policy: RespawnPolicy,
+) {
+    let shard = ctx.shard as usize;
+    let down = ServiceError::ShardDown { shard };
+    let mut stranded = 0u64;
+    for q in queues.iter_mut() {
+        for slice in q.queue.drain(..) {
+            let mut r = slice.req.borrow_mut();
+            // Contributors to the panicked chunk were already answered
+            // (remaining forced to 0); everyone else is stranded here.
+            if r.remaining > 0 {
+                r.remaining = 0;
+                let _ = r.reply.send(Err(down.clone()));
+                stranded += 1;
+            }
+        }
+        q.pending = 0;
+        q.deadline = None;
+    }
+    let mut saw_shutdown = false;
+    while let Ok(msg) = rx.try_recv() {
+        match msg {
+            Msg::Eval { reply, .. } => {
+                ctx.metrics.shard_dequeued(shard);
+                let _ = reply.send(Err(down.clone()));
+                stranded += 1;
+            }
+            Msg::Register { reply, .. } => {
+                let _ = reply.send(Err(down.clone()));
+                stranded += 1;
+            }
+            // A Shutdown queued behind the panicking job means the pool
+            // was already told to stop — honoring it here prevents a
+            // replacement worker that would never receive it and would
+            // idle until the last handle drops.
+            Msg::Shutdown => saw_shutdown = true,
+        }
+    }
+    ctx.metrics.record_stranded(stranded);
+    // Close the channel BEFORE any respawn revives the shard: a racing
+    // sender then fails while the slot still reads dead, which the facade
+    // maps to `ShardDown` rather than a bogus `ServiceDown`.
+    drop(rx);
+    if policy == RespawnPolicy::Never || saw_shutdown {
+        return;
+    }
+    let Some(shared) = ctx.shared.upgrade() else { return };
+    let slot = &shared.slots[shard];
+    if !shared.respawn || slot.respawn_attempted.swap(true, Ordering::AcqRel) {
+        return;
+    }
+    let (tx, new_rx) = mpsc::sync_channel::<Msg>(QUEUE_DEPTH);
+    let init_rx = spawn_worker(Weak::clone(&ctx.shared), shard, new_rx);
+    match init_rx.recv() {
+        Ok(Ok(())) => {
+            // Install the sender before flipping alive: anyone who sees
+            // the shard live must reach the NEW worker.
+            *lock_recover(&slot.tx) = tx;
+            slot.state.store(SHARD_ALIVE, Ordering::Release);
+            ctx.metrics.shard_respawned(shard);
+        }
+        Ok(Err(e)) => {
+            eprintln!("[axdt] shard {shard} respawn failed: {e:#} (shard stays dead)");
+        }
+        Err(_) => {
+            eprintln!(
+                "[axdt] shard {shard} respawn worker died during init (shard stays dead)"
+            );
+        }
+    }
+}
+
+/// Flush every problem whose coalescing deadline has expired.  Returns
+/// false when the backend panicked (the worker must die).
 fn flush_expired(
     backend: &mut dyn Backend,
     problems: &[(Arc<Problem>, RegisteredProblem)],
     queues: &mut [ProblemQueue],
-    shard: u32,
-    metrics: &Metrics,
-) {
+    ctx: &WorkerCtx,
+) -> bool {
     let now = Instant::now();
     for idx in 0..queues.len() {
         if queues[idx].deadline.is_some_and(|d| d <= now) {
             let take = queues[idx].pending;
-            execute_chunk(
+            if !execute_chunk(
                 backend,
                 &problems[idx],
                 &mut queues[idx],
                 take,
                 FlushKind::Deadline,
-                shard,
-                metrics,
-            );
+                ctx,
+            ) {
+                return false;
+            }
         }
     }
+    true
 }
 
+/// Drain every pending chunk (shutdown/disconnect).  Returns false when
+/// the backend panicked mid-drain.
 fn flush_all(
     backend: &mut dyn Backend,
     problems: &[(Arc<Problem>, RegisteredProblem)],
     queues: &mut [ProblemQueue],
-    shard: u32,
-    metrics: &Metrics,
-) {
+    ctx: &WorkerCtx,
+) -> bool {
     for idx in 0..queues.len() {
         while queues[idx].pending > 0 {
             let take = queues[idx].pending;
-            execute_chunk(
+            if !execute_chunk(
                 backend,
                 &problems[idx],
                 &mut queues[idx],
                 take,
                 FlushKind::Drain,
-                shard,
-                metrics,
-            );
+                ctx,
+            ) {
+                return false;
+            }
         }
     }
+    true
 }
 
 /// Pop up to `take` queued chromosomes for one problem, execute them as a
 /// single backend batch, and distribute results (or the failure) to every
-/// contributing request.
+/// contributing request.  Returns false when the backend PANICKED (as
+/// opposed to returning an error): contributors have been answered with
+/// [`ServiceError::ShardDown`], the shard is marked dead, and the caller
+/// must stop and drain via [`die`].
 fn execute_chunk(
     backend: &mut dyn Backend,
     problem_entry: &(Arc<Problem>, RegisteredProblem),
     pq: &mut ProblemQueue,
     take: usize,
     kind: FlushKind,
-    shard: u32,
-    metrics: &Metrics,
-) {
+    ctx: &WorkerCtx,
+) -> bool {
+    let shard = ctx.shard as usize;
+    let metrics = &ctx.metrics;
     let (problem, reg) = problem_entry;
     let width = reg.width().max(1);
     // Never hand the backend more than one artifact width at once, even if
@@ -632,7 +1046,7 @@ fn execute_chunk(
     let take = take.min(pq.pending).min(width);
     if take == 0 {
         pq.deadline = None;
-        return;
+        return true;
     }
     let mut chunk: Vec<TreeApprox> = Vec::with_capacity(take);
     let mut contributors: Vec<(Rc<RefCell<RequestState>>, usize)> = Vec::new();
@@ -651,23 +1065,41 @@ fn execute_chunk(
         pq.deadline = None;
     }
     let t0 = Instant::now();
-    let res = backend.eval(reg, problem.as_ref(), &chunk).and_then(|accs| {
-        // A short result must fail the requests, not panic the worker
-        // (which would wedge every client of this shard).
-        if accs.len() == chunk.len() {
-            Ok(accs)
-        } else {
-            Err(anyhow!(
-                "backend returned {} accuracies for a chunk of {}",
-                accs.len(),
-                chunk.len()
-            ))
+    let outcome = catch_unwind(AssertUnwindSafe(|| backend.eval(reg, problem.as_ref(), &chunk)));
+    let res = match outcome {
+        Ok(r) => r.and_then(|accs| {
+            // A short result must fail the requests, not panic the worker
+            // (which would wedge every client of this shard).
+            if accs.len() == chunk.len() {
+                Ok(accs)
+            } else {
+                Err(anyhow!(
+                    "backend returned {} accuracies for a chunk of {}",
+                    accs.len(),
+                    chunk.len()
+                ))
+            }
+        }),
+        Err(_) => {
+            // The backend panicked mid-eval and may be in an arbitrary
+            // broken state: this shard is dead.  Mark it first (so healing
+            // clients route elsewhere), then answer every contributor with
+            // the typed error instead of dropping their reply channels.
+            mark_shard_dead(ctx);
+            let downed = ServiceError::ShardDown { shard };
+            for (req, _) in &contributors {
+                let mut r = req.borrow_mut();
+                r.remaining = 0;
+                let _ = r.reply.send(Err(downed.clone()));
+            }
+            metrics.record_stranded(contributors.len() as u64);
+            return false;
         }
-    });
+    };
     match res {
         Ok(accs) => {
             metrics.record_shard_execution(
-                shard as usize,
+                shard,
                 chunk.len(),
                 width.max(chunk.len()),
                 t0.elapsed().as_nanos() as u64,
@@ -718,6 +1150,7 @@ fn execute_chunk(
             }
         }
     }
+    true
 }
 
 #[cfg(test)]
@@ -763,13 +1196,17 @@ mod tests {
         assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a(b"seeds"), fnv1a(b"seeds"));
         assert_ne!(fnv1a(b"seeds"), fnv1a(b"cardio"));
+        // The rendezvous fallback score is pinned the same way: the
+        // continuation of the name hash over the shard index bytes.
+        assert_eq!(rendezvous_score("seeds", 3), rendezvous_score("seeds", 3));
+        assert_ne!(rendezvous_score("seeds", 0), rendezvous_score("seeds", 1));
     }
 
     #[test]
     fn uncoalesced_chunking_matches_legacy_split() {
         let chunks = Arc::new(Mutex::new(Vec::new()));
         let c = Arc::clone(&chunks);
-        let pool = EvalShardPool::spawn(1, 0, move |_| {
+        let pool = EvalShardPool::spawn(1, 0, false, move |_| {
             Ok(Box::new(CountingBackend { width: 8, chunks: Arc::clone(&c) })
                 as Box<dyn Backend>)
         })
@@ -817,7 +1254,7 @@ mod tests {
 
         let fail = Arc::new(AtomicBool::new(true));
         let f = Arc::clone(&fail);
-        let pool = EvalShardPool::spawn(1, 0, move |_| {
+        let pool = EvalShardPool::spawn(1, 0, false, move |_| {
             Ok(Box::new(FlakyBackend { width: 8, fail: Arc::clone(&f) })
                 as Box<dyn Backend>)
         })
@@ -827,21 +1264,146 @@ mod tests {
         let batch = vec![TreeApprox::exact(&p.tree); 3];
         let err = pool.eval(id, batch.clone()).unwrap_err();
         assert!(format!("{err}").contains("injected backend failure"), "{err}");
-        // The worker survives and serves the next request.
+        // An error `Result` is NOT a death: the worker survives and the
+        // shard stays live.
+        assert!(pool.shard_alive(id.shard()));
         fail.store(false, Ordering::Relaxed);
         assert_eq!(pool.eval(id, batch).unwrap(), vec![0.5; 3]);
+        pool.shutdown();
+    }
+
+    /// A panicking backend kills only its shard: in-flight work gets a
+    /// typed `ShardDown`, survivors keep serving, and registration falls
+    /// back to a live shard (rendezvous, not a clamp).
+    #[test]
+    fn backend_panic_downs_shard_and_registration_falls_back() {
+        struct PanicOnEval;
+        impl Backend for PanicOnEval {
+            fn register(&mut self, _p: &Arc<Problem>) -> Result<RegisteredProblem> {
+                Ok(RegisteredProblem::Native { width: 8 })
+            }
+            fn eval(
+                &mut self,
+                _reg: &RegisteredProblem,
+                _p: &Problem,
+                _chunk: &[TreeApprox],
+            ) -> Result<Vec<f64>> {
+                panic!("injected backend panic");
+            }
+            fn name(&self) -> &'static str {
+                "panic-on-eval"
+            }
+        }
+        struct Ok25 {
+            width: usize,
+        }
+        impl Backend for Ok25 {
+            fn register(&mut self, _p: &Arc<Problem>) -> Result<RegisteredProblem> {
+                Ok(RegisteredProblem::Native { width: self.width })
+            }
+            fn eval(
+                &mut self,
+                _reg: &RegisteredProblem,
+                _p: &Problem,
+                chunk: &[TreeApprox],
+            ) -> Result<Vec<f64>> {
+                Ok(vec![0.25; chunk.len()])
+            }
+            fn name(&self) -> &'static str {
+                "ok25"
+            }
+        }
+
+        let p = seeds();
+        let victim = {
+            // Find the problem's home shard on a 2-worker pool first.
+            let probe = EvalShardPool::spawn(2, 0, false, |_| {
+                Ok(Box::new(Ok25 { width: 8 }) as Box<dyn Backend>)
+            })
+            .unwrap();
+            let s = probe.shard_for(&p.name);
+            probe.shutdown();
+            s
+        };
+        let pool = EvalShardPool::spawn(2, 0, false, move |shard| {
+            if shard == victim {
+                Ok(Box::new(PanicOnEval) as Box<dyn Backend>)
+            } else {
+                Ok(Box::new(Ok25 { width: 8 }) as Box<dyn Backend>)
+            }
+        })
+        .unwrap();
+
+        let (id, _) = pool.register(Arc::clone(&p)).unwrap();
+        assert_eq!(id.shard(), victim);
+        let batch = vec![TreeApprox::exact(&p.tree); 3];
+        let err = pool.eval(id, batch.clone()).unwrap_err();
+        assert!(
+            matches!(err, ServiceError::ShardDown { shard } if shard == victim),
+            "{err:?}"
+        );
+        assert!(err.is_stale_id(), "clients must heal ShardDown by re-registering");
+        assert!(!pool.shard_alive(victim));
+        assert_eq!(pool.live_workers(), 1);
+
+        // Later evals against the dead shard fail fast and typed.
+        let err = pool.eval(id, batch.clone()).unwrap_err();
+        assert!(matches!(err, ServiceError::ShardDown { .. }), "{err:?}");
+
+        // Registration re-routes to the survivor; evals work there.
+        let (id2, _) = pool.register(Arc::clone(&p)).unwrap();
+        assert_ne!(id2.shard(), victim);
+        assert_eq!(pool.eval(id2, batch).unwrap(), vec![0.25; 3]);
+
+        // The dead shard's gauge went back to zero; the death is counted.
+        assert_eq!(
+            pool.metrics.shards()[victim].queue_depth.load(Ordering::Relaxed),
+            0
+        );
+        assert_eq!(pool.metrics.shard_deaths.load(Ordering::Relaxed), 1);
+        pool.shutdown();
+    }
+
+    /// A forged id naming a shard the pool never had is rejected before it
+    /// can charge any queue-depth gauge (it used to be clamped onto the
+    /// last shard).
+    #[test]
+    fn out_of_range_shard_is_rejected_not_clamped() {
+        let chunks = Arc::new(Mutex::new(Vec::new()));
+        let c = Arc::clone(&chunks);
+        let pool = EvalShardPool::spawn(2, 0, false, move |_| {
+            Ok(Box::new(CountingBackend { width: 8, chunks: Arc::clone(&c) })
+                as Box<dyn Backend>)
+        })
+        .unwrap();
+        let p = seeds();
+        let (id, _) = pool.register(Arc::clone(&p)).unwrap();
+        let forged = ProblemId { shard: 7, ..id };
+        let err = pool.eval(forged, vec![TreeApprox::exact(&p.tree); 2]).unwrap_err();
+        assert!(matches!(err, ServiceError::UnknownProblemId { .. }), "{err:?}");
+        assert!(err.is_stale_id());
+        for s in pool.metrics.shards() {
+            assert_eq!(s.queue_depth.load(Ordering::Relaxed), 0);
+            assert_eq!(s.queue_peak.load(Ordering::Relaxed), 0, "no gauge was charged");
+        }
+        // The real id still works.
+        assert_eq!(pool.eval(id, vec![TreeApprox::exact(&p.tree); 2]).unwrap().len(), 2);
         pool.shutdown();
     }
 
     #[test]
     fn pool_options_resolve_worker_counts() {
         let auto = PoolOptions::default();
-        assert!(auto.native_workers() >= 1);
+        // Auto path: whatever default_threads() says, the documented
+        // [1, 64] clamp holds.
+        assert!((1..=64).contains(&auto.native_workers()));
         assert_eq!(auto.xla_workers(), 1);
+        assert!(!auto.respawn, "respawn is opt-in");
         let fixed = PoolOptions { workers: 4, ..PoolOptions::default() };
         assert_eq!(fixed.native_workers(), 4);
         assert_eq!(fixed.xla_workers(), 4);
         let huge = PoolOptions { workers: 1000, ..PoolOptions::default() };
         assert_eq!(huge.native_workers(), 64);
+        assert_eq!(huge.xla_workers(), 64);
     }
 }

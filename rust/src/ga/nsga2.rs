@@ -87,7 +87,9 @@ impl NsgaResult {
         let fronts = fast_non_dominated_sort(&objs);
         let mut front: Vec<ScoredIndividual> =
             fronts[0].iter().map(|&i| self.population[i].clone()).collect();
-        front.sort_by(|a, b| a.objectives[0].partial_cmp(&b.objectives[0]).unwrap());
+        // total_cmp: a NaN objective (degenerate candidate) must not
+        // panic the sort after the whole search already ran.
+        front.sort_by(|a, b| a.objectives[0].total_cmp(&b.objectives[0]));
         front.dedup_by(|a, b| a.objectives == b.objectives);
         front
     }
@@ -221,9 +223,7 @@ pub fn crowding_distance(objs: &[[f64; 2]], front: &[usize]) -> Vec<f64> {
     }
     for obj in 0..2 {
         let mut order: Vec<usize> = (0..k).collect();
-        order.sort_by(|&a, &b| {
-            objs[front[a]][obj].partial_cmp(&objs[front[b]][obj]).unwrap()
-        });
+        order.sort_by(|&a, &b| objs[front[a]][obj].total_cmp(&objs[front[b]][obj]));
         let lo = objs[front[order[0]]][obj];
         let hi = objs[front[order[k - 1]]][obj];
         dist[order[0]] = f64::INFINITY;
@@ -281,7 +281,7 @@ pub fn environmental_selection(objs: &[[f64; 2]], target: usize) -> Vec<usize> {
             // Partial: take the most crowded-distant members.
             let d = crowding_distance(objs, &front);
             let mut order: Vec<usize> = (0..front.len()).collect();
-            order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+            order.sort_by(|&a, &b| d[b].total_cmp(&d[a]));
             for &w in order.iter().take(target - selected.len()) {
                 selected.push(front[w]);
             }

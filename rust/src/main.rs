@@ -33,6 +33,7 @@ const OPTS: &[OptSpec] = &[
     opt("threads", "worker threads (default: cores)"),
     opt("workers", "eval-service shard workers (0 = auto, max 64)"),
     opt("coalesce-window-us", "eval coalescing window in us (0 = off, default 200)"),
+    flag("respawn-shards", "respawn a dead eval-shard worker once before giving up on it"),
     opt("loss", "Table II accuracy-loss budget (default 0.01)"),
     opt("out", "output directory for JSON results (default results)"),
     opt("dataset", "single dataset (export-rtl)"),

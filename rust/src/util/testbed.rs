@@ -6,12 +6,22 @@
 //! driver-name list encodes a routing contract the shard-pool tests and
 //! `bench_shard` both depend on: the pinned FNV-1a route of these names
 //! spreads them 2-per-shard over a 4-worker pool.
+//!
+//! The module also hosts the **panic-injection backend** behind
+//! [`spawn_killable_native`]: the only way an out-of-crate failover test
+//! (or bench) can kill a specific shard worker mid-run, since the
+//! `Backend` trait is crate-private by design.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use anyhow::Result;
+
+use crate::coordinator::shard::{Backend, EvalShardPool, PoolOptions, RegisteredProblem};
 use crate::data::generators;
 use crate::dt::{train, TrainConfig};
-use crate::fitness::Problem;
+use crate::fitness::native::NativeEngine;
+use crate::fitness::{AccuracyEngine, Problem};
 use crate::hw::synth::TreeApprox;
 use crate::hw::{AreaLut, EgtLibrary};
 use crate::quant;
@@ -36,6 +46,70 @@ pub fn named_problem(name: &str) -> Arc<Problem> {
         &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 },
     );
     Arc::new(Problem::new(name, tree, &test_d, &lut, &lib, 5))
+}
+
+/// Native backend that panics mid-eval when `kill` names its shard,
+/// simulating a worker crash for the failover suites.
+struct KillableBackend {
+    engine: NativeEngine,
+    width: usize,
+    shard: usize,
+    kill: Arc<AtomicU64>,
+}
+
+impl Backend for KillableBackend {
+    fn register(&mut self, _problem: &Arc<Problem>) -> Result<RegisteredProblem> {
+        Ok(RegisteredProblem::Native { width: self.width })
+    }
+
+    fn eval(
+        &mut self,
+        _reg: &RegisteredProblem,
+        problem: &Problem,
+        chunk: &[TreeApprox],
+    ) -> Result<Vec<f64>> {
+        // One-shot: clear the flag before panicking so a `--respawn-shards`
+        // replacement worker is not immediately re-killed.
+        if self
+            .kill
+            .compare_exchange(
+                self.shard as u64 + 1,
+                0,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+            .is_ok()
+        {
+            panic!("injected worker panic on shard {}", self.shard);
+        }
+        self.engine.batch_accuracy(problem, chunk)
+    }
+
+    fn name(&self) -> &'static str {
+        "killable-native"
+    }
+}
+
+/// Spawn a native pool whose workers can be killed one at a time: store
+/// `shard + 1` into `kill` and the next eval dispatched to that shard
+/// panics its backend (0 = kill nothing).  Everything else matches
+/// [`EvalShardPool::spawn_native`] with `engine_threads` forced to 1, so
+/// failover timing is not masked by intra-batch parallelism.
+pub fn spawn_killable_native(
+    width: usize,
+    opts: &PoolOptions,
+    kill: Arc<AtomicU64>,
+) -> EvalShardPool {
+    let workers = opts.native_workers();
+    EvalShardPool::spawn(workers, opts.coalesce_window_us, opts.respawn, move |shard| {
+        Ok(Box::new(KillableBackend {
+            engine: NativeEngine::with_threads(1),
+            width,
+            shard,
+            kill: Arc::clone(&kill),
+        }) as Box<dyn Backend>)
+    })
+    .expect("killable native backend construction cannot fail")
 }
 
 /// `count` random mixed-precision approximations of `p`'s tree.

@@ -1,0 +1,289 @@
+//! Failover contracts of the sharded eval pool, via the public API with
+//! the panic-injection backend from `util::testbed` (no artifacts
+//! required):
+//!
+//! * a backend panic downs ONLY its shard: the in-flight request gets a
+//!   typed [`ServiceError::ShardDown`] (no hang, no panic escape), the
+//!   queue-depth gauge returns to zero, and survivors keep serving;
+//! * re-registration re-routes a dead home shard to a live shard, and the
+//!   `XlaEngine` stale-id heal path does this transparently mid-run;
+//! * a full multi-dataset optimization completes — bit-identical to the
+//!   direct native engine — even when its dataset's shard is killed
+//!   mid-run (the acceptance scenario: lose at most the in-flight batch,
+//!   never a dataset);
+//! * `--respawn-shards` brings a dead worker back exactly once.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use axdt::coordinator::{
+    optimize_dataset, EngineChoice, EvalService, PoolOptions, RunOptions, ServiceError,
+    XlaEngine,
+};
+use axdt::fitness::native::NativeEngine;
+use axdt::fitness::AccuracyEngine;
+use axdt::util::testbed::{named_problem, random_batch, spawn_killable_native, DRIVER_NAMES};
+
+fn killable_service(workers: usize, respawn: bool, kill: &Arc<AtomicU64>) -> EvalService {
+    let pool = spawn_killable_native(
+        8,
+        &PoolOptions {
+            workers,
+            coalesce_window_us: 0,
+            engine_threads: 1,
+            respawn,
+        },
+        Arc::clone(kill),
+    );
+    EvalService::from_pool(pool)
+}
+
+/// Acceptance scenario, service-level half: kill one worker of a 4-shard
+/// pool mid-run and observe typed `ShardDown`, surviving shards serving,
+/// re-registration landing on a live shard, and the gauge back at zero.
+#[test]
+fn killing_one_worker_of_four_strands_nothing() {
+    let kill = Arc::new(AtomicU64::new(0));
+    let svc = killable_service(4, false, &kill);
+    assert_eq!(svc.workers(), 4);
+
+    // 8 problems spread 2-per-shard over the 4 workers (pinned routing).
+    let problems: Vec<_> = DRIVER_NAMES
+        .iter()
+        .map(|name| {
+            let p = named_problem(name);
+            let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+            (p, id)
+        })
+        .collect();
+
+    let (victim_p, victim_id) = &problems[0];
+    let victim_shard = victim_id.shard();
+
+    // Arm the kill and hit the victim shard: the in-flight request must
+    // get a typed ShardDown, not a hang or a propagated panic.
+    kill.store(victim_shard as u64 + 1, Ordering::SeqCst);
+    let err = svc
+        .eval_typed(*victim_id, random_batch(victim_p, 5, 1))
+        .unwrap_err();
+    assert!(
+        matches!(err, ServiceError::ShardDown { shard } if shard == victim_shard),
+        "{err:?}"
+    );
+    assert!(err.is_stale_id(), "ShardDown must be healable by re-registering");
+    assert!(format!("{err}").contains("down"), "{err}");
+    assert!(!svc.pool().shard_alive(victim_shard));
+    assert_eq!(svc.pool().live_workers(), 3);
+
+    // Survivors keep serving, bit-identical to the direct engine.
+    let mut survivors = 0;
+    for (p, id) in &problems {
+        if id.shard() == victim_shard {
+            // The dead shard now fails fast and typed, instead of leaving
+            // clients blocked on a dropped reply channel.
+            let e = svc.eval_typed(*id, random_batch(p, 3, 2)).unwrap_err();
+            assert!(matches!(e, ServiceError::ShardDown { .. }), "{e:?}");
+        } else {
+            let batch = random_batch(p, 5, 3);
+            let got = svc.eval_typed(*id, batch.clone()).unwrap();
+            let mut direct = NativeEngine::default();
+            assert_eq!(got, direct.batch_accuracy(p, &batch).unwrap());
+            survivors += 1;
+        }
+    }
+    assert_eq!(survivors, 6, "2 problems on each of the 3 surviving shards");
+
+    // Re-registration re-routes the dead home shard to a live one.
+    let (new_id, _) = svc.register(Arc::clone(victim_p)).unwrap();
+    assert_ne!(new_id.shard(), victim_shard);
+    assert!(svc.pool().shard_alive(new_id.shard()));
+    let batch = random_batch(victim_p, 5, 4);
+    let got = svc.eval_typed(new_id, batch.clone()).unwrap();
+    let mut direct = NativeEngine::default();
+    assert_eq!(got, direct.batch_accuracy(victim_p, &batch).unwrap());
+
+    // The dead shard's queue gauge returned to zero and the death is in
+    // the metrics (and the rendered report).
+    let m = &svc.metrics;
+    assert_eq!(m.shards()[victim_shard].queue_depth.load(Ordering::Relaxed), 0);
+    assert_eq!(m.shard_deaths.load(Ordering::Relaxed), 1);
+    assert!(m.shards()[victim_shard].down.load(Ordering::Relaxed));
+    let render = m.render();
+    assert!(render.contains("deaths=1"), "{render}");
+    svc.shutdown();
+}
+
+/// A request QUEUED behind the one that kills the shard must also get the
+/// typed error (not a dropped channel), and both charges must come off
+/// the queue-depth gauge.
+#[test]
+fn queued_requests_get_typed_shard_down() {
+    let kill = Arc::new(AtomicU64::new(0));
+    // Single worker, deliberately huge coalescing window: the first
+    // sub-width batch waits, the second completes the width and triggers
+    // the panic while both are in the coalescer (only the width-full
+    // flush can fire within the test's lifetime, even on a slow machine).
+    let pool = spawn_killable_native(
+        8,
+        &PoolOptions {
+            workers: 1,
+            coalesce_window_us: 30_000_000,
+            engine_threads: 1,
+            respawn: false,
+        },
+        Arc::clone(&kill),
+    );
+    let svc = EvalService::from_pool(pool);
+    let p = named_problem("seeds");
+    let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+    kill.store(1, Ordering::SeqCst); // shard 0
+
+    let first = std::thread::spawn({
+        let svc = svc.clone();
+        let p = Arc::clone(&p);
+        move || svc.eval_typed(id, random_batch(&p, 5, 7))
+    });
+    // Let the first batch reach the coalescer and arm its window.
+    std::thread::sleep(Duration::from_millis(100));
+    let second = svc.eval_typed(id, random_batch(&p, 4, 8));
+
+    let first = first.join().unwrap();
+    for res in [first, second] {
+        let err = res.unwrap_err();
+        assert!(matches!(err, ServiceError::ShardDown { shard: 0 }), "{err:?}");
+    }
+    assert_eq!(svc.metrics.shards()[0].queue_depth.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.metrics.stranded_requests.load(Ordering::Relaxed), 2);
+    svc.shutdown();
+}
+
+/// The engine facade heals a mid-run shard death transparently: the
+/// failed batch is re-registered onto a live shard and retried, so the
+/// caller sees correct results, not an error.
+#[test]
+fn xla_engine_heals_over_a_dead_shard() {
+    let kill = Arc::new(AtomicU64::new(0));
+    let svc = killable_service(4, false, &kill);
+    let p = named_problem("drv0");
+    let mut engine = XlaEngine::register(&svc, Arc::clone(&p)).unwrap();
+    let home = engine.shard();
+
+    kill.store(home as u64 + 1, Ordering::SeqCst);
+    let batch = random_batch(&p, 6, 9);
+    let got = engine.batch_accuracy(&p, &batch).unwrap();
+    let mut direct = NativeEngine::default();
+    assert_eq!(got, direct.batch_accuracy(&p, &batch).unwrap());
+    assert_ne!(engine.shard(), home, "healed registration moved to a live shard");
+    assert!(!svc.pool().shard_alive(home));
+    svc.shutdown();
+}
+
+/// Acceptance scenario, run-level half: a 2-dataset optimization over a
+/// 4-worker pool completes BOTH datasets although one dataset's shard is
+/// killed mid-run — and the healed run stays bit-identical to the direct
+/// native engine (the retried batch re-executes the same chromosomes).
+#[test]
+fn optimization_run_survives_mid_run_worker_death() {
+    let kill = Arc::new(AtomicU64::new(0));
+    let pool = spawn_killable_native(
+        16,
+        &PoolOptions {
+            workers: 4,
+            coalesce_window_us: 0,
+            engine_threads: 1,
+            respawn: false,
+        },
+        Arc::clone(&kill),
+    );
+    let svc = EvalService::from_pool(pool);
+    let opts = RunOptions {
+        seed: 42,
+        pop_size: 16,
+        generations: 6,
+        margin_max: 5,
+        engine: EngineChoice::NativeService,
+    };
+
+    // Arm the kill for the shard "seeds" pins to: its first GA batch
+    // panics the worker mid-run, and the heal path must carry the run.
+    let victim = svc.pool().shard_for("seeds");
+    kill.store(victim as u64 + 1, Ordering::SeqCst);
+
+    let run = optimize_dataset("seeds", &opts, Some(&svc)).unwrap();
+    assert!(!run.front.is_empty());
+    assert!(!svc.pool().shard_alive(victim), "the kill really fired");
+    assert_eq!(svc.metrics.shard_deaths.load(Ordering::Relaxed), 1);
+
+    // A second dataset still completes on the degraded pool.
+    let run2 = optimize_dataset("cardio", &opts, Some(&svc)).unwrap();
+    assert!(!run2.front.is_empty());
+
+    // Determinism: the healed run matches a pure native run exactly.
+    let native = optimize_dataset(
+        "seeds",
+        &RunOptions { engine: EngineChoice::Native, ..opts },
+        None,
+    )
+    .unwrap();
+    assert_eq!(run.front.len(), native.front.len());
+    for (a, b) in run.front.iter().zip(&native.front) {
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.est_area_mm2, b.est_area_mm2);
+    }
+    svc.shutdown();
+}
+
+/// `--respawn-shards`: the first death brings the worker back (home
+/// routing resumes); the second death is permanent.
+#[test]
+fn respawn_revives_a_shard_exactly_once() {
+    let kill = Arc::new(AtomicU64::new(0));
+    let svc = killable_service(2, true, &kill);
+    let p = named_problem("seeds");
+    let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+    let home = id.shard();
+
+    // First death: typed error, then the shard comes back.
+    kill.store(home as u64 + 1, Ordering::SeqCst);
+    let err = svc.eval_typed(id, random_batch(&p, 3, 11)).unwrap_err();
+    assert!(matches!(err, ServiceError::ShardDown { .. }), "{err:?}");
+    let t0 = Instant::now();
+    while !svc.pool().shard_alive(home) && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(svc.pool().shard_alive(home), "respawn must revive the shard");
+    assert_eq!(svc.metrics.respawns.load(Ordering::Relaxed), 1);
+    assert!(!svc.metrics.shards()[home].down.load(Ordering::Relaxed));
+
+    // The respawned worker has no registrations: the old id is stale, a
+    // fresh registration lands back on the home shard and serves.
+    let err = svc.eval_typed(id, random_batch(&p, 3, 12)).unwrap_err();
+    assert!(err.is_stale_id(), "{err:?}");
+    let (id2, _) = svc.register(Arc::clone(&p)).unwrap();
+    assert_eq!(id2.shard(), home, "routing returns home after the respawn");
+    let batch = random_batch(&p, 5, 13);
+    let got = svc.eval_typed(id2, batch.clone()).unwrap();
+    let mut direct = NativeEngine::default();
+    assert_eq!(got, direct.batch_accuracy(&p, &batch).unwrap());
+    // The pre-death id must STILL read stale after the new registration:
+    // a respawned worker issues indices past its predecessor's, so an old
+    // id can never silently alias (and evaluate against) a new problem.
+    assert_ne!(id, id2);
+    let err = svc.eval_typed(id, random_batch(&p, 3, 15)).unwrap_err();
+    assert!(err.is_stale_id(), "pre-death id aliased a fresh registration: {err:?}");
+
+    // Second death: no second respawn, the shard stays dead.
+    kill.store(home as u64 + 1, Ordering::SeqCst);
+    let err = svc.eval_typed(id2, random_batch(&p, 3, 14)).unwrap_err();
+    assert!(matches!(err, ServiceError::ShardDown { .. }), "{err:?}");
+    std::thread::sleep(Duration::from_millis(200));
+    assert!(!svc.pool().shard_alive(home), "a shard is respawned at most once");
+    assert_eq!(svc.metrics.respawns.load(Ordering::Relaxed), 1);
+    assert_eq!(svc.metrics.shard_deaths.load(Ordering::Relaxed), 2);
+    // The pool still serves through the survivor.
+    let (id3, _) = svc.register(Arc::clone(&p)).unwrap();
+    assert_ne!(id3.shard(), home);
+    assert_eq!(svc.eval_typed(id3, batch).unwrap().len(), 5);
+    svc.shutdown();
+}

@@ -24,7 +24,12 @@ use axdt::util::testbed::{named_problem, random_batch, DRIVER_NAMES};
 fn hash_route_is_stable_and_problems_pin_to_shards() {
     let svc = EvalService::spawn_native_with(
         8,
-        &PoolOptions { workers: 4, coalesce_window_us: 0, engine_threads: 1 },
+        &PoolOptions {
+            workers: 4,
+            coalesce_window_us: 0,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
     );
     assert_eq!(svc.workers(), 4);
     let mut shards_seen = std::collections::BTreeSet::new();
@@ -57,7 +62,12 @@ fn hash_route_is_stable_and_problems_pin_to_shards() {
 fn concurrent_drivers_on_problems_across_workers() {
     let svc = EvalService::spawn_native_with(
         8,
-        &PoolOptions { workers: 4, coalesce_window_us: 200, engine_threads: 1 },
+        &PoolOptions {
+            workers: 4,
+            coalesce_window_us: 200,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
     );
     let problems: Vec<_> = DRIVER_NAMES
         .iter()
@@ -103,7 +113,12 @@ fn concurrent_drivers_on_problems_across_workers() {
 fn coalescer_flushes_on_full_width_and_merges_requests() {
     let svc = EvalService::spawn_native_with(
         8,
-        &PoolOptions { workers: 1, coalesce_window_us: 400_000, engine_threads: 1 },
+        &PoolOptions {
+            workers: 1,
+            coalesce_window_us: 400_000,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
     );
     let p = named_problem("seeds");
     let (id, _) = svc.register(Arc::clone(&p)).unwrap();
@@ -141,7 +156,12 @@ fn coalescer_flushes_on_full_width_and_merges_requests() {
 fn coalescer_flushes_on_deadline() {
     let svc = EvalService::spawn_native_with(
         8,
-        &PoolOptions { workers: 1, coalesce_window_us: 60_000, engine_threads: 1 },
+        &PoolOptions {
+            workers: 1,
+            coalesce_window_us: 60_000,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
     );
     let p = named_problem("seeds");
     let (id, _) = svc.register(Arc::clone(&p)).unwrap();
@@ -170,7 +190,12 @@ fn shutdown_flushes_in_flight_jobs() {
         8,
         // Deliberately absurd window: only the shutdown drain can flush
         // within the test's lifetime.
-        &PoolOptions { workers: 2, coalesce_window_us: 1_000_000, engine_threads: 1 },
+        &PoolOptions {
+            workers: 2,
+            coalesce_window_us: 1_000_000,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
     );
     let p = named_problem("seeds");
     let (id, _) = svc.register(Arc::clone(&p)).unwrap();
@@ -204,7 +229,12 @@ fn shutdown_flushes_in_flight_jobs() {
 
 #[test]
 fn service_errors_are_typed_with_stable_display() {
-    let opts = PoolOptions { workers: 2, coalesce_window_us: 0, engine_threads: 1 };
+    let opts = PoolOptions {
+        workers: 2,
+        coalesce_window_us: 0,
+        engine_threads: 1,
+        ..PoolOptions::default()
+    };
     let a = EvalService::spawn_native_with(8, &opts);
     let b = EvalService::spawn_native_with(8, &opts);
     let p = named_problem("seeds");
