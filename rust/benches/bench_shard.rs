@@ -18,7 +18,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use axdt::coordinator::{EvalService, PoolOptions, XlaEngine};
+use axdt::coordinator::{CoalesceMode, EvalService, PoolOptions, XlaEngine};
+use axdt::fitness::native::NativeEngine;
 use axdt::fitness::{AccuracyEngine, Problem};
 use axdt::util::bench::Bench;
 use axdt::util::testbed::{named_problem, random_batch, spawn_killable_native, DRIVER_NAMES};
@@ -154,6 +155,72 @@ fn failover_throughput(width: usize, iters: usize) -> (f64, String) {
     (evals / dt, report)
 }
 
+/// Fixed vs adaptive coalescing under two arrival shapes: 4 drivers, each
+/// holding its OWN registration of one shared problem (driver counts flow
+/// through `register`, which is what arms the adaptive all-drivers early
+/// flush), firing sub-width batches of 5 at width 32.
+///
+/// * `bursty` — a per-round barrier models generation-synchronized GA
+///   drivers: all four batches land together.  Adaptive flushes the
+///   instant the 4th driver queues; fixed waits out its window.
+/// * steady — free-running drivers; adaptive sizes the window from the
+///   observed EWMA of inter-arrival times.
+///
+/// Returns (evals/s, mean executed batch width, padding waste, report).
+fn coalesce_policy_run(
+    mode: CoalesceMode,
+    bursty: bool,
+    rounds: usize,
+) -> (f64, f64, f64, String) {
+    let width = 32;
+    let drivers = 4usize;
+    let svc = EvalService::spawn_native_with(
+        width,
+        &PoolOptions {
+            workers: 1,
+            coalesce: mode,
+            coalesce_window_us: 200,
+            coalesce_window_max_us: 1_000,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
+    );
+    let p = named_problem("seeds");
+    let ids: Vec<_> = (0..drivers)
+        .map(|_| svc.register(Arc::clone(&p)).unwrap().0)
+        .collect();
+    let barrier = Arc::new(std::sync::Barrier::new(drivers));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for (d, &id) in ids.iter().enumerate() {
+            let svc = svc.clone();
+            let p = Arc::clone(&p);
+            let barrier = Arc::clone(&barrier);
+            s.spawn(move || {
+                let mut direct = NativeEngine::default();
+                for r in 0..rounds {
+                    if bursty {
+                        barrier.wait();
+                    }
+                    let batch = random_batch(&p, 5, (d * 1_000 + r) as u64);
+                    let got = svc.eval(id, batch.clone()).unwrap();
+                    if r == 0 {
+                        // Acceptance: no correctness drift — coalesced
+                        // results stay bit-identical to the native engine.
+                        assert_eq!(got, direct.batch_accuracy(&p, &batch).unwrap());
+                    }
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let mean_width = svc.metrics.batch_width_summary().mean();
+    let waste = svc.metrics.padding_waste();
+    let report = svc.metrics.render();
+    svc.shutdown();
+    ((drivers * rounds * 5) as f64 / dt, mean_width, waste, report)
+}
+
 fn main() {
     let b = Bench::new("shard");
     let quick = b.quick();
@@ -212,4 +279,42 @@ fn main() {
     println!(
         "BENCHJSON {{\"bench\":\"shard/padding_waste\",\"uncoalesced\":{waste_off:.4},\"coalesced\":{waste_on:.4}}}"
     );
+
+    // Fixed vs adaptive coalescing under bursty and steady arrivals.
+    // Acceptance (ISSUE 4): under bursty arrivals, adaptive's mean
+    // coalesced width >= fixed's, with no correctness drift (the drivers
+    // assert bit-identity against the native engine inline).
+    let policy_rounds = if quick { 40 } else { 150 };
+    for (pattern, bursty) in [("bursty", true), ("steady", false)] {
+        let mut widths = Vec::new();
+        for (label, mode) in
+            [("fixed", CoalesceMode::Fixed), ("adaptive", CoalesceMode::Adaptive)]
+        {
+            let (thr, mean_width, waste, report) =
+                coalesce_policy_run(mode, bursty, policy_rounds);
+            widths.push(mean_width);
+            b.row(&format!(
+                "shard/coalesce {pattern}/{label}: {thr:.0} evals/s, \
+                 mean_width={mean_width:.1}, waste={:.1}%",
+                100.0 * waste
+            ));
+            b.row(&format!("shard/coalesce {pattern}/{label} metrics: {report}"));
+            println!(
+                "BENCHJSON {{\"bench\":\"shard/coalesce_{pattern}_{label}\",\
+                 \"evals_per_s\":{thr:.1},\"mean_width\":{mean_width:.2},\
+                 \"padding_waste\":{waste:.4}}}"
+            );
+        }
+        let (fixed_w, adaptive_w) = (widths[0], widths[1]);
+        b.row(&format!(
+            "shard/coalesce {pattern}: adaptive mean width {adaptive_w:.1} vs fixed \
+             {fixed_w:.1} (adaptive >= fixed: {})",
+            adaptive_w >= fixed_w
+        ));
+        println!(
+            "BENCHJSON {{\"bench\":\"shard/coalesce_{pattern}_width_ratio\",\
+             \"x\":{:.3}}}",
+            adaptive_w / fixed_w.max(1e-9)
+        );
+    }
 }

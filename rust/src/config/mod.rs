@@ -7,7 +7,7 @@
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::{EngineChoice, PoolOptions};
+use crate::coordinator::{CoalesceMode, EngineChoice, PoolOptions};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -35,8 +35,14 @@ pub struct RunConfig {
     pub threads: usize,
     /// Eval-service workers (shards); 0 = auto (see [`Self::pool_options`]).
     pub workers: usize,
-    /// Eval-service coalescing window in microseconds (0 = off).
+    /// Eval-service coalescing policy: "adaptive" | "fixed" | "off"
+    /// (`--coalesce`).
+    pub coalesce: String,
+    /// Fixed-mode coalescing window in microseconds (0 = off).
     pub coalesce_window_us: u64,
+    /// Adaptive-mode window cap in microseconds
+    /// (`--coalesce-window-max-us`).
+    pub coalesce_window_max_us: u64,
     /// Respawn a dead eval-shard worker once (`--respawn-shards`).
     pub respawn_shards: bool,
     pub accuracy_loss: f64,
@@ -58,7 +64,9 @@ impl Default for RunConfig {
             artifact_dir: "artifacts".into(),
             threads: 0, // auto
             workers: 0, // auto
+            coalesce: "fixed".into(),
             coalesce_window_us: 200,
+            coalesce_window_max_us: 1_000,
             respawn_shards: false,
             accuracy_loss: 0.01,
             out_dir: "results".into(),
@@ -92,8 +100,11 @@ impl RunConfig {
         cfg.artifact_dir = args.str_or("artifacts", &cfg.artifact_dir);
         cfg.threads = args.usize_or("threads", cfg.threads)?;
         cfg.workers = args.usize_or("workers", cfg.workers)?;
+        cfg.coalesce = args.str_or("coalesce", &cfg.coalesce);
         cfg.coalesce_window_us =
             args.u64_or("coalesce-window-us", cfg.coalesce_window_us)?;
+        cfg.coalesce_window_max_us =
+            args.u64_or("coalesce-window-max-us", cfg.coalesce_window_max_us)?;
         if args.has_flag("respawn-shards") {
             cfg.respawn_shards = true;
         }
@@ -122,10 +133,19 @@ impl RunConfig {
         if self.workers > 64 {
             return Err(anyhow!("workers must be in [0, 64] (0 = auto)"));
         }
+        CoalesceMode::parse(&self.coalesce)?;
         if self.coalesce_window_us > 1_000_000 {
             return Err(anyhow!("coalesce-window-us must be <= 1000000 (1 s)"));
         }
+        if self.coalesce_window_max_us > 1_000_000 {
+            return Err(anyhow!("coalesce-window-max-us must be <= 1000000 (1 s)"));
+        }
         Ok(())
+    }
+
+    /// The parsed coalescing mode (validated by [`Self::validate`]).
+    pub fn coalesce_mode(&self) -> CoalesceMode {
+        CoalesceMode::parse(&self.coalesce).expect("validated")
     }
 
     pub fn engine_choice(&self) -> EngineChoice {
@@ -145,7 +165,9 @@ impl RunConfig {
         };
         PoolOptions {
             workers,
+            coalesce: self.coalesce_mode(),
             coalesce_window_us: self.coalesce_window_us,
+            coalesce_window_max_us: self.coalesce_window_max_us,
             engine_threads: 0,
             respawn: self.respawn_shards,
         }
@@ -175,7 +197,12 @@ impl RunConfig {
             ("artifact_dir", Json::str(self.artifact_dir.clone())),
             ("threads", Json::num(self.threads as f64)),
             ("workers", Json::num(self.workers as f64)),
+            ("coalesce", Json::str(self.coalesce.clone())),
             ("coalesce_window_us", Json::num(self.coalesce_window_us as f64)),
+            (
+                "coalesce_window_max_us",
+                Json::num(self.coalesce_window_max_us as f64),
+            ),
             ("respawn_shards", Json::Bool(self.respawn_shards)),
             ("accuracy_loss", Json::num(self.accuracy_loss)),
             ("out_dir", Json::str(self.out_dir.clone())),
@@ -206,8 +233,13 @@ impl RunConfig {
             artifact_dir: get_str("artifact_dir", &d.artifact_dir),
             threads: get_num("threads", d.threads as f64) as usize,
             workers: get_num("workers", d.workers as f64) as usize,
+            coalesce: get_str("coalesce", &d.coalesce),
             coalesce_window_us: get_num("coalesce_window_us", d.coalesce_window_us as f64)
                 as u64,
+            coalesce_window_max_us: get_num(
+                "coalesce_window_max_us",
+                d.coalesce_window_max_us as f64,
+            ) as u64,
             respawn_shards: j
                 .get("respawn_shards")
                 .and_then(Json::as_bool)
@@ -235,7 +267,9 @@ mod tests {
         opt("artifacts", ""),
         opt("threads", ""),
         opt("workers", ""),
+        opt("coalesce", ""),
         opt("coalesce-window-us", ""),
+        opt("coalesce-window-max-us", ""),
         flag("respawn-shards", ""),
         opt("loss", ""),
         opt("out", ""),
@@ -331,6 +365,49 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad2 = RunConfig::default();
         bad2.coalesce_window_us = 2_000_000;
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn coalesce_policy_knobs_parse_validate_and_round_trip() {
+        // Defaults keep the PR 2 behavior: fixed-mode 200us window.
+        let d = RunConfig::default();
+        assert_eq!(d.coalesce, "fixed");
+        assert_eq!(d.coalesce_mode(), CoalesceMode::Fixed);
+        assert_eq!(d.coalesce_window_max_us, 1_000);
+
+        let args = Args::parse(
+            &sv(&[
+                "optimize",
+                "--coalesce",
+                "adaptive",
+                "--coalesce-window-max-us",
+                "750",
+            ]),
+            SPEC,
+        )
+        .unwrap();
+        let cfg = RunConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.coalesce_mode(), CoalesceMode::Adaptive);
+        assert_eq!(cfg.coalesce_window_max_us, 750);
+        let po = cfg.pool_options();
+        assert_eq!(po.coalesce, CoalesceMode::Adaptive);
+        assert_eq!(po.coalesce_window_max_us, 750);
+        // JSON round-trips the policy; a config without the keys keeps
+        // the defaults.
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        let empty = RunConfig::from_json("{}").unwrap();
+        assert_eq!(empty.coalesce_mode(), CoalesceMode::Fixed);
+        assert_eq!(empty.coalesce_window_max_us, 1_000);
+
+        // Unknown modes and absurd caps are rejected.
+        let mut bad = RunConfig::default();
+        bad.coalesce = "sometimes".into();
+        assert!(bad.validate().is_err());
+        assert!(RunConfig::from_json("{\"coalesce\": \"sometimes\"}").is_err());
+        let mut bad2 = RunConfig::default();
+        bad2.coalesce_window_max_us = 2_000_000;
         assert!(bad2.validate().is_err());
     }
 

@@ -30,6 +30,10 @@ pub enum FlushKind {
     Deadline,
     /// Coalescing disabled: the request's tail was dispatched immediately.
     Immediate,
+    /// Every registered driver of the problem had a request queued
+    /// (adaptive mode): drivers block on their in-flight eval, so no more
+    /// work can arrive — flush now instead of waiting out the window.
+    AllDrivers,
     /// Shutdown/disconnect drain of still-pending work (not a window
     /// expiry, so it does not count toward `deadline_flushes`).
     Drain,
@@ -50,6 +54,17 @@ pub struct ShardMetrics {
     pub executions: AtomicU64,
     /// Chromosomes this shard evaluated (pre-padding).
     pub chromosomes: AtomicU64,
+    /// Chromosomes currently queued in this shard's coalescer (waiting
+    /// for a width-full, deadline, or all-drivers flush).  Tests use this
+    /// gauge to observe "the batch reached the coalescer" without sleeps.
+    pub coalescing: AtomicU64,
+    /// Effective coalescing window (ns): the fixed window, or — in
+    /// adaptive mode — the controller's latest choice (updated on every
+    /// arrival).  0 = coalescing off / no window computed yet.
+    pub window_ns: AtomicU64,
+    /// Latest per-problem EWMA of request inter-arrival times (ns) on
+    /// this shard (0 = fewer than two arrivals so far).
+    pub ewma_ia_ns: AtomicU64,
     /// True while this shard's worker is dead (its backend panicked);
     /// cleared again by a successful `--respawn-shards` respawn.
     pub down: AtomicBool,
@@ -74,6 +89,11 @@ pub struct Metrics {
     pub full_flushes: AtomicU64,
     /// Deadline-expiry coalescer flushes.
     pub deadline_flushes: AtomicU64,
+    /// All-drivers-queued early flushes that merged >= 2 requests
+    /// (adaptive coalescing: every registered driver of the problem had
+    /// work queued, so the window was cut short).  A solo driver's
+    /// all-drivers dispatch is not counted — it merges nothing.
+    pub early_flushes: AtomicU64,
     /// Shard-worker deaths (a backend panic killed the worker).
     pub shard_deaths: AtomicU64,
     /// Requests answered with `ShardDown` because their shard's worker
@@ -134,6 +154,15 @@ impl Metrics {
             FlushKind::Deadline => {
                 self.deadline_flushes.fetch_add(1, Ordering::Relaxed);
             }
+            FlushKind::AllDrivers => {
+                // A solo driver's all-drivers dispatch is just an
+                // immediate dispatch; only count flushes that actually
+                // cut a window short to merge >= 2 requests, so `early N`
+                // in the render keeps meaning "the controller merged".
+                if merged_requests >= 2 {
+                    self.early_flushes.fetch_add(1, Ordering::Relaxed);
+                }
+            }
             FlushKind::Immediate | FlushKind::Drain => {}
         }
         if let Some(s) = self.shards.get(shard) {
@@ -160,6 +189,42 @@ impl Metrics {
                 Ordering::Relaxed,
                 |d| d.checked_sub(1),
             );
+        }
+    }
+
+    /// `n` chromosomes entered `shard`'s coalescer queue.
+    pub fn coalescing_add(&self, shard: usize, n: u64) {
+        if let Some(s) = self.shards.get(shard) {
+            s.coalescing.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// `n` chromosomes left `shard`'s coalescer (flushed or purged).
+    /// Saturating, like the queue-depth gauge.
+    pub fn coalescing_sub(&self, shard: usize, n: u64) {
+        if let Some(s) = self.shards.get(shard) {
+            let _ = s.coalescing.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+                d.checked_sub(n).or(Some(0))
+            });
+        }
+    }
+
+    /// A dying worker dropped everything still coalescing on `shard`.
+    pub fn coalescing_reset(&self, shard: usize) {
+        if let Some(s) = self.shards.get(shard) {
+            s.coalescing.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Record the effective coalescing window `shard`'s worker is using
+    /// (and, in adaptive mode, the EWMA it was derived from) so
+    /// [`Metrics::render`] shows what the controller chose.
+    pub fn set_window(&self, shard: usize, window_ns: u64, ewma_ia_ns: Option<u64>) {
+        if let Some(s) = self.shards.get(shard) {
+            s.window_ns.store(window_ns, Ordering::Relaxed);
+            if let Some(e) = ewma_ia_ns {
+                s.ewma_ia_ns.store(e, Ordering::Relaxed);
+            }
         }
     }
 
@@ -212,7 +277,8 @@ impl Metrics {
         let width = self.batch_width_summary();
         let mut s = format!(
             "execs={} chromosomes={} padding_waste={:.1}% batch_width_p50={:.0} \
-             coalesced={} (reqs {}, full {}, deadline {}) exec_latency_p50={} p99={}",
+             coalesced={} (reqs {}, full {}, deadline {}, early {}) \
+             exec_latency_p50={} p99={}",
             self.executions.load(Ordering::Relaxed),
             self.chromosomes.load(Ordering::Relaxed),
             100.0 * self.padding_waste(),
@@ -221,6 +287,7 @@ impl Metrics {
             self.coalesced_requests.load(Ordering::Relaxed),
             self.full_flushes.load(Ordering::Relaxed),
             self.deadline_flushes.load(Ordering::Relaxed),
+            self.early_flushes.load(Ordering::Relaxed),
             crate::util::stats::fmt_duration_ns(lat.median()),
             crate::util::stats::fmt_duration_ns(lat.percentile(0.99)),
         );
@@ -231,12 +298,32 @@ impl Metrics {
                     s.push(' ');
                 }
                 s.push_str(&format!(
-                    "{}:execs={},qpeak={}{}",
+                    "{}:execs={},qpeak={}",
                     i,
                     sh.executions.load(Ordering::Relaxed),
                     sh.queue_peak.load(Ordering::Relaxed),
-                    if sh.down.load(Ordering::Relaxed) { ",down" } else { "" },
                 ));
+                // The window the worker is actually using: fixed, or the
+                // adaptive controller's latest choice.  Omitted while no
+                // window exists (coalescing off / legacy instance), so
+                // operators never see a phantom knob.
+                let win = sh.window_ns.load(Ordering::Relaxed);
+                if win > 0 {
+                    s.push_str(&format!(
+                        ",win={}",
+                        crate::util::stats::fmt_duration_ns(win as f64)
+                    ));
+                }
+                let ia = sh.ewma_ia_ns.load(Ordering::Relaxed);
+                if ia > 0 {
+                    s.push_str(&format!(
+                        ",ia={}",
+                        crate::util::stats::fmt_duration_ns(ia as f64)
+                    ));
+                }
+                if sh.down.load(Ordering::Relaxed) {
+                    s.push_str(",down");
+                }
             }
             s.push(']');
         }
@@ -327,6 +414,43 @@ mod tests {
         assert_eq!(m.stranded_requests.load(Ordering::Relaxed), 3);
         m.shard_died(9);
         assert_eq!(m.shard_deaths.load(Ordering::Relaxed), 2);
+    }
+
+    /// The adaptive-coalescing surface: early-flush counting, the
+    /// coalescing gauge, and the effective window/EWMA rendered per shard.
+    #[test]
+    fn adaptive_gauges_and_early_flushes_render() {
+        let m = Metrics::with_shards(2);
+        m.record_shard_execution(0, 6, 8, 1_000, 3, FlushKind::AllDrivers);
+        assert_eq!(m.early_flushes.load(Ordering::Relaxed), 1);
+        assert_eq!(m.deadline_flushes.load(Ordering::Relaxed), 0);
+        assert!(m.render().contains("early 1"), "{}", m.render());
+
+        m.coalescing_add(0, 5);
+        m.coalescing_add(0, 4);
+        m.coalescing_sub(0, 6);
+        assert_eq!(m.shards()[0].coalescing.load(Ordering::Relaxed), 3);
+        // Saturates instead of wrapping; reset zeroes (worker death).
+        m.coalescing_sub(0, 100);
+        assert_eq!(m.shards()[0].coalescing.load(Ordering::Relaxed), 0);
+        m.coalescing_add(0, 2);
+        m.coalescing_reset(0);
+        assert_eq!(m.shards()[0].coalescing.load(Ordering::Relaxed), 0);
+
+        // No window recorded → no phantom knob in the render.
+        assert!(!m.render().contains("win="), "{}", m.render());
+        m.set_window(1, 150_000, None);
+        let r = m.render();
+        assert!(r.contains("1:execs=0,qpeak=0,win="), "{r}");
+        assert!(!r.contains("ia="), "no EWMA recorded yet: {r}");
+        m.set_window(1, 300_000, Some(140_000));
+        let r = m.render();
+        assert!(r.contains("win=") && r.contains("ia="), "{r}");
+        // Out-of-range shards are ignored, like every other gauge.
+        m.set_window(9, 1, Some(1));
+        m.coalescing_add(9, 1);
+        m.coalescing_sub(9, 1);
+        m.coalescing_reset(9);
     }
 
     #[test]

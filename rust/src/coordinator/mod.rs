@@ -19,8 +19,11 @@
 //!   into one replacement worker per shard.
 //! * [`service::EvalService`] — the thin client facade over the pool:
 //!   seed-era call sites unchanged, plus the [`shard::PoolOptions`] knobs
-//!   (`--workers`, `--coalesce-window-us`) and typed
-//!   [`service::ServiceError`] results.
+//!   (`--workers`, `--coalesce adaptive|fixed|off`, `--coalesce-window-us`,
+//!   `--coalesce-window-max-us`) and typed [`service::ServiceError`]
+//!   results.  Every worker deadline reads the pool's injected
+//!   [`Clock`](crate::util::clock::Clock) (the `*_with_clock`
+//!   constructors), so the timing surface is testable without sleeps.
 //! * [`service::XlaEngine`] — the client-side [`AccuracyEngine`] facade
 //!   that makes the service pluggable wherever the native engine is; it
 //!   transparently re-registers once and retries on a stale
@@ -42,4 +45,6 @@ pub mod shard;
 pub use driver::{optimize_dataset, DatasetRun, EngineChoice, ParetoPoint, RunOptions};
 pub use metrics::{FlushKind, Metrics, ShardMetrics};
 pub use service::{EvalService, ServiceError, XlaEngine};
-pub use shard::{EvalShardPool, PoolOptions, ProblemId};
+pub use shard::{
+    rendezvous_route, rendezvous_score, CoalesceMode, EvalShardPool, PoolOptions, ProblemId,
+};

@@ -6,7 +6,9 @@
 //! (`spawn_native`/`spawn_xla`, `register`, `eval`, `shutdown`) while the
 //! pool underneath scales to N workers with cross-driver batch
 //! coalescing.  The `*_with` constructors expose the pool knobs
-//! ([`PoolOptions`]: `--workers`, `--coalesce-window-us`).
+//! ([`PoolOptions`]: `--workers`, `--coalesce`, `--coalesce-window-us`,
+//! `--coalesce-window-max-us`), and `spawn_native_with_clock` injects a
+//! [`Clock`] so timing tests run on virtual time.
 //!
 //! Error handling is typed end to end: the pool speaks [`ServiceError`],
 //! the facade's `register`/`eval` wrap it into `anyhow` for existing
@@ -22,6 +24,7 @@ use super::shard::{EvalShardPool, PoolOptions};
 use crate::fitness::encode::Bucket;
 use crate::fitness::{AccuracyEngine, Problem};
 use crate::hw::synth::TreeApprox;
+use crate::util::clock::Clock;
 
 pub use super::shard::ProblemId;
 
@@ -157,6 +160,18 @@ impl EvalService {
     /// [`Self::spawn_native`] with explicit pool sizing/coalescing knobs.
     pub fn spawn_native_with(width: usize, opts: &PoolOptions) -> EvalService {
         Self::from_pool(EvalShardPool::spawn_native(width, opts))
+    }
+
+    /// [`Self::spawn_native_with`] with an injected [`Clock`] — how the
+    /// deterministic timing suites drive coalescing windows and deadline
+    /// flushes from a [`ManualClock`](crate::util::clock::ManualClock)
+    /// instead of wall time.
+    pub fn spawn_native_with_clock(
+        width: usize,
+        opts: &PoolOptions,
+        clock: Arc<dyn Clock>,
+    ) -> EvalService {
+        Self::from_pool(EvalShardPool::spawn_native_with_clock(width, opts, clock))
     }
 
     /// Wrap an already-spawned pool.  This is how the failover suites

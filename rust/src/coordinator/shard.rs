@@ -23,9 +23,35 @@
 //! * Each worker fronts its backend with a **coalescer**: sub-width
 //!   batches from concurrent drivers queue per problem and are merged into
 //!   one padded execution, flushing when the artifact width P fills or a
-//!   small deadline (`coalesce_window_us`) expires.  This converts the
-//!   padding waste the metrics record into useful work.  A window of 0
-//!   disables merging (legacy per-request dispatch).
+//!   deadline expires.  This converts the padding waste the metrics record
+//!   into useful work.  Registrations of the *same* `Arc<Problem>` share
+//!   one coalescer queue, so per-driver registrations still merge.
+//!
+//! # Coalescing policy ([`CoalesceMode`])
+//!
+//! * `off` — every request dispatches immediately (legacy per-request
+//!   behavior; also what `fixed` with a 0 window resolves to).
+//! * `fixed` — sub-width batches wait up to `--coalesce-window-us` for
+//!   concurrent work before a padded flush (PR 2 behavior).
+//! * `adaptive` — the worker sizes the window itself: it tracks a
+//!   per-problem EWMA of request inter-arrival times and arms each flush
+//!   deadline at `IA_MULT x EWMA`, clamped to
+//!   `[0, --coalesce-window-max-us]`.  And because a driver *blocks* on
+//!   its in-flight `eval`, the moment every registered driver of a
+//!   problem has a request queued no more work can arrive — the worker
+//!   flushes immediately ([`FlushKind::AllDrivers`]) instead of waiting
+//!   out the window.  Bursty generation-synchronized traffic therefore
+//!   pays ~zero added latency while still coalescing fully; steady
+//!   trickles get a window matched to the observed arrival rate.
+//!
+//! # Time
+//!
+//! Workers never read `Instant::now()`: every deadline decision goes
+//! through the pool's injected [`Clock`] (`util::clock`).  Production
+//! pools run on [`SystemClock`]; the `*_with_clock` constructors accept a
+//! [`ManualClock`](crate::util::clock::ManualClock) so tests drive
+//! windows, deadline flushes, and failover drains deterministically —
+//! zero `thread::sleep`.
 //!
 //! # Failover
 //!
@@ -60,7 +86,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU8, Ordering};
 use std::sync::{mpsc, Arc, Mutex, Weak};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -73,6 +99,7 @@ use crate::fitness::{native::NativeEngine, AccuracyEngine, Problem};
 use crate::hw::synth::TreeApprox;
 #[cfg(feature = "xla")]
 use crate::runtime::{DeviceStatics, XlaRuntime};
+use crate::util::clock::{Clock, SystemClock};
 use crate::util::pool;
 
 /// Bounded per-worker queue depth (jobs in flight before senders block).
@@ -219,18 +246,80 @@ impl ProblemId {
 /// `ProblemId` default can't match).
 static NEXT_POOL_TOKEN: AtomicU32 = AtomicU32::new(1);
 
+/// Coalescing policy selector (CLI `--coalesce adaptive|fixed|off`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoalesceMode {
+    /// Every request dispatches immediately (legacy per-request behavior).
+    Off,
+    /// Sub-width batches wait a fixed `--coalesce-window-us` window.
+    Fixed,
+    /// The worker sizes the window from the observed per-problem EWMA of
+    /// request inter-arrival times, clamped to
+    /// `[0, --coalesce-window-max-us]`, and flushes early the moment
+    /// every registered driver of the problem has work queued.
+    Adaptive,
+}
+
+impl CoalesceMode {
+    pub fn parse(s: &str) -> Result<CoalesceMode> {
+        match s {
+            "off" => Ok(CoalesceMode::Off),
+            "fixed" => Ok(CoalesceMode::Fixed),
+            "adaptive" => Ok(CoalesceMode::Adaptive),
+            _ => Err(anyhow!(
+                "unknown coalesce mode '{s}' (expected adaptive | fixed | off)"
+            )),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CoalesceMode::Off => "off",
+            CoalesceMode::Fixed => "fixed",
+            CoalesceMode::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Fully resolved coalescing policy a pool's workers run with (the mode
+/// plus its duration knob, pre-converted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum CoalescePolicy {
+    Off,
+    Fixed(Duration),
+    Adaptive { max: Duration },
+}
+
+/// EWMA smoothing factor for the adaptive controller's inter-arrival
+/// estimate: `ewma' = ALPHA * sample + (1 - ALPHA) * ewma`.  Exposed so
+/// timing tests can compute the expected estimate bit-exactly.
+pub const ADAPTIVE_EWMA_ALPHA: f64 = 0.25;
+
+/// Adaptive window = `IA_MULT x EWMA(inter-arrival)`, clamped to the
+/// configured max: one expected arrival gap plus one of slack for a
+/// straggling driver.  Exposed for the same bit-exact-test reason.
+pub const ADAPTIVE_WINDOW_IA_MULT: f64 = 2.0;
+
 /// Sizing/behavior knobs for an [`EvalShardPool`] (CLI: `--workers`,
-/// `--coalesce-window-us`, `--respawn-shards`).
+/// `--coalesce`, `--coalesce-window-us`, `--coalesce-window-max-us`,
+/// `--respawn-shards`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PoolOptions {
     /// Worker (shard) count.  0 = auto: one per core for the native
     /// backend, one per device (currently 1, the CPU PJRT client) for XLA.
     /// Clamped to [1, 64].
     pub workers: usize,
-    /// Coalescing window in microseconds: how long a sub-width batch may
-    /// wait for concurrent drivers' work before a padded flush.  0 turns
-    /// coalescing off (every request dispatches immediately).
+    /// Coalescing policy (default [`CoalesceMode::Fixed`], the PR 2
+    /// behavior).
+    pub coalesce: CoalesceMode,
+    /// Fixed-mode coalescing window in microseconds: how long a sub-width
+    /// batch may wait for concurrent drivers' work before a padded flush.
+    /// 0 turns coalescing off (every request dispatches immediately).
+    /// Ignored by the other modes.
     pub coalesce_window_us: u64,
+    /// Adaptive-mode cap in microseconds: the controller's window never
+    /// exceeds it, whatever the EWMA says.  Ignored by the other modes.
+    pub coalesce_window_max_us: u64,
     /// Native-engine threads per worker.  0 = auto (total thread budget /
     /// workers), so `workers=1` keeps the seed service's full batch-level
     /// parallelism.  Ignored by the XLA backend.
@@ -246,7 +335,9 @@ impl Default for PoolOptions {
     fn default() -> Self {
         PoolOptions {
             workers: 0,
+            coalesce: CoalesceMode::Fixed,
             coalesce_window_us: 200,
+            coalesce_window_max_us: 1_000,
             engine_threads: 0,
             respawn: false,
         }
@@ -269,6 +360,25 @@ impl PoolOptions {
         let w = if self.workers == 0 { 1 } else { self.workers };
         w.clamp(1, 64)
     }
+
+    /// The coalescing policy workers run with.  `fixed` with a zero
+    /// window resolves to `Off` (the pre-policy contract for
+    /// `--coalesce-window-us 0`).
+    pub(crate) fn policy(&self) -> CoalescePolicy {
+        match self.coalesce {
+            CoalesceMode::Off => CoalescePolicy::Off,
+            CoalesceMode::Fixed => {
+                if self.coalesce_window_us == 0 {
+                    CoalescePolicy::Off
+                } else {
+                    CoalescePolicy::Fixed(Duration::from_micros(self.coalesce_window_us))
+                }
+            }
+            CoalesceMode::Adaptive => CoalescePolicy::Adaptive {
+                max: Duration::from_micros(self.coalesce_window_max_us),
+            },
+        }
+    }
 }
 
 enum Msg {
@@ -281,6 +391,12 @@ enum Msg {
         batch: Vec<TreeApprox>,
         reply: mpsc::SyncSender<Result<Vec<f64>, ServiceError>>,
     },
+    /// No-op nudge: sent by a [`ManualClock`](crate::util::clock::
+    /// ManualClock) waker after a virtual-time advance, so a worker
+    /// blocked waiting on a (virtual) deadline wakes and re-reads the
+    /// clock.  Wakeups are messages, not condvar signals — they cannot be
+    /// lost to a block/notify race.
+    Tick,
     Shutdown,
 }
 
@@ -345,7 +461,8 @@ impl ShardSlot {
 /// slots, and the backend factory retained for respawns.
 struct PoolShared {
     token: u32,
-    window: Option<Duration>,
+    policy: CoalescePolicy,
+    clock: Arc<dyn Clock>,
     respawn: bool,
     metrics: Arc<Metrics>,
     factory: Box<dyn Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync>,
@@ -367,13 +484,24 @@ impl EvalShardPool {
     /// Spawn a native-backed pool (tests / no-artifact runs).  `width`
     /// emulates the artifact population width for batching.
     pub fn spawn_native(width: usize, opts: &PoolOptions) -> EvalShardPool {
+        Self::spawn_native_with_clock(width, opts, Arc::new(SystemClock::new()))
+    }
+
+    /// [`Self::spawn_native`] with an injected [`Clock`] — the seam the
+    /// deterministic timing tests drive with a
+    /// [`ManualClock`](crate::util::clock::ManualClock).
+    pub fn spawn_native_with_clock(
+        width: usize,
+        opts: &PoolOptions,
+        clock: Arc<dyn Clock>,
+    ) -> EvalShardPool {
         let workers = opts.native_workers();
         let engine_threads = if opts.engine_threads == 0 {
             (pool::default_threads() / workers).max(1)
         } else {
             opts.engine_threads
         };
-        Self::spawn(workers, opts.coalesce_window_us, opts.respawn, move |_shard| {
+        Self::spawn_with_clock(workers, opts.policy(), opts.respawn, clock, move |_shard| {
             Ok(Box::new(NativeBackend {
                 engine: NativeEngine::with_threads(engine_threads),
                 width,
@@ -391,7 +519,7 @@ impl EvalShardPool {
         opts: &PoolOptions,
     ) -> Result<EvalShardPool> {
         let dir = artifact_dir.as_ref().to_path_buf();
-        Self::spawn(opts.xla_workers(), opts.coalesce_window_us, opts.respawn, move |_shard| {
+        Self::spawn(opts.xla_workers(), opts.policy(), opts.respawn, move |_shard| {
             Ok(Box::new(XlaBackend { runtime: XlaRuntime::new(dir.clone())? })
                 as Box<dyn Backend>)
         })
@@ -399,12 +527,21 @@ impl EvalShardPool {
 
     pub(crate) fn spawn(
         workers: usize,
-        window_us: u64,
+        policy: CoalescePolicy,
         respawn: bool,
         factory: impl Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     ) -> Result<EvalShardPool> {
+        Self::spawn_with_clock(workers, policy, respawn, Arc::new(SystemClock::new()), factory)
+    }
+
+    pub(crate) fn spawn_with_clock(
+        workers: usize,
+        policy: CoalescePolicy,
+        respawn: bool,
+        clock: Arc<dyn Clock>,
+        factory: impl Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
+    ) -> Result<EvalShardPool> {
         let workers = workers.max(1);
-        let window = (window_us > 0).then_some(Duration::from_micros(window_us));
         let metrics = Arc::new(Metrics::with_shards(workers));
         let token = NEXT_POOL_TOKEN.fetch_add(1, Ordering::Relaxed);
         let mut slots = Vec::with_capacity(workers);
@@ -422,12 +559,37 @@ impl EvalShardPool {
         }
         let shared = Arc::new(PoolShared {
             token,
-            window,
+            policy,
+            clock: Arc::clone(&clock),
             respawn,
             metrics: Arc::clone(&metrics),
             factory: Box::new(factory),
             slots,
         });
+        // Seed the per-shard window gauge so `render()` shows the
+        // effective window before the first flush decision: the fixed
+        // window, or the adaptive cap until an EWMA exists.
+        let initial_window_ns = match policy {
+            CoalescePolicy::Off => 0,
+            CoalescePolicy::Fixed(w) => w.as_nanos() as u64,
+            CoalescePolicy::Adaptive { max } => max.as_nanos() as u64,
+        };
+        for shard in 0..workers {
+            if initial_window_ns > 0 {
+                metrics.set_window(shard, initial_window_ns, None);
+            }
+            // Virtual-time advances must wake workers that are blocked on
+            // an armed deadline.  The waker holds the pool only weakly and
+            // re-reads the slot's sender each firing, so it survives
+            // respawns and goes inert once the pool is dropped.
+            let weak = Arc::downgrade(&shared);
+            clock.register_waker(Box::new(move || {
+                if let Some(shared) = weak.upgrade() {
+                    let tx = lock_recover(&shared.slots[shard].tx).clone();
+                    let _ = tx.try_send(Msg::Tick);
+                }
+            }));
+        }
         let inits: Vec<_> = rxs
             .into_iter()
             .enumerate()
@@ -470,28 +632,13 @@ impl EvalShardPool {
     /// Routing with failover: the home shard when it is alive, else the
     /// rendezvous-best live shard.  Survivors' routes never move (their
     /// home shard is still alive), and every client deterministically
-    /// picks the same fallback for a given dead-set.
+    /// picks the same fallback for a given dead-set.  Delegates to the
+    /// pure [`rendezvous_route`] so the routing tests exercise the exact
+    /// decision procedure the pool runs.
     fn route_live(&self, name: &str) -> Result<usize, ServiceError> {
-        let slots = &self.shared.slots;
-        let home = self.shard_for(name);
-        if slots[home].is_alive() {
-            return Ok(home);
-        }
-        let mut best: Option<(u64, usize)> = None;
-        for (shard, slot) in slots.iter().enumerate() {
-            if !slot.is_alive() {
-                continue;
-            }
-            let score = rendezvous_score(name, shard);
-            let better = match best {
-                None => true,
-                Some((bs, _)) => score > bs,
-            };
-            if better {
-                best = Some((score, shard));
-            }
-        }
-        best.map(|(_, shard)| shard).ok_or(ServiceError::ServiceDown)
+        let alive: Vec<bool> =
+            self.shared.slots.iter().map(|s| s.is_alive()).collect();
+        rendezvous_route(name, &alive).ok_or(ServiceError::ServiceDown)
     }
 
     /// Register a problem on its shard: routes it to a bucket and uploads
@@ -610,14 +757,53 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 /// Pinned rendezvous score for (problem, shard): FNV-1a over the name
 /// bytes followed by the shard index (little-endian u64).  Only consulted
 /// for failover fallback, so the primary route stays the plain
-/// `fnv1a % N` the seed pool shipped with.
-fn rendezvous_score(name: &str, shard: usize) -> u64 {
+/// `fnv1a % N` the seed pool shipped with.  Public so the randomized
+/// routing tests can check the argmax property independently.
+pub fn rendezvous_score(name: &str, shard: usize) -> u64 {
     let mut h = fnv1a(name.as_bytes());
     for b in (shard as u64).to_le_bytes() {
         h ^= b as u64;
         h = h.wrapping_mul(0x0100_0000_01b3);
     }
     h
+}
+
+/// The pool's routing decision as a pure function of `(name, liveness)`:
+/// the pinned home shard (`FNV-1a(name) % N`) while it is alive, else the
+/// rendezvous-best live shard, else `None` (every shard dead).
+///
+/// [`EvalShardPool::register`] routes through exactly this function, which
+/// gives it two properties the failover suites pin:
+///
+/// * **survivor stability** — a name whose current route is alive keeps
+///   that route under any additional deaths (the home fast-path is
+///   unaffected, and a rendezvous argmax cannot move to a shard it
+///   already beat);
+/// * **determinism** — every client picks the same fallback for a given
+///   dead-set, with no state beyond the liveness vector.
+pub fn rendezvous_route(name: &str, alive: &[bool]) -> Option<usize> {
+    if alive.is_empty() {
+        return None;
+    }
+    let home = (fnv1a(name.as_bytes()) % alive.len() as u64) as usize;
+    if alive[home] {
+        return Some(home);
+    }
+    let mut best: Option<(u64, usize)> = None;
+    for (shard, &ok) in alive.iter().enumerate() {
+        if !ok {
+            continue;
+        }
+        let score = rendezvous_score(name, shard);
+        let better = match best {
+            None => true,
+            Some((bs, _)) => score > bs,
+        };
+        if better {
+            best = Some((score, shard));
+        }
+    }
+    best.map(|(_, shard)| shard)
 }
 
 // ---- worker side (coalescer) ----------------------------------------------
@@ -636,13 +822,51 @@ struct QueuedSlice {
     next: usize,
 }
 
-/// Per-problem coalescer state: FIFO of queued slices plus the armed
-/// flush deadline (set when the oldest pending sub-width work arrived).
-#[derive(Default)]
-struct ProblemQueue {
+/// Per-problem coalescer state.  Registrations of the same `Arc<Problem>`
+/// share ONE group (pointer equality), which is what lets per-driver
+/// registrations coalesce with each other; `members` counts them for the
+/// adaptive all-drivers early flush.  The group keeps the first
+/// registration's backend state — re-registering the same problem never
+/// re-uploads statics.
+struct Group {
+    problem: Arc<Problem>,
+    reg: RegisteredProblem,
+    /// Registrations pointing at this group (the driver count, under the
+    /// driver-per-registration convention adaptive mode assumes).  Never
+    /// decremented — there is no deregistration — so a registration whose
+    /// holder stops evaluating (finished driver, heal re-register) makes
+    /// the all-drivers early flush unreachable for this problem; the
+    /// damage is bounded by the adaptive cap, since the EWMA deadline
+    /// still flushes every batch within `coalesce_window_max_us`.
+    members: usize,
+    /// FIFO of queued request slices (each entry = one client request
+    /// with unconsumed chromosomes).
     queue: VecDeque<QueuedSlice>,
+    /// Chromosomes queued across `queue` (mirrored by the per-shard
+    /// `coalescing` gauge).
     pending: usize,
-    deadline: Option<Instant>,
+    /// Armed flush deadline in clock-ns (set when the oldest pending
+    /// sub-width work arrived).
+    deadline: Option<u64>,
+    /// Clock-ns of the last request arrival (adaptive mode only).
+    last_arrival_ns: Option<u64>,
+    /// EWMA of request inter-arrival times in ns (adaptive mode only).
+    ewma_ia_ns: Option<f64>,
+}
+
+impl Group {
+    fn new(problem: Arc<Problem>, reg: RegisteredProblem) -> Group {
+        Group {
+            problem,
+            reg,
+            members: 1,
+            queue: VecDeque::new(),
+            pending: 0,
+            deadline: None,
+            last_arrival_ns: None,
+            ewma_ia_ns: None,
+        }
+    }
 }
 
 /// Everything a worker needs besides its backend and receiver.  The pool
@@ -655,7 +879,10 @@ struct WorkerCtx {
     /// shard's all-time registration count at spawn).  Ids below it were
     /// issued by a dead predecessor and must read as unknown.
     index_base: u32,
-    window: Option<Duration>,
+    policy: CoalescePolicy,
+    /// Injected time: every deadline decision reads this, never
+    /// `Instant::now()`.
+    clock: Arc<dyn Clock>,
     metrics: Arc<Metrics>,
     shared: Weak<PoolShared>,
 }
@@ -681,7 +908,8 @@ fn spawn_worker(
                             token: strong.token,
                             shard: shard as u32,
                             index_base: strong.slots[shard].issued.load(Ordering::Acquire),
-                            window: strong.window,
+                            policy: strong.policy,
+                            clock: Arc::clone(&strong.clock),
                             metrics: Arc::clone(&strong.metrics),
                             shared: Weak::clone(&shared),
                         };
@@ -716,12 +944,51 @@ fn mark_shard_dead(ctx: &WorkerCtx) {
     ctx.metrics.shard_died(ctx.shard as usize);
 }
 
+/// Update a group's inter-arrival EWMA for a request arriving at `now`
+/// (clock-ns) and return the flush window (ns) the policy prescribes.
+/// Publishes the per-shard window/EWMA gauges so `Metrics::render()`
+/// shows what the controller chose.
+fn arrival_window_ns(group: &mut Group, now: u64, ctx: &WorkerCtx) -> u64 {
+    match ctx.policy {
+        CoalescePolicy::Off => 0,
+        CoalescePolicy::Fixed(w) => w.as_nanos() as u64,
+        CoalescePolicy::Adaptive { max } => {
+            if let Some(prev) = group.last_arrival_ns {
+                let sample = now.saturating_sub(prev) as f64;
+                group.ewma_ia_ns = Some(match group.ewma_ia_ns {
+                    None => sample,
+                    Some(e) => {
+                        ADAPTIVE_EWMA_ALPHA * sample + (1.0 - ADAPTIVE_EWMA_ALPHA) * e
+                    }
+                });
+            }
+            group.last_arrival_ns = Some(now);
+            let max_ns = max.as_nanos() as u64;
+            let window = match group.ewma_ia_ns {
+                // No estimate yet: wait the cap (conservative merging;
+                // the all-drivers early flush bounds the latency cost).
+                None => max_ns,
+                Some(e) => ((ADAPTIVE_WINDOW_IA_MULT * e) as u64).min(max_ns),
+            };
+            ctx.metrics.set_window(
+                ctx.shard as usize,
+                window,
+                group.ewma_ia_ns.map(|e| e as u64),
+            );
+            window
+        }
+    }
+}
+
 fn worker_loop(mut backend: Box<dyn Backend>, rx: mpsc::Receiver<Msg>, ctx: WorkerCtx) {
-    let mut problems: Vec<(Arc<Problem>, RegisteredProblem)> = Vec::new();
-    let mut queues: Vec<ProblemQueue> = Vec::new();
+    // Registration index -> coalescer group.  Re-registrations of the
+    // same `Arc<Problem>` map to one group (and skip the backend
+    // re-register), so per-driver registrations share a queue.
+    let mut regs: Vec<usize> = Vec::new();
+    let mut groups: Vec<Group> = Vec::new();
     loop {
         // Wait for work, bounded by the earliest armed coalescer deadline.
-        let next_deadline = queues.iter().filter_map(|q| q.deadline).min();
+        let next_deadline = groups.iter().filter_map(|g| g.deadline).min();
         let msg = match next_deadline {
             // Invariant: no deadline => nothing pending, so a disconnect
             // here cannot strand queued work.
@@ -730,25 +997,29 @@ fn worker_loop(mut backend: Box<dyn Backend>, rx: mpsc::Receiver<Msg>, ctx: Work
                 Err(_) => return,
             },
             Some(deadline) => {
-                let now = Instant::now();
+                let now = ctx.clock.now_ns();
                 if deadline <= now {
-                    if !flush_expired(backend.as_mut(), &problems, &mut queues, &ctx) {
-                        return die(rx, &mut queues, &ctx, RespawnPolicy::IfConfigured);
+                    if !flush_expired(backend.as_mut(), &mut groups, &ctx) {
+                        return die(rx, &mut groups, &ctx, RespawnPolicy::IfConfigured);
                     }
                     continue;
                 }
-                match rx.recv_timeout(deadline - now) {
+                // The clock bounds how long we may block before
+                // re-checking: remaining real time for `SystemClock`, the
+                // safety-net hour for `ManualClock` (whose advances nudge
+                // us with `Msg::Tick` instead).
+                match rx.recv_timeout(ctx.clock.wait_budget(deadline)) {
                     Ok(m) => m,
                     Err(mpsc::RecvTimeoutError::Timeout) => {
-                        if !flush_expired(backend.as_mut(), &problems, &mut queues, &ctx) {
-                            return die(rx, &mut queues, &ctx, RespawnPolicy::IfConfigured);
+                        if !flush_expired(backend.as_mut(), &mut groups, &ctx) {
+                            return die(rx, &mut groups, &ctx, RespawnPolicy::IfConfigured);
                         }
                         continue;
                     }
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         // Every pool handle is gone: no respawn either.
-                        if !flush_all(backend.as_mut(), &problems, &mut queues, &ctx) {
-                            return die(rx, &mut queues, &ctx, RespawnPolicy::Never);
+                        if !flush_all(backend.as_mut(), &mut groups, &ctx) {
+                            return die(rx, &mut groups, &ctx, RespawnPolicy::Never);
                         }
                         return;
                     }
@@ -756,49 +1027,69 @@ fn worker_loop(mut backend: Box<dyn Backend>, rx: mpsc::Receiver<Msg>, ctx: Work
             }
         };
         match msg {
+            // Virtual time advanced: the loop head re-reads the clock and
+            // flushes whatever is now expired.
+            Msg::Tick => continue,
             Msg::Shutdown => {
                 // In-flight jobs still get their replies: drain the
                 // coalescer before exiting.  A panic during THIS drain
                 // still answers everyone with `ShardDown`, but must not
                 // respawn a worker for a pool that was told to stop.
-                if !flush_all(backend.as_mut(), &problems, &mut queues, &ctx) {
-                    return die(rx, &mut queues, &ctx, RespawnPolicy::Never);
+                if !flush_all(backend.as_mut(), &mut groups, &ctx) {
+                    return die(rx, &mut groups, &ctx, RespawnPolicy::Never);
                 }
                 return;
             }
             Msg::Register { problem, reply } => {
-                match catch_unwind(AssertUnwindSafe(|| backend.register(&problem))) {
-                    Ok(Ok(reg)) => {
-                        let index = ctx.index_base + problems.len() as u32;
-                        let id = ProblemId { service: ctx.token, shard: ctx.shard, index };
-                        let bucket = reg.bucket().cloned();
-                        problems.push((problem, reg));
-                        queues.push(ProblemQueue::default());
-                        // Advance the shard's all-time counter so a future
-                        // respawn starts past this id (no aliasing).
-                        if let Some(shared) = ctx.shared.upgrade() {
-                            shared.slots[ctx.shard as usize]
-                                .issued
-                                .store(index + 1, Ordering::Release);
+                let group = match groups
+                    .iter()
+                    .position(|g| Arc::ptr_eq(&g.problem, &problem))
+                {
+                    // Same problem, new driver: reuse the backend state
+                    // (no duplicate statics upload) and bump the member
+                    // count the all-drivers early flush consults.
+                    Some(g) => {
+                        groups[g].members += 1;
+                        g
+                    }
+                    None => match catch_unwind(AssertUnwindSafe(|| backend.register(&problem)))
+                    {
+                        Ok(Ok(reg)) => {
+                            groups.push(Group::new(problem, reg));
+                            groups.len() - 1
                         }
-                        ctx.metrics.problems.fetch_add(1, Ordering::Relaxed);
-                        let _ = reply.send(Ok((id, bucket)));
-                    }
-                    Ok(Err(e)) => {
-                        let _ = reply
-                            .send(Err(ServiceError::Backend { detail: format!("{e:#}") }));
-                    }
-                    Err(_) => {
-                        // Backend panicked during registration: the worker
-                        // cannot continue on a possibly-broken backend.
-                        mark_shard_dead(&ctx);
-                        let _ = reply.send(Err(ServiceError::ShardDown {
-                            shard: ctx.shard as usize,
-                        }));
-                        ctx.metrics.record_stranded(1);
-                        return die(rx, &mut queues, &ctx, RespawnPolicy::IfConfigured);
-                    }
+                        Ok(Err(e)) => {
+                            let _ = reply.send(Err(ServiceError::Backend {
+                                detail: format!("{e:#}"),
+                            }));
+                            continue;
+                        }
+                        Err(_) => {
+                            // Backend panicked during registration: the
+                            // worker cannot continue on a possibly-broken
+                            // backend.
+                            mark_shard_dead(&ctx);
+                            let _ = reply.send(Err(ServiceError::ShardDown {
+                                shard: ctx.shard as usize,
+                            }));
+                            ctx.metrics.record_stranded(1);
+                            return die(rx, &mut groups, &ctx, RespawnPolicy::IfConfigured);
+                        }
+                    },
+                };
+                let index = ctx.index_base + regs.len() as u32;
+                let id = ProblemId { service: ctx.token, shard: ctx.shard, index };
+                let bucket = groups[group].reg.bucket().cloned();
+                regs.push(group);
+                // Advance the shard's all-time counter so a future
+                // respawn starts past this id (no aliasing).
+                if let Some(shared) = ctx.shared.upgrade() {
+                    shared.slots[ctx.shard as usize]
+                        .issued
+                        .store(index + 1, Ordering::Release);
                 }
+                ctx.metrics.problems.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Ok((id, bucket)));
             }
             Msg::Eval { id, batch, reply } => {
                 ctx.metrics.shard_dequeued(ctx.shard as usize);
@@ -808,18 +1099,18 @@ fn worker_loop(mut backend: Box<dyn Backend>, rx: mpsc::Receiver<Msg>, ctx: Work
                 // shard's PREVIOUS incarnation issued: indices restart
                 // behind `index_base` after a respawn, so those read as
                 // unknown here and heal via re-registration.
-                let idx = match id.index.checked_sub(ctx.index_base) {
+                let ridx = match id.index.checked_sub(ctx.index_base) {
                     Some(i)
                         if id.service == ctx.token
                             && id.shard == ctx.shard
-                            && (i as usize) < problems.len() =>
+                            && (i as usize) < regs.len() =>
                     {
                         i as usize
                     }
                     _ => {
                         let _ = reply.send(Err(ServiceError::UnknownProblemId {
                             id,
-                            registered: problems.len(),
+                            registered: regs.len(),
                         }));
                         continue;
                     }
@@ -828,47 +1119,81 @@ fn worker_loop(mut backend: Box<dyn Backend>, rx: mpsc::Receiver<Msg>, ctx: Work
                     let _ = reply.send(Ok(Vec::new()));
                     continue;
                 }
+                let g = regs[ridx];
+                // Arrival bookkeeping before queuing: the adaptive
+                // controller sees every request, including ones a flush
+                // below dispatches immediately.
+                let now = ctx.clock.now_ns();
+                let window_ns = arrival_window_ns(&mut groups[g], now, &ctx);
                 let n = batch.len();
                 let req = Rc::new(RefCell::new(RequestState {
                     reply,
                     results: Vec::with_capacity(n),
                     remaining: n,
                 }));
-                queues[idx].pending += n;
-                queues[idx].queue.push_back(QueuedSlice { req, items: batch, next: 0 });
-                let width = problems[idx].1.width().max(1);
-                while queues[idx].pending >= width {
+                groups[g].pending += n;
+                groups[g].queue.push_back(QueuedSlice { req, items: batch, next: 0 });
+                ctx.metrics.coalescing_add(ctx.shard as usize, n as u64);
+                let width = groups[g].reg.width().max(1);
+                // Deadlines arm from the arrival timestamp — but a
+                // synchronous width-full flush below can consume real
+                // time, and an overflow tail still deserves its full
+                // window of merging opportunity, so the anchor is
+                // refreshed after each flush.  (Without a flush the
+                // arrival anchor stands, which is what keeps the armed
+                // deadline deterministic for virtual-clock tests.)
+                let mut arm_now = now;
+                while groups[g].pending >= width {
                     if !execute_chunk(
                         backend.as_mut(),
-                        &problems[idx],
-                        &mut queues[idx],
+                        &mut groups[g],
                         width,
                         FlushKind::Full,
                         &ctx,
                     ) {
-                        return die(rx, &mut queues, &ctx, RespawnPolicy::IfConfigured);
+                        return die(rx, &mut groups, &ctx, RespawnPolicy::IfConfigured);
                     }
+                    arm_now = ctx.clock.now_ns();
                 }
-                match ctx.window {
-                    None => {
+                match ctx.policy {
+                    CoalescePolicy::Off => {
                         // Coalescing off: dispatch the tail immediately.
-                        let take = queues[idx].pending;
+                        let take = groups[g].pending;
                         if take > 0
                             && !execute_chunk(
                                 backend.as_mut(),
-                                &problems[idx],
-                                &mut queues[idx],
+                                &mut groups[g],
                                 take,
                                 FlushKind::Immediate,
                                 &ctx,
                             )
                         {
-                            return die(rx, &mut queues, &ctx, RespawnPolicy::IfConfigured);
+                            return die(rx, &mut groups, &ctx, RespawnPolicy::IfConfigured);
                         }
                     }
-                    Some(w) => {
-                        if queues[idx].pending > 0 && queues[idx].deadline.is_none() {
-                            queues[idx].deadline = Some(Instant::now() + w);
+                    CoalescePolicy::Fixed(_) => {
+                        if groups[g].pending > 0 && groups[g].deadline.is_none() {
+                            groups[g].deadline = Some(arm_now + window_ns);
+                        }
+                    }
+                    CoalescePolicy::Adaptive { .. } => {
+                        if groups[g].pending > 0 && groups[g].queue.len() >= groups[g].members
+                        {
+                            // Every registered driver is blocked on a
+                            // queued request: nothing more can arrive, so
+                            // waiting out the window buys no merging.
+                            let take = groups[g].pending;
+                            if !execute_chunk(
+                                backend.as_mut(),
+                                &mut groups[g],
+                                take,
+                                FlushKind::AllDrivers,
+                                &ctx,
+                            ) {
+                                return die(rx, &mut groups, &ctx, RespawnPolicy::IfConfigured);
+                            }
+                        } else if groups[g].pending > 0 && groups[g].deadline.is_none() {
+                            groups[g].deadline = Some(arm_now + window_ns);
                         }
                     }
                 }
@@ -896,15 +1221,15 @@ enum RespawnPolicy {
 /// through the clients' re-register path.
 fn die(
     rx: mpsc::Receiver<Msg>,
-    queues: &mut [ProblemQueue],
+    groups: &mut [Group],
     ctx: &WorkerCtx,
     policy: RespawnPolicy,
 ) {
     let shard = ctx.shard as usize;
     let down = ServiceError::ShardDown { shard };
     let mut stranded = 0u64;
-    for q in queues.iter_mut() {
-        for slice in q.queue.drain(..) {
+    for g in groups.iter_mut() {
+        for slice in g.queue.drain(..) {
             let mut r = slice.req.borrow_mut();
             // Contributors to the panicked chunk were already answered
             // (remaining forced to 0); everyone else is stranded here.
@@ -914,9 +1239,10 @@ fn die(
                 stranded += 1;
             }
         }
-        q.pending = 0;
-        q.deadline = None;
+        g.pending = 0;
+        g.deadline = None;
     }
+    ctx.metrics.coalescing_reset(shard);
     let mut saw_shutdown = false;
     while let Ok(msg) = rx.try_recv() {
         match msg {
@@ -929,6 +1255,8 @@ fn die(
                 let _ = reply.send(Err(down.clone()));
                 stranded += 1;
             }
+            // Clock nudges carry no reply channel; nothing to answer.
+            Msg::Tick => {}
             // A Shutdown queued behind the panicking job means the pool
             // was already told to stop — honoring it here prevents a
             // replacement worker that would never receive it and would
@@ -970,26 +1298,15 @@ fn die(
     }
 }
 
-/// Flush every problem whose coalescing deadline has expired.  Returns
-/// false when the backend panicked (the worker must die).
-fn flush_expired(
-    backend: &mut dyn Backend,
-    problems: &[(Arc<Problem>, RegisteredProblem)],
-    queues: &mut [ProblemQueue],
-    ctx: &WorkerCtx,
-) -> bool {
-    let now = Instant::now();
-    for idx in 0..queues.len() {
-        if queues[idx].deadline.is_some_and(|d| d <= now) {
-            let take = queues[idx].pending;
-            if !execute_chunk(
-                backend,
-                &problems[idx],
-                &mut queues[idx],
-                take,
-                FlushKind::Deadline,
-                ctx,
-            ) {
+/// Flush every problem whose coalescing deadline has expired (per the
+/// injected clock).  Returns false when the backend panicked (the worker
+/// must die).
+fn flush_expired(backend: &mut dyn Backend, groups: &mut [Group], ctx: &WorkerCtx) -> bool {
+    let now = ctx.clock.now_ns();
+    for group in groups.iter_mut() {
+        if group.deadline.is_some_and(|d| d <= now) {
+            let take = group.pending;
+            if !execute_chunk(backend, group, take, FlushKind::Deadline, ctx) {
                 return false;
             }
         }
@@ -999,23 +1316,11 @@ fn flush_expired(
 
 /// Drain every pending chunk (shutdown/disconnect).  Returns false when
 /// the backend panicked mid-drain.
-fn flush_all(
-    backend: &mut dyn Backend,
-    problems: &[(Arc<Problem>, RegisteredProblem)],
-    queues: &mut [ProblemQueue],
-    ctx: &WorkerCtx,
-) -> bool {
-    for idx in 0..queues.len() {
-        while queues[idx].pending > 0 {
-            let take = queues[idx].pending;
-            if !execute_chunk(
-                backend,
-                &problems[idx],
-                &mut queues[idx],
-                take,
-                FlushKind::Drain,
-                ctx,
-            ) {
+fn flush_all(backend: &mut dyn Backend, groups: &mut [Group], ctx: &WorkerCtx) -> bool {
+    for group in groups.iter_mut() {
+        while group.pending > 0 {
+            let take = group.pending;
+            if !execute_chunk(backend, group, take, FlushKind::Drain, ctx) {
                 return false;
             }
         }
@@ -1031,41 +1336,42 @@ fn flush_all(
 /// must stop and drain via [`die`].
 fn execute_chunk(
     backend: &mut dyn Backend,
-    problem_entry: &(Arc<Problem>, RegisteredProblem),
-    pq: &mut ProblemQueue,
+    group: &mut Group,
     take: usize,
     kind: FlushKind,
     ctx: &WorkerCtx,
 ) -> bool {
     let shard = ctx.shard as usize;
     let metrics = &ctx.metrics;
-    let (problem, reg) = problem_entry;
-    let width = reg.width().max(1);
+    let width = group.reg.width().max(1);
     // Never hand the backend more than one artifact width at once, even if
     // an invariant slips (callers keep pending < width between flushes).
-    let take = take.min(pq.pending).min(width);
+    let take = take.min(group.pending).min(width);
     if take == 0 {
-        pq.deadline = None;
+        group.deadline = None;
         return true;
     }
     let mut chunk: Vec<TreeApprox> = Vec::with_capacity(take);
     let mut contributors: Vec<(Rc<RefCell<RequestState>>, usize)> = Vec::new();
     while chunk.len() < take {
-        let front = pq.queue.front_mut().expect("pending count matches queued items");
+        let front = group.queue.front_mut().expect("pending count matches queued items");
         let n = (take - chunk.len()).min(front.items.len() - front.next);
         chunk.extend_from_slice(&front.items[front.next..front.next + n]);
         front.next += n;
         contributors.push((Rc::clone(&front.req), n));
         if front.next == front.items.len() {
-            pq.queue.pop_front();
+            group.queue.pop_front();
         }
     }
-    pq.pending -= take;
-    if pq.pending == 0 {
-        pq.deadline = None;
+    group.pending -= take;
+    metrics.coalescing_sub(shard, take as u64);
+    if group.pending == 0 {
+        group.deadline = None;
     }
-    let t0 = Instant::now();
-    let outcome = catch_unwind(AssertUnwindSafe(|| backend.eval(reg, problem.as_ref(), &chunk)));
+    let t0 = ctx.clock.now_ns();
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        backend.eval(&group.reg, group.problem.as_ref(), &chunk)
+    }));
     let res = match outcome {
         Ok(r) => r.and_then(|accs| {
             // A short result must fail the requests, not panic the worker
@@ -1102,7 +1408,7 @@ fn execute_chunk(
                 shard,
                 chunk.len(),
                 width.max(chunk.len()),
-                t0.elapsed().as_nanos() as u64,
+                ctx.clock.now_ns().saturating_sub(t0),
                 contributors.len(),
                 kind,
             );
@@ -1131,7 +1437,7 @@ fn execute_chunk(
                 let _ = r.reply.send(Err(err.clone()));
             }
             let mut purged = 0usize;
-            let kept: VecDeque<QueuedSlice> = pq
+            let kept: VecDeque<QueuedSlice> = group
                 .queue
                 .drain(..)
                 .filter(|s| {
@@ -1143,10 +1449,11 @@ fn execute_chunk(
                     }
                 })
                 .collect();
-            pq.queue = kept;
-            pq.pending -= purged;
-            if pq.pending == 0 {
-                pq.deadline = None;
+            group.queue = kept;
+            group.pending -= purged;
+            metrics.coalescing_sub(shard, purged as u64);
+            if group.pending == 0 {
+                group.deadline = None;
             }
         }
     }
@@ -1206,7 +1513,7 @@ mod tests {
     fn uncoalesced_chunking_matches_legacy_split() {
         let chunks = Arc::new(Mutex::new(Vec::new()));
         let c = Arc::clone(&chunks);
-        let pool = EvalShardPool::spawn(1, 0, false, move |_| {
+        let pool = EvalShardPool::spawn(1, CoalescePolicy::Off, false, move |_| {
             Ok(Box::new(CountingBackend { width: 8, chunks: Arc::clone(&c) })
                 as Box<dyn Backend>)
         })
@@ -1254,7 +1561,7 @@ mod tests {
 
         let fail = Arc::new(AtomicBool::new(true));
         let f = Arc::clone(&fail);
-        let pool = EvalShardPool::spawn(1, 0, false, move |_| {
+        let pool = EvalShardPool::spawn(1, CoalescePolicy::Off, false, move |_| {
             Ok(Box::new(FlakyBackend { width: 8, fail: Arc::clone(&f) })
                 as Box<dyn Backend>)
         })
@@ -1317,7 +1624,7 @@ mod tests {
         let p = seeds();
         let victim = {
             // Find the problem's home shard on a 2-worker pool first.
-            let probe = EvalShardPool::spawn(2, 0, false, |_| {
+            let probe = EvalShardPool::spawn(2, CoalescePolicy::Off, false, |_| {
                 Ok(Box::new(Ok25 { width: 8 }) as Box<dyn Backend>)
             })
             .unwrap();
@@ -1325,7 +1632,7 @@ mod tests {
             probe.shutdown();
             s
         };
-        let pool = EvalShardPool::spawn(2, 0, false, move |shard| {
+        let pool = EvalShardPool::spawn(2, CoalescePolicy::Off, false, move |shard| {
             if shard == victim {
                 Ok(Box::new(PanicOnEval) as Box<dyn Backend>)
             } else {
@@ -1371,7 +1678,7 @@ mod tests {
     fn out_of_range_shard_is_rejected_not_clamped() {
         let chunks = Arc::new(Mutex::new(Vec::new()));
         let c = Arc::clone(&chunks);
-        let pool = EvalShardPool::spawn(2, 0, false, move |_| {
+        let pool = EvalShardPool::spawn(2, CoalescePolicy::Off, false, move |_| {
             Ok(Box::new(CountingBackend { width: 8, chunks: Arc::clone(&c) })
                 as Box<dyn Backend>)
         })
@@ -1405,5 +1712,150 @@ mod tests {
         let huge = PoolOptions { workers: 1000, ..PoolOptions::default() };
         assert_eq!(huge.native_workers(), 64);
         assert_eq!(huge.xla_workers(), 64);
+    }
+
+    #[test]
+    fn coalesce_mode_parses_and_resolves_to_policy() {
+        assert_eq!(CoalesceMode::parse("off").unwrap(), CoalesceMode::Off);
+        assert_eq!(CoalesceMode::parse("fixed").unwrap(), CoalesceMode::Fixed);
+        assert_eq!(CoalesceMode::parse("adaptive").unwrap(), CoalesceMode::Adaptive);
+        assert!(CoalesceMode::parse("sometimes").is_err());
+        for m in [CoalesceMode::Off, CoalesceMode::Fixed, CoalesceMode::Adaptive] {
+            assert_eq!(CoalesceMode::parse(m.as_str()).unwrap(), m, "round-trip");
+        }
+
+        // Default options keep the PR 2 behavior: fixed 200us.
+        let d = PoolOptions::default();
+        assert_eq!(d.coalesce, CoalesceMode::Fixed);
+        assert_eq!(d.policy(), CoalescePolicy::Fixed(Duration::from_micros(200)));
+        // The pre-policy `--coalesce-window-us 0` contract: fixed+0 = off.
+        let zero = PoolOptions { coalesce_window_us: 0, ..PoolOptions::default() };
+        assert_eq!(zero.policy(), CoalescePolicy::Off);
+        let off = PoolOptions { coalesce: CoalesceMode::Off, ..PoolOptions::default() };
+        assert_eq!(off.policy(), CoalescePolicy::Off);
+        let ad = PoolOptions {
+            coalesce: CoalesceMode::Adaptive,
+            coalesce_window_max_us: 750,
+            ..PoolOptions::default()
+        };
+        assert_eq!(
+            ad.policy(),
+            CoalescePolicy::Adaptive { max: Duration::from_micros(750) }
+        );
+    }
+
+    #[test]
+    fn rendezvous_route_prefers_live_home_then_best_survivor() {
+        // Home alive → home, regardless of other deaths.
+        let n = 4;
+        let home = (fnv1a(b"seeds") % n as u64) as usize;
+        let mut alive = vec![true; n];
+        assert_eq!(rendezvous_route("seeds", &alive), Some(home));
+        for dead in 0..n {
+            if dead == home {
+                continue;
+            }
+            let mut a = alive.clone();
+            a[dead] = false;
+            assert_eq!(rendezvous_route("seeds", &a), Some(home));
+        }
+        // Home dead → the rendezvous argmax over the survivors.
+        alive[home] = false;
+        let got = rendezvous_route("seeds", &alive).unwrap();
+        assert_ne!(got, home);
+        for (s, &ok) in alive.iter().enumerate() {
+            if ok {
+                assert!(
+                    rendezvous_score("seeds", got) >= rendezvous_score("seeds", s),
+                    "fallback must be the argmax"
+                );
+            }
+        }
+        // All dead / empty → None.
+        let all_dead = vec![false; n];
+        assert_eq!(rendezvous_route("seeds", &all_dead), None);
+        assert_eq!(rendezvous_route("seeds", &[]), None);
+    }
+
+    /// Registrations of the same `Arc<Problem>` share a coalescer group:
+    /// the backend registers once, both ids evaluate correctly, and — in
+    /// adaptive mode — the second driver's queued request triggers the
+    /// all-drivers early flush that merges both sub-width batches.
+    #[test]
+    fn same_arc_registrations_share_group_and_early_flush_merges() {
+        use crate::util::clock::ManualClock;
+
+        let registered = Arc::new(Mutex::new(0usize));
+        let chunks = Arc::new(Mutex::new(Vec::new()));
+        struct OnceBackend {
+            width: usize,
+            registered: Arc<Mutex<usize>>,
+            chunks: Arc<Mutex<Vec<usize>>>,
+        }
+        impl Backend for OnceBackend {
+            fn register(&mut self, _p: &Arc<Problem>) -> Result<RegisteredProblem> {
+                *self.registered.lock().unwrap() += 1;
+                Ok(RegisteredProblem::Native { width: self.width })
+            }
+            fn eval(
+                &mut self,
+                _reg: &RegisteredProblem,
+                _p: &Problem,
+                chunk: &[TreeApprox],
+            ) -> Result<Vec<f64>> {
+                self.chunks.lock().unwrap().push(chunk.len());
+                Ok(vec![0.25; chunk.len()])
+            }
+            fn name(&self) -> &'static str {
+                "once"
+            }
+        }
+
+        let clock = Arc::new(ManualClock::new());
+        let r = Arc::clone(&registered);
+        let c = Arc::clone(&chunks);
+        let pool = EvalShardPool::spawn_with_clock(
+            1,
+            CoalescePolicy::Adaptive { max: Duration::from_micros(1_000_000) },
+            false,
+            Arc::clone(&clock) as Arc<dyn Clock>,
+            move |_| {
+                Ok(Box::new(OnceBackend {
+                    width: 64,
+                    registered: Arc::clone(&r),
+                    chunks: Arc::clone(&c),
+                }) as Box<dyn Backend>)
+            },
+        )
+        .unwrap();
+        let p = seeds();
+        let (id_a, _) = pool.register(Arc::clone(&p)).unwrap();
+        let (id_b, _) = pool.register(Arc::clone(&p)).unwrap();
+        assert_ne!(id_a, id_b);
+        assert_eq!(
+            *registered.lock().unwrap(),
+            1,
+            "same-Arc re-registration must not re-upload backend state"
+        );
+
+        // Two driver threads, one sub-width batch each: with both drivers
+        // queued no more work can arrive, so the worker flushes ONE merged
+        // chunk without any clock advance.
+        let batch = vec![TreeApprox::exact(&p.tree); 5];
+        std::thread::scope(|s| {
+            let pa = pool.clone();
+            let pb = pool.clone();
+            let ba = batch.clone();
+            let bb = batch.clone();
+            let ha = s.spawn(move || pa.eval(id_a, ba).unwrap());
+            let hb = s.spawn(move || pb.eval(id_b, bb).unwrap());
+            assert_eq!(ha.join().unwrap(), vec![0.25; 5]);
+            assert_eq!(hb.join().unwrap(), vec![0.25; 5]);
+        });
+        assert_eq!(*chunks.lock().unwrap(), vec![10], "one merged execution");
+        assert_eq!(pool.metrics.early_flushes.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.metrics.deadline_flushes.load(Ordering::Relaxed), 0);
+        assert_eq!(pool.metrics.coalesced_executions.load(Ordering::Relaxed), 1);
+        pool.shutdown();
     }
 }

@@ -32,7 +32,9 @@ const OPTS: &[OptSpec] = &[
     opt("artifacts", "artifact directory (default artifacts)"),
     opt("threads", "worker threads (default: cores)"),
     opt("workers", "eval-service shard workers (0 = auto, max 64)"),
-    opt("coalesce-window-us", "eval coalescing window in us (0 = off, default 200)"),
+    opt("coalesce", "eval coalescing policy: adaptive | fixed | off (default fixed)"),
+    opt("coalesce-window-us", "fixed-mode coalescing window in us (0 = off, default 200)"),
+    opt("coalesce-window-max-us", "adaptive-mode window cap in us (default 1000)"),
     flag("respawn-shards", "respawn a dead eval-shard worker once before giving up on it"),
     opt("loss", "Table II accuracy-loss budget (default 0.01)"),
     opt("out", "output directory for JSON results (default results)"),

@@ -153,9 +153,9 @@ pub fn usage(program: &str, commands: &[(&str, &str)], spec: &[OptSpec]) -> Stri
         } else {
             format!("--{}", o.name)
         };
-        // 26 columns: fits the longest current option
-        // (`--coalesce-window-us <v>`) without ragged help text.
-        s.push_str(&format!("  {name:<26} {}\n", o.help));
+        // 30 columns: fits the longest current option
+        // (`--coalesce-window-max-us <v>`) without ragged help text.
+        s.push_str(&format!("  {name:<30} {}\n", o.help));
     }
     s
 }

@@ -5,6 +5,9 @@
 //! rayon, criterion, proptest) are unavailable.  Everything the framework
 //! needs from them is implemented here, small and fully tested:
 //!
+//! * [`clock`] — injectable time ([`clock::SystemClock`] /
+//!   step-controlled [`clock::ManualClock`]) so every eval-pool deadline
+//!   decision is deterministic under test.
 //! * [`rng`] — deterministic PCG64 PRNG + distributions.
 //! * [`json`] — minimal JSON value model, parser and writer (artifact
 //!   metadata, config files, experiment reports).
@@ -23,6 +26,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod pool;
 pub mod prop;

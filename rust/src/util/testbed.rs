@@ -19,6 +19,7 @@ use anyhow::Result;
 
 use crate::coordinator::shard::{Backend, EvalShardPool, PoolOptions, RegisteredProblem};
 use crate::data::generators;
+use crate::util::clock::{Clock, SystemClock};
 use crate::dt::{train, TrainConfig};
 use crate::fitness::native::NativeEngine;
 use crate::fitness::{AccuracyEngine, Problem};
@@ -100,8 +101,20 @@ pub fn spawn_killable_native(
     opts: &PoolOptions,
     kill: Arc<AtomicU64>,
 ) -> EvalShardPool {
+    spawn_killable_native_with_clock(width, opts, kill, Arc::new(SystemClock::new()))
+}
+
+/// [`spawn_killable_native`] with an injected clock, so the failover
+/// suites drive coalescing windows and deadline decisions from a
+/// [`ManualClock`](crate::util::clock::ManualClock) instead of wall time.
+pub fn spawn_killable_native_with_clock(
+    width: usize,
+    opts: &PoolOptions,
+    kill: Arc<AtomicU64>,
+    clock: Arc<dyn Clock>,
+) -> EvalShardPool {
     let workers = opts.native_workers();
-    EvalShardPool::spawn(workers, opts.coalesce_window_us, opts.respawn, move |shard| {
+    EvalShardPool::spawn_with_clock(workers, opts.policy(), opts.respawn, clock, move |shard| {
         Ok(Box::new(KillableBackend {
             engine: NativeEngine::with_threads(1),
             width,
@@ -110,6 +123,21 @@ pub fn spawn_killable_native(
         }) as Box<dyn Backend>)
     })
     .expect("killable native backend construction cannot fail")
+}
+
+/// Deterministically wait for an observable condition (a gauge, a
+/// liveness flag) by yielding, never sleeping: the condition is driven by
+/// another thread's bounded work, so this terminates without depending on
+/// any wall-clock window.  Panics after an absurd number of yields so a
+/// genuine bug fails the test instead of hanging it.
+pub fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    for _ in 0..500_000_000u64 {
+        if cond() {
+            return;
+        }
+        std::thread::yield_now();
+    }
+    panic!("timed out waiting for: {what}");
 }
 
 /// `count` random mixed-precision approximations of `p`'s tree.

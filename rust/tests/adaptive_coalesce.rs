@@ -1,0 +1,320 @@
+//! Adaptive-coalescing contracts, driven entirely on a `ManualClock`:
+//! zero wall-clock sleeps, every timing assertion is exact because
+//! virtual time only moves when the test advances it.
+//!
+//! * the per-problem EWMA of request inter-arrival times converges under
+//!   scripted arrival schedules, bit-exactly against a reference
+//!   computed from the exported `ADAPTIVE_*` constants;
+//! * the controller's window clamps at both bounds (the configured max
+//!   before any estimate / under huge gaps, zero under same-instant
+//!   arrivals);
+//! * the all-drivers early flush fires the moment every registered
+//!   driver of a problem has work queued — with no clock advance at all;
+//! * an armed adaptive deadline sits exactly at `IA_MULT x EWMA` past
+//!   the arrival: nothing flushes one nanosecond early;
+//! * adaptive-mode results are bit-identical to fixed-window mode and to
+//!   the direct native engine (merging changes batching, never
+//!   arithmetic).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use axdt::coordinator::shard::{ADAPTIVE_EWMA_ALPHA, ADAPTIVE_WINDOW_IA_MULT};
+use axdt::coordinator::{CoalesceMode, EvalService, PoolOptions};
+use axdt::fitness::native::NativeEngine;
+use axdt::fitness::AccuracyEngine;
+use axdt::util::clock::ManualClock;
+use axdt::util::testbed::{named_problem, random_batch, wait_until};
+
+fn adaptive_opts(max_us: u64) -> PoolOptions {
+    PoolOptions {
+        workers: 1,
+        coalesce: CoalesceMode::Adaptive,
+        coalesce_window_max_us: max_us,
+        engine_threads: 1,
+        ..PoolOptions::default()
+    }
+}
+
+/// Reference EWMA, computed exactly like the worker does (same f64 ops in
+/// the same order, so comparisons are bit-exact).
+fn ewma_ref(samples_ns: &[u64]) -> f64 {
+    let mut e: Option<f64> = None;
+    for &s in samples_ns {
+        e = Some(match e {
+            None => s as f64,
+            Some(prev) => ADAPTIVE_EWMA_ALPHA * s as f64 + (1.0 - ADAPTIVE_EWMA_ALPHA) * prev,
+        });
+    }
+    e.expect("at least one sample")
+}
+
+fn window_ref(ewma: f64, max_us: u64) -> u64 {
+    ((ADAPTIVE_WINDOW_IA_MULT * ewma) as u64).min(max_us * 1_000)
+}
+
+/// Scripted arrival schedule: steady arrivals converge the EWMA to the
+/// gap; a late burst of slower arrivals pulls it up by exactly the
+/// reference recurrence.  The per-shard gauges expose the controller
+/// state after every arrival.
+#[test]
+fn ewma_converges_under_scripted_arrivals() {
+    const MAX_US: u64 = 100_000; // 100 ms cap, never the binding constraint here
+    const T: u64 = 10_000_000; // 10 ms steady gap, in ns
+
+    let clock = Arc::new(ManualClock::new());
+    let svc = EvalService::spawn_native_with_clock(64, &adaptive_opts(MAX_US), Arc::clone(&clock));
+    let p = named_problem("seeds");
+    let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+    let gauges = || {
+        let s = &svc.metrics.shards()[0];
+        (s.window_ns.load(Ordering::Relaxed), s.ewma_ia_ns.load(Ordering::Relaxed))
+    };
+
+    // One registered driver whose request is queued = all drivers queued:
+    // each eval early-flushes immediately, so these calls are synchronous
+    // script steps.  First arrival: no estimate yet, window = the cap.
+    assert_eq!(svc.eval(id, random_batch(&p, 3, 1)).unwrap().len(), 3);
+    assert_eq!(gauges(), (MAX_US * 1_000, 0), "no EWMA before two arrivals");
+
+    // Steady arrivals every T: the first sample sets the estimate to T
+    // and identical samples keep it there; the window tracks 2T.
+    let mut samples = Vec::new();
+    for round in 0..4u64 {
+        clock.advance(Duration::from_nanos(T));
+        samples.push(T);
+        assert_eq!(svc.eval(id, random_batch(&p, 3, 10 + round)).unwrap().len(), 3);
+        let want_ewma = ewma_ref(&samples);
+        assert_eq!(
+            gauges(),
+            (window_ref(want_ewma, MAX_US), want_ewma as u64),
+            "round {round}"
+        );
+    }
+    assert_eq!(gauges().1, T, "identical samples converge exactly to the gap");
+
+    // A slower phase (4T gaps) pulls the estimate up by the published
+    // recurrence — never instantly, never past the cap.
+    for round in 0..3u64 {
+        clock.advance(Duration::from_nanos(4 * T));
+        samples.push(4 * T);
+        assert_eq!(svc.eval(id, random_batch(&p, 3, 20 + round)).unwrap().len(), 3);
+        let want_ewma = ewma_ref(&samples);
+        assert_eq!(
+            gauges(),
+            (window_ref(want_ewma, MAX_US), want_ewma as u64),
+            "slow round {round}"
+        );
+    }
+    let (_, final_ewma) = gauges();
+    assert!(
+        final_ewma > T && final_ewma < 4 * T,
+        "EWMA moves toward the new rate without jumping: {final_ewma}"
+    );
+
+    // The operator-facing render shows what the controller chose.
+    let render = svc.metrics.render();
+    assert!(render.contains("win=") && render.contains("ia="), "{render}");
+    assert!(render.contains("early "), "{render}");
+    svc.shutdown();
+}
+
+/// Clamp behavior at both bounds: the cap before any estimate and under
+/// huge inter-arrival gaps; zero under same-instant arrivals.
+#[test]
+fn window_clamps_at_both_bounds() {
+    const MAX_US: u64 = 500; // 0.5 ms cap in us
+    let clock = Arc::new(ManualClock::new());
+    let svc = EvalService::spawn_native_with_clock(64, &adaptive_opts(MAX_US), Arc::clone(&clock));
+    let p = named_problem("seeds");
+    let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+    let window = || svc.metrics.shards()[0].window_ns.load(Ordering::Relaxed);
+
+    // Upper clamp, no estimate: the cap.
+    svc.eval(id, random_batch(&p, 2, 1)).unwrap();
+    assert_eq!(window(), MAX_US * 1_000);
+
+    // Upper clamp, huge gap: the unclamped window (2 x EWMA) would be
+    // 20x the cap; the armed window is the cap.
+    clock.advance(Duration::from_micros(MAX_US * 10));
+    svc.eval(id, random_batch(&p, 2, 2)).unwrap();
+    assert_eq!(window(), MAX_US * 1_000);
+    assert!(svc.metrics.shards()[0].ewma_ia_ns.load(Ordering::Relaxed) > MAX_US * 1_000);
+
+    // Lower clamp: same-instant arrivals drive the samples — and with
+    // them the window — to zero.  (ALPHA < 1, so a few rounds are needed
+    // for the estimate itself to underflow u64 granularity; the window
+    // hits the floor as soon as `2 x EWMA < 1 ns`.)
+    for round in 0..64u64 {
+        svc.eval(id, random_batch(&p, 2, 10 + round)).unwrap();
+    }
+    assert_eq!(window(), 0, "same-instant arrivals clamp the window to zero");
+    svc.shutdown();
+}
+
+/// The all-drivers early flush: two drivers register the same problem
+/// (driver counts flow through `register`), each queues a sub-width
+/// batch, and the worker merges them into ONE execution the moment the
+/// second batch arrives — the virtual clock never moves, so no window
+/// ever expired.
+#[test]
+fn early_flush_when_all_registered_drivers_have_work_queued() {
+    let clock = Arc::new(ManualClock::new());
+    // A cap of a full virtual second: only the early flush can dispatch.
+    let svc =
+        EvalService::spawn_native_with_clock(64, &adaptive_opts(1_000_000), Arc::clone(&clock));
+    let p = named_problem("seeds");
+    let (id_a, _) = svc.register(Arc::clone(&p)).unwrap();
+    let (id_b, _) = svc.register(Arc::clone(&p)).unwrap();
+    assert_eq!(id_a.shard(), id_b.shard(), "same problem pins to one shard");
+
+    let batch_a = random_batch(&p, 5, 71);
+    let batch_b = random_batch(&p, 4, 72);
+    std::thread::scope(|s| {
+        let (svc_a, svc_b) = (svc.clone(), svc.clone());
+        let (ba, bb) = (batch_a.clone(), batch_b.clone());
+        let ha = s.spawn(move || svc_a.eval(id_a, ba).unwrap());
+        let hb = s.spawn(move || svc_b.eval(id_b, bb).unwrap());
+        let mut direct = NativeEngine::default();
+        assert_eq!(ha.join().unwrap(), direct.batch_accuracy(&p, &batch_a).unwrap());
+        assert_eq!(hb.join().unwrap(), direct.batch_accuracy(&p, &batch_b).unwrap());
+    });
+
+    let m = &svc.metrics;
+    assert_eq!(m.executions.load(Ordering::Relaxed), 1, "one merged execution");
+    assert_eq!(m.early_flushes.load(Ordering::Relaxed), 1);
+    assert_eq!(m.deadline_flushes.load(Ordering::Relaxed), 0);
+    assert_eq!(m.coalesced_executions.load(Ordering::Relaxed), 1);
+    assert_eq!(m.coalesced_requests.load(Ordering::Relaxed), 2);
+    assert_eq!(m.chromosomes.load(Ordering::Relaxed), 9);
+    svc.shutdown();
+}
+
+/// An armed adaptive deadline sits exactly `IA_MULT x EWMA` past the
+/// arrival: with the EWMA primed to T, a lone driver's batch (one of two
+/// registered) flushes at 2T on the virtual clock and not one nanosecond
+/// earlier.
+#[test]
+fn adaptive_deadline_uses_ewma_sized_window() {
+    const T: u64 = 10_000_000; // 10 ms in ns
+    let clock = Arc::new(ManualClock::new());
+    let svc = EvalService::spawn_native_with_clock(64, &adaptive_opts(100_000), Arc::clone(&clock));
+    let p = named_problem("seeds");
+    let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+
+    // Prime the EWMA to exactly T with steady solo arrivals (a single
+    // registered driver early-flushes, so each call returns immediately).
+    svc.eval(id, random_batch(&p, 2, 1)).unwrap();
+    for round in 0..3u64 {
+        clock.advance(Duration::from_nanos(T));
+        svc.eval(id, random_batch(&p, 2, 2 + round)).unwrap();
+    }
+    assert_eq!(svc.metrics.shards()[0].ewma_ia_ns.load(Ordering::Relaxed), T);
+    let primed_execs = svc.metrics.executions.load(Ordering::Relaxed);
+
+    // Second driver registers: now a lone queued batch no longer
+    // early-flushes; it arms a deadline sized by the controller.
+    let (_id2, _) = svc.register(Arc::clone(&p)).unwrap();
+    clock.advance(Duration::from_nanos(T)); // keep the sample stream steady
+    let batch = random_batch(&p, 3, 99);
+    std::thread::scope(|s| {
+        let eval_svc = svc.clone();
+        let b = batch.clone();
+        let h = s.spawn(move || eval_svc.eval(id, b).unwrap());
+        wait_until("batch coalescing", || {
+            svc.metrics.shards()[0].coalescing.load(Ordering::Relaxed) == 3
+        });
+        // The window is 2 x EWMA = 2T.  One nanosecond short: no flush.
+        clock.advance(Duration::from_nanos(2 * T - 1));
+        // Synchronize before the negative assert: a register round-trip
+        // through the same worker (FIFO channel) proves the worker has
+        // already consumed the clock nudge and re-checked the deadline
+        // at 2T - 1 — so "no flush yet" is a real boundary check, not a
+        // not-woken-yet accident.
+        svc.register(named_problem("sync")).unwrap();
+        assert_eq!(svc.metrics.executions.load(Ordering::Relaxed), primed_execs);
+        // The final nanosecond expires the adaptive deadline.
+        clock.advance(Duration::from_nanos(1));
+        let got = h.join().unwrap();
+        let mut direct = NativeEngine::default();
+        assert_eq!(got, direct.batch_accuracy(&p, &batch).unwrap());
+    });
+    assert_eq!(svc.metrics.deadline_flushes.load(Ordering::Relaxed), 1);
+    svc.shutdown();
+}
+
+/// Mode equivalence: the same seeded two-driver workload produces
+/// bit-identical per-request results under adaptive, fixed, and off
+/// coalescing — and all three match the direct native engine.  Merging
+/// changes batching, never arithmetic.
+///
+/// Each round is width-completing (2 x 16 at width 32), so every mode
+/// flushes deterministically with the virtual clock parked: fixed mode
+/// on width-full, adaptive on width-full/all-drivers, off immediately.
+#[test]
+fn adaptive_results_bit_identical_to_fixed_window_mode() {
+    const DRIVERS: usize = 2;
+    const ROUNDS: u64 = 4;
+    const BATCH: usize = 16;
+
+    let run = |opts: &PoolOptions| -> Vec<Vec<Vec<f64>>> {
+        let clock = Arc::new(ManualClock::new());
+        let svc = EvalService::spawn_native_with_clock(32, opts, Arc::clone(&clock));
+        let p = named_problem("seeds");
+        let ids: Vec<_> = (0..DRIVERS)
+            .map(|_| svc.register(Arc::clone(&p)).unwrap().0)
+            .collect();
+        let out = std::thread::scope(|s| {
+            let handles: Vec<_> = ids
+                .iter()
+                .enumerate()
+                .map(|(d, &id)| {
+                    let svc = svc.clone();
+                    let p = Arc::clone(&p);
+                    s.spawn(move || {
+                        (0..ROUNDS)
+                            .map(|round| {
+                                // Seeds depend only on (driver, round):
+                                // identical batches across modes.
+                                let seed = d as u64 * 1000 + round * 10;
+                                svc.eval(id, random_batch(&p, BATCH, seed)).unwrap()
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        });
+        svc.shutdown();
+        out
+    };
+
+    let adaptive = run(&adaptive_opts(1_000_000));
+    let fixed = run(&PoolOptions {
+        workers: 1,
+        coalesce: CoalesceMode::Fixed,
+        coalesce_window_us: 200,
+        engine_threads: 1,
+        ..PoolOptions::default()
+    });
+    let off = run(&PoolOptions {
+        workers: 1,
+        coalesce: CoalesceMode::Off,
+        engine_threads: 1,
+        ..PoolOptions::default()
+    });
+    assert_eq!(adaptive, fixed, "adaptive vs fixed-window results diverged");
+    assert_eq!(adaptive, off, "adaptive vs uncoalesced results diverged");
+
+    // And against the engine the service wraps.
+    let p = named_problem("seeds");
+    let mut direct = NativeEngine::default();
+    for (d, per_driver) in adaptive.iter().enumerate() {
+        for (round, got) in per_driver.iter().enumerate() {
+            let seed = d as u64 * 1000 + round as u64 * 10;
+            let want = direct.batch_accuracy(&p, &random_batch(&p, BATCH, seed)).unwrap();
+            assert_eq!(got, &want, "driver {d} round {round}");
+        }
+    }
+}

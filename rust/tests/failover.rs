@@ -11,19 +11,30 @@
 //!   direct native engine — even when its dataset's shard is killed
 //!   mid-run (the acceptance scenario: lose at most the in-flight batch,
 //!   never a dataset);
+//! * re-routing around dead shards agrees with the pure
+//!   [`rendezvous_route`] function the property suite pins;
 //! * `--respawn-shards` brings a dead worker back exactly once.
+//!
+//! No test here sleeps: coalescer-timing scenarios run on a
+//! `ManualClock`, and cross-thread synchronization goes through
+//! observable state (`wait_until` on gauges/liveness), so nothing
+//! depends on wall-clock scheduling.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
+use axdt::coordinator::shard::rendezvous_route;
 use axdt::coordinator::{
     optimize_dataset, EngineChoice, EvalService, PoolOptions, RunOptions, ServiceError,
     XlaEngine,
 };
 use axdt::fitness::native::NativeEngine;
 use axdt::fitness::AccuracyEngine;
-use axdt::util::testbed::{named_problem, random_batch, spawn_killable_native, DRIVER_NAMES};
+use axdt::util::clock::ManualClock;
+use axdt::util::testbed::{
+    named_problem, random_batch, spawn_killable_native, spawn_killable_native_with_clock,
+    wait_until, DRIVER_NAMES,
+};
 
 fn killable_service(workers: usize, respawn: bool, kill: &Arc<AtomicU64>) -> EvalService {
     let pool = spawn_killable_native(
@@ -33,6 +44,7 @@ fn killable_service(workers: usize, respawn: bool, kill: &Arc<AtomicU64>) -> Eva
             coalesce_window_us: 0,
             engine_threads: 1,
             respawn,
+            ..PoolOptions::default()
         },
         Arc::clone(kill),
     );
@@ -120,19 +132,23 @@ fn killing_one_worker_of_four_strands_nothing() {
 #[test]
 fn queued_requests_get_typed_shard_down() {
     let kill = Arc::new(AtomicU64::new(0));
-    // Single worker, deliberately huge coalescing window: the first
-    // sub-width batch waits, the second completes the width and triggers
-    // the panic while both are in the coalescer (only the width-full
-    // flush can fire within the test's lifetime, even on a slow machine).
-    let pool = spawn_killable_native(
+    // Single worker on a ManualClock with a sub-second window the test
+    // never advances past: the first sub-width batch waits in the
+    // coalescer, the second completes the width and triggers the panic
+    // while both are in the coalescer (only the width-full flush can
+    // fire — the virtual window cannot expire on its own).
+    let clock = Arc::new(ManualClock::new());
+    let pool = spawn_killable_native_with_clock(
         8,
         &PoolOptions {
             workers: 1,
-            coalesce_window_us: 30_000_000,
+            coalesce_window_us: 500_000,
             engine_threads: 1,
             respawn: false,
+            ..PoolOptions::default()
         },
         Arc::clone(&kill),
+        Arc::clone(&clock),
     );
     let svc = EvalService::from_pool(pool);
     let p = named_problem("seeds");
@@ -144,8 +160,11 @@ fn queued_requests_get_typed_shard_down() {
         let p = Arc::clone(&p);
         move || svc.eval_typed(id, random_batch(&p, 5, 7))
     });
-    // Let the first batch reach the coalescer and arm its window.
-    std::thread::sleep(Duration::from_millis(100));
+    // The first batch reaches the coalescer and arms its (virtual)
+    // window — observable on the coalescing gauge, no sleep needed.
+    wait_until("first batch coalescing", || {
+        svc.metrics.shards()[0].coalescing.load(Ordering::Relaxed) == 5
+    });
     let second = svc.eval_typed(id, random_batch(&p, 4, 8));
 
     let first = first.join().unwrap();
@@ -154,6 +173,7 @@ fn queued_requests_get_typed_shard_down() {
         assert!(matches!(err, ServiceError::ShardDown { shard: 0 }), "{err:?}");
     }
     assert_eq!(svc.metrics.shards()[0].queue_depth.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.metrics.shards()[0].coalescing.load(Ordering::Relaxed), 0);
     assert_eq!(svc.metrics.stranded_requests.load(Ordering::Relaxed), 2);
     svc.shutdown();
 }
@@ -193,6 +213,7 @@ fn optimization_run_survives_mid_run_worker_death() {
             coalesce_window_us: 0,
             engine_threads: 1,
             respawn: false,
+            ..PoolOptions::default()
         },
         Arc::clone(&kill),
     );
@@ -234,6 +255,53 @@ fn optimization_run_survives_mid_run_worker_death() {
     svc.shutdown();
 }
 
+/// The live pool's re-routing must agree with the pure
+/// [`rendezvous_route`] function the property suite checks: kill shards
+/// one at a time and, after every kill, every registration lands exactly
+/// where the pure function says it should for the current liveness.
+#[test]
+fn pool_registration_matches_pure_rendezvous_route() {
+    let kill = Arc::new(AtomicU64::new(0));
+    let svc = killable_service(4, false, &kill);
+    let problems: Vec<_> = DRIVER_NAMES.iter().map(|n| named_problem(n)).collect();
+    for p in &problems {
+        svc.register(Arc::clone(p)).unwrap();
+    }
+
+    // Kill shards 0..=2 in turn (leaving one survivor), re-registering
+    // every problem after each death.
+    for victim in 0..3usize {
+        // Trigger the death by evaluating any problem routed to the
+        // victim under the CURRENT liveness.
+        let alive: Vec<bool> = (0..4).map(|s| svc.pool().shard_alive(s)).collect();
+        let routed_here = problems
+            .iter()
+            .find(|p| rendezvous_route(&p.name, &alive) == Some(victim))
+            .expect("some problem routes to every live shard");
+        let (vid, _) = svc.register(Arc::clone(routed_here)).unwrap();
+        assert_eq!(vid.shard(), victim, "pure route predicts the pool's route");
+        kill.store(victim as u64 + 1, Ordering::SeqCst);
+        let err = svc.eval_typed(vid, random_batch(routed_here, 3, victim as u64)).unwrap_err();
+        assert!(matches!(err, ServiceError::ShardDown { shard } if shard == victim));
+
+        let alive: Vec<bool> = (0..4).map(|s| svc.pool().shard_alive(s)).collect();
+        assert!(!alive[victim]);
+        for p in &problems {
+            let want = rendezvous_route(&p.name, &alive).expect("a live shard remains");
+            let (id, _) = svc.register(Arc::clone(p)).unwrap();
+            assert_eq!(
+                id.shard(),
+                want,
+                "{}: pool route diverged from rendezvous_route with dead set {:?}",
+                p.name,
+                alive
+            );
+        }
+    }
+    assert_eq!(svc.pool().live_workers(), 1);
+    svc.shutdown();
+}
+
 /// `--respawn-shards`: the first death brings the worker back (home
 /// routing resumes); the second death is permanent.
 #[test]
@@ -244,15 +312,13 @@ fn respawn_revives_a_shard_exactly_once() {
     let (id, _) = svc.register(Arc::clone(&p)).unwrap();
     let home = id.shard();
 
-    // First death: typed error, then the shard comes back.
+    // First death: typed error, then the shard comes back.  The respawn
+    // completes in bounded worker-side work, so waiting on the liveness
+    // flag is deterministic (no sleep, no wall-clock deadline).
     kill.store(home as u64 + 1, Ordering::SeqCst);
     let err = svc.eval_typed(id, random_batch(&p, 3, 11)).unwrap_err();
     assert!(matches!(err, ServiceError::ShardDown { .. }), "{err:?}");
-    let t0 = Instant::now();
-    while !svc.pool().shard_alive(home) && t0.elapsed() < Duration::from_secs(10) {
-        std::thread::sleep(Duration::from_millis(5));
-    }
-    assert!(svc.pool().shard_alive(home), "respawn must revive the shard");
+    wait_until("respawn revives the shard", || svc.pool().shard_alive(home));
     assert_eq!(svc.metrics.respawns.load(Ordering::Relaxed), 1);
     assert!(!svc.metrics.shards()[home].down.load(Ordering::Relaxed));
 
@@ -273,11 +339,16 @@ fn respawn_revives_a_shard_exactly_once() {
     let err = svc.eval_typed(id, random_batch(&p, 3, 15)).unwrap_err();
     assert!(err.is_stale_id(), "pre-death id aliased a fresh registration: {err:?}");
 
-    // Second death: no second respawn, the shard stays dead.
+    // Second death: no second respawn, the shard stays dead.  The
+    // `respawn_attempted` latch makes a second revival impossible by
+    // construction, so once the death is counted the flags are final —
+    // no grace-period sleep required.
     kill.store(home as u64 + 1, Ordering::SeqCst);
     let err = svc.eval_typed(id2, random_batch(&p, 3, 14)).unwrap_err();
     assert!(matches!(err, ServiceError::ShardDown { .. }), "{err:?}");
-    std::thread::sleep(Duration::from_millis(200));
+    wait_until("second death counted", || {
+        svc.metrics.shard_deaths.load(Ordering::Relaxed) == 2
+    });
     assert!(!svc.pool().shard_alive(home), "a shard is respawned at most once");
     assert_eq!(svc.metrics.respawns.load(Ordering::Relaxed), 1);
     assert_eq!(svc.metrics.shard_deaths.load(Ordering::Relaxed), 2);

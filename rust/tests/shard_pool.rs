@@ -4,21 +4,31 @@
 //! * hash-routing is stable: the same problem name always pins to the
 //!   same shard, and re-registration lands on the worker that already
 //!   owns the problem's buffers;
+//! * the liveness-aware routing function satisfies its rendezvous
+//!   properties for random shard counts and kill orders (seeded
+//!   property test — no ambient randomness);
 //! * problems spread across N workers and evaluate correctly under
 //!   concurrent drivers;
 //! * the coalescer flushes on width-full and on deadline expiry, merging
 //!   concurrent sub-width batches into fewer, fuller executions;
 //! * shutdown drains in-flight jobs instead of stranding blocked clients;
 //! * service failures are typed ([`ServiceError`]) with stable Display.
+//!
+//! Every deadline-dependent assertion runs on a `ManualClock`: virtual
+//! time only moves when the test advances it, so there are no
+//! wall-clock-timing races and zero `thread::sleep` calls.
 
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Barrier};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
+use axdt::coordinator::shard::{rendezvous_route, rendezvous_score};
 use axdt::coordinator::{EvalService, PoolOptions, ServiceError};
 use axdt::fitness::native::NativeEngine;
 use axdt::fitness::AccuracyEngine;
-use axdt::util::testbed::{named_problem, random_batch, DRIVER_NAMES};
+use axdt::util::clock::ManualClock;
+use axdt::util::prop::{check, PropConfig};
+use axdt::util::testbed::{named_problem, random_batch, wait_until, DRIVER_NAMES};
 
 #[test]
 fn hash_route_is_stable_and_problems_pin_to_shards() {
@@ -56,6 +66,96 @@ fn hash_route_is_stable_and_problems_pin_to_shards() {
     assert_eq!(shards_seen.len(), 4, "shards used: {shards_seen:?}");
     assert_eq!(svc.metrics.problems.load(Ordering::Relaxed), 16);
     svc.shutdown();
+}
+
+/// Property-style randomized check of the pool's pure routing function
+/// (`register` routes through exactly it): for random shard counts and
+/// kill orders —
+///
+/// * a route always lands on a live shard (or `None` when all are dead);
+/// * survivors' routes never move: a name whose current route is still
+///   alive after the next kill keeps it;
+/// * a name whose home shard is dead re-routes to the rendezvous-best
+///   live shard (the argmax of the pinned score over the live set).
+///
+/// Seeded through `util::prop` (replay with `AXDT_PROP_SEED`); no
+/// ambient `Math.random`-style nondeterminism anywhere.
+#[test]
+fn rendezvous_routing_properties_hold_for_random_kill_orders() {
+    let names: Vec<String> = (0..32).map(|i| format!("prob{i}")).collect();
+    check(
+        "rendezvous-routing",
+        PropConfig { cases: 64, seed: 0xC0A1 },
+        |rng| {
+            let shards = rng.int_in(1, 8) as usize;
+            let mut order: Vec<usize> = (0..shards).collect();
+            rng.shuffle(&mut order);
+            (shards, order)
+        },
+        |&(shards, ref order)| {
+            let all_alive = vec![true; shards];
+            let mut alive = all_alive.clone();
+            let mut routes: Vec<usize> = Vec::with_capacity(names.len());
+            for name in &names {
+                let home = rendezvous_route(name, &alive)
+                    .ok_or_else(|| "no route with every shard alive".to_string())?;
+                if home >= shards {
+                    return Err(format!("{name}: home {home} out of range"));
+                }
+                routes.push(home);
+            }
+            for &kill in order {
+                alive[kill] = false;
+                let any_live = alive.iter().any(|&a| a);
+                for (i, name) in names.iter().enumerate() {
+                    match rendezvous_route(name, &alive) {
+                        None => {
+                            if any_live {
+                                return Err(format!(
+                                    "{name}: no route though live shards remain"
+                                ));
+                            }
+                        }
+                        Some(s) => {
+                            if !any_live {
+                                return Err(format!("{name}: routed on a dead pool"));
+                            }
+                            if !alive[s] {
+                                return Err(format!("{name}: routed to dead shard {s}"));
+                            }
+                            // Survivor stability under this kill.
+                            let prev = routes[i];
+                            if alive[prev] && prev != s {
+                                return Err(format!(
+                                    "{name}: route moved {prev} -> {s} though {prev} \
+                                     is still alive"
+                                ));
+                            }
+                            // Re-routes land on the rendezvous argmax.
+                            let home = rendezvous_route(name, &all_alive)
+                                .expect("all-alive route exists");
+                            if !alive[home] {
+                                for (t, &ok) in alive.iter().enumerate() {
+                                    if ok
+                                        && rendezvous_score(name, t)
+                                            > rendezvous_score(name, s)
+                                    {
+                                        return Err(format!(
+                                            "{name}: re-route {s} is not the \
+                                             rendezvous-best live shard ({t} scores \
+                                             higher)"
+                                        ));
+                                    }
+                                }
+                            }
+                            routes[i] = s;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
@@ -108,10 +208,12 @@ fn concurrent_drivers_on_problems_across_workers() {
 }
 
 /// Two concurrent sub-width requests (5 + 5 at width 8) merge: one
-/// width-full flush, then the 2-item remainder on the deadline.
+/// width-full flush on their own, then the 2-item remainder exactly when
+/// the test advances the virtual clock past the window.
 #[test]
 fn coalescer_flushes_on_full_width_and_merges_requests() {
-    let svc = EvalService::spawn_native_with(
+    let clock = Arc::new(ManualClock::new());
+    let svc = EvalService::spawn_native_with_clock(
         8,
         &PoolOptions {
             workers: 1,
@@ -119,6 +221,7 @@ fn coalescer_flushes_on_full_width_and_merges_requests() {
             engine_threads: 1,
             ..PoolOptions::default()
         },
+        Arc::clone(&clock),
     );
     let p = named_problem("seeds");
     let (id, _) = svc.register(Arc::clone(&p)).unwrap();
@@ -137,6 +240,15 @@ fn coalescer_flushes_on_full_width_and_merges_requests() {
                 assert_eq!(got, direct.batch_accuracy(&p, &batch).unwrap());
             });
         }
+        // The width-full flush (8 of 10) needs no time at all; the 2-item
+        // remainder sits in the coalescer until the window expires — which
+        // only the test can make happen.
+        wait_until("width-full flush done, remainder coalescing", || {
+            svc.metrics.full_flushes.load(Ordering::Relaxed) == 1
+                && svc.metrics.shards()[0].coalescing.load(Ordering::Relaxed) == 2
+        });
+        assert_eq!(svc.metrics.executions.load(Ordering::Relaxed), 1);
+        clock.advance(Duration::from_micros(400_000));
     });
 
     let m = &svc.metrics;
@@ -152,9 +264,12 @@ fn coalescer_flushes_on_full_width_and_merges_requests() {
     svc.shutdown();
 }
 
+/// A lone sub-width batch flushes exactly at the window boundary on the
+/// virtual clock: nothing at window - 1 ns, the deadline flush at window.
 #[test]
 fn coalescer_flushes_on_deadline() {
-    let svc = EvalService::spawn_native_with(
+    let clock = Arc::new(ManualClock::new());
+    let svc = EvalService::spawn_native_with_clock(
         8,
         &PoolOptions {
             workers: 1,
@@ -162,20 +277,33 @@ fn coalescer_flushes_on_deadline() {
             engine_threads: 1,
             ..PoolOptions::default()
         },
+        Arc::clone(&clock),
     );
     let p = named_problem("seeds");
     let (id, _) = svc.register(Arc::clone(&p)).unwrap();
 
     let batch = random_batch(&p, 3, 31);
-    let t0 = Instant::now();
-    let got = svc.eval(id, batch.clone()).unwrap();
-    let waited = t0.elapsed();
-    let mut direct = NativeEngine::default();
-    assert_eq!(got, direct.batch_accuracy(&p, &batch).unwrap());
-    assert!(
-        waited >= Duration::from_millis(40),
-        "sub-width batch must wait out the window (waited {waited:?})"
-    );
+    std::thread::scope(|s| {
+        let eval_svc = svc.clone();
+        let b = batch.clone();
+        let h = s.spawn(move || eval_svc.eval(id, b).unwrap());
+        // The batch reaches the coalescer (window armed at virtual t=0).
+        wait_until("batch coalescing", || {
+            svc.metrics.shards()[0].coalescing.load(Ordering::Relaxed) == 3
+        });
+        // One nanosecond short of the window: flushing is impossible.
+        clock.advance(Duration::from_nanos(60_000 * 1_000 - 1));
+        // Synchronize before the negative assert: a register round-trip
+        // through the same worker (FIFO channel) proves the clock nudge
+        // was consumed and the deadline re-checked at window - 1 ns.
+        svc.register(named_problem("sync")).unwrap();
+        assert_eq!(svc.metrics.executions.load(Ordering::Relaxed), 0);
+        // The final nanosecond expires the deadline.
+        clock.advance(Duration::from_nanos(1));
+        let got = h.join().unwrap();
+        let mut direct = NativeEngine::default();
+        assert_eq!(got, direct.batch_accuracy(&p, &batch).unwrap());
+    });
     assert_eq!(svc.metrics.executions.load(Ordering::Relaxed), 1);
     assert_eq!(svc.metrics.deadline_flushes.load(Ordering::Relaxed), 1);
     assert_eq!(svc.metrics.full_flushes.load(Ordering::Relaxed), 0);
@@ -184,23 +312,24 @@ fn coalescer_flushes_on_deadline() {
 
 /// Shutdown with a sub-width batch still waiting on its coalescing window
 /// must flush it (the blocked client gets its results), not strand it.
+/// The window is virtual and the clock never moves, so ONLY the shutdown
+/// drain can be what flushed it.
 #[test]
 fn shutdown_flushes_in_flight_jobs() {
-    let svc = EvalService::spawn_native_with(
+    let clock = Arc::new(ManualClock::new());
+    let svc = EvalService::spawn_native_with_clock(
         8,
-        // Deliberately absurd window: only the shutdown drain can flush
-        // within the test's lifetime.
         &PoolOptions {
             workers: 2,
             coalesce_window_us: 1_000_000,
             engine_threads: 1,
             ..PoolOptions::default()
         },
+        Arc::clone(&clock),
     );
     let p = named_problem("seeds");
     let (id, _) = svc.register(Arc::clone(&p)).unwrap();
 
-    let t0 = Instant::now();
     std::thread::scope(|s| {
         let worker_svc = svc.clone();
         let p2 = Arc::clone(&p);
@@ -210,14 +339,14 @@ fn shutdown_flushes_in_flight_jobs() {
             let mut direct = NativeEngine::default();
             assert_eq!(got, direct.batch_accuracy(&p2, &batch).unwrap());
         });
-        std::thread::sleep(Duration::from_millis(100));
+        // The batch is in the coalescer with its (virtual, never-expiring)
+        // window armed; shutdown must flush it.
+        wait_until("batch coalescing", || {
+            svc.metrics.shards()[id.shard()].coalescing.load(Ordering::Relaxed) == 3
+        });
         svc.shutdown();
         h.join().unwrap();
     });
-    assert!(
-        t0.elapsed() < Duration::from_millis(900),
-        "shutdown must flush pending work early, not wait out the window"
-    );
     assert_eq!(svc.metrics.executions.load(Ordering::Relaxed), 1);
     // A shutdown drain is not a window expiry.
     assert_eq!(svc.metrics.deadline_flushes.load(Ordering::Relaxed), 0);
