@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
         generations: 15,
         margin_max: 5,
         engine: EngineChoice::Native,
+        microbatch: 0,
     };
 
     println!("power budget: {budget_mw} mW  (battery {BATTERY_MW} mW, harvester {HARVESTER_MW} mW)\n");

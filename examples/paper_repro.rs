@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
         generations: gens,
         margin_max: 5,
         engine: EngineChoice::Xla,
+        microbatch: 0,
     };
     let mut runs = Vec::new();
     for d in &datasets {

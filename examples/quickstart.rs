@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         generations: 20,
         margin_max: 5,
         engine: EngineChoice::Native, // no artifacts needed for quickstart
+        microbatch: 0,
     };
     let run = optimize_dataset("seeds", &opts, None)?;
 

@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         generations: 20,
         margin_max: 5,
         engine: EngineChoice::Native,
+        microbatch: 0,
     };
     let run = optimize_dataset(&dataset, &opts, None)?;
     let best = run

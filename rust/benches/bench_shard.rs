@@ -13,6 +13,9 @@
 //!
 //! Acceptance (ISSUE 2): >= 2x throughput with --workers 4 over
 //! --workers 1, and strictly less padding waste with coalescing on.
+//! Acceptance (ISSUE 5): one driver's micro-batched submit/poll beats its
+//! own monolithic blocking loop >= 1.5x on a 4-shard pool and keeps >= 2
+//! shards busy (blocking pins ~1), bit-identically.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -21,6 +24,7 @@ use std::time::Instant;
 use axdt::coordinator::{CoalesceMode, EvalService, PoolOptions, XlaEngine};
 use axdt::fitness::native::NativeEngine;
 use axdt::fitness::{AccuracyEngine, Problem};
+use axdt::hw::synth::TreeApprox;
 use axdt::util::bench::Bench;
 use axdt::util::testbed::{named_problem, random_batch, spawn_killable_native, DRIVER_NAMES};
 
@@ -104,6 +108,68 @@ fn padding_waste(window_us: u64, rounds: usize) -> (f64, String) {
     let report = svc.metrics.render();
     svc.shutdown();
     (waste, report)
+}
+
+/// ISSUE 5 acceptance scenario: ONE driver thread over the 8 spread
+/// problems on a 4-shard pool — monolithic blocking eval vs micro-batched
+/// submit/poll.  Blocking waits out each problem's eval before touching
+/// the next shard, so at most one worker runs at a time; the pipelined
+/// driver submits every problem's micro-batch before collecting any, so
+/// all four shards execute concurrently under the same single thread.
+/// Returns (evals/s, mean shards busy, first-round results, metrics).
+fn one_driver(pipelined: bool, width: usize, rounds: usize) -> (f64, f64, Vec<Vec<f64>>, String) {
+    let svc = EvalService::spawn_native_with(
+        width,
+        &PoolOptions {
+            workers: 4,
+            coalesce_window_us: 200,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
+    );
+    let registered: Vec<(Arc<Problem>, _)> = DRIVER_NAMES
+        .iter()
+        .map(|name| {
+            let p = named_problem(name);
+            let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+            (p, id)
+        })
+        .collect();
+    let batches: Vec<Vec<TreeApprox>> = registered
+        .iter()
+        .enumerate()
+        .map(|(t, (p, _))| random_batch(p, width, 7 + t as u64))
+        .collect();
+    let mut first_round = Vec::new();
+    let t0 = Instant::now();
+    for r in 0..rounds {
+        let results: Vec<Vec<f64>> = if pipelined {
+            let tickets: Vec<_> = registered
+                .iter()
+                .zip(&batches)
+                .map(|((_, id), b)| svc.submit(*id, b.clone()).unwrap())
+                .collect();
+            tickets.into_iter().map(|t| svc.wait(t).unwrap()).collect()
+        } else {
+            registered
+                .iter()
+                .zip(&batches)
+                .map(|((_, id), b)| svc.eval(*id, b.clone()).unwrap())
+                .collect()
+        };
+        if r == 0 {
+            first_round = results;
+        }
+    }
+    let dt = t0.elapsed();
+    // Mean shard occupancy: total backend-busy time across shards over
+    // the wall time — "how many workers did this driver keep running".
+    let busy: u64 = svc.metrics.shards().iter().map(|s| s.busy_ns.load(Ordering::Relaxed)).sum();
+    let occupancy = busy as f64 / dt.as_nanos() as f64;
+    let thr = (DRIVER_NAMES.len() * rounds * width) as f64 / dt.as_secs_f64();
+    let report = svc.metrics.render();
+    svc.shutdown();
+    (thr, occupancy, first_round, report)
 }
 
 /// Failover cost: the multi-driver workload with one of 4 workers killed
@@ -246,6 +312,50 @@ fn main() {
         "shard/speedup workers4_vs_workers1 = {speedup:.2}x (acceptance target >= 2x)"
     ));
     println!("BENCHJSON {{\"bench\":\"shard/speedup_4v1\",\"x\":{speedup:.3}}}");
+
+    // Pipelined submit/poll vs monolithic blocking eval, ONE driver on a
+    // 4-shard pool (acceptance: >= 1.5x and >= 2 shards busy where
+    // blocking keeps ~1, bit-identically).
+    let pb_rounds = if quick { 20 } else { 80 };
+    let (thr_block, occ_block, res_block, rep_block) = one_driver(false, width, pb_rounds);
+    let (thr_pipe, occ_pipe, res_pipe, rep_pipe) = one_driver(true, width, pb_rounds);
+    assert_eq!(res_pipe, res_block, "pipelined must be bit-identical to blocking");
+    {
+        // …and both must match the direct native engine.
+        let mut direct = NativeEngine::default();
+        for (t, name) in DRIVER_NAMES.iter().enumerate() {
+            let p = named_problem(name);
+            let batch = random_batch(&p, width, 7 + t as u64);
+            assert_eq!(
+                res_pipe[t],
+                direct.batch_accuracy(&p, &batch).unwrap(),
+                "pipelined must be bit-identical to native ({name})"
+            );
+        }
+    }
+    let speedup_pipe = thr_pipe / thr_block;
+    b.row(&format!(
+        "shard/pipeline blocking 1-driver: {thr_block:.0} evals/s, \
+         {occ_block:.2} shards busy"
+    ));
+    b.row(&format!("shard/pipeline blocking metrics: {rep_block}"));
+    b.row(&format!(
+        "shard/pipeline ticketed 1-driver: {thr_pipe:.0} evals/s, \
+         {occ_pipe:.2} shards busy"
+    ));
+    b.row(&format!("shard/pipeline ticketed metrics: {rep_pipe}"));
+    b.row(&format!(
+        "shard/pipeline speedup = {speedup_pipe:.2}x, occupancy {occ_block:.2} -> \
+         {occ_pipe:.2} (acceptance >= 1.5x and >= 2 shards busy: {})",
+        speedup_pipe >= 1.5 && occ_pipe >= 2.0
+    ));
+    println!(
+        "BENCHJSON {{\"bench\":\"shard/pipelined_vs_blocking\",\
+         \"blocking_evals_per_s\":{thr_block:.1},\
+         \"pipelined_evals_per_s\":{thr_pipe:.1},\"speedup\":{speedup_pipe:.3},\
+         \"blocking_shards_busy\":{occ_block:.3},\
+         \"pipelined_shards_busy\":{occ_pipe:.3}}}"
+    );
 
     let (thr_failover, report) = failover_throughput(width, iters);
     let retained = thr_failover / throughput[1];

@@ -45,6 +45,10 @@ pub struct RunConfig {
     pub coalesce_window_max_us: u64,
     /// Respawn a dead eval-shard worker once (`--respawn-shards`).
     pub respawn_shards: bool,
+    /// Pipelined-eval micro-batch size (`--microbatch`): how each
+    /// generation's deduped misses are sliced for ticketed submit/poll.
+    /// 0 = auto (pool workers x artifact width for service engines).
+    pub microbatch: usize,
     pub accuracy_loss: f64,
     pub out_dir: String,
 }
@@ -68,6 +72,7 @@ impl Default for RunConfig {
             coalesce_window_us: 200,
             coalesce_window_max_us: 1_000,
             respawn_shards: false,
+            microbatch: 0, // auto
             accuracy_loss: 0.01,
             out_dir: "results".into(),
         }
@@ -108,6 +113,7 @@ impl RunConfig {
         if args.has_flag("respawn-shards") {
             cfg.respawn_shards = true;
         }
+        cfg.microbatch = args.usize_or("microbatch", cfg.microbatch)?;
         cfg.accuracy_loss = args.f64_or("loss", cfg.accuracy_loss)?;
         cfg.out_dir = args.str_or("out", &cfg.out_dir);
         cfg.validate()?;
@@ -139,6 +145,9 @@ impl RunConfig {
         }
         if self.coalesce_window_max_us > 1_000_000 {
             return Err(anyhow!("coalesce-window-max-us must be <= 1000000 (1 s)"));
+        }
+        if self.microbatch > 1_000_000 {
+            return Err(anyhow!("microbatch must be <= 1000000 (0 = auto)"));
         }
         Ok(())
     }
@@ -180,6 +189,7 @@ impl RunConfig {
             generations: self.generations,
             margin_max: self.margin_max,
             engine: self.engine_choice(),
+            microbatch: self.microbatch,
         }
     }
 
@@ -204,6 +214,7 @@ impl RunConfig {
                 Json::num(self.coalesce_window_max_us as f64),
             ),
             ("respawn_shards", Json::Bool(self.respawn_shards)),
+            ("microbatch", Json::num(self.microbatch as f64)),
             ("accuracy_loss", Json::num(self.accuracy_loss)),
             ("out_dir", Json::str(self.out_dir.clone())),
         ])
@@ -244,6 +255,7 @@ impl RunConfig {
                 .get("respawn_shards")
                 .and_then(Json::as_bool)
                 .unwrap_or(d.respawn_shards),
+            microbatch: get_num("microbatch", d.microbatch as f64) as usize,
             accuracy_loss: get_num("accuracy_loss", d.accuracy_loss),
             out_dir: get_str("out_dir", &d.out_dir),
         };
@@ -271,6 +283,7 @@ mod tests {
         opt("coalesce-window-us", ""),
         opt("coalesce-window-max-us", ""),
         flag("respawn-shards", ""),
+        opt("microbatch", ""),
         opt("loss", ""),
         opt("out", ""),
         opt("config", ""),
@@ -366,6 +379,28 @@ mod tests {
         let mut bad2 = RunConfig::default();
         bad2.coalesce_window_us = 2_000_000;
         assert!(bad2.validate().is_err());
+    }
+
+    /// The pipelined-eval knob: CLI parse, JSON round-trip, flow into
+    /// `RunOptions`, and the absurd-value rejection.
+    #[test]
+    fn microbatch_knob_parses_round_trips_and_validates() {
+        let d = RunConfig::default();
+        assert_eq!(d.microbatch, 0, "auto by default");
+        assert_eq!(d.run_options().microbatch, 0);
+
+        let args = Args::parse(&sv(&["optimize", "--microbatch", "96"]), SPEC).unwrap();
+        let cfg = RunConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.microbatch, 96);
+        assert_eq!(cfg.run_options().microbatch, 96);
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // A config without the key keeps the auto default.
+        assert_eq!(RunConfig::from_json("{}").unwrap().microbatch, 0);
+
+        let mut bad = RunConfig::default();
+        bad.microbatch = 2_000_000;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -14,7 +14,7 @@ use anyhow::{anyhow, Result};
 use super::service::{EvalService, XlaEngine};
 use crate::data::generators::{self, DatasetSpec};
 use crate::dt::{train, TrainConfig};
-use crate::fitness::{native::NativeEngine, FitnessEvaluator, Problem};
+use crate::fitness::{native::NativeEngine, EvalStats, FitnessEvaluator, Problem};
 use crate::ga::{run_nsga2, Evaluator, GenStats, NsgaConfig};
 use crate::hw::synth::{self, TreeApprox};
 use crate::hw::{AreaLut, EgtLibrary, HwReport};
@@ -58,6 +58,12 @@ pub struct RunOptions {
     pub generations: usize,
     pub margin_max: u32,
     pub engine: EngineChoice,
+    /// Micro-batch size for the pipelined two-phase eval (CLI
+    /// `--microbatch`): each generation's deduped misses are sliced into
+    /// micro-batches of this size and all submitted before any is
+    /// collected.  0 = auto (the engine's preference: pool workers x
+    /// artifact width for service engines, whole-batch for native).
+    pub microbatch: usize,
 }
 
 impl Default for RunOptions {
@@ -68,6 +74,7 @@ impl Default for RunOptions {
             generations: 30,
             margin_max: 5,
             engine: EngineChoice::Native,
+            microbatch: 0,
         }
     }
 }
@@ -96,6 +103,11 @@ pub struct DatasetRun {
     pub front: Vec<ParetoPoint>,
     pub history: Vec<GenStats>,
     pub evaluations: usize,
+    /// Fitness-evaluator cache effectiveness for this run (requested /
+    /// cache hits / engine evals) — archived next to the front so
+    /// operators see it per dataset, and folded into the shared service's
+    /// `Metrics::render()` line by the driver.
+    pub stats: EvalStats,
     pub elapsed_s: f64,
     pub engine: &'static str,
 }
@@ -123,7 +135,32 @@ impl DatasetRun {
     }
 }
 
-/// Run the full pipeline for one dataset.
+/// Output of the GA phase of a dataset run: everything
+/// [`finish_dataset`] needs to synthesize and package the front.
+///
+/// Holding a `GaPhase` instead of a finished [`DatasetRun`] is what lets
+/// `run_all` release its evaluation slot *before* the (CPU-only) full
+/// synthesis of the Pareto front, overlapping that synthesis with the
+/// next dataset's first generations on the eval service.
+pub struct GaPhase {
+    spec: &'static DatasetSpec,
+    problem: Arc<Problem>,
+    float_accuracy: f64,
+    baseline_accuracy: f64,
+    result: crate::ga::NsgaResult,
+    stats: EvalStats,
+    engine: &'static str,
+    /// Library + area LUT carried over from the GA phase, so synthesis
+    /// reuses the exact area model the search ran with (and skips the
+    /// 508-synth LUT rebuild).
+    lib: EgtLibrary,
+    lut: AreaLut,
+    t0: Instant,
+}
+
+/// Run the full pipeline for one dataset: the GA phase followed by full
+/// front synthesis (see [`optimize_dataset_ga`] / [`finish_dataset`] for
+/// the two-phase form `run_all` pipelines).
 ///
 /// `service` is required for [`EngineChoice::Xla`]; it is also used for
 /// [`EngineChoice::NativeService`] when provided a native-backed service.
@@ -132,6 +169,17 @@ pub fn optimize_dataset(
     opts: &RunOptions,
     service: Option<&EvalService>,
 ) -> Result<DatasetRun> {
+    Ok(finish_dataset(optimize_dataset_ga(dataset_id, opts, service)?))
+}
+
+/// The eval-service-bound half of [`optimize_dataset`]: generate →
+/// normalize → split → train → build [`Problem`] (one exact synthesis =
+/// Table I baseline) → NSGA-II over the chosen accuracy engine.
+pub fn optimize_dataset_ga(
+    dataset_id: &str,
+    opts: &RunOptions,
+    service: Option<&EvalService>,
+) -> Result<GaPhase> {
     let t0 = Instant::now();
     let spec = generators::spec(dataset_id)
         .ok_or_else(|| anyhow!("unknown dataset '{dataset_id}'"))?;
@@ -170,40 +218,78 @@ pub fn optimize_dataset(
         seed: opts.seed,
         ..Default::default()
     };
-    let (result, engine_name): (crate::ga::NsgaResult, &'static str) = match opts.engine {
-        EngineChoice::Native => {
-            let mut ev = FitnessEvaluator::new(&problem, &lut, NativeEngine::default());
-            (run_ga(n_comparators, &ga_cfg, &mut ev), "native")
-        }
-        EngineChoice::NativeService | EngineChoice::Xla => {
-            let service = service.ok_or_else(|| {
-                anyhow!("engine {:?} requires an EvalService", opts.engine)
-            })?;
-            let engine = XlaEngine::register(service, Arc::clone(&problem))?;
-            let mut ev = FitnessEvaluator::new(&problem, &lut, engine);
-            let result = run_ga(n_comparators, &ga_cfg, &mut ev);
-            // A failed batch poisons the run's fitness values: fail this
-            // dataset instead of reporting a front built on placeholders.
-            if let Some(e) = ev.take_error() {
-                return Err(e.context(format!(
-                    "accuracy engine failed while optimizing '{dataset_id}'"
-                )));
+    let (result, stats, engine_name): (crate::ga::NsgaResult, EvalStats, &'static str) =
+        match opts.engine {
+            EngineChoice::Native => {
+                let mut ev = FitnessEvaluator::new(&problem, &lut, NativeEngine::default());
+                ev.microbatch = opts.microbatch;
+                let result = run_ga(n_comparators, &ga_cfg, &mut ev);
+                // The native engine cannot fail today, but the evaluator
+                // stores errors instead of panicking — never let one pass
+                // silently as a front of pessimistic placeholders.
+                if let Some(e) = ev.take_error() {
+                    return Err(e.context(format!(
+                        "accuracy engine failed while optimizing '{dataset_id}'"
+                    )));
+                }
+                (result, ev.stats, "native")
             }
-            (
-                result,
-                if opts.engine == EngineChoice::Xla { "xla" } else { "native-service" },
-            )
-        }
-    };
+            EngineChoice::NativeService | EngineChoice::Xla => {
+                let service = service.ok_or_else(|| {
+                    anyhow!("engine {:?} requires an EvalService", opts.engine)
+                })?;
+                let engine = XlaEngine::register(service, Arc::clone(&problem))?;
+                let mut ev = FitnessEvaluator::new(&problem, &lut, engine);
+                ev.microbatch = opts.microbatch;
+                let result = run_ga(n_comparators, &ga_cfg, &mut ev);
+                // A failed batch poisons the run's fitness values: fail
+                // this dataset instead of reporting a front built on
+                // placeholders.
+                if let Some(e) = ev.take_error() {
+                    return Err(e.context(format!(
+                        "accuracy engine failed while optimizing '{dataset_id}'"
+                    )));
+                }
+                // Cache effectiveness lands next to the coalescing gauges
+                // in the shared service's render line.
+                service.metrics.record_eval_stats(&ev.stats);
+                (
+                    result,
+                    ev.stats,
+                    if opts.engine == EngineChoice::Xla { "xla" } else { "native-service" },
+                )
+            }
+        };
 
-    // Full synthesis of every front design (the "actual" pareto points).
-    let ctx = problem.decode_context(&lut);
-    let mut front: Vec<ParetoPoint> = result
+    Ok(GaPhase {
+        spec,
+        problem,
+        float_accuracy,
+        baseline_accuracy,
+        result,
+        stats,
+        engine: engine_name,
+        lib,
+        lut,
+        t0,
+    })
+}
+
+/// The CPU-only half of [`optimize_dataset`]: full synthesis of every
+/// front design (the "actual" pareto points) and [`DatasetRun`]
+/// packaging.  Needs no eval service, which is exactly why callers may
+/// run it after releasing their evaluation slot.
+pub fn finish_dataset(phase: GaPhase) -> DatasetRun {
+    let lib = &phase.lib;
+    let lut = &phase.lut;
+    let ctx = phase.problem.decode_context(lut);
+    let mut front: Vec<ParetoPoint> = phase
+        .result
         .pareto_front()
         .into_iter()
         .map(|s| {
             let approx = s.chromosome.decode(&ctx);
-            let measured = synth::synth_tree(&problem.tree, &approx).netlist.report(&lib);
+            let measured = synth::synth_tree(&phase.problem.tree, &approx).netlist.report(lib);
             ParetoPoint {
                 accuracy: 1.0 - s.objectives[0],
                 est_area_mm2: s.objectives[1],
@@ -216,18 +302,19 @@ pub fn optimize_dataset(
     // panic the whole run after the GA already finished.
     front.sort_by(|a, b| b.accuracy.total_cmp(&a.accuracy));
 
-    Ok(DatasetRun {
-        spec,
-        float_accuracy,
-        baseline_accuracy,
-        baseline: problem.exact_report,
-        n_comparators,
+    DatasetRun {
+        spec: phase.spec,
+        float_accuracy: phase.float_accuracy,
+        baseline_accuracy: phase.baseline_accuracy,
+        baseline: phase.problem.exact_report,
+        n_comparators: phase.problem.n_comparators(),
         front,
-        history: result.history,
-        evaluations: result.evaluations,
-        elapsed_s: t0.elapsed().as_secs_f64(),
-        engine: engine_name,
-    })
+        history: phase.result.history,
+        evaluations: phase.result.evaluations,
+        stats: phase.stats,
+        elapsed_s: phase.t0.elapsed().as_secs_f64(),
+        engine: phase.engine,
+    }
 }
 
 fn run_ga(
@@ -249,6 +336,7 @@ mod tests {
             generations: 6,
             margin_max: 5,
             engine: EngineChoice::Native,
+            microbatch: 0,
         }
     }
 
@@ -319,6 +407,49 @@ mod tests {
         svc.shutdown();
     }
 
+    /// The two-phase split is lossless (running the GA phase and the
+    /// synthesis phase separately produces exactly `optimize_dataset`'s
+    /// result) and a micro-batched pipelined service run stays
+    /// bit-identical to the native engine, with its [`EvalStats`]
+    /// archived on the run and folded into the service metrics.
+    #[test]
+    fn ga_finish_split_and_microbatching_match_monolithic() {
+        let whole = optimize_dataset("seeds", &quick_opts(), None).unwrap();
+        let split = finish_dataset(optimize_dataset_ga("seeds", &quick_opts(), None).unwrap());
+        assert_eq!(whole.front.len(), split.front.len());
+        for (a, b) in whole.front.iter().zip(&split.front) {
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.est_area_mm2, b.est_area_mm2);
+        }
+
+        let svc = EvalService::spawn_native(8);
+        let piped = optimize_dataset(
+            "seeds",
+            &RunOptions {
+                engine: EngineChoice::NativeService,
+                microbatch: 3,
+                ..quick_opts()
+            },
+            Some(&svc),
+        )
+        .unwrap();
+        assert_eq!(whole.front.len(), piped.front.len());
+        for (a, b) in whole.front.iter().zip(&piped.front) {
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.est_area_mm2, b.est_area_mm2);
+        }
+        assert_eq!(piped.stats.requested, 16 + 6 * 16);
+        assert_eq!(whole.stats.requested, piped.stats.requested);
+        assert_eq!(whole.stats.engine_evals, piped.stats.engine_evals);
+        let render = svc.metrics.render();
+        assert!(render.contains("eval: requested="), "{render}");
+        assert!(
+            svc.metrics.tickets_submitted.load(std::sync::atomic::Ordering::Relaxed) > 0,
+            "pipelined run must ride the ticket API"
+        );
+        svc.shutdown();
+    }
+
     #[test]
     fn best_within_loss_selection() {
         let run = optimize_dataset("seeds", &quick_opts(), None).unwrap();
@@ -376,6 +507,7 @@ mod tests {
             ],
             history: Vec::new(),
             evaluations: 0,
+            stats: EvalStats::default(),
             elapsed_s: 0.0,
             engine: "native",
         };

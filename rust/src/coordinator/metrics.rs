@@ -10,6 +10,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
+use crate::fitness::EvalStats;
 use crate::util::stats::Summary;
 
 /// Lock a mutex, recovering from poison: a thread that panicked while
@@ -54,6 +55,12 @@ pub struct ShardMetrics {
     pub executions: AtomicU64,
     /// Chromosomes this shard evaluated (pre-padding).
     pub chromosomes: AtomicU64,
+    /// Total backend-execution time (ns) this shard's worker has spent
+    /// inside `Backend::eval`.  `busy_ns / wall_ns` is the shard's
+    /// occupancy; summed across shards it is how many workers the
+    /// workload kept busy on average (the pipelined-vs-blocking bench's
+    /// acceptance gauge).
+    pub busy_ns: AtomicU64,
     /// Chromosomes currently queued in this shard's coalescer (waiting
     /// for a width-full, deadline, or all-drivers flush).  Tests use this
     /// gauge to observe "the batch reached the coalescer" without sleeps.
@@ -101,10 +108,33 @@ pub struct Metrics {
     pub stranded_requests: AtomicU64,
     /// Dead workers successfully respawned (`--respawn-shards`).
     pub respawns: AtomicU64,
+    /// Tickets issued by the two-phase submit/wait API.  The blocking
+    /// `eval` is `wait(submit(..))`, so every evaluation counts.
+    pub tickets_submitted: AtomicU64,
+    /// Tickets currently in flight (submitted, not yet collected or
+    /// dropped).  Saturates at 0, like the queue-depth gauge.
+    pub tickets_in_flight: AtomicU64,
+    /// Highest in-flight ticket count observed — how deep clients
+    /// actually pipeline.
+    pub tickets_peak: AtomicU64,
+    /// Fitness-evaluator totals across the runs this service served
+    /// (recorded per dataset by the driver): chromosome evaluations
+    /// requested by the GA…
+    pub eval_requested: AtomicU64,
+    /// …of which the phenotype cache answered without the engine…
+    pub eval_cache_hits: AtomicU64,
+    /// …and the engine actually evaluated (post-dedup misses).
+    pub eval_engine_evals: AtomicU64,
     /// Per-execution latency (ns).
     latency: Mutex<Summary>,
     /// Real (pre-padding) width of each executed batch.
     batch_width: Mutex<Summary>,
+    /// Chromosomes per submitted ticket (the micro-batch width clients
+    /// actually pipeline at).
+    microbatch_width: Mutex<Summary>,
+    /// Submit→collect latency per ticket (ns): queueing + coalescing +
+    /// execution, as the client experiences it.
+    ticket_latency: Mutex<Summary>,
     /// Per-shard counters (empty for a legacy/default instance).
     shards: Vec<ShardMetrics>,
 }
@@ -168,7 +198,41 @@ impl Metrics {
         if let Some(s) = self.shards.get(shard) {
             s.executions.fetch_add(1, Ordering::Relaxed);
             s.chromosomes.fetch_add(real as u64, Ordering::Relaxed);
+            s.busy_ns.fetch_add(elapsed_ns, Ordering::Relaxed);
         }
+    }
+
+    /// A ticket was issued for a batch of `width` chromosomes (the
+    /// submit half of the two-phase eval).
+    pub fn ticket_submitted(&self, width: u64) {
+        self.tickets_submitted.fetch_add(1, Ordering::Relaxed);
+        let in_flight = self.tickets_in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.tickets_peak.fetch_max(in_flight, Ordering::Relaxed);
+        lock_recover(&self.microbatch_width).push(width as f64);
+    }
+
+    /// A ticket's result was collected `latency_ns` after its submit.
+    pub fn ticket_collected(&self, latency_ns: u64) {
+        lock_recover(&self.ticket_latency).push(latency_ns as f64);
+    }
+
+    /// A ticket left flight (collected or dropped unredeemed).
+    /// Saturating, like the queue-depth gauge.
+    pub fn ticket_done(&self) {
+        let _ = self.tickets_in_flight.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |d| d.checked_sub(1),
+        );
+    }
+
+    /// Fold one dataset run's [`EvalStats`] into the service-wide
+    /// totals, so cache effectiveness shows up in [`Metrics::render`]
+    /// next to the coalescing gauges.
+    pub fn record_eval_stats(&self, stats: &EvalStats) {
+        self.eval_requested.fetch_add(stats.requested as u64, Ordering::Relaxed);
+        self.eval_cache_hits.fetch_add(stats.cache_hits as u64, Ordering::Relaxed);
+        self.eval_engine_evals.fetch_add(stats.engine_evals as u64, Ordering::Relaxed);
     }
 
     /// A job was queued on `shard` (called by the client facade).
@@ -260,6 +324,16 @@ impl Metrics {
         lock_recover(&self.batch_width).clone()
     }
 
+    /// Distribution of chromosomes per submitted ticket.
+    pub fn microbatch_width_summary(&self) -> Summary {
+        lock_recover(&self.microbatch_width).clone()
+    }
+
+    /// Distribution of per-ticket submit→collect latencies (ns).
+    pub fn ticket_latency_summary(&self) -> Summary {
+        lock_recover(&self.ticket_latency).clone()
+    }
+
     /// Fraction of executed chromosome slots that were padding.
     pub fn padding_waste(&self) -> f64 {
         let real = self.chromosomes.load(Ordering::Relaxed) as f64;
@@ -326,6 +400,32 @@ impl Metrics {
                 }
             }
             s.push(']');
+        }
+        // Two-phase eval surface: only rendered once a ticket exists, so
+        // legacy instances keep their exact line.
+        let tickets = self.tickets_submitted.load(Ordering::Relaxed);
+        if tickets > 0 {
+            let tl = self.ticket_latency_summary();
+            let mb = self.microbatch_width_summary();
+            let ticket_p50 = if tl.is_empty() { 0.0 } else { tl.median() };
+            s.push_str(&format!(
+                " tickets={} inflight={} peak={} ubatch_p50={:.0} ticket_p50={}",
+                tickets,
+                self.tickets_in_flight.load(Ordering::Relaxed),
+                self.tickets_peak.load(Ordering::Relaxed),
+                if mb.is_empty() { 0.0 } else { mb.median() },
+                crate::util::stats::fmt_duration_ns(ticket_p50),
+            ));
+        }
+        // Cache effectiveness, recorded per dataset by the driver.
+        let requested = self.eval_requested.load(Ordering::Relaxed);
+        if requested > 0 {
+            s.push_str(&format!(
+                " eval: requested={} cache_hits={} engine_evals={}",
+                requested,
+                self.eval_cache_hits.load(Ordering::Relaxed),
+                self.eval_engine_evals.load(Ordering::Relaxed),
+            ));
         }
         let deaths = self.shard_deaths.load(Ordering::Relaxed);
         if deaths > 0 {
@@ -451,6 +551,41 @@ mod tests {
         m.coalescing_add(9, 1);
         m.coalescing_sub(9, 1);
         m.coalescing_reset(9);
+    }
+
+    /// The two-phase-eval surface: ticket gauges saturate like the other
+    /// gauges, render only appears once a ticket exists, per-shard busy
+    /// time accumulates, and driver-recorded [`EvalStats`] fold into the
+    /// render line.
+    #[test]
+    fn ticket_gauges_busy_time_and_eval_stats_render() {
+        let m = Metrics::with_shards(1);
+        assert!(!m.render().contains("tickets="), "{}", m.render());
+        m.ticket_submitted(5);
+        m.ticket_submitted(7);
+        assert_eq!(m.tickets_in_flight.load(Ordering::Relaxed), 2);
+        assert_eq!(m.tickets_peak.load(Ordering::Relaxed), 2);
+        assert_eq!(m.microbatch_width_summary().len(), 2);
+        m.ticket_collected(1_000);
+        m.ticket_done();
+        assert_eq!(m.tickets_in_flight.load(Ordering::Relaxed), 1);
+        assert_eq!(m.ticket_latency_summary().len(), 1);
+        let r = m.render();
+        assert!(r.contains("tickets=2 inflight=1 peak=2"), "{r}");
+        // Saturates instead of wrapping (abandoned-ticket double count).
+        m.ticket_done();
+        m.ticket_done();
+        assert_eq!(m.tickets_in_flight.load(Ordering::Relaxed), 0);
+
+        assert!(!m.render().contains("eval:"), "{}", m.render());
+        m.record_eval_stats(&EvalStats { requested: 10, cache_hits: 4, engine_evals: 6 });
+        m.record_eval_stats(&EvalStats { requested: 10, cache_hits: 9, engine_evals: 1 });
+        let r = m.render();
+        assert!(r.contains("eval: requested=20 cache_hits=13 engine_evals=7"), "{r}");
+
+        m.record_shard_execution(0, 8, 8, 2_000, 1, FlushKind::Full);
+        m.record_shard_execution(0, 4, 8, 3_000, 1, FlushKind::Deadline);
+        assert_eq!(m.shards()[0].busy_ns.load(Ordering::Relaxed), 5_000);
     }
 
     #[test]

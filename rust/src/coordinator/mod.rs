@@ -11,8 +11,13 @@
 //!   to a stable shard ([`shard::ProblemId`] records it), and each worker
 //!   fronts its backend with a coalescer that merges sub-width batches
 //!   from concurrent drivers into one padded execution (flushing on
-//!   width-full or a small deadline).  Tokio is not available in this
-//!   image, so the event loops are plain `std::sync::mpsc` + threads.
+//!   width-full or a small deadline).  Evaluation is two-phase:
+//!   `submit` returns a [`shard::Ticket`] without blocking, `wait`
+//!   redeems it (in any order), and the blocking `eval` is
+//!   `wait(submit(..))` — one driver can keep every shard busy by
+//!   submitting micro-batches before collecting.  Tokio is not available
+//!   in this image, so the event loops are plain `std::sync::mpsc` +
+//!   threads.
 //!   Workers are panic-safe: a backend panic downs only its shard (typed
 //!   [`service::ServiceError::ShardDown`] to everyone it strands),
 //!   registrations re-route to live shards, and `--respawn-shards` opts
@@ -33,7 +38,11 @@
 //!   per-shard queue depth, latency) surfaced in the run report.
 //! * [`driver`] — the per-dataset pipeline: generate → split → train →
 //!   [`crate::fitness::Problem`] → NSGA-II → pareto front with *measured*
-//!   (fully synthesized) area/power for every front design.
+//!   (fully synthesized) area/power for every front design.  Split as
+//!   [`driver::optimize_dataset_ga`] (eval-service-bound) +
+//!   [`driver::finish_dataset`] (CPU-only synthesis), so multi-dataset
+//!   runs overlap one dataset's front synthesis with the next one's
+//!   generations.
 //!
 //! [`AccuracyEngine`]: crate::fitness::AccuracyEngine
 
@@ -42,9 +51,13 @@ pub mod metrics;
 pub mod service;
 pub mod shard;
 
-pub use driver::{optimize_dataset, DatasetRun, EngineChoice, ParetoPoint, RunOptions};
+pub use driver::{
+    finish_dataset, optimize_dataset, optimize_dataset_ga, DatasetRun, EngineChoice, GaPhase,
+    ParetoPoint, RunOptions,
+};
 pub use metrics::{FlushKind, Metrics, ShardMetrics};
 pub use service::{EvalService, ServiceError, XlaEngine};
 pub use shard::{
     rendezvous_route, rendezvous_score, CoalesceMode, EvalShardPool, PoolOptions, ProblemId,
+    Ticket,
 };

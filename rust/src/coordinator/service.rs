@@ -14,6 +14,13 @@
 //! the facade's `register`/`eval` wrap it into `anyhow` for existing
 //! callers, and [`XlaEngine`] heals stale registrations transparently
 //! (re-register once + retry) before surfacing anything.
+//!
+//! Evaluation is two-phase: `submit`/`submit_typed` return a [`Ticket`]
+//! without blocking, `wait`/`wait_typed` redeem it, and the blocking
+//! `eval` is `wait(submit(..))`.  [`XlaEngine`] exposes the same split
+//! through [`AccuracyEngine::submit_accuracy`]/[`AccuracyEngine::collect`]
+//! — with the re-register-and-retry heal on the collect side, where a
+//! shard dying with tickets in flight first becomes visible.
 
 use std::sync::Arc;
 
@@ -22,11 +29,11 @@ use anyhow::{anyhow, Context as _, Result};
 use super::metrics::Metrics;
 use super::shard::{EvalShardPool, PoolOptions};
 use crate::fitness::encode::Bucket;
-use crate::fitness::{AccuracyEngine, Problem};
+use crate::fitness::{AccuracyEngine, AccuracyTicket, Problem};
 use crate::hw::synth::TreeApprox;
 use crate::util::clock::Clock;
 
-pub use super::shard::ProblemId;
+pub use super::shard::{ProblemId, Ticket};
 
 /// Typed service-layer failure (the ROADMAP's error-hardening item).
 ///
@@ -221,6 +228,32 @@ impl EvalService {
         self.pool.eval(id, batch)
     }
 
+    /// Phase one of the two-phase eval: enqueue a batch on its shard and
+    /// return a [`Ticket`] without blocking (see
+    /// [`EvalShardPool::submit`]).
+    pub fn submit(&self, id: ProblemId, batch: Vec<TreeApprox>) -> Result<Ticket> {
+        Ok(self.submit_typed(id, batch)?)
+    }
+
+    /// Typed-result variant of [`Self::submit`].
+    pub fn submit_typed(
+        &self,
+        id: ProblemId,
+        batch: Vec<TreeApprox>,
+    ) -> Result<Ticket, ServiceError> {
+        self.pool.submit(id, batch)
+    }
+
+    /// Phase two: block on a ticket's result (see [`EvalShardPool::wait`]).
+    pub fn wait(&self, ticket: Ticket) -> Result<Vec<f64>> {
+        Ok(self.wait_typed(ticket)?)
+    }
+
+    /// Typed-result variant of [`Self::wait`].
+    pub fn wait_typed(&self, ticket: Ticket) -> Result<Vec<f64>, ServiceError> {
+        self.pool.wait(ticket)
+    }
+
     /// Ask the workers to drain pending jobs and exit (idempotent;
     /// dropping all handles also works).
     pub fn shutdown(&self) {
@@ -241,9 +274,27 @@ pub struct XlaEngine {
     /// Kept for transparent re-registration on a stale [`ProblemId`].
     problem: Arc<Problem>,
     id: ProblemId,
+    /// Batching width of the problem's registration (the routed bucket's
+    /// P, or the native pool's emulated width) — sizes the preferred
+    /// pipelining micro-batch.  0 when unknown.
+    width: usize,
     /// Bucket the problem routed to ("native" for the native backend) —
     /// kept for error messages.
     bucket_name: String,
+}
+
+/// [`XlaEngine`]'s parked submit state: the pool ticket plus the batch it
+/// covers, retained so a stale-id failure at collect time (a shard dying
+/// with the ticket in flight) can re-register and repeat the batch.  The
+/// id the ticket was submitted under gates the heal: with K tickets in
+/// flight on a dying shard, only the FIRST collected failure re-registers
+/// — the rest see the registration already moved and just retry, so one
+/// real driver never inflates the coalescing group's member count K-fold
+/// (which would disarm the adaptive all-drivers early flush forever).
+struct InFlightBatch {
+    ticket: Ticket,
+    id: ProblemId,
+    batch: Vec<TreeApprox>,
 }
 
 impl XlaEngine {
@@ -254,6 +305,7 @@ impl XlaEngine {
             service: service.clone(),
             problem,
             id,
+            width: registration_width(service, &bucket),
             bucket_name: bucket_label(&bucket),
         })
     }
@@ -262,41 +314,115 @@ impl XlaEngine {
     pub fn shard(&self) -> usize {
         self.id.shard()
     }
+
+    /// Heal a stale registration: re-register (routing around any dead
+    /// shard) and refresh the pinned id, width and bucket label.
+    fn reregister(&mut self) -> Result<(), ServiceError> {
+        let (id, bucket) = self.service.register_typed(Arc::clone(&self.problem))?;
+        self.id = id;
+        self.width = registration_width(&self.service, &bucket);
+        self.bucket_name = bucket_label(&bucket);
+        Ok(())
+    }
+
+    fn batch_context(&self, n: usize) -> String {
+        format!(
+            "eval service failed on a batch of {} for problem '{}' (bucket {})",
+            n, self.problem.name, self.bucket_name
+        )
+    }
+}
+
+/// Batching width of a fresh registration: the routed bucket's P, else
+/// the pool's native width hint (0 when neither is known).
+fn registration_width(service: &EvalService, bucket: &Option<Bucket>) -> usize {
+    bucket.as_ref().map(|b| b.p).unwrap_or_else(|| service.pool().width_hint())
 }
 
 impl AccuracyEngine for XlaEngine {
-    /// Batched accuracy through the service.  A stale registration
-    /// (foreign/unknown [`ProblemId`], e.g. after a service failover) is
-    /// healed transparently: re-register once and retry before surfacing
-    /// anything.  Remaining failures (backend execution error, service
-    /// shutdown) propagate as `Err` naming the problem and its bucket
-    /// instead of aborting the whole process — a multi-dataset
-    /// optimization run survives one failing dataset.
+    /// Batched accuracy through the service: exactly
+    /// [`Self::collect`] of [`Self::submit_accuracy`], so the blocking
+    /// path and the pipelined path cannot diverge.  A stale registration
+    /// (foreign/unknown [`ProblemId`], dead shard) is healed
+    /// transparently — re-register once and retry — on whichever side it
+    /// surfaces.  Remaining failures propagate as `Err` naming the
+    /// problem and its bucket instead of aborting the whole process — a
+    /// multi-dataset optimization run survives one failing dataset.
     fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Result<Vec<f64>> {
+        let ticket = self.submit_accuracy(problem, batch);
+        self.collect(ticket)
+    }
+
+    /// Submit the batch to the problem's shard and park the pool ticket.
+    /// A synchronously-detected stale id (the shard died before this
+    /// batch) heals here, before anything is in flight; submit failures
+    /// ride inside a ready ticket and surface at [`Self::collect`].
+    fn submit_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> AccuracyTicket {
         if problem.name != self.problem.name {
-            return Err(anyhow!(
+            return AccuracyTicket::ready(Err(anyhow!(
                 "engine registered for problem '{}' but asked to evaluate '{}'",
                 self.problem.name,
                 problem.name
-            ));
+            )));
         }
-        let res = match self.service.eval_typed(self.id, batch.to_vec()) {
+        let submitted = match self.service.submit_typed(self.id, batch.to_vec()) {
+            Err(e) if e.is_stale_id() => match self.reregister() {
+                Ok(()) => self.service.submit_typed(self.id, batch.to_vec()),
+                Err(e) => Err(e),
+            },
+            other => other,
+        };
+        match submitted {
+            Ok(ticket) => AccuracyTicket::engine(Box::new(InFlightBatch {
+                ticket,
+                id: self.id,
+                batch: batch.to_vec(),
+            })),
+            Err(e) => {
+                let ctx = self.batch_context(batch.len());
+                AccuracyTicket::ready(Err(anyhow::Error::from(e).context(ctx)))
+            }
+        }
+    }
+
+    /// Redeem a parked pool ticket.  A stale-id failure here means the
+    /// shard died with the batch in flight: heal by re-registering
+    /// (routing to a live shard) and repeating the retained batch —
+    /// blocking is fine, the pipeline is already stalled on this ticket.
+    fn collect(&mut self, ticket: AccuracyTicket) -> Result<Vec<f64>> {
+        let ticket = match ticket.try_ready() {
+            Ok(res) => return res,
+            Err(t) => t,
+        };
+        let Ok(state) = ticket.into_engine_state::<InFlightBatch>() else {
+            return Err(anyhow!("engine 'xla-service' was handed a ticket another engine issued"));
+        };
+        let InFlightBatch { ticket, id, batch } = *state;
+        let n = batch.len();
+        let res = match self.service.wait_typed(ticket) {
             Err(e) if e.is_stale_id() => {
-                let (id, bucket) = self.service.register_typed(Arc::clone(&self.problem))?;
-                self.id = id;
-                self.bucket_name = bucket_label(&bucket);
-                self.service.eval_typed(self.id, batch.to_vec())
+                // Re-register once — unless an earlier ticket's heal (or a
+                // submit-side heal) already moved the registration off the
+                // dead shard, in which case retrying under the current id
+                // is enough.
+                if self.id == id {
+                    self.reregister()?;
+                }
+                self.service.eval_typed(self.id, batch)
             }
             other => other,
         };
-        res.with_context(|| {
-            format!(
-                "eval service failed on a batch of {} for problem '{}' (bucket {})",
-                batch.len(),
-                self.problem.name,
-                self.bucket_name
-            )
-        })
+        res.with_context(|| self.batch_context(n))
+    }
+
+    /// Pipelining hint: enough chromosomes to fill every pool worker's
+    /// artifact width at once.
+    fn preferred_microbatch(&self) -> usize {
+        if self.width == 0 {
+            0
+        } else {
+            self.service.workers() * self.width
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -416,6 +542,39 @@ mod tests {
 
         // Initial + two healing re-registrations.
         assert_eq!(svc.metrics.problems.load(Ordering::Relaxed), 3);
+        svc.shutdown();
+    }
+
+    /// The engine's two-phase path: several sub-width micro-batches
+    /// submitted before any is collected come back (out of order) exactly
+    /// as the direct native engine computes them, and a stale id at
+    /// submit time heals without the caller noticing — same contract as
+    /// the blocking path, same re-register accounting.
+    #[test]
+    fn engine_submit_collect_pipelines_and_heals() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = Arc::new(small_problem(&lut));
+        let svc = EvalService::spawn_native(8);
+        let mut engine = XlaEngine::register(&svc, Arc::clone(&p)).unwrap();
+        assert_eq!(engine.preferred_microbatch(), 8, "1 worker x width 8");
+
+        let batch = random_batch(&p, 10, 23);
+        let mut direct = NativeEngine::default();
+        let want = direct.batch_accuracy(&p, &batch).unwrap();
+
+        let t1 = engine.submit_accuracy(&p, &batch[..4]);
+        let t2 = engine.submit_accuracy(&p, &batch[4..]);
+        assert_eq!(engine.collect(t2).unwrap(), want[4..].to_vec());
+        assert_eq!(engine.collect(t1).unwrap(), want[..4].to_vec());
+
+        // Stale id at submit: heals before anything is in flight.
+        engine.id = ProblemId { service: 0, shard: 0, index: 0 };
+        let t = engine.submit_accuracy(&p, &batch);
+        assert_eq!(engine.collect(t).unwrap(), want);
+        assert_eq!(svc.metrics.problems.load(Ordering::Relaxed), 2);
+        // Ticket gauges saw the pipelined submits (plus the heal's).
+        assert!(svc.metrics.tickets_submitted.load(Ordering::Relaxed) >= 3);
+        assert_eq!(svc.metrics.tickets_in_flight.load(Ordering::Relaxed), 0);
         svc.shutdown();
     }
 

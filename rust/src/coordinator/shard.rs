@@ -44,6 +44,21 @@
 //!   pays ~zero added latency while still coalescing fully; steady
 //!   trickles get a window matched to the observed arrival rate.
 //!
+//! # Two-phase eval ([`EvalShardPool::submit`] / [`EvalShardPool::wait`])
+//!
+//! Evaluation is ticketed: `submit` enqueues a batch on its problem's
+//! shard and returns a [`Ticket`] immediately; `wait` blocks on that
+//! ticket's result.  The blocking [`EvalShardPool::eval`] is literally
+//! `wait(submit(..))`, so both phases share one code path — routing,
+//! coalescing groups, clock-driven deadlines, and ShardDown/failover
+//! semantics are identical whichever entry point a client uses.  A single
+//! driver that submits micro-batches for several problems before
+//! collecting any keeps every shard busy at once instead of ping-ponging
+//! one request at a time; tickets may be collected in any order (results
+//! are matched by reply channel, not arrival order), and a shard dying
+//! with tickets in flight fails each of them with the healable
+//! [`ServiceError::ShardDown`].
+//!
 //! # Time
 //!
 //! Workers never read `Instant::now()`: every deadline decision goes
@@ -84,7 +99,7 @@ use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, Weak};
 use std::time::Duration;
 
@@ -245,6 +260,47 @@ impl ProblemId {
 /// Process-unique pool tokens (0 is never issued, so a forged
 /// `ProblemId` default can't match).
 static NEXT_POOL_TOKEN: AtomicU32 = AtomicU32::new(1);
+
+/// In-flight evaluation handle: phase one of the two-phase eval API.
+/// Issued by [`EvalShardPool::submit`], redeemed (in any order) by
+/// [`EvalShardPool::wait`].  Dropping a ticket without waiting abandons
+/// the request — the worker still executes it and discards the reply —
+/// and releases the in-flight gauge.
+pub struct Ticket {
+    repr: TicketRepr,
+}
+
+enum TicketRepr {
+    /// Empty batches resolve immediately; nothing was ever sent.
+    Empty,
+    Pending {
+        shard: usize,
+        rx: mpsc::Receiver<Result<Vec<f64>, ServiceError>>,
+        /// Submit timestamp (pool clock ns) for the submit→collect gauge.
+        submitted_ns: u64,
+        /// RAII release of the in-flight ticket gauge (collected OR
+        /// abandoned, the gauge must come back down).
+        gauge: TicketGauge,
+    },
+}
+
+struct TicketGauge(Arc<Metrics>);
+
+impl Drop for TicketGauge {
+    fn drop(&mut self) {
+        self.0.ticket_done();
+    }
+}
+
+impl Ticket {
+    /// The shard serving this ticket (`None` for the empty ticket).
+    pub fn shard(&self) -> Option<usize> {
+        match &self.repr {
+            TicketRepr::Empty => None,
+            TicketRepr::Pending { shard, .. } => Some(*shard),
+        }
+    }
+}
 
 /// Coalescing policy selector (CLI `--coalesce adaptive|fixed|off`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -467,6 +523,11 @@ struct PoolShared {
     metrics: Arc<Metrics>,
     factory: Box<dyn Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync>,
     slots: Vec<ShardSlot>,
+    /// Emulated artifact width of a native pool (set after spawn by the
+    /// native constructors; 0 when width is per-bucket, i.e. XLA pools or
+    /// custom test backends).  Client-side hint only — workers never read
+    /// it — used by engines to size pipelined micro-batches.
+    width_hint: AtomicUsize,
 }
 
 /// Client handle to a pool of shard workers (cheap to clone; dropping all
@@ -501,13 +562,19 @@ impl EvalShardPool {
         } else {
             opts.engine_threads
         };
-        Self::spawn_with_clock(workers, opts.policy(), opts.respawn, clock, move |_shard| {
-            Ok(Box::new(NativeBackend {
-                engine: NativeEngine::with_threads(engine_threads),
-                width,
-            }) as Box<dyn Backend>)
-        })
-        .expect("native backend construction cannot fail")
+        let pool =
+            Self::spawn_with_clock(workers, opts.policy(), opts.respawn, clock, move |_shard| {
+                Ok(Box::new(NativeBackend {
+                    engine: NativeEngine::with_threads(engine_threads),
+                    width,
+                }) as Box<dyn Backend>)
+            })
+            .expect("native backend construction cannot fail");
+        // Client-side micro-batch sizing hint (every registration on a
+        // native pool batches at this width); XLA pools leave it 0 and
+        // clients size from the routed bucket instead.
+        pool.shared.width_hint.store(width, Ordering::Relaxed);
+        pool
     }
 
     /// Spawn a PJRT-backed pool (artifacts required); each worker builds
@@ -565,6 +632,7 @@ impl EvalShardPool {
             metrics: Arc::clone(&metrics),
             factory: Box::new(factory),
             slots,
+            width_hint: AtomicUsize::new(0),
         });
         // Seed the per-shard window gauge so `render()` shows the
         // effective window before the first flush decision: the fixed
@@ -679,17 +747,22 @@ impl EvalShardPool {
         Err(last)
     }
 
-    /// Evaluate a batch (blocking until the owning shard replies).  A dead
-    /// shard answers immediately with [`ServiceError::ShardDown`] — a
-    /// stale-id error, so engine clients heal by re-registering (which
-    /// routes to a live shard).
-    pub fn eval(
+    /// Phase one of the two-phase eval: enqueue `batch` on its problem's
+    /// shard and return a [`Ticket`] without waiting for the result.
+    /// Submitting micro-batches for several problems before collecting any
+    /// keeps every shard busy from one driver thread (the blocking
+    /// [`Self::eval`] is literally `wait(submit(..))`).  Synchronously
+    /// detectable failures (foreign/unknown id, dead shard, shutdown)
+    /// surface here; execution failures surface at [`Self::wait`].  The
+    /// send only blocks when the shard's bounded queue is full — natural
+    /// backpressure, drained independently by the worker.
+    pub fn submit(
         &self,
         id: ProblemId,
         mut batch: Vec<TreeApprox>,
-    ) -> Result<Vec<f64>, ServiceError> {
+    ) -> Result<Ticket, ServiceError> {
         if batch.is_empty() {
-            return Ok(Vec::new());
+            return Ok(Ticket { repr: TicketRepr::Empty });
         }
         if id.service != self.token {
             return Err(ServiceError::ForeignProblemId {
@@ -706,6 +779,7 @@ impl EvalShardPool {
             return Err(ServiceError::UnknownProblemId { id, registered: 0 });
         }
         let slot = &self.shared.slots[shard];
+        let width = batch.len();
         // Two attempts: a send can race a respawn swapping the sender (the
         // old channel closes while the slot is already alive again).
         for _attempt in 0..2 {
@@ -716,10 +790,15 @@ impl EvalShardPool {
             self.metrics.shard_enqueued(shard);
             match slot.sender().send(Msg::Eval { id, batch, reply: reply_tx }) {
                 Ok(()) => {
-                    return match reply_rx.recv() {
-                        Ok(res) => res,
-                        Err(_) => Err(slot.reply_dropped_error(shard)),
-                    };
+                    self.metrics.ticket_submitted(width as u64);
+                    return Ok(Ticket {
+                        repr: TicketRepr::Pending {
+                            shard,
+                            rx: reply_rx,
+                            submitted_ns: self.shared.clock.now_ns(),
+                            gauge: TicketGauge(Arc::clone(&self.metrics)),
+                        },
+                    });
                 }
                 Err(mpsc::SendError(msg)) => {
                     self.metrics.shard_dequeued(shard);
@@ -733,6 +812,43 @@ impl EvalShardPool {
         } else {
             ServiceError::ShardDown { shard }
         })
+    }
+
+    /// Phase two: block until `ticket`'s batch has executed and return its
+    /// accuracies.  Tickets may be collected in any order — results are
+    /// matched by reply channel, not arrival order.  A shard dying with
+    /// the ticket in flight answers with the healable
+    /// [`ServiceError::ShardDown`].
+    pub fn wait(&self, ticket: Ticket) -> Result<Vec<f64>, ServiceError> {
+        match ticket.repr {
+            TicketRepr::Empty => Ok(Vec::new()),
+            TicketRepr::Pending { shard, rx, submitted_ns, gauge } => {
+                let res = match rx.recv() {
+                    Ok(res) => res,
+                    Err(_) => Err(self.shared.slots[shard].reply_dropped_error(shard)),
+                };
+                self.metrics
+                    .ticket_collected(self.shared.clock.now_ns().saturating_sub(submitted_ns));
+                drop(gauge);
+                res
+            }
+        }
+    }
+
+    /// Evaluate a batch (blocking until the owning shard replies): exactly
+    /// [`Self::wait`] of [`Self::submit`].  A dead shard answers
+    /// immediately with [`ServiceError::ShardDown`] — a stale-id error, so
+    /// engine clients heal by re-registering (which routes to a live
+    /// shard).
+    pub fn eval(&self, id: ProblemId, batch: Vec<TreeApprox>) -> Result<Vec<f64>, ServiceError> {
+        self.wait(self.submit(id, batch)?)
+    }
+
+    /// Emulated artifact width of a native pool — the batching unit every
+    /// registration on it executes at.  0 when width is per-bucket (XLA
+    /// pools) or the pool was spawned over a custom test backend.
+    pub fn width_hint(&self) -> usize {
+        self.shared.width_hint.load(Ordering::Relaxed)
     }
 
     /// Ask every worker to drain pending work and exit (idempotent;
@@ -1179,9 +1295,15 @@ fn worker_loop(mut backend: Box<dyn Backend>, rx: mpsc::Receiver<Msg>, ctx: Work
                     CoalescePolicy::Adaptive { .. } => {
                         if groups[g].pending > 0 && groups[g].queue.len() >= groups[g].members
                         {
-                            // Every registered driver is blocked on a
-                            // queued request: nothing more can arrive, so
-                            // waiting out the window buys no merging.
+                            // Every registered driver has a request
+                            // queued.  Under the blocking-eval convention
+                            // nothing more can arrive, so waiting out the
+                            // window buys no merging.  (A TICKETED driver
+                            // pipelining several sub-width submits per
+                            // registration breaks that assumption and
+                            // gets per-submit dispatch here — prefer
+                            // `fixed` when combining `--coalesce adaptive`
+                            // with a small explicit `--microbatch`.)
                             let take = groups[g].pending;
                             if !execute_chunk(
                                 backend.as_mut(),
@@ -1529,6 +1651,50 @@ mod tests {
         assert_eq!(*chunks.lock().unwrap(), vec![8, 8, 5]);
         assert_eq!(pool.metrics.full_flushes.load(Ordering::Relaxed), 2);
         assert_eq!(pool.metrics.deadline_flushes.load(Ordering::Relaxed), 0);
+        pool.shutdown();
+    }
+
+    /// The blocking eval is literally `wait(submit(..))`: tickets collect
+    /// out of order, the in-flight gauges track them, an empty batch never
+    /// issues a ticket, and an abandoned ticket releases its gauge on
+    /// drop.
+    #[test]
+    fn submit_wait_out_of_order_and_ticket_gauges() {
+        let chunks = Arc::new(Mutex::new(Vec::new()));
+        let c = Arc::clone(&chunks);
+        let pool = EvalShardPool::spawn(1, CoalescePolicy::Off, false, move |_| {
+            Ok(Box::new(CountingBackend { width: 8, chunks: Arc::clone(&c) })
+                as Box<dyn Backend>)
+        })
+        .unwrap();
+        let p = seeds();
+        let (id, _) = pool.register(Arc::clone(&p)).unwrap();
+        let t1 = pool.submit(id, vec![TreeApprox::exact(&p.tree); 3]).unwrap();
+        let t2 = pool.submit(id, vec![TreeApprox::exact(&p.tree); 2]).unwrap();
+        assert_eq!(t1.shard(), Some(0));
+        assert_eq!(pool.metrics.tickets_submitted.load(Ordering::Relaxed), 2);
+        // Collected out of order: results match the ticket, not FIFO.
+        assert_eq!(pool.wait(t2).unwrap(), vec![0.25; 2]);
+        assert_eq!(pool.wait(t1).unwrap(), vec![0.25; 3]);
+        assert_eq!(pool.metrics.tickets_in_flight.load(Ordering::Relaxed), 0);
+        assert_eq!(pool.metrics.tickets_peak.load(Ordering::Relaxed), 2);
+        // An empty batch resolves without a ticket ever being issued…
+        let t = pool.submit(id, Vec::new()).unwrap();
+        assert_eq!(t.shard(), None);
+        assert!(pool.wait(t).unwrap().is_empty());
+        assert_eq!(pool.metrics.tickets_submitted.load(Ordering::Relaxed), 2);
+        // …and an abandoned ticket releases the in-flight gauge on drop.
+        let t = pool.submit(id, vec![TreeApprox::exact(&p.tree); 1]).unwrap();
+        drop(t);
+        assert_eq!(pool.metrics.tickets_in_flight.load(Ordering::Relaxed), 0);
+        // Width hint: generic spawns leave it unset; native pools set it.
+        assert_eq!(pool.width_hint(), 0);
+        let native = EvalShardPool::spawn_native(
+            16,
+            &PoolOptions { workers: 1, ..PoolOptions::default() },
+        );
+        assert_eq!(native.width_hint(), 16);
+        native.shutdown();
         pool.shutdown();
     }
 

@@ -11,13 +11,21 @@
 //!
 //! [`FitnessEvaluator`] glues both behind the GA's batched
 //! [`crate::ga::Evaluator`] trait, with a phenotype-keyed fitness cache.
+//! Evaluation is **two-phase**: [`AccuracyEngine::submit_accuracy`]
+//! starts a batch and returns an [`AccuracyTicket`];
+//! [`AccuracyEngine::collect`] redeems it.  Plain engines keep the
+//! default blocking adapter (submit evaluates synchronously and parks the
+//! result in the ticket); service-backed engines defer to the shard
+//! pool's ticketed submit/wait so a generation's micro-batches pipeline
+//! across shards while this side keeps decoding and estimating area.
 
 pub mod encode;
 pub mod native;
 
+use std::any::Any;
 use std::collections::HashMap;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
 use crate::dt::Tree;
@@ -151,6 +159,62 @@ impl Problem {
     }
 }
 
+/// In-flight accuracy request: issued by
+/// [`AccuracyEngine::submit_accuracy`], redeemed (in any order) by
+/// [`AccuracyEngine::collect`].
+///
+/// Engines that cannot defer work use [`AccuracyTicket::ready`] — the
+/// blocking adapter computes the result at submit time and parks it in
+/// the ticket.  Engines with a real async backend park their own
+/// in-flight state via [`AccuracyTicket::engine`] and downcast it back in
+/// `collect` ([`AccuracyTicket::into_engine_state`]); submit-side
+/// failures ride inside a ready ticket, so call sites stay uniform:
+/// submit everything, then collect everything.
+pub struct AccuracyTicket {
+    repr: TicketRepr,
+}
+
+enum TicketRepr {
+    /// Blocking adapter: the result was computed at submit time.
+    Ready(Result<Vec<f64>>),
+    /// Engine-specific in-flight state, downcast by the engine that
+    /// issued it.
+    Engine(Box<dyn Any + Send>),
+}
+
+impl AccuracyTicket {
+    /// A ticket that already holds its result (the blocking adapter).
+    pub fn ready(result: Result<Vec<f64>>) -> AccuracyTicket {
+        AccuracyTicket { repr: TicketRepr::Ready(result) }
+    }
+
+    /// A ticket wrapping engine-specific in-flight state.
+    pub fn engine(state: Box<dyn Any + Send>) -> AccuracyTicket {
+        AccuracyTicket { repr: TicketRepr::Engine(state) }
+    }
+
+    /// Resolve a ready ticket; an engine ticket comes back untouched so
+    /// the caller can downcast it.
+    pub fn try_ready(self) -> std::result::Result<Result<Vec<f64>>, AccuracyTicket> {
+        match self.repr {
+            TicketRepr::Ready(res) => Ok(res),
+            repr => Err(AccuracyTicket { repr }),
+        }
+    }
+
+    /// Downcast an engine ticket's state; a mismatched type (or a ready
+    /// ticket) returns the ticket unconsumed.
+    pub fn into_engine_state<T: 'static>(self) -> std::result::Result<Box<T>, AccuracyTicket> {
+        match self.repr {
+            TicketRepr::Engine(state) => match state.downcast::<T>() {
+                Ok(s) => Ok(s),
+                Err(state) => Err(AccuracyTicket { repr: TicketRepr::Engine(state) }),
+            },
+            repr => Err(AccuracyTicket { repr }),
+        }
+    }
+}
+
 /// Batched accuracy oracle over concrete approximations.
 ///
 /// `Err` means the engine could not evaluate the batch (backend execution
@@ -163,6 +227,35 @@ pub trait AccuracyEngine {
     fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Result<Vec<f64>>;
     /// Human-readable engine id (logs / benches).
     fn name(&self) -> &'static str;
+
+    /// Phase one of the two-phase eval: start evaluating `batch` and
+    /// return a ticket for it.  The default is the blocking adapter —
+    /// evaluate now, park the result — so plain engines (the native tree
+    /// walk, test fakes) need not know tickets exist.  Failures ride
+    /// inside the ticket and surface at [`Self::collect`].
+    fn submit_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> AccuracyTicket {
+        AccuracyTicket::ready(self.batch_accuracy(problem, batch))
+    }
+
+    /// Phase two: redeem a ticket from [`Self::submit_accuracy`].
+    /// Tickets may be collected in any order.
+    fn collect(&mut self, ticket: AccuracyTicket) -> Result<Vec<f64>> {
+        match ticket.try_ready() {
+            Ok(res) => res,
+            Err(_) => Err(anyhow!(
+                "engine '{}' was handed an engine-specific ticket it did not issue",
+                self.name()
+            )),
+        }
+    }
+
+    /// Preferred micro-batch size for pipelined submit/collect (0 = no
+    /// preference: callers submit whole batches).  Service-backed engines
+    /// answer `pool workers x artifact width` so a generation's misses
+    /// can keep every shard fed.
+    fn preferred_microbatch(&self) -> usize {
+        0
+    }
 }
 
 /// Evaluation counters (exposed through coordinator metrics).
@@ -185,6 +278,13 @@ pub struct FitnessEvaluator<'a, E: AccuracyEngine> {
     pub problem: &'a Problem,
     pub lut: &'a AreaLut,
     pub engine: E,
+    /// Micro-batch size for the pipelined two-phase eval: each
+    /// generation's deduped misses are sliced into micro-batches of this
+    /// size, ALL submitted before any is collected, with the area
+    /// estimates computed while the tickets are in flight.  0 = auto
+    /// (the engine's [`AccuracyEngine::preferred_microbatch`]; whole
+    /// batch when the engine has no preference).
+    pub microbatch: usize,
     cache: HashMap<u64, [f64; 2]>,
     pub stats: EvalStats,
     error: Option<anyhow::Error>,
@@ -196,6 +296,7 @@ impl<'a, E: AccuracyEngine> FitnessEvaluator<'a, E> {
             problem,
             lut,
             engine,
+            microbatch: 0,
             cache: HashMap::new(),
             stats: EvalStats::default(),
             error: None,
@@ -238,23 +339,65 @@ impl<'a, E: AccuracyEngine> Evaluator for FitnessEvaluator<'a, E> {
             }
         }
         if !unique.is_empty() && self.error.is_none() {
-            let batch: Vec<TreeApprox> =
-                unique.iter().map(|&(_, i)| decoded[i].1.clone()).collect();
-            match self.engine.batch_accuracy(self.problem, &batch) {
-                Ok(accs) => {
-                    assert_eq!(accs.len(), batch.len());
-                    self.stats.engine_evals += batch.len();
-                    for ((key, i), acc) in unique.iter().zip(accs) {
-                        let area = self.problem.estimate_area(self.lut, &decoded[*i].1);
-                        self.cache.insert(*key, [1.0 - acc, area]);
+            // Phase one: slice the misses into micro-batches and submit
+            // EVERY one before collecting any, so a service-backed
+            // engine's shards fill with in-flight work while this thread
+            // is still busy below.
+            let size = match self.microbatch {
+                0 => self.engine.preferred_microbatch(),
+                n => n,
+            };
+            let size = if size == 0 { unique.len() } else { size.max(1) };
+            let mut tickets: Vec<(AccuracyTicket, &[(u64, usize)])> =
+                Vec::with_capacity(unique.len().div_ceil(size));
+            for chunk in unique.chunks(size) {
+                let batch: Vec<TreeApprox> =
+                    chunk.iter().map(|&(_, i)| decoded[i].1.clone()).collect();
+                let ticket = self.engine.submit_accuracy(self.problem, &batch);
+                tickets.push((ticket, chunk));
+            }
+            // Overlap: every miss's area estimate runs while the accuracy
+            // tickets are in flight on the service side.
+            let areas: HashMap<u64, f64> = unique
+                .iter()
+                .map(|&(key, i)| (key, self.problem.estimate_area(self.lut, &decoded[i].1)))
+                .collect();
+            // Phase two: collect in submit order.  A failing micro-batch
+            // stores the first error and leaves its chromosomes
+            // unresolved (pessimistic below); completed micro-batches
+            // still land in the cache.
+            for (ticket, chunk) in tickets {
+                match self.engine.collect(ticket) {
+                    Ok(accs) if accs.len() == chunk.len() => {
+                        self.stats.engine_evals += chunk.len();
+                        for (&(key, _), acc) in chunk.iter().zip(accs) {
+                            self.cache.insert(key, [1.0 - acc, areas[&key]]);
+                        }
                     }
-                    for i in 0..pop.len() {
-                        if out[i].is_none() {
-                            out[i] = self.cache.get(&decoded[i].0).copied();
+                    // A misbehaving engine returning the wrong length is a
+                    // stored error + pessimistic objectives, never a
+                    // GA-killing panic.
+                    Ok(accs) => {
+                        if self.error.is_none() {
+                            self.error = Some(anyhow!(
+                                "engine '{}' returned {} accuracies for a batch of {}",
+                                self.engine.name(),
+                                accs.len(),
+                                chunk.len()
+                            ));
+                        }
+                    }
+                    Err(e) => {
+                        if self.error.is_none() {
+                            self.error = Some(e);
                         }
                     }
                 }
-                Err(e) => self.error = Some(e),
+            }
+            for i in 0..pop.len() {
+                if out[i].is_none() {
+                    out[i] = self.cache.get(&decoded[i].0).copied();
+                }
             }
         }
         // Unresolved entries (engine failure) get pessimistic objectives —
@@ -364,6 +507,61 @@ mod tests {
         let err = ev.take_error().expect("failure must be stored");
         assert!(format!("{err}").contains("exploded"));
         assert!(ev.take_error().is_none(), "take_error drains");
+    }
+
+    /// Regression (ISSUE 5): a misbehaving engine returning the wrong
+    /// number of accuracies used to hit `assert_eq!` and kill the whole
+    /// GA.  It must become a stored error + pessimistic objectives.
+    #[test]
+    fn wrong_length_engine_is_stored_error_not_panic() {
+        struct ShortEngine;
+        impl AccuracyEngine for ShortEngine {
+            fn batch_accuracy(
+                &mut self,
+                _problem: &Problem,
+                batch: &[TreeApprox],
+            ) -> Result<Vec<f64>> {
+                Ok(vec![0.5; batch.len().saturating_sub(1)])
+            }
+            fn name(&self) -> &'static str {
+                "short"
+            }
+        }
+
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let mut ev = FitnessEvaluator::new(&p, &lut, ShortEngine);
+        let pop = vec![Chromosome::exact(p.n_comparators()); 3];
+        let objs = ev.evaluate(&pop);
+        assert_eq!(objs.len(), pop.len());
+        assert!(objs.iter().all(|o| o[0] == 1.0), "worst-case error objective");
+        assert_eq!(ev.stats.engine_evals, 0, "a short result is not an eval");
+        let err = ev.take_error().expect("wrong length must be stored");
+        assert!(format!("{err}").contains("returned 0 accuracies for a batch of 1"), "{err}");
+    }
+
+    /// Micro-batched pipelining never changes arithmetic: slicing the
+    /// deduped misses into tiny submit/collect chunks yields exactly the
+    /// objectives of one whole-batch call, with the same engine-eval
+    /// count.
+    #[test]
+    fn microbatched_evaluate_is_bit_identical_to_whole_batch() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let mut rng = crate::util::rng::Pcg64::seeded(0x5A);
+        let pop: Vec<Chromosome> =
+            (0..11).map(|_| Chromosome::random(&mut rng, p.n_comparators())).collect();
+
+        let mut whole = FitnessEvaluator::new(&p, &lut, native::NativeEngine::default());
+        let want = whole.evaluate(&pop);
+
+        let mut sliced = FitnessEvaluator::new(&p, &lut, native::NativeEngine::default());
+        sliced.microbatch = 3;
+        let got = sliced.evaluate(&pop);
+        assert_eq!(got, want);
+        assert_eq!(sliced.stats.engine_evals, whole.stats.engine_evals);
+        assert_eq!(sliced.stats.requested, whole.stats.requested);
+        assert_eq!(sliced.stats.cache_hits, whole.stats.cache_hits);
     }
 
     #[test]

@@ -97,6 +97,22 @@ mod tests {
         }
     }
 
+    /// The native engine rides the default blocking submit/collect
+    /// adapter of [`AccuracyEngine`]: tickets resolve to exactly what
+    /// `batch_accuracy` returns, and it declares no micro-batch
+    /// preference (callers submit whole batches).
+    #[test]
+    fn default_submit_collect_adapter_matches_batch_accuracy() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let batch = vec![TreeApprox::exact(&p.tree); 3];
+        let mut engine = NativeEngine::with_threads(2);
+        let want = engine.batch_accuracy(&p, &batch).unwrap();
+        let ticket = engine.submit_accuracy(&p, &batch);
+        assert_eq!(engine.collect(ticket).unwrap(), want);
+        assert_eq!(engine.preferred_microbatch(), 0);
+    }
+
     #[test]
     fn batch_matches_single_and_is_thread_invariant() {
         let lut = AreaLut::build(&EgtLibrary::default());

@@ -14,6 +14,18 @@ use super::chromosome::Chromosome;
 use crate::util::rng::Pcg64;
 
 /// Batched fitness oracle. Returns one `[f64; 2]` (minimized) per input.
+///
+/// Call discipline: the GA hands over each generation's population as ONE
+/// batch — the initial population, then every offspring set — and never
+/// issues a second `evaluate` before the first returns.  Implementations
+/// are therefore free to pipeline *internally*: slice the batch into
+/// micro-batches, submit them all to an async backend, and overlap other
+/// per-chromosome work before collecting (see
+/// `fitness::FitnessEvaluator`, which rides the eval service's ticketed
+/// submit/wait API) — as long as the returned vector is index-aligned
+/// with `pop`.  The GA itself stays oblivious: determinism comes from the
+/// seeded RNG plus this one-batch-at-a-time contract, so internal
+/// pipelining can never reorder what the GA observes.
 pub trait Evaluator {
     fn evaluate(&mut self, pop: &[Chromosome]) -> Vec<[f64; 2]>;
 }

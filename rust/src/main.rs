@@ -17,7 +17,9 @@ use std::io::Write as _;
 use anyhow::{anyhow, Context, Result};
 
 use axdt::config::RunConfig;
-use axdt::coordinator::{optimize_dataset, DatasetRun, EngineChoice, EvalService};
+use axdt::coordinator::{
+    finish_dataset, optimize_dataset, optimize_dataset_ga, DatasetRun, EngineChoice, EvalService,
+};
 use axdt::report;
 use axdt::util::cli::{flag, opt, usage, Args, OptSpec};
 
@@ -36,6 +38,7 @@ const OPTS: &[OptSpec] = &[
     opt("coalesce-window-us", "fixed-mode coalescing window in us (0 = off, default 200)"),
     opt("coalesce-window-max-us", "adaptive-mode window cap in us (default 1000)"),
     flag("respawn-shards", "respawn a dead eval-shard worker once before giving up on it"),
+    opt("microbatch", "pipelined-eval micro-batch size (0 = auto: workers x width)"),
     opt("loss", "Table II accuracy-loss budget (default 0.01)"),
     opt("out", "output directory for JSON results (default results)"),
     opt("dataset", "single dataset (export-rtl)"),
@@ -160,9 +163,12 @@ fn partial_failure(failed: &[String]) -> Result<()> {
 /// problems hash-pin to shards, so datasets fan out across workers instead
 /// of queueing behind one.  (Batch coalescing pays off when several
 /// clients evaluate the *same* problem concurrently — multi-tenant
-/// serving, benches — see `coordinator::shard`.)  Returns the completed
-/// runs plus the ids of datasets that failed (callers decide how to
-/// surface those once their reports are out).
+/// serving, benches — see `coordinator::shard`.)  Each driver releases
+/// its token after the GA phase and runs the CPU-only Pareto-front full
+/// synthesis tokenless, so one dataset's synthesis overlaps the next
+/// dataset's first generations.  Returns the completed runs plus the ids
+/// of datasets that failed (callers decide how to surface those once
+/// their reports are out).
 fn run_all(cfg: &RunConfig, verbose: bool) -> Result<(Vec<DatasetRun>, Vec<String>)> {
     let engine = cfg.engine_choice();
     let pool_opts = cfg.pool_options();
@@ -213,12 +219,17 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<(Vec<DatasetRun>, Vec<Strin
                 let token_rx = std::sync::Arc::clone(&token_rx);
                 std::thread::spawn(move || {
                     token_rx.lock().unwrap().recv().expect("token channel open");
-                    let _token = TokenGuard(token_tx);
-                    if verbose {
-                        eprintln!("[axdt] optimizing {d} (engine {engine:?})…");
-                    }
-                    let run = optimize_dataset(&d, &opts, service.as_ref());
-                    (d, run)
+                    let ga = {
+                        let _token = TokenGuard(token_tx);
+                        if verbose {
+                            eprintln!("[axdt] optimizing {d} (engine {engine:?})…");
+                        }
+                        optimize_dataset_ga(&d, &opts, service.as_ref())
+                    };
+                    // The token is back in the pool: the next dataset's GA
+                    // starts on the eval service while this thread runs
+                    // the CPU-only Pareto-front full synthesis.
+                    (d, ga.map(finish_dataset))
                 })
             })
             .collect();

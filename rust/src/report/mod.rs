@@ -261,6 +261,11 @@ impl<'a> RunArchive<'a> {
                         ("baseline_delay_ms", Json::num(r.baseline.delay_ms)),
                         ("n_comparators", Json::num(r.n_comparators as f64)),
                         ("evaluations", Json::num(r.evaluations as f64)),
+                        // Cache effectiveness of the fitness evaluator,
+                        // next to the eval-service coalescing gauges.
+                        ("eval_requested", Json::num(r.stats.requested as f64)),
+                        ("eval_cache_hits", Json::num(r.stats.cache_hits as f64)),
+                        ("eval_engine_evals", Json::num(r.stats.engine_evals as f64)),
                         ("elapsed_s", Json::num(r.elapsed_s)),
                         ("engine", Json::str(r.engine)),
                         (
@@ -325,6 +330,13 @@ mod tests {
         assert!(t2.contains("TABLE II"));
         let json = RunArchive { runs: std::slice::from_ref(&run) }.to_json().to_string();
         assert!(json.contains("\"dataset\":\"seeds\""));
+        // Cache effectiveness is archived per dataset: 12 + 4x12
+        // chromosomes requested; engine evals never exceed the post-cache
+        // misses (within-batch dedup can shrink them further).
+        assert!(json.contains("\"eval_requested\":60"), "{json}");
+        assert_eq!(run.stats.requested, 60);
+        assert!(run.stats.engine_evals <= 60 - run.stats.cache_hits);
+        assert!(run.stats.engine_evals > 0);
         crate::util::json::Json::parse(&json).unwrap();
     }
 

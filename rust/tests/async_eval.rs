@@ -1,0 +1,264 @@
+//! Two-phase (ticketed submit/wait) eval contracts, through the public
+//! API only — no artifacts, no wall-clock sleeps (timing runs on the
+//! `ManualClock`):
+//!
+//! * tickets collect out of order, across problems and shards, with
+//!   results matched to the ticket, never to arrival order;
+//! * many tickets sit in flight across coalescing groups on a parked
+//!   virtual clock, and one `advance` flushes every group's merged batch
+//!   (deterministic submit→collect latency gauge included);
+//! * a shard dying with a ticket in flight fails it with the typed,
+//!   healable `ServiceError::ShardDown`, and later submits fail fast;
+//! * the `XlaEngine` facade heals a mid-flight kill on the collect side
+//!   (re-register onto a survivor + repeat the batch);
+//! * a pipelined (micro-batched) optimization run is bit-identical to the
+//!   blocking run and to the direct native engine.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use axdt::coordinator::{
+    optimize_dataset, CoalesceMode, EngineChoice, EvalService, PoolOptions, RunOptions,
+    ServiceError, XlaEngine,
+};
+use axdt::fitness::native::NativeEngine;
+use axdt::fitness::AccuracyEngine;
+use axdt::util::clock::ManualClock;
+use axdt::util::testbed::{named_problem, random_batch, spawn_killable_native, wait_until};
+
+/// Tickets are not FIFO: submit to two problems, collect in reverse, and
+/// every result still belongs to its own batch (bit-identical to the
+/// direct native engine).
+#[test]
+fn tickets_collect_out_of_order_across_problems() {
+    let svc = EvalService::spawn_native_with(
+        8,
+        &PoolOptions {
+            workers: 2,
+            coalesce: CoalesceMode::Off,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
+    );
+    let pa = named_problem("drv0");
+    let pb = named_problem("drv1");
+    let (id_a, _) = svc.register(Arc::clone(&pa)).unwrap();
+    let (id_b, _) = svc.register(Arc::clone(&pb)).unwrap();
+    let batch_a = random_batch(&pa, 7, 11);
+    let batch_b = random_batch(&pb, 9, 12);
+    let mut direct = NativeEngine::default();
+    let want_a = direct.batch_accuracy(&pa, &batch_a).unwrap();
+    let want_b = direct.batch_accuracy(&pb, &batch_b).unwrap();
+
+    let ta = svc.submit(id_a, batch_a).unwrap();
+    let tb = svc.submit(id_b, batch_b).unwrap();
+    // Reverse order: the second ticket resolves first.
+    assert_eq!(svc.wait(tb).unwrap(), want_b);
+    assert_eq!(svc.wait(ta).unwrap(), want_a);
+    assert_eq!(svc.metrics.tickets_submitted.load(Ordering::Relaxed), 2);
+    assert_eq!(svc.metrics.tickets_in_flight.load(Ordering::Relaxed), 0);
+    svc.shutdown();
+}
+
+/// Five tickets in flight across two coalescing groups on a parked
+/// `ManualClock`: nothing flushes until the advance, then both groups
+/// flush as merged deadline batches and every ticket resolves (out of
+/// order) with exact, deterministic submit→collect latency.
+#[test]
+fn many_tickets_across_coalescing_groups_on_manual_clock() {
+    let clock = Arc::new(ManualClock::new());
+    let svc = EvalService::spawn_native_with_clock(
+        32,
+        &PoolOptions {
+            workers: 1,
+            coalesce: CoalesceMode::Fixed,
+            coalesce_window_us: 200,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
+        Arc::clone(&clock) as Arc<dyn axdt::util::clock::Clock>,
+    );
+    let pa = named_problem("groupA");
+    let pb = named_problem("groupB");
+    let (id_a, _) = svc.register(Arc::clone(&pa)).unwrap();
+    let (id_b, _) = svc.register(Arc::clone(&pb)).unwrap();
+    let mut direct = NativeEngine::default();
+
+    let batches_a: Vec<_> = (0..3).map(|i| random_batch(&pa, 5, 20 + i)).collect();
+    let batches_b: Vec<_> = (0..2).map(|i| random_batch(&pb, 5, 40 + i)).collect();
+    let tickets_a: Vec<_> = batches_a
+        .iter()
+        .map(|b| svc.submit(id_a, b.clone()).unwrap())
+        .collect();
+    let tickets_b: Vec<_> = batches_b
+        .iter()
+        .map(|b| svc.submit(id_b, b.clone()).unwrap())
+        .collect();
+    assert_eq!(svc.metrics.tickets_in_flight.load(Ordering::Relaxed), 5);
+    assert_eq!(svc.metrics.tickets_peak.load(Ordering::Relaxed), 5);
+
+    // All 25 chromosomes reach the coalescer; with the clock parked,
+    // nothing may execute.
+    wait_until("25 chromosomes coalescing", || {
+        svc.metrics.shards()[0].coalescing.load(Ordering::Relaxed) == 25
+    });
+    assert_eq!(svc.metrics.executions.load(Ordering::Relaxed), 0);
+
+    // One virtual advance past the window flushes BOTH groups as merged
+    // deadline batches.
+    clock.advance(Duration::from_micros(250));
+    for (t, b) in tickets_b.into_iter().zip(&batches_b) {
+        assert_eq!(svc.wait(t).unwrap(), direct.batch_accuracy(&pb, b).unwrap());
+    }
+    for (t, b) in tickets_a.into_iter().zip(&batches_a) {
+        assert_eq!(svc.wait(t).unwrap(), direct.batch_accuracy(&pa, b).unwrap());
+    }
+    assert_eq!(svc.metrics.executions.load(Ordering::Relaxed), 2, "one per group");
+    assert_eq!(svc.metrics.deadline_flushes.load(Ordering::Relaxed), 2);
+    assert_eq!(svc.metrics.coalesced_executions.load(Ordering::Relaxed), 2);
+    assert_eq!(svc.metrics.tickets_in_flight.load(Ordering::Relaxed), 0);
+    // Virtual time makes the ticket gauges exact: every ticket was
+    // submitted at t=0 and collected after the 250us advance, in
+    // micro-batches of 5.
+    assert_eq!(svc.metrics.ticket_latency_summary().median(), 250_000.0);
+    assert_eq!(svc.metrics.microbatch_width_summary().median(), 5.0);
+    svc.shutdown();
+}
+
+/// A shard dying with a ticket in flight answers it with the typed,
+/// healable `ShardDown`; submits against the dead shard then fail fast at
+/// submit time, not at wait time.
+#[test]
+fn mid_flight_shard_kill_fails_ticket_with_shard_down() {
+    let kill = Arc::new(AtomicU64::new(0));
+    let pool = spawn_killable_native(
+        8,
+        &PoolOptions {
+            workers: 1,
+            coalesce: CoalesceMode::Off,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
+        Arc::clone(&kill),
+    );
+    let svc = EvalService::from_pool(pool);
+    let p = named_problem("seeds");
+    let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+    let batch = random_batch(&p, 8, 3);
+    let mut direct = NativeEngine::default();
+    assert_eq!(
+        svc.wait(svc.submit(id, batch.clone()).unwrap()).unwrap(),
+        direct.batch_accuracy(&p, &batch).unwrap()
+    );
+
+    kill.store(1, Ordering::SeqCst); // shard 0 + 1
+    let ticket = svc.submit_typed(id, batch.clone()).unwrap();
+    let err = svc.wait_typed(ticket).unwrap_err();
+    assert!(matches!(err, ServiceError::ShardDown { shard: 0 }), "{err:?}");
+    assert!(err.is_stale_id(), "clients must heal ShardDown by re-registering");
+    assert!(!svc.pool().shard_alive(0));
+    assert!(svc.metrics.stranded_requests.load(Ordering::Relaxed) >= 1);
+
+    // The death is already visible at submit time for later tickets.
+    let err = svc.submit_typed(id, batch).unwrap_err();
+    assert!(matches!(err, ServiceError::ShardDown { shard: 0 }), "{err:?}");
+    svc.shutdown();
+}
+
+/// The engine facade heals a mid-flight kill on the COLLECT side:
+/// re-register onto a survivor and repeat the retained batch, so the
+/// caller sees correct results, never the ShardDown.  With SEVERAL
+/// tickets in flight on the dying shard, only the first collected
+/// failure re-registers — the rest retry under the moved registration —
+/// so one pipelining driver never inflates the coalescing group's
+/// member count.
+#[test]
+fn engine_collect_heals_mid_flight_shard_kill() {
+    let kill = Arc::new(AtomicU64::new(0));
+    let pool = spawn_killable_native(
+        8,
+        &PoolOptions {
+            workers: 4,
+            coalesce: CoalesceMode::Off,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
+        Arc::clone(&kill),
+    );
+    let svc = EvalService::from_pool(pool);
+    let p = named_problem("seeds");
+    let mut engine = XlaEngine::register(&svc, Arc::clone(&p)).unwrap();
+    let victim = engine.shard();
+    let batch = random_batch(&p, 8, 9);
+    let mut direct = NativeEngine::default();
+    let want = direct.batch_accuracy(&p, &batch).unwrap();
+
+    kill.store(victim as u64 + 1, Ordering::SeqCst);
+    let t1 = engine.submit_accuracy(&p, &batch[..4]);
+    let t2 = engine.submit_accuracy(&p, &batch[4..]);
+    assert_eq!(engine.collect(t1).unwrap(), want[..4].to_vec());
+    assert_eq!(engine.collect(t2).unwrap(), want[4..].to_vec());
+    assert_ne!(engine.shard(), victim, "healed onto a survivor");
+    assert!(!svc.pool().shard_alive(victim));
+    assert_eq!(svc.metrics.shard_deaths.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        svc.metrics.problems.load(Ordering::Relaxed),
+        2,
+        "initial registration + exactly ONE heal for both failed tickets"
+    );
+    svc.shutdown();
+}
+
+/// Acceptance (ISSUE 5): the pipelined path is bit-identical to the
+/// blocking path and to the native engine on the same seed — micro-batch
+/// slicing, ticket interleaving, and coalescing never change the
+/// per-chromosome arithmetic.
+#[test]
+fn pipelined_blocking_native_fronts_bit_identical() {
+    let opts = RunOptions {
+        seed: 42,
+        pop_size: 16,
+        generations: 5,
+        margin_max: 5,
+        engine: EngineChoice::NativeService,
+        microbatch: 0,
+    };
+    let native = optimize_dataset(
+        "seeds",
+        &RunOptions { engine: EngineChoice::Native, ..opts.clone() },
+        None,
+    )
+    .unwrap();
+
+    let svc = EvalService::spawn_native_with(
+        8,
+        &PoolOptions { workers: 2, engine_threads: 1, ..PoolOptions::default() },
+    );
+    // Blocking: one whole-generation submit per evaluate call.
+    let blocking = optimize_dataset(
+        "seeds",
+        &RunOptions { microbatch: 1_000_000, ..opts.clone() },
+        Some(&svc),
+    )
+    .unwrap();
+    // Pipelined: tiny micro-batches, many tickets in flight per
+    // generation.
+    let piped =
+        optimize_dataset("seeds", &RunOptions { microbatch: 4, ..opts }, Some(&svc)).unwrap();
+
+    for run in [&blocking, &piped] {
+        assert_eq!(native.front.len(), run.front.len());
+        for (a, b) in native.front.iter().zip(&run.front) {
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.est_area_mm2, b.est_area_mm2);
+        }
+    }
+    assert_eq!(blocking.stats.engine_evals, piped.stats.engine_evals);
+    assert!(piped.stats.engine_evals > 0);
+    assert!(svc.metrics.tickets_submitted.load(Ordering::Relaxed) > 0);
+    // The driver folded both runs' EvalStats into the service render.
+    let render = svc.metrics.render();
+    assert!(render.contains("eval: requested="), "{render}");
+    svc.shutdown();
+}

@@ -224,6 +224,7 @@ fn optimization_run_survives_mid_run_worker_death() {
         generations: 6,
         margin_max: 5,
         engine: EngineChoice::NativeService,
+        microbatch: 0,
     };
 
     // Arm the kill for the shard "seeds" pins to: its first GA batch
