@@ -1,7 +1,7 @@
 # Convenience targets. The default rust build needs none of these — see
 # README.md for the build matrix.
 
-.PHONY: artifacts test bench clean
+.PHONY: artifacts test bench lint tsan clean
 
 # Lower the L2 accuracy-evaluation graph to HLO text artifacts consumed by
 # the XLA backend (`--features xla`). Requires jax in the python env.
@@ -13,6 +13,20 @@ test:
 
 bench:
 	cargo bench
+
+# Architectural lints (tools/axdt-lint): Clock seam, Ticket seam,
+# panic-free workers, mutex discipline, test-sleep budget.  See the
+# "Static analysis" section of README.md.
+lint:
+	cargo run -q -p axdt-lint
+	cargo test -q -p axdt-lint
+
+# ThreadSanitizer over the four concurrency suites (needs a nightly
+# toolchain with the rust-src component; mirrors .github/workflows/tsan.yml).
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" AXDT_THREADS=2 \
+	cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+		--test shard_pool --test failover --test adaptive_coalesce --test async_eval
 
 clean:
 	cargo clean

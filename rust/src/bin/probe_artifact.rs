@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
         let mut oh = vec![0f32; l * c];
         oh[1] = 1.0; oh[c + 3] = 1.0;
         let onehot = xla::Literal::vec1(&oh).reshape(&[l as i64, c as i64])?;
+        // axdt-lint: allow(clock-seam): dev probe prints real execution latency
         let t0 = std::time::Instant::now();
         let res = exe.execute::<xla::Literal>(&[xsel, labels, valid, thr, scale, wleaf, bias, onehot])?[0][0]
             .to_literal_sync()?;

@@ -7,7 +7,6 @@
 //! flow described above").
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -18,6 +17,7 @@ use crate::fitness::{native::NativeEngine, EvalStats, FitnessEvaluator, Problem}
 use crate::ga::{run_nsga2, Evaluator, GenStats, NsgaConfig};
 use crate::hw::synth::{self, TreeApprox};
 use crate::hw::{AreaLut, EgtLibrary, HwReport};
+use crate::util::clock::{Clock, SystemClock};
 
 /// Which accuracy engine evaluates fitness.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -155,7 +155,10 @@ pub struct GaPhase {
     /// 508-synth LUT rebuild).
     lib: EgtLibrary,
     lut: AreaLut,
-    t0: Instant,
+    /// Phase clock: its epoch is the GA start, so `now_ns()` reads the
+    /// elapsed wall time directly.  Going through the Clock seam keeps
+    /// `elapsed_s` injectable if run timing ever needs deterministic tests.
+    clock: SystemClock,
 }
 
 /// Run the full pipeline for one dataset: the GA phase followed by full
@@ -180,7 +183,7 @@ pub fn optimize_dataset_ga(
     opts: &RunOptions,
     service: Option<&EvalService>,
 ) -> Result<GaPhase> {
-    let t0 = Instant::now();
+    let clock = SystemClock::new();
     let spec = generators::spec(dataset_id)
         .ok_or_else(|| anyhow!("unknown dataset '{dataset_id}'"))?;
     let lib = EgtLibrary::default();
@@ -271,7 +274,7 @@ pub fn optimize_dataset_ga(
         engine: engine_name,
         lib,
         lut,
-        t0,
+        clock,
     })
 }
 
@@ -312,7 +315,7 @@ pub fn finish_dataset(phase: GaPhase) -> DatasetRun {
         history: phase.result.history,
         evaluations: phase.result.evaluations,
         stats: phase.stats,
-        elapsed_s: phase.t0.elapsed().as_secs_f64(),
+        elapsed_s: phase.clock.now_ns() as f64 / 1e9,
         engine: phase.engine,
     }
 }

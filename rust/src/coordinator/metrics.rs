@@ -8,19 +8,15 @@
 //! flushed ([`FlushKind`]) and how many client requests it merged.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::Mutex;
 
 use crate::fitness::EvalStats;
 use crate::util::stats::Summary;
 
-/// Lock a mutex, recovering from poison: a thread that panicked while
-/// holding it must not cascade panics into every other client (the
-/// coordinator's mutexes guard monotonic aggregates and swappable
-/// senders, so the worst a poisoned write leaves behind is one partial
-/// sample).  Shared with `coordinator::shard` for its slot senders.
-pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
+// Poison-recovering lock helper, re-exported where the coordinator took
+// it from before it moved to `util::sync` (the `axdt` binary needs it
+// `pub`, which a `pub(crate)` item in the lib crate cannot provide).
+pub(crate) use crate::util::sync::lock_recover;
 
 /// How a batch left the coalescer and hit the backend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -266,6 +266,7 @@ static NEXT_POOL_TOKEN: AtomicU32 = AtomicU32::new(1);
 /// [`EvalShardPool::wait`].  Dropping a ticket without waiting abandons
 /// the request — the worker still executes it and discards the reply —
 /// and releases the in-flight gauge.
+#[must_use = "a Ticket must be redeemed with wait(); dropping it abandons the submitted work"]
 pub struct Ticket {
     repr: TicketRepr,
 }
@@ -569,6 +570,7 @@ impl EvalShardPool {
                     width,
                 }) as Box<dyn Backend>)
             })
+            // axdt-lint: allow(panic-free-workers): runs on the client thread at pool construction, not in a worker; the factory above is the only one and returns Ok unconditionally
             .expect("native backend construction cannot fail");
         // Client-side micro-batch sizing hint (every registration on a
         // native pool batches at this width); XLA pools leave it 0 and
@@ -1012,7 +1014,8 @@ fn spawn_worker(
     rx: mpsc::Receiver<Msg>,
 ) -> mpsc::Receiver<Result<()>> {
     let (init_tx, init_rx) = mpsc::sync_channel::<Result<()>>(1);
-    std::thread::Builder::new()
+    let err_tx = init_tx.clone();
+    let spawned = std::thread::Builder::new()
         .name(format!("axdt-eval-shard-{shard}"))
         .spawn(move || {
             // Construct the backend while briefly holding a strong ref,
@@ -1043,8 +1046,14 @@ fn spawn_worker(
             if let Some((backend, ctx)) = started {
                 worker_loop(backend, rx, ctx);
             }
-        })
-        .expect("spawn eval shard worker");
+        });
+    if let Err(e) = spawned {
+        // The OS refused the thread (resource exhaustion).  Route it
+        // through the init channel like a backend-factory failure: the
+        // initial spawn surfaces it as a typed pool-construction error,
+        // and a respawn logs it and leaves the shard dead.
+        let _ = err_tx.send(Err(anyhow!("spawning eval shard worker {shard}: {e}")));
+    }
     init_rx
 }
 
@@ -1476,7 +1485,13 @@ fn execute_chunk(
     let mut chunk: Vec<TreeApprox> = Vec::with_capacity(take);
     let mut contributors: Vec<(Rc<RefCell<RequestState>>, usize)> = Vec::new();
     while chunk.len() < take {
-        let front = group.queue.front_mut().expect("pending count matches queued items");
+        let Some(front) = group.queue.front_mut() else {
+            // `pending` disagrees with the queue (an invariant slip):
+            // batch what was actually found instead of panicking the
+            // worker — a dead shard strands every client, a short batch
+            // strands nobody.
+            break;
+        };
         let n = (take - chunk.len()).min(front.items.len() - front.next);
         chunk.extend_from_slice(&front.items[front.next..front.next + n]);
         front.next += n;
@@ -1485,10 +1500,15 @@ fn execute_chunk(
             group.queue.pop_front();
         }
     }
-    group.pending -= take;
+    let take = chunk.len();
+    group.pending = group.pending.saturating_sub(take);
     metrics.coalescing_sub(shard, take as u64);
     if group.pending == 0 {
         group.deadline = None;
+    }
+    if take == 0 {
+        group.deadline = None;
+        return true;
     }
     let t0 = ctx.clock.now_ns();
     let outcome = catch_unwind(AssertUnwindSafe(|| {

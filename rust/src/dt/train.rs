@@ -59,7 +59,7 @@ pub fn train(data: &Dataset, cfg: &TrainConfig) -> Tree {
         let Some(best_pos) = frontier
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.gain.partial_cmp(&b.1.gain).unwrap())
+            .max_by(|a, b| a.1.gain.total_cmp(&b.1.gain))
             .map(|(i, _)| i)
         else {
             break;
@@ -157,7 +157,7 @@ fn best_split(
         order.sort_unstable_by(|&a, &b| {
             let va = data.x[a as usize * data.n_features + feat];
             let vb = data.x[b as usize * data.n_features + feat];
-            va.partial_cmp(&vb).unwrap()
+            va.total_cmp(&vb)
         });
         left.iter_mut().for_each(|c| *c = 0);
         for i in 0..n - 1 {

@@ -170,6 +170,7 @@ impl Problem {
 /// `collect` ([`AccuracyTicket::into_engine_state`]); submit-side
 /// failures ride inside a ready ticket, so call sites stay uniform:
 /// submit everything, then collect everything.
+#[must_use = "an AccuracyTicket must be redeemed with collect(); dropping it abandons the submitted batch"]
 pub struct AccuracyTicket {
     repr: TicketRepr,
 }

@@ -22,6 +22,7 @@ use axdt::coordinator::{
 };
 use axdt::report;
 use axdt::util::cli::{flag, opt, usage, Args, OptSpec};
+use axdt::util::sync::lock_recover;
 
 const OPTS: &[OptSpec] = &[
     opt("config", "JSON config file (defaults < config < flags)"),
@@ -218,7 +219,7 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<(Vec<DatasetRun>, Vec<Strin
                 let token_tx = token_tx.clone();
                 let token_rx = std::sync::Arc::clone(&token_rx);
                 std::thread::spawn(move || {
-                    token_rx.lock().unwrap().recv().expect("token channel open");
+                    lock_recover(&token_rx).recv().expect("token channel open");
                     let ga = {
                         let _token = TokenGuard(token_tx);
                         if verbose {

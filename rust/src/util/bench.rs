@@ -39,6 +39,7 @@ impl Bench {
     /// Time `f` repeatedly; `f` returns a value that is black-boxed.
     pub fn iter<R>(&mut self, name: &str, mut f: impl FnMut() -> R) {
         // Warmup.
+        // axdt-lint: allow(clock-seam): the bench harness exists to measure real wall time
         let w0 = Instant::now();
         let mut warm_iters: u64 = 0;
         while w0.elapsed() < self.warmup {
@@ -50,9 +51,10 @@ impl Bench {
         let batch = ((1e-3 / per_iter).ceil() as u64).clamp(1, 1 << 20);
 
         let mut summary = Summary::new();
-        let m0 = Instant::now();
+        let m0 = Instant::now(); // axdt-lint: allow(clock-seam): wall-time measurement window
         while m0.elapsed() < self.measure || summary.len() < 5 {
-            let t0 = Instant::now();
+            let t0 = Instant::now(); // axdt-lint: allow(clock-seam): wall-time sample start
+
             for _ in 0..batch {
                 black_box(f());
             }

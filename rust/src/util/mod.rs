@@ -16,6 +16,9 @@
 //!   (chunk queue for `par_map`, atomic next-index work stealing for
 //!   `par_for_each_indexed`).
 //! * [`stats`] — summary statistics used by benches and reports.
+//! * [`sync`] — poison-recovering mutex helpers ([`sync::lock_recover`]),
+//!   the only sanctioned way to take a lock in `rust/src` (enforced by
+//!   `axdt-lint`'s `mutex-discipline` rule).
 //! * [`prop`] — a tiny property-testing harness (seeded generators, failure
 //!   reporting with the reproducing seed).
 //! * [`bench`] — a criterion-shaped benchmark harness (warmup, timed
@@ -32,4 +35,5 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod testbed;

@@ -11,6 +11,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::util::sync::lock_recover;
+
 /// Number of worker threads to use: `AXDT_THREADS` env override, else
 /// available parallelism, clamped to [1, 64].
 pub fn default_threads() -> usize {
@@ -52,7 +54,7 @@ where
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
-                let taken = out_slices.lock().unwrap().pop();
+                let taken = lock_recover(&out_slices).pop();
                 match taken {
                     None => break,
                     Some((chunk_idx, slot)) => {

@@ -52,7 +52,7 @@ impl Summary {
             return f64::NAN;
         }
         let mut s = self.xs.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
         let i = pos.floor() as usize;
         let frac = pos - i as f64;

@@ -1,0 +1,36 @@
+//! Shared-state helpers enforced by `axdt-lint`'s `mutex-discipline` rule.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, recovering from poison: a thread that panicked while
+/// holding it must not cascade panics into every other client.  The
+/// framework's mutexes guard monotonic aggregates, swappable senders and
+/// reusable buffers, so the worst a poisoned write leaves behind is one
+/// partial sample — always preferable to stranding every other thread.
+///
+/// `axdt-lint` forbids raw `.lock().unwrap()` in `rust/src` precisely so
+/// this is the only way a lock acquisition can be written.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = std::sync::Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+}

@@ -39,7 +39,7 @@ pub const DRIVER_NAMES: [&str; 8] =
 pub fn named_problem(name: &str) -> Arc<Problem> {
     let lib = EgtLibrary::default();
     let lut = AreaLut::build(&lib);
-    let spec = generators::spec("seeds").unwrap();
+    let spec = generators::spec("seeds").expect("seeds dataset spec is registered");
     let data = generators::generate(spec, 42);
     let (train_d, test_d) = data.split(0.3, 42);
     let tree = train(

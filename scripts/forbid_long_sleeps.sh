@@ -1,59 +1,16 @@
 #!/usr/bin/env bash
 # CI guard: integration tests must not gate correctness on wall-clock
-# sleeps.  The timing surface runs on the injectable Clock
-# (`util::clock::ManualClock`), so any `thread::sleep` longer than 100 ms
-# in rust/tests/ is a regression toward the flaky pre-Clock world.
+# sleeps — the timing surface runs on the injectable Clock
+# (`util::clock::ManualClock`), and any `thread::sleep` in rust/tests/
+# beyond 100 ms (or with a non-literal duration) is a regression toward
+# the flaky pre-Clock world.
 #
-# Flags, in any file under rust/tests/:
-#   * thread::sleep(Duration::from_millis(N)) with N > 100
-#   * thread::sleep(Duration::from_secs*/from_micros(N) beyond the same
-#     100 ms budget
-#   * thread::sleep with a non-literal duration (cannot be audited)
+# Thin wrapper over the real implementation — `axdt-lint`'s
+# `no-sleep-in-tests` rule (tools/axdt-lint), which audits the literal
+# `Duration::from_*` argument at the token level.
 #
 # Exit 0 = clean, 1 = violations found.
 set -u
 
-ROOT="$(cd "$(dirname "$0")/.." && pwd)"
-TESTS_DIR="$ROOT/rust/tests"
-LIMIT_MS=100
-status=0
-
-while IFS= read -r line; do
-    file="${line%%:*}"
-    rest="${line#*:}"
-    lineno="${rest%%:*}"
-    code="${rest#*:}"
-
-    # Comment lines (//, //!, ///) may talk about sleeping; only code sleeps.
-    trimmed="${code#"${code%%[![:space:]]*}"}"
-    if [[ "$trimmed" == //* ]]; then
-        continue
-    fi
-
-    ms=""
-    if [[ "$code" =~ from_millis\(([0-9_]+)\) ]]; then
-        ms=$(( ${BASH_REMATCH[1]//_/} ))
-    elif [[ "$code" =~ from_secs\(([0-9_]+)\) ]]; then
-        ms=$(( ${BASH_REMATCH[1]//_/} * 1000 ))
-    elif [[ "$code" =~ from_secs_f(32|64)\(([0-9.]+)\) ]]; then
-        # Round up: any fractional-second sleep is at least its integer ms.
-        ms=$(awk -v s="${BASH_REMATCH[2]}" 'BEGIN { printf "%d", s * 1000 }')
-    elif [[ "$code" =~ from_micros\(([0-9_]+)\) ]]; then
-        ms=$(( ${BASH_REMATCH[1]//_/} / 1000 ))
-    elif [[ "$code" =~ from_nanos\(([0-9_]+)\) ]]; then
-        ms=$(( ${BASH_REMATCH[1]//_/} / 1000000 ))
-    fi
-
-    if [[ -z "$ms" ]]; then
-        echo "FORBIDDEN (unauditable sleep duration): $file:$lineno: $code"
-        status=1
-    elif (( ms > LIMIT_MS )); then
-        echo "FORBIDDEN (sleep ${ms} ms > ${LIMIT_MS} ms): $file:$lineno: $code"
-        status=1
-    fi
-done < <(grep -rn "thread::sleep" "$TESTS_DIR" --include='*.rs')
-
-if (( status == 0 )); then
-    echo "OK: no test under rust/tests sleeps longer than ${LIMIT_MS} ms"
-fi
-exit $status
+cd "$(dirname "$0")/.."
+exec cargo run -q -p axdt-lint -- --rule no-sleep-in-tests

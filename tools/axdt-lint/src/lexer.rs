@@ -1,0 +1,558 @@
+//! A small hand-rolled Rust lexer: just enough tokenization for
+//! token-sequence lints, with the properties the grep guards it replaces
+//! could never have:
+//!
+//! * line (`//`) and block (`/* */`, nesting) comments are skipped — a
+//!   comment *talking about* `Instant::now()` can never fire a rule —
+//!   but retained with positions, so `// axdt-lint: allow(..)`
+//!   suppressions can be resolved per line;
+//! * string literals (plain, raw `r#".."#`, byte, byte-raw), char and
+//!   byte-char literals are skipped, so a diagnostic message mentioning
+//!   `.unwrap()` is not a violation;
+//! * lifetimes (`'a`) are distinguished from char literals;
+//! * numeric literals keep their raw text, so duration arguments can be
+//!   audited (`no-sleep-in-tests`).
+//!
+//! The lexer does NOT parse Rust. Rules match short token sequences
+//! (`Instant :: now (`, `. lock ( ) . unwrap (`), which is exactly the
+//! granularity the architectural seams are defined at.
+
+/// One lexed token with its 1-based source position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub kind: TokKind,
+    pub line: u32,
+    pub col: u32,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    Ident(String),
+    /// Raw literal text, underscores and suffix included (`150_000`,
+    /// `2.5`, `0xff`).
+    Num(String),
+    Punct(char),
+    /// String / char-ish literal (content deliberately discarded).
+    Lit,
+    Lifetime,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(&self.kind, TokKind::Ident(i) if i == s)
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(&self.kind, TokKind::Punct(p) if *p == c)
+    }
+}
+
+/// A comment with the 1-based line it starts on (block comments may span
+/// further; suppressions are resolved against the start line).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn new(src: &str) -> Self {
+        Cursor { chars: src.chars().collect(), pos: 0, line: 1, col: 1 }
+    }
+
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn eof(&self) -> bool {
+        self.pos >= self.chars.len()
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails: unterminated literals simply consume the
+/// rest of the file (the linter's job is seam rules, not syntax errors —
+/// rustc owns those).
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor::new(src);
+    let mut out = Lexed::default();
+
+    while !cur.eof() {
+        let (line, col) = (cur.line, cur.col);
+        let c = match cur.peek(0) {
+            Some(c) => c,
+            None => break,
+        };
+
+        // Whitespace.
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+
+        // Comments.
+        if c == '/' && cur.peek(1) == Some('/') {
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '\n' {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            out.comments.push(Comment { text, line, col });
+            continue;
+        }
+        if c == '/' && cur.peek(1) == Some('*') {
+            let mut text = String::new();
+            let mut depth = 0usize;
+            while let Some(ch) = cur.peek(0) {
+                if ch == '/' && cur.peek(1) == Some('*') {
+                    depth += 1;
+                    text.push_str("/*");
+                    cur.bump();
+                    cur.bump();
+                } else if ch == '*' && cur.peek(1) == Some('/') {
+                    depth -= 1;
+                    text.push_str("*/");
+                    cur.bump();
+                    cur.bump();
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    text.push(ch);
+                    cur.bump();
+                }
+            }
+            out.comments.push(Comment { text, line, col });
+            continue;
+        }
+
+        // Raw strings / byte strings / raw identifiers: r"..", r#".."#,
+        // br".." etc.  `r` or `br` followed by `"` or `#..#"` is a raw
+        // string; `r#ident` is a raw identifier.
+        if c == 'r' || (c == 'b' && matches!(cur.peek(1), Some('r'))) {
+            let prefix_len = if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while cur.peek(prefix_len + hashes) == Some('#') {
+                hashes += 1;
+            }
+            match cur.peek(prefix_len + hashes) {
+                Some('"') => {
+                    for _ in 0..prefix_len + hashes + 1 {
+                        cur.bump();
+                    }
+                    // Consume until `"` followed by `hashes` hashes.
+                    'raw: while let Some(ch) = cur.bump() {
+                        if ch == '"' {
+                            for h in 0..hashes {
+                                if cur.peek(h) != Some('#') {
+                                    continue 'raw;
+                                }
+                            }
+                            for _ in 0..hashes {
+                                cur.bump();
+                            }
+                            break;
+                        }
+                    }
+                    out.tokens.push(Token { kind: TokKind::Lit, line, col });
+                    continue;
+                }
+                Some(ch) if hashes > 0 && is_ident_start(ch) => {
+                    // Raw identifier r#type.
+                    for _ in 0..prefix_len + hashes {
+                        cur.bump();
+                    }
+                    let mut ident = String::new();
+                    while let Some(ch) = cur.peek(0) {
+                        if !is_ident_continue(ch) {
+                            break;
+                        }
+                        ident.push(ch);
+                        cur.bump();
+                    }
+                    out.tokens.push(Token { kind: TokKind::Ident(ident), line, col });
+                    continue;
+                }
+                _ => {} // plain identifier starting with r/b: fall through
+            }
+        }
+
+        // Byte strings / byte chars: b"..", b'.'.
+        if c == 'b' && matches!(cur.peek(1), Some('"') | Some('\'')) {
+            cur.bump(); // b
+            let quote = cur.bump().unwrap_or('"');
+            consume_quoted(&mut cur, quote);
+            out.tokens.push(Token { kind: TokKind::Lit, line, col });
+            continue;
+        }
+
+        // Plain strings.
+        if c == '"' {
+            cur.bump();
+            consume_quoted(&mut cur, '"');
+            out.tokens.push(Token { kind: TokKind::Lit, line, col });
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let next = cur.peek(1);
+            let is_char = match next {
+                Some('\\') => true,
+                Some(n) if n != '\'' => cur.peek(2) == Some('\''),
+                _ => true, // '' or '\'': treat as (malformed) char
+            };
+            if is_char {
+                cur.bump();
+                consume_quoted(&mut cur, '\'');
+                out.tokens.push(Token { kind: TokKind::Lit, line, col });
+            } else {
+                // Lifetime: consume the quote and the identifier.
+                cur.bump();
+                while let Some(ch) = cur.peek(0) {
+                    if !is_ident_continue(ch) {
+                        break;
+                    }
+                    cur.bump();
+                }
+                out.tokens.push(Token { kind: TokKind::Lifetime, line, col });
+            }
+            continue;
+        }
+
+        // Numbers (raw text kept for duration auditing).  A trailing
+        // `.` is only part of the number when followed by a digit, so
+        // ranges (`0..10`) and method calls (`1.to_string()`) stay intact.
+        if c.is_ascii_digit() {
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch.is_ascii_alphanumeric() || ch == '_' {
+                    text.push(ch);
+                    cur.bump();
+                } else if ch == '.'
+                    && cur.peek(1).is_some_and(|d| d.is_ascii_digit())
+                    && !text.contains('.')
+                {
+                    text.push(ch);
+                    cur.bump();
+                } else {
+                    break;
+                }
+            }
+            out.tokens.push(Token { kind: TokKind::Num(text), line, col });
+            continue;
+        }
+
+        // Identifiers / keywords.
+        if is_ident_start(c) {
+            let mut ident = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if !is_ident_continue(ch) {
+                    break;
+                }
+                ident.push(ch);
+                cur.bump();
+            }
+            out.tokens.push(Token { kind: TokKind::Ident(ident), line, col });
+            continue;
+        }
+
+        // Everything else: single-char punctuation (`::` is two tokens).
+        cur.bump();
+        out.tokens.push(Token { kind: TokKind::Punct(c), line, col });
+    }
+
+    out
+}
+
+/// Consume a quoted literal body up to the closing `quote`, honoring
+/// backslash escapes.  The opening quote must already be consumed.
+fn consume_quoted(cur: &mut Cursor, quote: char) {
+    while let Some(ch) = cur.bump() {
+        if ch == '\\' {
+            cur.bump();
+        } else if ch == quote {
+            break;
+        }
+    }
+}
+
+/// Byte-position spans (token indices) of test-only code: any item
+/// annotated `#[cfg(test)]` / `#[cfg(all(test, ..))]` / `#[test]`.
+/// Seam rules skip tokens inside these spans — test code may use wall
+/// time, blocking eval baselines, and unwraps freely.
+pub fn test_token_mask(tokens: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if tokens[i].is_punct('#') && i + 1 < tokens.len() && tokens[i + 1].is_punct('[') {
+            // Collect the attribute tokens up to the matching `]`.
+            let attr_start = i + 2;
+            let mut depth = 1usize;
+            let mut j = attr_start;
+            while j < tokens.len() && depth > 0 {
+                if tokens[j].is_punct('[') {
+                    depth += 1;
+                } else if tokens[j].is_punct(']') {
+                    depth -= 1;
+                }
+                j += 1;
+            }
+            let attr_end = j.saturating_sub(1).max(attr_start);
+            let attr = &tokens[attr_start..attr_end];
+            if is_test_attr(attr) {
+                // Mark from the attribute through the end of the item it
+                // decorates: the next `{..}` block (or a bare `;`) at
+                // nesting depth 0.
+                let end = item_end(tokens, j);
+                for m in mask.iter_mut().take(end).skip(i) {
+                    *m = true;
+                }
+                i = end;
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// `#[test]`, `#[cfg(test)]`, `#[cfg(all(test, ..))]` and friends: the
+/// attribute body either IS the ident `test` or is a `cfg(..)` whose
+/// argument list mentions the ident `test` at any depth — except inside a
+/// `not(..)` group, so `#[cfg(not(test))]` code is still linted.
+fn is_test_attr(attr: &[Token]) -> bool {
+    match attr.first() {
+        Some(t) if t.is_ident("test") && attr.len() == 1 => true,
+        Some(t) if t.is_ident("cfg") => cfg_mentions_test(&attr[1..]),
+        _ => false,
+    }
+}
+
+fn cfg_mentions_test(args: &[Token]) -> bool {
+    let mut depth = 0i64;
+    // Paren depths at which a `not(` group is open; `test` under any of
+    // them is a negation, not a test gate.
+    let mut not_open: Vec<i64> = Vec::new();
+    let mut i = 0usize;
+    while i < args.len() {
+        let t = &args[i];
+        if t.is_ident("not") && args.get(i + 1).is_some_and(|n| n.is_punct('(')) {
+            not_open.push(depth + 1);
+        } else if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            while not_open.last().is_some_and(|&d| d > depth) {
+                not_open.pop();
+            }
+        } else if t.is_ident("test") && not_open.is_empty() {
+            return true;
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Token index one past the end of the item starting at `start` (which
+/// points just past the item's attribute).  Skips any further attributes,
+/// then consumes to the first top-level `{..}` block's close or a bare
+/// `;` — enough for `mod`, `fn`, `struct`, `impl` and `use` items.
+fn item_end(tokens: &[Token], mut start: usize) -> usize {
+    // Further attributes on the same item.
+    while start + 1 < tokens.len()
+        && tokens[start].is_punct('#')
+        && tokens[start + 1].is_punct('[')
+    {
+        let mut depth = 0usize;
+        let mut j = start + 1;
+        while j < tokens.len() {
+            if tokens[j].is_punct('[') {
+                depth += 1;
+            } else if tokens[j].is_punct(']') {
+                depth -= 1;
+                if depth == 0 {
+                    j += 1;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        start = j;
+    }
+    let mut i = start;
+    let mut paren = 0i64;
+    while i < tokens.len() {
+        let t = &tokens[i];
+        if t.is_punct('(') || t.is_punct('[') {
+            paren += 1;
+        } else if t.is_punct(')') || t.is_punct(']') {
+            paren -= 1;
+        } else if t.is_punct(';') && paren <= 0 {
+            return i + 1;
+        } else if t.is_punct('{') && paren <= 0 {
+            // Consume the braced body.
+            let mut depth = 0usize;
+            while i < tokens.len() {
+                if tokens[i].is_punct('{') {
+                    depth += 1;
+                } else if tokens[i].is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i + 1;
+                    }
+                }
+                i += 1;
+            }
+            return tokens.len();
+        }
+        i += 1;
+    }
+    tokens.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Ident(i) => Some(i),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_not_tokens() {
+        let src = r###"
+            // Instant::now() in a comment
+            /* thread::sleep in a block /* nested */ comment */
+            let s = "Instant::now()";
+            let r = r#"pool.eval("x")"#;
+            let c = 'x';
+            let e = '\n';
+            fn f<'a>(x: &'a str) {}
+        "###;
+        let ids = idents(src);
+        assert!(!ids.contains(&"Instant".to_string()));
+        assert!(!ids.contains(&"sleep".to_string()));
+        assert!(!ids.contains(&"eval".to_string()));
+        assert!(ids.contains(&"str".to_string()), "lifetime must not eat the type");
+    }
+
+    #[test]
+    fn comment_positions_are_recorded() {
+        let lexed = lex("let x = 1; // axdt-lint: allow(clock-seam): why\nlet y = 2;\n");
+        assert_eq!(lexed.comments.len(), 1);
+        assert_eq!(lexed.comments[0].line, 1);
+        assert!(lexed.comments[0].text.contains("allow(clock-seam)"));
+    }
+
+    #[test]
+    fn numbers_keep_raw_text_and_ranges_split() {
+        let lexed = lex("from_millis(150_000); for i in 0..10 {} let f = 2.5f64;");
+        let nums: Vec<String> = lexed
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Num(n) => Some(n),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec!["150_000", "0", "10", "2.5f64"]);
+    }
+
+    #[test]
+    fn cfg_test_mask_covers_the_module_body() {
+        let src = r#"
+            fn prod() { x.unwrap(); }
+            #[cfg(test)]
+            mod tests {
+                #[test]
+                fn t() { y.unwrap(); }
+            }
+            fn prod2() { z.unwrap(); }
+        "#;
+        let lexed = lex(src);
+        let mask = test_token_mask(&lexed.tokens);
+        let unwraps: Vec<bool> = lexed
+            .tokens
+            .iter()
+            .zip(&mask)
+            .filter(|(t, _)| t.is_ident("unwrap"))
+            .map(|(_, &m)| m)
+            .collect();
+        assert_eq!(unwraps, vec![false, true, false]);
+    }
+
+    #[test]
+    fn cfg_not_test_is_still_linted() {
+        let src = "#[cfg(not(test))]\nfn prod() { x.unwrap(); }\n#[cfg(any(test, feature))]\nfn gated() { y.unwrap(); }\n";
+        let lexed = lex(src);
+        let mask = test_token_mask(&lexed.tokens);
+        let unwraps: Vec<bool> = lexed
+            .tokens
+            .iter()
+            .zip(&mask)
+            .filter(|(t, _)| t.is_ident("unwrap"))
+            .map(|(_, &m)| m)
+            .collect();
+        assert_eq!(unwraps, vec![false, true]);
+    }
+
+    #[test]
+    fn cfg_test_on_semicolon_item_does_not_swallow_the_file() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn prod() { x.unwrap(); }\n";
+        let lexed = lex(src);
+        let mask = test_token_mask(&lexed.tokens);
+        let unwrap_masked = lexed
+            .tokens
+            .iter()
+            .zip(&mask)
+            .find(|(t, _)| t.is_ident("unwrap"))
+            .map(|(_, &m)| m);
+        assert_eq!(unwrap_masked, Some(false));
+    }
+}

@@ -1,0 +1,124 @@
+//! CLI for the axdt architectural linter.
+//!
+//! ```text
+//! axdt-lint [--rule <id>]... [--root <dir>] [--list-rules] [FILE]...
+//! ```
+//!
+//! * no args: lint the whole tree (rust/src, rust/tests, rust/benches)
+//!   under the repo root found by walking up from the current directory;
+//! * `--rule <id>` (repeatable): run only the named rules — how the
+//!   `scripts/forbid_*.sh` wrappers keep their old single-concern CLI;
+//! * `FILE` operands: lint just those files (paths are resolved against
+//!   the repo root for rule scoping).
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use axdt_lint::{find_root, lint_path, lint_tree, rule_ids, ALL_RULES};
+
+fn main() -> ExitCode {
+    let mut rules: Vec<String> = Vec::new();
+    let mut root_arg: Option<PathBuf> = None;
+    let mut files: Vec<PathBuf> = Vec::new();
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--rule" => match args.next() {
+                Some(r) => rules.push(r),
+                None => return usage("--rule needs a rule id"),
+            },
+            "--root" => match args.next() {
+                Some(d) => root_arg = Some(PathBuf::from(d)),
+                None => return usage("--root needs a directory"),
+            },
+            "--list-rules" => {
+                for (id, what) in ALL_RULES {
+                    println!("{id:<20} {what}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: axdt-lint [--rule <id>]... [--root <dir>] [--list-rules] [FILE]..."
+                );
+                return ExitCode::SUCCESS;
+            }
+            _ if arg.starts_with("--") => {
+                return usage(&format!("unknown flag {arg}"));
+            }
+            _ => files.push(PathBuf::from(arg)),
+        }
+    }
+
+    let known = rule_ids();
+    for r in &rules {
+        if !known.contains(&r.as_str()) {
+            return usage(&format!(
+                "unknown rule `{r}` (known: {})",
+                known.join(", ")
+            ));
+        }
+    }
+    let active: Vec<&str> = rules.iter().map(|s| s.as_str()).collect();
+
+    let cwd = match std::env::current_dir() {
+        Ok(d) => d,
+        Err(e) => return fail(&format!("cannot read current dir: {e}")),
+    };
+    let root = match root_arg.or_else(|| find_root(&cwd)) {
+        Some(r) => r,
+        None => return fail("no repo root (a directory containing rust/src) above here"),
+    };
+
+    let result = if files.is_empty() {
+        lint_tree(&root, &active)
+    } else {
+        let mut out = Vec::new();
+        for f in &files {
+            let abs = if f.is_absolute() { f.clone() } else { root.join(f) };
+            match lint_path(&root, &abs, &active) {
+                Ok(d) => out.extend(d),
+                Err(e) => return fail(&format!("{}: {e}", f.display())),
+            }
+        }
+        Ok(out)
+    };
+
+    match result {
+        Ok(diags) if diags.is_empty() => {
+            let what = if active.is_empty() {
+                "all rules".to_string()
+            } else {
+                active.join(", ")
+            };
+            println!("OK: axdt-lint clean ({what})");
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                eprintln!("{d}");
+            }
+            eprintln!(
+                "axdt-lint: {} violation(s); suppress intentional exceptions with \
+                 `// axdt-lint: allow(<rule>): <justification>`",
+                diags.len()
+            );
+            ExitCode::FAILURE
+        }
+        Err(e) => fail(&format!("lint walk failed: {e}")),
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("axdt-lint: {msg}");
+    eprintln!("usage: axdt-lint [--rule <id>]... [--root <dir>] [--list-rules] [FILE]...");
+    ExitCode::from(2)
+}
+
+fn fail(msg: &str) -> ExitCode {
+    eprintln!("axdt-lint: {msg}");
+    ExitCode::from(2)
+}

@@ -1,0 +1,487 @@
+//! The architectural rule registry.
+//!
+//! Every rule is a token-sequence matcher scoped by (relative) path and
+//! by the test-token mask (`lexer::test_token_mask`): test code is
+//! allowed to use wall time, blocking-eval baselines and unwraps.
+//!
+//! | rule | enforces |
+//! |------|----------|
+//! | `clock-seam` | no `Instant::now()` / `SystemTime::now()` / `thread::sleep` outside `util/clock.rs` + `util/testbed.rs` |
+//! | `ticket-seam` | blocking `pool/svc/service.eval(` and `.eval_typed(` confined to the pool + facade |
+//! | `no-sleep-in-tests` | `rust/tests/` sleeps: literal `Duration` ≤ 100 ms only |
+//! | `panic-free-workers` | no `.unwrap()` / `.expect(` / `panic!` on worker paths |
+//! | `mutex-discipline` | `.lock().unwrap()` forbidden — use `util::sync::lock_recover` |
+//!
+//! Suppression: `// axdt-lint: allow(<rule>): <justification>` on the
+//! flagged line or the line directly above.  The justification is
+//! mandatory — an allow without one is itself a diagnostic (`bad-allow`)
+//! and does NOT suppress.
+
+use crate::lexer::{lex, test_token_mask, Comment, TokKind, Token};
+
+/// A single finding, formatted as `path:line:col: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub path: String,
+    pub line: u32,
+    pub col: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: [{}] {}",
+            self.path, self.line, self.col, self.rule, self.message
+        )
+    }
+}
+
+pub const CLOCK_SEAM: &str = "clock-seam";
+pub const TICKET_SEAM: &str = "ticket-seam";
+pub const NO_SLEEP_IN_TESTS: &str = "no-sleep-in-tests";
+pub const PANIC_FREE_WORKERS: &str = "panic-free-workers";
+pub const MUTEX_DISCIPLINE: &str = "mutex-discipline";
+/// Meta-rule: a malformed suppression comment (missing justification or
+/// unknown rule id).  Always active — an allow that suppresses nothing
+/// silently is how guards rot.
+pub const BAD_ALLOW: &str = "bad-allow";
+
+/// The enforceable rules, in reporting order (`bad-allow` is a meta-rule
+/// and not selectable).
+pub const ALL_RULES: &[(&str, &str)] = &[
+    (
+        CLOCK_SEAM,
+        "Instant::now()/SystemTime::now()/thread::sleep outside util/clock.rs and \
+         util/testbed.rs: deadline decisions must read the injected Clock",
+    ),
+    (
+        TICKET_SEAM,
+        "blocking pool/service eval outside coordinator/{shard,service}.rs: evaluation \
+         must flow through the two-phase submit/wait ticket path",
+    ),
+    (
+        NO_SLEEP_IN_TESTS,
+        "thread::sleep in rust/tests/ longer than 100 ms or with a non-literal duration: \
+         timing tests run on ManualClock",
+    ),
+    (
+        PANIC_FREE_WORKERS,
+        "unwrap()/expect()/panic! in coordinator/{shard,service}.rs or fitness/ non-test \
+         code: workers answer with typed ServiceErrors, they never die",
+    ),
+    (
+        MUTEX_DISCIPLINE,
+        ".lock().unwrap() where util::sync::lock_recover exists: a poisoned mutex must \
+         not cascade panics across clients",
+    ),
+];
+
+pub fn rule_ids() -> Vec<&'static str> {
+    ALL_RULES.iter().map(|(id, _)| *id).collect()
+}
+
+/// Longest sleep a test may take on the wall clock (matches the retired
+/// `scripts/forbid_long_sleeps.sh` budget).
+const SLEEP_LIMIT_MS: f64 = 100.0;
+
+/// Per-path rule scoping, derived from the repo-relative path (forward
+/// slashes).  Mirrors the seams' documented homes, so moving a seam file
+/// means updating this table — which is exactly the review conversation
+/// the linter exists to force.
+struct Scope {
+    clock_seam: bool,
+    ticket_seam: bool,
+    sleep_rule: bool,
+    panic_free: bool,
+    mutex_rule: bool,
+}
+
+fn scope_for(path: &str) -> Scope {
+    let in_src = path.starts_with("rust/src/");
+    let in_tests = path.starts_with("rust/tests/");
+    let clock_exempt =
+        path.ends_with("util/clock.rs") || path.ends_with("util/testbed.rs");
+    let ticket_exempt =
+        path.ends_with("coordinator/shard.rs") || path.ends_with("coordinator/service.rs");
+    let worker_path = path.ends_with("coordinator/shard.rs")
+        || path.ends_with("coordinator/service.rs")
+        || path.starts_with("rust/src/fitness/");
+    Scope {
+        clock_seam: in_src && !clock_exempt,
+        ticket_seam: in_src && !ticket_exempt,
+        sleep_rule: in_tests,
+        panic_free: in_src && worker_path,
+        mutex_rule: in_src,
+    }
+}
+
+/// Lint one source file under its repo-relative `path`.  `active` filters
+/// which rules run (empty = all); `bad-allow` findings are only reported
+/// for allows naming an active rule, so a partial run (`--rule X`) never
+/// fails on another rule's suppressions.
+pub fn lint_source(path: &str, source: &str, active: &[&str]) -> Vec<Diagnostic> {
+    let lexed = lex(source);
+    let mask = test_token_mask(&lexed.tokens);
+    let scope = scope_for(path);
+    let on = |rule: &str| active.is_empty() || active.contains(&rule);
+
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    let toks = &lexed.tokens;
+
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        // Seam rules skip test code (wall time, blocking baselines and
+        // unwraps are fine there); the sleep rule is test code's own
+        // budget and must NOT skip it — in `rust/tests/` every sleep
+        // lives inside a `#[test]` fn.
+        let prod = !mask[i];
+
+        if prod && scope.clock_seam && on(CLOCK_SEAM) {
+            if (t.is_ident("Instant") || t.is_ident("SystemTime"))
+                && seq(toks, i + 1, &[":", ":", "now", "("])
+            {
+                raw.push(diag(path, t, CLOCK_SEAM, format!(
+                    "{}::now() bypasses the injected Clock (util::clock); thread a `Clock` \
+                     through and read `now_ns()`",
+                    ident_text(t)
+                )));
+            }
+            if t.is_ident("thread") && seq(toks, i + 1, &[":", ":", "sleep"]) {
+                raw.push(diag(
+                    path,
+                    t,
+                    CLOCK_SEAM,
+                    "thread::sleep in production code: deadlines and backoff must be \
+                     driven by the injected Clock"
+                        .to_string(),
+                ));
+            }
+        }
+
+        if prod && scope.ticket_seam && on(TICKET_SEAM) && t.is_punct('.') {
+            // `.eval(` with a pool-ish receiver: `pool`, `svc`, `service`
+            // idents or a `pool()` call directly before the dot.
+            if seq(toks, i + 1, &["eval", "("]) {
+                let recv_ident = i
+                    .checked_sub(1)
+                    .map(|p| {
+                        toks[p].is_ident("pool")
+                            || toks[p].is_ident("svc")
+                            || toks[p].is_ident("service")
+                    })
+                    .unwrap_or(false);
+                let recv_call = i >= 3
+                    && toks[i - 1].is_punct(')')
+                    && toks[i - 2].is_punct('(')
+                    && toks[i - 3].is_ident("pool");
+                if recv_ident || recv_call {
+                    raw.push(diag(
+                        path,
+                        &toks[i + 1],
+                        TICKET_SEAM,
+                        "blocking eval on the pool/service outside the adapter: issue a \
+                         ticket via submit(..) and redeem it with wait(..)"
+                            .to_string(),
+                    ));
+                }
+            }
+            if seq(toks, i + 1, &["eval_typed", "("]) {
+                raw.push(diag(
+                    path,
+                    &toks[i + 1],
+                    TICKET_SEAM,
+                    "blocking eval_typed outside the adapter: issue a ticket via \
+                     submit_typed(..) and redeem it with wait_typed(..)"
+                        .to_string(),
+                ));
+            }
+        }
+
+        if scope.sleep_rule
+            && on(NO_SLEEP_IN_TESTS)
+            && t.is_ident("thread")
+            && seq(toks, i + 1, &[":", ":", "sleep", "("])
+        {
+            if let Some(d) = audit_sleep(path, toks, i) {
+                raw.push(d);
+            }
+        }
+
+        if prod && scope.panic_free && on(PANIC_FREE_WORKERS) {
+            if t.is_punct('.') && seq(toks, i + 1, &["unwrap", "("]) {
+                raw.push(diag(
+                    path,
+                    &toks[i + 1],
+                    PANIC_FREE_WORKERS,
+                    "unwrap() on a worker path: return a typed ServiceError (or use \
+                     lock_recover) — a panicking worker strands every client of its shard"
+                        .to_string(),
+                ));
+            }
+            if t.is_punct('.') && seq(toks, i + 1, &["expect", "("]) {
+                raw.push(diag(
+                    path,
+                    &toks[i + 1],
+                    PANIC_FREE_WORKERS,
+                    "expect() on a worker path: return a typed ServiceError — a panicking \
+                     worker strands every client of its shard"
+                        .to_string(),
+                ));
+            }
+            if t.is_ident("panic") && toks.get(i + 1).is_some_and(|n| n.is_punct('!')) {
+                raw.push(diag(
+                    path,
+                    t,
+                    PANIC_FREE_WORKERS,
+                    "panic! on a worker path: answer with a typed ServiceError instead"
+                        .to_string(),
+                ));
+            }
+        }
+
+        if prod
+            && scope.mutex_rule
+            && on(MUTEX_DISCIPLINE)
+            && t.is_punct('.')
+            && seq(toks, i + 1, &["lock", "(", ")", "."])
+            && (seq(toks, i + 5, &["unwrap", "("]) || seq(toks, i + 5, &["expect", "("]))
+        {
+            raw.push(diag(
+                path,
+                &toks[i + 5],
+                MUTEX_DISCIPLINE,
+                "raw .lock().unwrap(): use util::sync::lock_recover so a poisoned mutex \
+                 recovers instead of cascading the panic"
+                    .to_string(),
+            ));
+        }
+    }
+
+    apply_allows(path, raw, &lexed.comments, active)
+}
+
+fn ident_text(t: &Token) -> &str {
+    match &t.kind {
+        TokKind::Ident(i) => i,
+        _ => "",
+    }
+}
+
+fn diag(path: &str, at: &Token, rule: &'static str, message: String) -> Diagnostic {
+    Diagnostic { path: path.to_string(), line: at.line, col: at.col, rule, message }
+}
+
+/// Match a sequence of idents / single-char puncts starting at `from`.
+fn seq(toks: &[Token], from: usize, pat: &[&str]) -> bool {
+    if from + pat.len() > toks.len() {
+        return false;
+    }
+    pat.iter().enumerate().all(|(k, p)| {
+        let t = &toks[from + k];
+        let mut chars = p.chars();
+        match (chars.next(), chars.next()) {
+            (Some(c), None) if !c.is_alphanumeric() && c != '_' => t.is_punct(c),
+            _ => t.is_ident(p),
+        }
+    })
+}
+
+/// Audit one `thread::sleep(` call in a test (token `i` = `thread`).
+/// Auditable form: `thread::sleep([std::[time::]]Duration::from_X(<literal>))`.
+/// Returns a diagnostic for an over-budget or non-literal duration.
+fn audit_sleep(path: &str, toks: &[Token], i: usize) -> Option<Diagnostic> {
+    // Argument tokens: from after `(` to its matching `)`.
+    let open = i + 4;
+    let mut depth = 0usize;
+    let mut close = open;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                close = k;
+                break;
+            }
+        }
+    }
+    if close <= open {
+        // Unterminated call (malformed source): rustc owns that error.
+        return None;
+    }
+    let arg = &toks[open + 1..close];
+
+    // Strip an optional `std::` / `std::time::` path prefix.
+    let mut a = arg;
+    for prefix in ["std", "time"] {
+        if a.first().is_some_and(|t| t.is_ident(prefix))
+            && a.get(1).is_some_and(|t| t.is_punct(':'))
+            && a.get(2).is_some_and(|t| t.is_punct(':'))
+        {
+            a = &a[3..];
+        }
+    }
+
+    let auditable = a.len() == 7
+        && a[0].is_ident("Duration")
+        && a[1].is_punct(':')
+        && a[2].is_punct(':')
+        && matches!(a[3].kind, TokKind::Ident(_))
+        && a[4].is_punct('(')
+        && matches!(a[5].kind, TokKind::Num(_))
+        && a[6].is_punct(')');
+    if !auditable {
+        return Some(diag(
+            path,
+            &toks[i],
+            NO_SLEEP_IN_TESTS,
+            "unauditable sleep duration (not a literal Duration::from_*): drive timing \
+             through ManualClock or testbed::wait_until"
+                .to_string(),
+        ));
+    }
+
+    let ctor = ident_text(&a[3]).to_string();
+    let raw = match &a[5].kind {
+        TokKind::Num(n) => n.replace('_', ""),
+        _ => return None,
+    };
+    // Strip a numeric suffix (u64, f32...) if present.
+    let numeric: String = raw
+        .chars()
+        .take_while(|c| c.is_ascii_digit() || *c == '.')
+        .collect();
+    let value: f64 = match numeric.parse() {
+        Ok(v) => v,
+        Err(_) => {
+            return Some(diag(
+                path,
+                &toks[i],
+                NO_SLEEP_IN_TESTS,
+                format!("unauditable sleep duration literal `{raw}`"),
+            ))
+        }
+    };
+    let ms = match ctor.as_str() {
+        "from_millis" => value,
+        "from_secs" => value * 1000.0,
+        "from_secs_f32" | "from_secs_f64" => value * 1000.0,
+        "from_micros" => value / 1000.0,
+        "from_nanos" => value / 1_000_000.0,
+        _ => {
+            return Some(diag(
+                path,
+                &toks[i],
+                NO_SLEEP_IN_TESTS,
+                format!("unauditable sleep duration constructor `Duration::{ctor}`"),
+            ))
+        }
+    };
+    if ms > SLEEP_LIMIT_MS {
+        return Some(diag(
+            path,
+            &toks[i],
+            NO_SLEEP_IN_TESTS,
+            format!(
+                "sleep of {ms:.0} ms exceeds the {SLEEP_LIMIT_MS:.0} ms budget: drive \
+                 timing through ManualClock or testbed::wait_until"
+            ),
+        ));
+    }
+    None
+}
+
+/// One parsed `axdt-lint: allow(<rule>)` suppression.
+struct Allow {
+    rule: String,
+    justified: bool,
+    line: u32,
+    col: u32,
+}
+
+fn parse_allows(comments: &[Comment]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for c in comments {
+        let mut rest = c.text.as_str();
+        while let Some(pos) = rest.find("axdt-lint:") {
+            rest = &rest[pos + "axdt-lint:".len()..];
+            let Some(ap) = rest.find("allow(") else { continue };
+            let after = &rest[ap + "allow(".len()..];
+            let Some(cp) = after.find(')') else { continue };
+            let rule = after[..cp].trim().to_string();
+            // Justification: any non-empty text after the `)`, with
+            // leading separator punctuation stripped.
+            let tail = after[cp + 1..]
+                .trim_start_matches(&[':', '-', '—', ' ', '\t'][..])
+                .trim();
+            out.push(Allow {
+                rule,
+                justified: !tail.is_empty(),
+                line: c.line,
+                col: c.col,
+            });
+            rest = &after[cp + 1..];
+        }
+    }
+    out
+}
+
+/// Filter diagnostics through suppression comments and append `bad-allow`
+/// findings for malformed ones.
+fn apply_allows(
+    path: &str,
+    raw: Vec<Diagnostic>,
+    comments: &[Comment],
+    active: &[&str],
+) -> Vec<Diagnostic> {
+    let allows = parse_allows(comments);
+    let on = |rule: &str| active.is_empty() || active.contains(&rule);
+    let known = rule_ids();
+
+    let mut out: Vec<Diagnostic> = raw
+        .into_iter()
+        .filter(|d| {
+            !allows.iter().any(|a| {
+                a.justified
+                    && a.rule == d.rule
+                    && (a.line == d.line || a.line + 1 == d.line)
+            })
+        })
+        .collect();
+
+    for a in &allows {
+        if !known.contains(&a.rule.as_str()) {
+            // Unknown rule ids only fail full runs: a partial run cannot
+            // tell a typo from a rule it was asked not to load.
+            if active.is_empty() {
+                out.push(Diagnostic {
+                    path: path.to_string(),
+                    line: a.line,
+                    col: a.col,
+                    rule: BAD_ALLOW,
+                    message: format!("allow names unknown rule `{}`", a.rule),
+                });
+            }
+        } else if !a.justified && on(a.rule.as_str()) {
+            out.push(Diagnostic {
+                path: path.to_string(),
+                line: a.line,
+                col: a.col,
+                rule: BAD_ALLOW,
+                message: format!(
+                    "allow({}) without a justification is ignored: write \
+                     `// axdt-lint: allow({}): <why this exception is sound>`",
+                    a.rule, a.rule
+                ),
+            });
+        }
+    }
+
+    out.sort_by(|a, b| {
+        (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule))
+    });
+    out
+}

@@ -1,0 +1,10 @@
+//@ path: rust/src/util/bench.rs
+//@ expect: clock-seam@9
+//@ expect: bad-allow@8
+
+// An allow with no justification does NOT suppress, even right above the
+// violation: both the original diagnostic and a bad-allow fire.
+fn stamp() -> Instant {
+    // axdt-lint: allow(clock-seam)
+    Instant::now()
+}

@@ -1,0 +1,10 @@
+//@ path: rust/src/dt/train.rs
+//@ expect: bad-allow@9
+//@ partial: mutex-discipline
+
+// An allow naming a rule that does not exist is flagged on full runs,
+// but a partial run (--rule mutex-discipline) stays silent: it cannot
+// tell a typo from a rule it was asked not to load.
+
+// axdt-lint: allow(clock-seams): close but wrong rule id
+fn train() {}

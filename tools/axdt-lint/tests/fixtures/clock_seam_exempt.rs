@@ -1,0 +1,13 @@
+//@ path: rust/src/util/clock.rs
+
+// The clock module is the one place allowed to touch the OS clock: it is
+// the seam's implementation, so nothing here may fire.
+
+pub fn now_ns_impl() -> u64 {
+    let epoch = Instant::now();
+    epoch.elapsed().as_nanos() as u64
+}
+
+pub fn park(d: Duration) {
+    std::thread::sleep(d);
+}

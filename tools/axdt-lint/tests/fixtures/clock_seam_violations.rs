@@ -1,0 +1,22 @@
+//@ path: rust/src/coordinator/driver.rs
+//@ expect: clock-seam@8
+//@ expect: clock-seam@9
+//@ expect: clock-seam@12
+
+fn run() {
+    // Instant::now() in this comment must not fire.
+    let t0 = Instant::now();
+    let wall = std::time::SystemTime::now();
+    let s = "thread::sleep(Duration::from_secs(5))";
+    let _ = (t0, wall, s);
+    std::thread::sleep(std::time::Duration::from_millis(5));
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn wall_time_is_fine_in_tests() {
+        let _t = Instant::now();
+        thread::sleep(Duration::from_millis(1));
+    }
+}

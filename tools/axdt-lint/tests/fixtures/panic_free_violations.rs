@@ -1,0 +1,24 @@
+//@ path: rust/src/coordinator/shard.rs
+//@ expect: panic-free-workers@8
+//@ expect: panic-free-workers@9
+//@ expect: panic-free-workers@11
+
+fn worker_loop(rx: Receiver<Job>) {
+    // job.reply.unwrap() in a comment must not fire.
+    let job = rx.recv().unwrap();
+    let out = job.run().expect("job must succeed");
+    if out.is_empty() {
+        panic!("empty result");
+    }
+    let err = "panic! in a log string must not fire: x.unwrap()";
+    let _ = err;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v = make_pool().submit(1, &batch).unwrap();
+        assert!(!v.is_empty(), "got {v:?}");
+    }
+}

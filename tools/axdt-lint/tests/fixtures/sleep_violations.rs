@@ -1,0 +1,19 @@
+//@ path: rust/tests/shard_pool.rs
+//@ expect: no-sleep-in-tests@10
+//@ expect: no-sleep-in-tests@11
+//@ expect: no-sleep-in-tests@14
+//@ expect: no-sleep-in-tests@17
+
+#[test]
+fn pool_settles() {
+    // thread::sleep(Duration::from_secs(60)) in a comment must not fire.
+    thread::sleep(Duration::from_millis(250));
+    std::thread::sleep(std::time::Duration::from_secs(2));
+    thread::sleep(Duration::from_millis(100));
+    thread::sleep(Duration::from_micros(500));
+    thread::sleep(Duration::from_millis(150_000));
+    let backoff = config.backoff();
+    let log = "thread::sleep(Duration::from_secs(9))";
+    thread::sleep(backoff);
+    let _ = log;
+}

@@ -1,0 +1,16 @@
+//@ path: rust/src/coordinator/service.rs
+
+// The facade IS the documented blocking adapter: `eval` here wraps
+// submit+wait, so the rule is scoped out of this file entirely.
+
+impl Service {
+    pub fn eval(&self, batch: &Batch) -> Result<Vec<f32>, ServiceError> {
+        let ticket = self.pool.submit(self.next_id(), batch)?;
+        self.pool.wait(ticket)
+    }
+
+    fn baseline(&self, batch: &Batch) -> Result<Vec<f32>, ServiceError> {
+        let svc = self;
+        svc.eval(batch)
+    }
+}

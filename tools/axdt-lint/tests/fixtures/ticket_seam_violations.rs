@@ -1,0 +1,24 @@
+//@ path: rust/src/fitness/mod.rs
+//@ expect: ticket-seam@9
+//@ expect: ticket-seam@10
+//@ expect: ticket-seam@11
+//@ expect: ticket-seam@12
+
+fn score(pool: &ShardPool, svc: &Service, trees: &[Tree]) -> Vec<f32> {
+    // pool.eval( in this comment must not fire.
+    let a = pool.eval(&trees[0]);
+    let b = svc.eval(&trees[1]);
+    let c = self.pool().eval(&trees[2]);
+    let d = backend.eval_typed(&trees[3]);
+    let msg = "service.eval(batch) is the blocking adapter";
+    let tree_val = tree.eval(&x);
+    vec![a, b, c, d, tree_val, msg.len() as f32]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn blocking_baseline_is_fine_in_tests() {
+        let _ = pool.eval(&tree);
+    }
+}

@@ -1,0 +1,132 @@
+//! Fixture harness: every file in `tests/fixtures/` is a self-describing
+//! lint case.
+//!
+//! Header directives (ordinary `//@` comments, invisible to the lexer's
+//! rule matching):
+//!
+//! * `//@ path: <repo-relative path>` — the virtual path the snippet is
+//!   linted under (this is what selects the rule scope);
+//! * `//@ expect: <rule>@<line>` — one expected diagnostic on a full run
+//!   (all rules active); repeatable; omit entirely for a clean fixture;
+//! * `//@ partial: <rule>[,<rule>...]` — additionally run with only these
+//!   rules active and assert `//@ expect-partial:` entries (none = clean).
+//!
+//! The assertion is exact: the multiset of (rule, line) pairs must match,
+//! so a fixture catches both missed violations and spurious ones.
+
+use std::fs;
+use std::path::PathBuf;
+
+use axdt_lint::lint_source;
+
+#[derive(Debug, Default)]
+struct Fixture {
+    path: String,
+    expect: Vec<(String, u32)>,
+    partial: Option<Vec<String>>,
+    expect_partial: Vec<(String, u32)>,
+}
+
+fn parse_fixture(src: &str, name: &str) -> Fixture {
+    let mut fx = Fixture::default();
+    for line in src.lines() {
+        let Some(directive) = line.strip_prefix("//@ ") else { continue };
+        if let Some(p) = directive.strip_prefix("path: ") {
+            fx.path = p.trim().to_string();
+        } else if let Some(e) = directive.strip_prefix("expect: ") {
+            fx.expect.push(parse_expect(e, name));
+        } else if let Some(e) = directive.strip_prefix("expect-partial: ") {
+            fx.expect_partial.push(parse_expect(e, name));
+        } else if let Some(r) = directive.strip_prefix("partial: ") {
+            fx.partial = Some(r.split(',').map(|s| s.trim().to_string()).collect());
+        } else {
+            panic!("{name}: unknown fixture directive `//@ {directive}`");
+        }
+    }
+    assert!(!fx.path.is_empty(), "{name}: missing `//@ path:` directive");
+    fx
+}
+
+fn parse_expect(spec: &str, name: &str) -> (String, u32) {
+    let (rule, line) = spec
+        .trim()
+        .split_once('@')
+        .unwrap_or_else(|| panic!("{name}: expect directive `{spec}` is not <rule>@<line>"));
+    let line: u32 = line
+        .parse()
+        .unwrap_or_else(|_| panic!("{name}: bad line number in expect `{spec}`"));
+    (rule.to_string(), line)
+}
+
+fn check(name: &str, fx_path: &str, src: &str, active: &[&str], want: &[(String, u32)]) {
+    let got: Vec<(String, u32)> = lint_source(fx_path, src, active)
+        .into_iter()
+        .map(|d| (d.rule.to_string(), d.line))
+        .collect();
+    let mut want: Vec<(String, u32)> = want.to_vec();
+    let mut got_sorted = got.clone();
+    want.sort();
+    got_sorted.sort();
+    assert_eq!(
+        got_sorted, want,
+        "{name} (active={active:?}): diagnostics mismatch\nfull output:\n{}",
+        lint_source(fx_path, src, active)
+            .iter()
+            .map(|d| format!("  {d}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn fixtures() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    let mut entries: Vec<PathBuf> = fs::read_dir(&dir)
+        .expect("tests/fixtures exists")
+        .map(|e| e.expect("readable dir entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == "rs"))
+        .collect();
+    entries.sort();
+    assert!(
+        entries.len() >= 8,
+        "expected the full fixture set, found {}",
+        entries.len()
+    );
+
+    for path in entries {
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let src = fs::read_to_string(&path).expect("fixture readable");
+        let fx = parse_fixture(&src, &name);
+
+        check(&name, &fx.path, &src, &[], &fx.expect);
+
+        if let Some(partial) = &fx.partial {
+            let active: Vec<&str> = partial.iter().map(|s| s.as_str()).collect();
+            check(&name, &fx.path, &src, &active, &fx.expect_partial);
+        }
+    }
+}
+
+/// Each of the five rules must be exercised by at least one seeded
+/// violation across the fixture set — a rule nobody can trip is dead.
+#[test]
+fn every_rule_has_a_seeded_fixture() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    let mut seeded: Vec<String> = Vec::new();
+    for entry in fs::read_dir(&dir).expect("tests/fixtures exists") {
+        let path = entry.expect("readable dir entry").path();
+        if !path.extension().is_some_and(|x| x == "rs") {
+            continue;
+        }
+        let src = fs::read_to_string(&path).expect("fixture readable");
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let fx = parse_fixture(&src, &name);
+        seeded.extend(fx.expect.iter().map(|(r, _)| r.clone()));
+    }
+    for (rule, _) in axdt_lint::ALL_RULES {
+        assert!(
+            seeded.iter().any(|r| r == rule),
+            "rule `{rule}` has no seeded fixture violation"
+        );
+    }
+}
