@@ -93,7 +93,11 @@ fn main() -> anyhow::Result<()> {
     // ---- archive ------------------------------------------------------------
     std::fs::create_dir_all("results")?;
     let mut f = std::fs::File::create("results/paper_repro.json")?;
-    writeln!(f, "{}", report::RunArchive { runs: &runs }.to_json())?;
+    let archive = report::RunArchive {
+        runs: &runs,
+        service: Some(service.metrics.histograms_json()),
+    };
+    writeln!(f, "{}", archive.to_json())?;
     eprintln!("[paper_repro] wrote results/paper_repro.json");
     service.shutdown();
     Ok(())

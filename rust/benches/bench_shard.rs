@@ -280,7 +280,7 @@ fn coalesce_policy_run(
         }
     });
     let dt = t0.elapsed().as_secs_f64();
-    let mean_width = svc.metrics.batch_width_summary().mean();
+    let mean_width = svc.metrics.batch_width_mean();
     let waste = svc.metrics.padding_waste();
     let report = svc.metrics.render();
     svc.shutdown();

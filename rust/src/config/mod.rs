@@ -51,6 +51,15 @@ pub struct RunConfig {
     pub microbatch: usize,
     pub accuracy_loss: f64,
     pub out_dir: String,
+    /// Chrome trace-event JSON output path (`--trace-out`); "" = tracing
+    /// off.  A non-empty path enables the service's ticket-lifecycle
+    /// [`TraceJournal`](crate::util::trace::TraceJournal) and writes the
+    /// Perfetto-loadable trace there at the end of the run.
+    pub trace_out: String,
+    /// Live metrics-snapshot interval in milliseconds
+    /// (`--metrics-interval-ms`); 0 = off.  Emits one JSON line of
+    /// `Metrics` gauges per interval to stderr while the run executes.
+    pub metrics_interval_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -75,6 +84,8 @@ impl Default for RunConfig {
             microbatch: 0, // auto
             accuracy_loss: 0.01,
             out_dir: "results".into(),
+            trace_out: String::new(),
+            metrics_interval_ms: 0,
         }
     }
 }
@@ -116,6 +127,9 @@ impl RunConfig {
         cfg.microbatch = args.usize_or("microbatch", cfg.microbatch)?;
         cfg.accuracy_loss = args.f64_or("loss", cfg.accuracy_loss)?;
         cfg.out_dir = args.str_or("out", &cfg.out_dir);
+        cfg.trace_out = args.str_or("trace-out", &cfg.trace_out);
+        cfg.metrics_interval_ms =
+            args.u64_or("metrics-interval-ms", cfg.metrics_interval_ms)?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -148,6 +162,9 @@ impl RunConfig {
         }
         if self.microbatch > 1_000_000 {
             return Err(anyhow!("microbatch must be <= 1000000 (0 = auto)"));
+        }
+        if self.metrics_interval_ms > 3_600_000 {
+            return Err(anyhow!("metrics-interval-ms must be <= 3600000 (1 h; 0 = off)"));
         }
         Ok(())
     }
@@ -217,6 +234,8 @@ impl RunConfig {
             ("microbatch", Json::num(self.microbatch as f64)),
             ("accuracy_loss", Json::num(self.accuracy_loss)),
             ("out_dir", Json::str(self.out_dir.clone())),
+            ("trace_out", Json::str(self.trace_out.clone())),
+            ("metrics_interval_ms", Json::num(self.metrics_interval_ms as f64)),
         ])
         .to_string()
     }
@@ -258,6 +277,11 @@ impl RunConfig {
             microbatch: get_num("microbatch", d.microbatch as f64) as usize,
             accuracy_loss: get_num("accuracy_loss", d.accuracy_loss),
             out_dir: get_str("out_dir", &d.out_dir),
+            trace_out: get_str("trace_out", &d.trace_out),
+            metrics_interval_ms: get_num(
+                "metrics_interval_ms",
+                d.metrics_interval_ms as f64,
+            ) as u64,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -286,6 +310,8 @@ mod tests {
         opt("microbatch", ""),
         opt("loss", ""),
         opt("out", ""),
+        opt("trace-out", ""),
+        opt("metrics-interval-ms", ""),
         opt("config", ""),
         flag("verbose", ""),
     ];
@@ -444,6 +470,40 @@ mod tests {
         let mut bad2 = RunConfig::default();
         bad2.coalesce_window_max_us = 2_000_000;
         assert!(bad2.validate().is_err());
+    }
+
+    /// The observability knobs: CLI parse, JSON round-trip, off-by-default
+    /// semantics, and interval validation.
+    #[test]
+    fn observability_knobs_parse_round_trip_and_validate() {
+        let d = RunConfig::default();
+        assert_eq!(d.trace_out, "", "tracing off by default");
+        assert_eq!(d.metrics_interval_ms, 0, "snapshots off by default");
+
+        let args = Args::parse(
+            &sv(&[
+                "optimize",
+                "--trace-out",
+                "/tmp/trace.json",
+                "--metrics-interval-ms",
+                "250",
+            ]),
+            SPEC,
+        )
+        .unwrap();
+        let cfg = RunConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.trace_out, "/tmp/trace.json");
+        assert_eq!(cfg.metrics_interval_ms, 250);
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // A config without the keys keeps both off.
+        let empty = RunConfig::from_json("{}").unwrap();
+        assert_eq!(empty.trace_out, "");
+        assert_eq!(empty.metrics_interval_ms, 0);
+
+        let mut bad = RunConfig::default();
+        bad.metrics_interval_ms = 4_000_000;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

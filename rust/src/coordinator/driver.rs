@@ -10,14 +10,16 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use super::metrics::Metrics;
 use super::service::{EvalService, XlaEngine};
 use crate::data::generators::{self, DatasetSpec};
 use crate::dt::{train, TrainConfig};
 use crate::fitness::{native::NativeEngine, EvalStats, FitnessEvaluator, Problem};
-use crate::ga::{run_nsga2, Evaluator, GenStats, NsgaConfig};
+use crate::ga::{run_nsga2, Chromosome, Evaluator, GenStats, NsgaConfig};
 use crate::hw::synth::{self, TreeApprox};
 use crate::hw::{AreaLut, EgtLibrary, HwReport};
 use crate::util::clock::{Clock, SystemClock};
+use crate::util::trace::TraceKind;
 
 /// Which accuracy engine evaluates fitness.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -135,6 +137,66 @@ impl DatasetRun {
     }
 }
 
+/// Driver-side tracing context for one dataset run: the service's
+/// shared [`TraceJournal`](crate::util::trace::TraceJournal), the clock
+/// it stamps through (the *pool's* clock, so driver spans and shard
+/// events share one timeline), and this dataset's driver track.
+/// `open` returns `None` when tracing is disabled, so untraced runs
+/// never pay for span bookkeeping.
+struct SpanScope {
+    metrics: Arc<Metrics>,
+    clock: Arc<dyn Clock>,
+    track: u32,
+}
+
+impl SpanScope {
+    fn open(service: &EvalService, dataset_id: &str) -> Option<SpanScope> {
+        if !service.metrics.trace.enabled() {
+            return None;
+        }
+        Some(SpanScope {
+            track: service.metrics.trace.driver_track(dataset_id),
+            metrics: Arc::clone(&service.metrics),
+            clock: service.clock(),
+        })
+    }
+
+    fn begin(&self, name: &str) {
+        self.metrics.trace.record(
+            self.clock.now_ns(),
+            TraceKind::SpanBegin { track: self.track, name: name.to_string() },
+        );
+    }
+
+    fn end(&self, name: &str) {
+        self.metrics.trace.record(
+            self.clock.now_ns(),
+            TraceKind::SpanEnd { track: self.track, name: name.to_string() },
+        );
+    }
+}
+
+/// Brackets each NSGA-II generation in a span on the dataset's driver
+/// track — `run_nsga2` calls [`Evaluator::evaluate`] exactly once per
+/// generation ("gen 0" is the initial population), so counting calls
+/// *is* counting generations.  Only wrapped in when tracing is on.
+struct TracingEvaluator<'a> {
+    inner: &'a mut dyn Evaluator,
+    scope: &'a SpanScope,
+    generation: usize,
+}
+
+impl Evaluator for TracingEvaluator<'_> {
+    fn evaluate(&mut self, pop: &[Chromosome]) -> Vec<[f64; 2]> {
+        let name = format!("gen {}", self.generation);
+        self.generation += 1;
+        self.scope.begin(&name);
+        let objectives = self.inner.evaluate(pop);
+        self.scope.end(&name);
+        objectives
+    }
+}
+
 /// Output of the GA phase of a dataset run: everything
 /// [`finish_dataset`] needs to synthesize and package the front.
 ///
@@ -159,6 +221,10 @@ pub struct GaPhase {
     /// elapsed wall time directly.  Going through the Clock seam keeps
     /// `elapsed_s` injectable if run timing ever needs deterministic tests.
     clock: SystemClock,
+    /// Tracing context carried into [`finish_dataset`] so the synthesis
+    /// span and the dataset span's close land on the same driver track
+    /// the GA spans used.  `None` when tracing is off.
+    trace: Option<SpanScope>,
 }
 
 /// Run the full pipeline for one dataset: the GA phase followed by full
@@ -184,6 +250,10 @@ pub fn optimize_dataset_ga(
     service: Option<&EvalService>,
 ) -> Result<GaPhase> {
     let clock = SystemClock::new();
+    let trace = service.and_then(|s| SpanScope::open(s, dataset_id));
+    if let Some(scope) = &trace {
+        scope.begin(&format!("dataset {dataset_id}"));
+    }
     let spec = generators::spec(dataset_id)
         .ok_or_else(|| anyhow!("unknown dataset '{dataset_id}'"))?;
     let lib = EgtLibrary::default();
@@ -226,7 +296,7 @@ pub fn optimize_dataset_ga(
             EngineChoice::Native => {
                 let mut ev = FitnessEvaluator::new(&problem, &lut, NativeEngine::default());
                 ev.microbatch = opts.microbatch;
-                let result = run_ga(n_comparators, &ga_cfg, &mut ev);
+                let result = run_ga(n_comparators, &ga_cfg, &mut ev, trace.as_ref());
                 // The native engine cannot fail today, but the evaluator
                 // stores errors instead of panicking — never let one pass
                 // silently as a front of pessimistic placeholders.
@@ -244,7 +314,7 @@ pub fn optimize_dataset_ga(
                 let engine = XlaEngine::register(service, Arc::clone(&problem))?;
                 let mut ev = FitnessEvaluator::new(&problem, &lut, engine);
                 ev.microbatch = opts.microbatch;
-                let result = run_ga(n_comparators, &ga_cfg, &mut ev);
+                let result = run_ga(n_comparators, &ga_cfg, &mut ev, trace.as_ref());
                 // A failed batch poisons the run's fitness values: fail
                 // this dataset instead of reporting a front built on
                 // placeholders.
@@ -275,6 +345,7 @@ pub fn optimize_dataset_ga(
         lib,
         lut,
         clock,
+        trace,
     })
 }
 
@@ -283,6 +354,9 @@ pub fn optimize_dataset_ga(
 /// packaging.  Needs no eval service, which is exactly why callers may
 /// run it after releasing their evaluation slot.
 pub fn finish_dataset(phase: GaPhase) -> DatasetRun {
+    if let Some(scope) = &phase.trace {
+        scope.begin("synthesis");
+    }
     let lib = &phase.lib;
     let lut = &phase.lut;
     let ctx = phase.problem.decode_context(lut);
@@ -304,6 +378,10 @@ pub fn finish_dataset(phase: GaPhase) -> DatasetRun {
     // total_cmp: a NaN accuracy (e.g. a degenerate candidate) must not
     // panic the whole run after the GA already finished.
     front.sort_by(|a, b| b.accuracy.total_cmp(&a.accuracy));
+    if let Some(scope) = &phase.trace {
+        scope.end("synthesis");
+        scope.end(&format!("dataset {}", phase.spec.id));
+    }
 
     DatasetRun {
         spec: phase.spec,
@@ -324,8 +402,21 @@ fn run_ga(
     n_comparators: usize,
     cfg: &NsgaConfig,
     ev: &mut dyn Evaluator,
+    scope: Option<&SpanScope>,
 ) -> crate::ga::NsgaResult {
-    run_nsga2(n_comparators, cfg, ev)
+    match scope {
+        Some(scope) => {
+            scope.begin("ga");
+            let result = run_nsga2(
+                n_comparators,
+                cfg,
+                &mut TracingEvaluator { inner: ev, scope, generation: 0 },
+            );
+            scope.end("ga");
+            result
+        }
+        None => run_nsga2(n_comparators, cfg, ev),
+    }
 }
 
 #[cfg(test)]

@@ -7,11 +7,17 @@
 //! in the run report.  The coalescer records how each execution was
 //! flushed ([`FlushKind`]) and how many client requests it merged.
 
+use std::io::Write;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread;
 
 use crate::fitness::EvalStats;
-use crate::util::stats::Summary;
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+use crate::util::stats::{HistogramSnapshot, Log2Histogram};
+use crate::util::trace::TraceJournal;
 
 // Poison-recovering lock helper, re-exported where the coordinator took
 // it from before it moved to `util::sync` (the `axdt` binary needs it
@@ -34,6 +40,19 @@ pub enum FlushKind {
     /// Shutdown/disconnect drain of still-pending work (not a window
     /// expiry, so it does not count toward `deadline_flushes`).
     Drain,
+}
+
+impl FlushKind {
+    /// Stable label used by trace events and the Perfetto export.
+    pub fn label(self) -> &'static str {
+        match self {
+            FlushKind::Full => "Full",
+            FlushKind::Deadline => "Deadline",
+            FlushKind::Immediate => "Immediate",
+            FlushKind::AllDrivers => "AllDrivers",
+            FlushKind::Drain => "Drain",
+        }
+    }
 }
 
 /// Per-shard counters (one per pool worker).
@@ -121,16 +140,22 @@ pub struct Metrics {
     pub eval_cache_hits: AtomicU64,
     /// …and the engine actually evaluated (post-dedup misses).
     pub eval_engine_evals: AtomicU64,
-    /// Per-execution latency (ns).
-    latency: Mutex<Summary>,
+    /// Per-execution backend latency (ns).  A bounded log₂ histogram —
+    /// the service can record millions of executions without growing
+    /// (the old `Summary` buffered every sample in a `Vec<f64>`).
+    exec_latency: Log2Histogram,
     /// Real (pre-padding) width of each executed batch.
-    batch_width: Mutex<Summary>,
+    batch_width: Log2Histogram,
     /// Chromosomes per submitted ticket (the micro-batch width clients
     /// actually pipeline at).
-    microbatch_width: Mutex<Summary>,
+    microbatch_width: Log2Histogram,
     /// Submit→collect latency per ticket (ns): queueing + coalescing +
     /// execution, as the client experiences it.
-    ticket_latency: Mutex<Summary>,
+    ticket_latency: Log2Histogram,
+    /// Ticket-lifecycle event journal (off by default; enabled by
+    /// `--trace-out`).  Producers guard on `trace.enabled()` — one
+    /// relaxed load — so a disabled journal stays off the hot path.
+    pub trace: TraceJournal,
     /// Per-shard counters (empty for a legacy/default instance).
     shards: Vec<ShardMetrics>,
 }
@@ -153,8 +178,8 @@ impl Metrics {
         self.executions.fetch_add(1, Ordering::Relaxed);
         self.chromosomes.fetch_add(real as u64, Ordering::Relaxed);
         self.padded_slots.fetch_add((padded - real) as u64, Ordering::Relaxed);
-        lock_recover(&self.latency).push(elapsed_ns as f64);
-        lock_recover(&self.batch_width).push(real as f64);
+        self.exec_latency.record(elapsed_ns);
+        self.batch_width.record(real as u64);
     }
 
     /// Full record for one pool execution: global counters, the issuing
@@ -204,12 +229,12 @@ impl Metrics {
         self.tickets_submitted.fetch_add(1, Ordering::Relaxed);
         let in_flight = self.tickets_in_flight.fetch_add(1, Ordering::Relaxed) + 1;
         self.tickets_peak.fetch_max(in_flight, Ordering::Relaxed);
-        lock_recover(&self.microbatch_width).push(width as f64);
+        self.microbatch_width.record(width);
     }
 
     /// A ticket's result was collected `latency_ns` after its submit.
     pub fn ticket_collected(&self, latency_ns: u64) {
-        lock_recover(&self.ticket_latency).push(latency_ns as f64);
+        self.ticket_latency.record(latency_ns);
     }
 
     /// A ticket left flight (collected or dropped unredeemed).
@@ -311,23 +336,34 @@ impl Metrics {
         }
     }
 
-    pub fn latency_summary(&self) -> Summary {
-        lock_recover(&self.latency).clone()
+    /// Distribution of per-execution backend latencies (ns).
+    pub fn exec_latency_hist(&self) -> HistogramSnapshot {
+        self.exec_latency.snapshot()
     }
 
     /// Distribution of real (pre-padding) executed batch widths.
-    pub fn batch_width_summary(&self) -> Summary {
-        lock_recover(&self.batch_width).clone()
+    pub fn batch_width_hist(&self) -> HistogramSnapshot {
+        self.batch_width.snapshot()
+    }
+
+    /// Exact mean executed batch width (the histogram buckets widths,
+    /// so the mean comes from the exact counters instead).
+    pub fn batch_width_mean(&self) -> f64 {
+        let execs = self.executions.load(Ordering::Relaxed) as f64;
+        if execs == 0.0 {
+            return f64::NAN;
+        }
+        self.chromosomes.load(Ordering::Relaxed) as f64 / execs
     }
 
     /// Distribution of chromosomes per submitted ticket.
-    pub fn microbatch_width_summary(&self) -> Summary {
-        lock_recover(&self.microbatch_width).clone()
+    pub fn microbatch_width_hist(&self) -> HistogramSnapshot {
+        self.microbatch_width.snapshot()
     }
 
     /// Distribution of per-ticket submit→collect latencies (ns).
-    pub fn ticket_latency_summary(&self) -> Summary {
-        lock_recover(&self.ticket_latency).clone()
+    pub fn ticket_latency_hist(&self) -> HistogramSnapshot {
+        self.ticket_latency.snapshot()
     }
 
     /// Fraction of executed chromosome slots that were padding.
@@ -343,23 +379,25 @@ impl Metrics {
 
     /// One-line human summary (the run report's eval-service line).
     pub fn render(&self) -> String {
-        let lat = self.latency_summary();
-        let width = self.batch_width_summary();
+        let lat = self.exec_latency_hist();
+        let width = self.batch_width_hist();
         let mut s = format!(
-            "execs={} chromosomes={} padding_waste={:.1}% batch_width_p50={:.0} \
+            "execs={} chromosomes={} padding_waste={:.1}% batch_width_p50={} \
              coalesced={} (reqs {}, full {}, deadline {}, early {}) \
-             exec_latency_p50={} p99={}",
+             exec_latency_p50={} p90={} p99={} max={}",
             self.executions.load(Ordering::Relaxed),
             self.chromosomes.load(Ordering::Relaxed),
             100.0 * self.padding_waste(),
-            if width.is_empty() { 0.0 } else { width.median() },
+            width.p50(),
             self.coalesced_executions.load(Ordering::Relaxed),
             self.coalesced_requests.load(Ordering::Relaxed),
             self.full_flushes.load(Ordering::Relaxed),
             self.deadline_flushes.load(Ordering::Relaxed),
             self.early_flushes.load(Ordering::Relaxed),
-            crate::util::stats::fmt_duration_ns(lat.median()),
-            crate::util::stats::fmt_duration_ns(lat.percentile(0.99)),
+            crate::util::stats::fmt_duration_ns(lat.p50() as f64),
+            crate::util::stats::fmt_duration_ns(lat.p90() as f64),
+            crate::util::stats::fmt_duration_ns(lat.p99() as f64),
+            crate::util::stats::fmt_duration_ns(lat.max as f64),
         );
         if !self.shards.is_empty() {
             s.push_str(" shards=[");
@@ -401,16 +439,16 @@ impl Metrics {
         // legacy instances keep their exact line.
         let tickets = self.tickets_submitted.load(Ordering::Relaxed);
         if tickets > 0 {
-            let tl = self.ticket_latency_summary();
-            let mb = self.microbatch_width_summary();
-            let ticket_p50 = if tl.is_empty() { 0.0 } else { tl.median() };
+            let tl = self.ticket_latency_hist();
+            let mb = self.microbatch_width_hist();
             s.push_str(&format!(
-                " tickets={} inflight={} peak={} ubatch_p50={:.0} ticket_p50={}",
+                " tickets={} inflight={} peak={} ubatch_p50={} ticket_p50={} p99={}",
                 tickets,
                 self.tickets_in_flight.load(Ordering::Relaxed),
                 self.tickets_peak.load(Ordering::Relaxed),
-                if mb.is_empty() { 0.0 } else { mb.median() },
-                crate::util::stats::fmt_duration_ns(ticket_p50),
+                mb.p50(),
+                crate::util::stats::fmt_duration_ns(tl.p50() as f64),
+                crate::util::stats::fmt_duration_ns(tl.p99() as f64),
             ));
         }
         // Cache effectiveness, recorded per dataset by the driver.
@@ -432,7 +470,145 @@ impl Metrics {
                 self.respawns.load(Ordering::Relaxed),
             ));
         }
+        let trace_dropped = self.trace.dropped();
+        if trace_dropped > 0 {
+            s.push_str(&format!(" trace_dropped={trace_dropped}"));
+        }
         s
+    }
+
+    /// Histogram block for `runs.json` / snapshots: count, p50/p90/p99
+    /// and the exact max per hot-path distribution.
+    pub fn histograms_json(&self) -> Json {
+        fn hist(h: &HistogramSnapshot) -> Json {
+            Json::obj(vec![
+                ("count", Json::num(h.count() as f64)),
+                ("p50", Json::num(h.p50() as f64)),
+                ("p90", Json::num(h.p90() as f64)),
+                ("p99", Json::num(h.p99() as f64)),
+                ("max", Json::num(h.max as f64)),
+            ])
+        }
+        Json::obj(vec![
+            ("exec_latency_ns", hist(&self.exec_latency_hist())),
+            ("batch_width", hist(&self.batch_width_hist())),
+            ("microbatch_width", hist(&self.microbatch_width_hist())),
+            ("ticket_latency_ns", hist(&self.ticket_latency_hist())),
+        ])
+    }
+
+    /// One point-in-time JSON snapshot of the live gauges (the
+    /// `--metrics-interval-ms` JSON-lines payload).  `now_ns` comes from
+    /// the caller's injected clock.
+    pub fn snapshot_json(&self, now_ns: u64) -> Json {
+        let shards = self
+            .shards
+            .iter()
+            .map(|sh| {
+                Json::obj(vec![
+                    ("queue_depth", Json::num(sh.queue_depth.load(Ordering::Relaxed) as f64)),
+                    ("executions", Json::num(sh.executions.load(Ordering::Relaxed) as f64)),
+                    ("coalescing", Json::num(sh.coalescing.load(Ordering::Relaxed) as f64)),
+                    ("busy_ns", Json::num(sh.busy_ns.load(Ordering::Relaxed) as f64)),
+                    ("down", Json::Bool(sh.down.load(Ordering::Relaxed))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("ts_ns", Json::num(now_ns as f64)),
+            ("executions", Json::num(self.executions.load(Ordering::Relaxed) as f64)),
+            ("chromosomes", Json::num(self.chromosomes.load(Ordering::Relaxed) as f64)),
+            (
+                "tickets_in_flight",
+                Json::num(self.tickets_in_flight.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "tickets_submitted",
+                Json::num(self.tickets_submitted.load(Ordering::Relaxed) as f64),
+            ),
+            ("shard_deaths", Json::num(self.shard_deaths.load(Ordering::Relaxed) as f64)),
+            ("trace_dropped", Json::num(self.trace.dropped() as f64)),
+            ("hist", self.histograms_json()),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+}
+
+/// Message type of the snapshot emitter's control channel: clock wakers
+/// nudge it on virtual-time advances, `stop` shuts it down.
+enum EmitterMsg {
+    Nudge,
+    Stop,
+}
+
+/// Periodic live-metrics emitter: a thread that writes one
+/// [`Metrics::snapshot_json`] line per interval to `out` (JSON lines).
+///
+/// All timing reads the injected [`Clock`]: on `SystemClock` the
+/// channel timeout is the real remaining interval; on `ManualClock` the
+/// emitter blocks until the test advances the clock (the registered
+/// waker nudges it awake), so snapshot cadence is deterministic under
+/// test — the same recv-timeout idiom the shard workers use.
+pub struct SnapshotEmitter {
+    tx: mpsc::Sender<EmitterMsg>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl SnapshotEmitter {
+    /// Spawn the emitter.  `interval_ms` must be > 0 (callers gate the
+    /// 0 = disabled case); sub-millisecond clamping is the caller's
+    /// `validate()` problem.
+    pub fn spawn(
+        metrics: Arc<Metrics>,
+        clock: Arc<dyn Clock>,
+        interval_ms: u64,
+        mut out: Box<dyn Write + Send>,
+    ) -> SnapshotEmitter {
+        let (tx, rx) = mpsc::channel::<EmitterMsg>();
+        let nudge = tx.clone();
+        clock.register_waker(Box::new(move || {
+            let _ = nudge.send(EmitterMsg::Nudge);
+        }));
+        let interval_ns = interval_ms.saturating_mul(1_000_000).max(1);
+        // The first deadline is fixed before the thread starts, so a
+        // ManualClock advance that lands between spawn and the thread's
+        // first wait is never missed (its nudge is already queued).
+        let mut next = clock.now_ns().saturating_add(interval_ns);
+        let handle = thread::spawn(move || {
+            loop {
+                match rx.recv_timeout(clock.wait_budget(next)) {
+                    Ok(EmitterMsg::Stop) | Err(RecvTimeoutError::Disconnected) => break,
+                    Ok(EmitterMsg::Nudge) | Err(RecvTimeoutError::Timeout) => {}
+                }
+                let now = clock.now_ns();
+                if now >= next {
+                    let _ = writeln!(out, "{}", metrics.snapshot_json(now));
+                    next = now.saturating_add(interval_ns);
+                }
+            }
+            // Final snapshot on shutdown so short runs always emit.
+            let _ = writeln!(out, "{}", metrics.snapshot_json(clock.now_ns()));
+            let _ = out.flush();
+        });
+        SnapshotEmitter { tx, handle: Some(handle) }
+    }
+
+    /// Stop the emitter and join it (flushes a final snapshot line).
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        let _ = self.tx.send(EmitterMsg::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SnapshotEmitter {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -449,7 +625,10 @@ mod tests {
         assert_eq!(m.chromosomes.load(Ordering::Relaxed), 62);
         assert_eq!(m.padded_slots.load(Ordering::Relaxed), 2);
         assert!((m.padding_waste() - 2.0 / 64.0).abs() < 1e-12);
-        assert_eq!(m.latency_summary().len(), 2);
+        assert_eq!(m.exec_latency_hist().count(), 2);
+        assert_eq!(m.exec_latency_hist().max, 2_000_000);
+        assert_eq!(m.batch_width_hist().count(), 2);
+        assert!((m.batch_width_mean() - 31.0).abs() < 1e-12);
         assert!(m.render().contains("execs=2"));
     }
 
@@ -470,25 +649,31 @@ mod tests {
         assert!(m.render().contains("shards=["));
     }
 
-    /// A thread that panics while holding a metrics mutex poisons it; the
-    /// other clients' record/summary calls must recover, not cascade the
-    /// panic into every GA driver sharing the service.
+    /// The latency/width aggregates are lock-free histograms now: a
+    /// panicking recorder thread can never poison them, and concurrent
+    /// recorders never lose samples.
     #[test]
-    fn poisoned_mutexes_recover_instead_of_cascading() {
+    fn histograms_survive_concurrent_and_panicking_recorders() {
         let m = std::sync::Arc::new(Metrics::default());
-        m.record_execution(8, 8, 1_000);
-        let m2 = std::sync::Arc::clone(&m);
-        let _ = std::thread::spawn(move || {
-            let _guard = m2.latency.lock().unwrap();
-            let _guard2 = m2.batch_width.lock().unwrap();
-            panic!("poison both metrics mutexes");
-        })
-        .join();
-        // All four lock sites keep working on the poisoned mutexes.
-        m.record_execution(4, 8, 2_000);
-        assert_eq!(m.latency_summary().len(), 2);
-        assert_eq!(m.batch_width_summary().len(), 2);
-        assert!(m.render().contains("execs=2"));
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let m2 = std::sync::Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for i in 0..100u64 {
+                        m2.record_execution(8, 8, 1_000 + i);
+                    }
+                    if t == 0 {
+                        panic!("a dying recorder must not poison anything");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            let _ = t.join();
+        }
+        assert_eq!(m.exec_latency_hist().count(), 400);
+        assert_eq!(m.batch_width_hist().count(), 400);
+        assert!(m.render().contains("execs=400"));
     }
 
     #[test]
@@ -561,11 +746,12 @@ mod tests {
         m.ticket_submitted(7);
         assert_eq!(m.tickets_in_flight.load(Ordering::Relaxed), 2);
         assert_eq!(m.tickets_peak.load(Ordering::Relaxed), 2);
-        assert_eq!(m.microbatch_width_summary().len(), 2);
+        assert_eq!(m.microbatch_width_hist().count(), 2);
         m.ticket_collected(1_000);
         m.ticket_done();
         assert_eq!(m.tickets_in_flight.load(Ordering::Relaxed), 1);
-        assert_eq!(m.ticket_latency_summary().len(), 1);
+        assert_eq!(m.ticket_latency_hist().count(), 1);
+        assert_eq!(m.ticket_latency_hist().max, 1_000);
         let r = m.render();
         assert!(r.contains("tickets=2 inflight=1 peak=2"), "{r}");
         // Saturates instead of wrapping (abandoned-ticket double count).
@@ -582,6 +768,93 @@ mod tests {
         m.record_shard_execution(0, 8, 8, 2_000, 1, FlushKind::Full);
         m.record_shard_execution(0, 4, 8, 3_000, 1, FlushKind::Deadline);
         assert_eq!(m.shards()[0].busy_ns.load(Ordering::Relaxed), 5_000);
+    }
+
+    #[test]
+    fn snapshot_and_histogram_json_parse() {
+        let m = Metrics::with_shards(2);
+        m.record_shard_execution(0, 8, 8, 2_000, 1, FlushKind::Full);
+        m.ticket_submitted(8);
+        m.ticket_collected(5_000);
+        let snap = m.snapshot_json(1_234).to_string();
+        let v = Json::parse(&snap).unwrap();
+        assert_eq!(v.get("ts_ns").unwrap().as_f64(), Some(1_234.0));
+        assert_eq!(v.get("executions").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("shards").unwrap().as_arr().unwrap().len(), 2);
+        let hist = v.get("hist").unwrap();
+        let tl = hist.get("ticket_latency_ns").unwrap();
+        assert_eq!(tl.get("count").unwrap().as_f64(), Some(1.0));
+        assert_eq!(tl.get("max").unwrap().as_f64(), Some(5_000.0));
+        for key in ["exec_latency_ns", "batch_width", "microbatch_width"] {
+            assert!(hist.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    /// `Write` sink shared with the test thread.
+    struct SharedBuf(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// The emitter ticks on the injected clock: each ManualClock advance
+    /// past the interval produces exactly one JSON line, and stop()
+    /// flushes one final snapshot — fully deterministic, zero real-time
+    /// waits beyond joining the thread.
+    #[test]
+    fn snapshot_emitter_ticks_on_manual_clock() {
+        use crate::util::clock::ManualClock;
+        use std::time::Duration;
+
+        let lines_in = |buf: &std::sync::Arc<std::sync::Mutex<Vec<u8>>>| {
+            String::from_utf8(buf.lock().unwrap().clone()).unwrap().lines().count()
+        };
+        let wait_for_lines = |buf: &std::sync::Arc<std::sync::Mutex<Vec<u8>>>, n: usize| {
+            for _ in 0..2_000 {
+                if lines_in(buf) >= n {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            panic!("emitter never produced {n} lines");
+        };
+
+        let m = Arc::new(Metrics::with_shards(1));
+        let clock = Arc::new(ManualClock::new());
+        let buf = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let emitter = SnapshotEmitter::spawn(
+            Arc::clone(&m),
+            Arc::clone(&clock) as Arc<dyn Clock>,
+            10,
+            Box::new(SharedBuf(std::sync::Arc::clone(&buf))),
+        );
+        m.record_execution(4, 8, 1_000);
+        clock.advance(Duration::from_millis(10));
+        wait_for_lines(&buf, 1);
+        clock.advance(Duration::from_millis(10));
+        wait_for_lines(&buf, 2);
+        emitter.stop();
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "2 ticks + final flush: {text}");
+        for line in &lines {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.get("executions").unwrap().as_f64(), Some(1.0));
+        }
+        // Tick timestamps are the virtual instants of the advances.
+        assert_eq!(
+            Json::parse(lines[0]).unwrap().get("ts_ns").unwrap().as_f64(),
+            Some(10_000_000.0)
+        );
+        assert_eq!(
+            Json::parse(lines[1]).unwrap().get("ts_ns").unwrap().as_f64(),
+            Some(20_000_000.0)
+        );
     }
 
     #[test]

@@ -35,7 +35,12 @@
 //!   [`shard::ProblemId`].
 //! * [`metrics::Metrics`] / [`metrics::ShardMetrics`] — execution counters
 //!   (executions, chromosomes, padding waste, coalesced-batch widths,
-//!   per-shard queue depth, latency) surfaced in the run report.
+//!   per-shard queue depth) surfaced in the run report, with hot-path
+//!   latencies in bounded log₂ histograms
+//!   ([`crate::util::stats::Log2Histogram`]), the ticket-lifecycle
+//!   [`crate::util::trace::TraceJournal`] (`--trace-out`), and the
+//!   [`metrics::SnapshotEmitter`] live JSON gauge stream
+//!   (`--metrics-interval-ms`).
 //! * [`driver`] — the per-dataset pipeline: generate → split → train →
 //!   [`crate::fitness::Problem`] → NSGA-II → pareto front with *measured*
 //!   (fully synthesized) area/power for every front design.  Split as
@@ -55,7 +60,7 @@ pub use driver::{
     finish_dataset, optimize_dataset, optimize_dataset_ga, DatasetRun, EngineChoice, GaPhase,
     ParetoPoint, RunOptions,
 };
-pub use metrics::{FlushKind, Metrics, ShardMetrics};
+pub use metrics::{FlushKind, Metrics, ShardMetrics, SnapshotEmitter};
 pub use service::{EvalService, ServiceError, XlaEngine};
 pub use shard::{
     rendezvous_route, rendezvous_score, CoalesceMode, EvalShardPool, PoolOptions, ProblemId,

@@ -194,6 +194,12 @@ impl EvalService {
         &self.pool
     }
 
+    /// The pool's injected [`Clock`] — the seam driver-side trace spans
+    /// stamp through, so they share one timeline with shard events.
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        self.pool.clock()
+    }
+
     /// Number of shard workers serving this handle.
     pub fn workers(&self) -> usize {
         self.pool.workers()

@@ -107,6 +107,7 @@ use anyhow::{anyhow, Result};
 
 use super::metrics::{lock_recover, FlushKind, Metrics};
 use super::service::ServiceError;
+use crate::util::trace::TraceKind;
 use crate::fitness::encode::Bucket;
 #[cfg(feature = "xla")]
 use crate::fitness::encode::{self, StaticTensors};
@@ -678,6 +679,13 @@ impl EvalShardPool {
         self.shared.slots.len()
     }
 
+    /// The pool's injected [`Clock`].  Drivers stamp their trace spans
+    /// through this same seam so shard events and driver spans share one
+    /// timeline (and stay deterministic under a `ManualClock`).
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        Arc::clone(&self.shared.clock)
+    }
+
     /// Number of shard workers currently serving.
     pub fn live_workers(&self) -> usize {
         self.shared.slots.iter().filter(|s| s.is_alive()).count()
@@ -790,6 +798,23 @@ impl EvalShardPool {
             }
             let (reply_tx, reply_rx) = mpsc::sync_channel(1);
             self.metrics.shard_enqueued(shard);
+            // The `Submitted` record takes its sequence number BEFORE the
+            // send makes the message visible to the worker — otherwise the
+            // worker's `Enqueued` could win the seq race and the journal
+            // would not be bit-reproducible under a `ManualClock`.  (A
+            // send that then fails leaves the record standing as a visible
+            // submit attempt against a dying shard.)
+            let submitted_ns = self.shared.clock.now_ns();
+            if self.metrics.trace.enabled() {
+                self.metrics.trace.record(
+                    submitted_ns,
+                    TraceKind::Submitted {
+                        shard: shard as u32,
+                        problem: id.index,
+                        width: width as u32,
+                    },
+                );
+            }
             match slot.sender().send(Msg::Eval { id, batch, reply: reply_tx }) {
                 Ok(()) => {
                     self.metrics.ticket_submitted(width as u64);
@@ -797,7 +822,7 @@ impl EvalShardPool {
                         repr: TicketRepr::Pending {
                             shard,
                             rx: reply_rx,
-                            submitted_ns: self.shared.clock.now_ns(),
+                            submitted_ns,
                             gauge: TicketGauge(Arc::clone(&self.metrics)),
                         },
                     });
@@ -829,8 +854,15 @@ impl EvalShardPool {
                     Ok(res) => res,
                     Err(_) => Err(self.shared.slots[shard].reply_dropped_error(shard)),
                 };
-                self.metrics
-                    .ticket_collected(self.shared.clock.now_ns().saturating_sub(submitted_ns));
+                let now = self.shared.clock.now_ns();
+                let latency_ns = now.saturating_sub(submitted_ns);
+                self.metrics.ticket_collected(latency_ns);
+                if self.metrics.trace.enabled() {
+                    self.metrics.trace.record(
+                        now,
+                        TraceKind::Collected { shard: shard as u32, latency_ns },
+                    );
+                }
                 drop(gauge);
                 res
             }
@@ -949,6 +981,11 @@ struct QueuedSlice {
 struct Group {
     problem: Arc<Problem>,
     reg: RegisteredProblem,
+    /// `ProblemId::index` of the group's first registration — the label
+    /// worker-side trace events carry, so a flush correlates with the
+    /// submits that fed it (re-registrations share the group and keep
+    /// the founding index).
+    trace_problem: u32,
     /// Registrations pointing at this group (the driver count, under the
     /// driver-per-registration convention adaptive mode assumes).  Never
     /// decremented — there is no deregistration — so a registration whose
@@ -973,10 +1010,11 @@ struct Group {
 }
 
 impl Group {
-    fn new(problem: Arc<Problem>, reg: RegisteredProblem) -> Group {
+    fn new(problem: Arc<Problem>, reg: RegisteredProblem, trace_problem: u32) -> Group {
         Group {
             problem,
             reg,
+            trace_problem,
             members: 1,
             queue: VecDeque::new(),
             pending: 0,
@@ -1067,6 +1105,11 @@ fn mark_shard_dead(ctx: &WorkerCtx) {
         slot.state.store(SHARD_DEAD, Ordering::Release);
     }
     ctx.metrics.shard_died(ctx.shard as usize);
+    if ctx.metrics.trace.enabled() {
+        ctx.metrics
+            .trace
+            .record(ctx.clock.now_ns(), TraceKind::ShardDown { shard: ctx.shard });
+    }
 }
 
 /// Update a group's inter-arrival EWMA for a request arriving at `now`
@@ -1180,7 +1223,11 @@ fn worker_loop(mut backend: Box<dyn Backend>, rx: mpsc::Receiver<Msg>, ctx: Work
                     None => match catch_unwind(AssertUnwindSafe(|| backend.register(&problem)))
                     {
                         Ok(Ok(reg)) => {
-                            groups.push(Group::new(problem, reg));
+                            groups.push(Group::new(
+                                problem,
+                                reg,
+                                ctx.index_base + regs.len() as u32,
+                            ));
                             groups.len() - 1
                         }
                         Ok(Err(e)) => {
@@ -1259,6 +1306,19 @@ fn worker_loop(mut backend: Box<dyn Backend>, rx: mpsc::Receiver<Msg>, ctx: Work
                 groups[g].pending += n;
                 groups[g].queue.push_back(QueuedSlice { req, items: batch, next: 0 });
                 ctx.metrics.coalescing_add(ctx.shard as usize, n as u64);
+                if ctx.metrics.trace.enabled() {
+                    ctx.metrics
+                        .trace
+                        .record(now, TraceKind::Enqueued { shard: ctx.shard, problem: id.index });
+                    ctx.metrics.trace.record(
+                        now,
+                        TraceKind::Coalesced {
+                            shard: ctx.shard,
+                            problem: id.index,
+                            pending: groups[g].pending as u32,
+                        },
+                    );
+                }
                 let width = groups[g].reg.width().max(1);
                 // Deadlines arm from the arrival timestamp — but a
                 // synchronous width-full flush below can consume real
@@ -1417,6 +1477,11 @@ fn die(
             *lock_recover(&slot.tx) = tx;
             slot.state.store(SHARD_ALIVE, Ordering::Release);
             ctx.metrics.shard_respawned(shard);
+            if ctx.metrics.trace.enabled() {
+                ctx.metrics
+                    .trace
+                    .record(ctx.clock.now_ns(), TraceKind::Respawn { shard: ctx.shard });
+            }
         }
         Ok(Err(e)) => {
             eprintln!("[axdt] shard {shard} respawn failed: {e:#} (shard stays dead)");
@@ -1511,6 +1576,25 @@ fn execute_chunk(
         return true;
     }
     let t0 = ctx.clock.now_ns();
+    if metrics.trace.enabled() {
+        metrics.trace.record(
+            t0,
+            TraceKind::Flushed {
+                shard: ctx.shard,
+                problem: group.trace_problem,
+                kind: kind.label(),
+                width: take as u32,
+            },
+        );
+        metrics.trace.record(
+            t0,
+            TraceKind::Executing {
+                shard: ctx.shard,
+                problem: group.trace_problem,
+                width: take as u32,
+            },
+        );
+    }
     let outcome = catch_unwind(AssertUnwindSafe(|| {
         backend.eval(&group.reg, group.problem.as_ref(), &chunk)
     }));
@@ -1546,14 +1630,27 @@ fn execute_chunk(
     };
     match res {
         Ok(accs) => {
+            let done_ns = ctx.clock.now_ns();
+            let dur_ns = done_ns.saturating_sub(t0);
             metrics.record_shard_execution(
                 shard,
                 chunk.len(),
                 width.max(chunk.len()),
-                ctx.clock.now_ns().saturating_sub(t0),
+                dur_ns,
                 contributors.len(),
                 kind,
             );
+            if metrics.trace.enabled() {
+                metrics.trace.record(
+                    done_ns,
+                    TraceKind::Executed {
+                        shard: ctx.shard,
+                        problem: group.trace_problem,
+                        width: chunk.len() as u32,
+                        dur_ns,
+                    },
+                );
+            }
             let mut off = 0usize;
             for (req, n) in contributors {
                 let mut r = req.borrow_mut();

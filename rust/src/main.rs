@@ -12,17 +12,17 @@
 //! binary is built with `--features xla`), or the native tree-walk engine
 //! (`--engine native` / `--engine native-service`, the offline default).
 
-use std::io::Write as _;
-
 use anyhow::{anyhow, Context, Result};
 
 use axdt::config::RunConfig;
 use axdt::coordinator::{
     finish_dataset, optimize_dataset, optimize_dataset_ga, DatasetRun, EngineChoice, EvalService,
+    SnapshotEmitter,
 };
 use axdt::report;
 use axdt::util::cli::{flag, opt, usage, Args, OptSpec};
 use axdt::util::sync::lock_recover;
+use axdt::util::trace::chrome_trace_json;
 
 const OPTS: &[OptSpec] = &[
     opt("config", "JSON config file (defaults < config < flags)"),
@@ -42,6 +42,8 @@ const OPTS: &[OptSpec] = &[
     opt("microbatch", "pipelined-eval micro-batch size (0 = auto: workers x width)"),
     opt("loss", "Table II accuracy-loss budget (default 0.01)"),
     opt("out", "output directory for JSON results (default results)"),
+    opt("trace-out", "write the run's ticket-lifecycle trace as Chrome trace-event JSON (Perfetto-loadable)"),
+    opt("metrics-interval-ms", "emit a JSON metrics-snapshot line to stderr every N ms (0 = off)"),
     opt("dataset", "single dataset (export-rtl)"),
     opt("rtl-out", "output .v path (export-rtl)"),
     flag("verbose", "chatty progress"),
@@ -91,38 +93,38 @@ fn run(argv: &[String]) -> Result<()> {
             print!("{text}");
         }
         ["repro", "fig5"] => {
-            let (runs, failed) = run_all(&cfg, args.has_flag("verbose"))?;
-            for r in &runs {
+            let batch = run_all(&cfg, args.has_flag("verbose"))?;
+            for r in &batch.runs {
                 print!("{}", report::render_fig5(r));
             }
-            partial_failure(&failed)?;
+            partial_failure(&batch.failed)?;
         }
         ["repro", "table2"] => {
-            let (runs, failed) = run_all(&cfg, args.has_flag("verbose"))?;
-            print!("{}", report::table2(&runs, cfg.accuracy_loss));
-            partial_failure(&failed)?;
+            let batch = run_all(&cfg, args.has_flag("verbose"))?;
+            print!("{}", report::table2(&batch.runs, cfg.accuracy_loss));
+            partial_failure(&batch.failed)?;
         }
         ["repro", "all"] => {
             let (t1, _) = report::table1(&cfg.datasets, cfg.seed)?;
             print!("{t1}\n");
             let (f4, _, _) = report::fig4();
             print!("{f4}\n");
-            let (runs, failed) = run_all(&cfg, args.has_flag("verbose"))?;
-            for r in &runs {
+            let batch = run_all(&cfg, args.has_flag("verbose"))?;
+            for r in &batch.runs {
                 print!("{}", report::render_fig5(r));
             }
             println!();
-            print!("{}", report::table2(&runs, cfg.accuracy_loss));
-            save_runs(&cfg, &runs)?;
-            partial_failure(&failed)?;
+            print!("{}", report::table2(&batch.runs, cfg.accuracy_loss));
+            save_runs(&cfg, &batch)?;
+            partial_failure(&batch.failed)?;
         }
         ["optimize"] => {
-            let (runs, failed) = run_all(&cfg, args.has_flag("verbose"))?;
-            for r in &runs {
+            let batch = run_all(&cfg, args.has_flag("verbose"))?;
+            for r in &batch.runs {
                 print!("{}", report::render_fig5(r));
             }
-            save_runs(&cfg, &runs)?;
-            partial_failure(&failed)?;
+            save_runs(&cfg, &batch)?;
+            partial_failure(&batch.failed)?;
         }
         ["export-rtl"] => {
             let dataset = args
@@ -140,6 +142,15 @@ fn run(argv: &[String]) -> Result<()> {
 
 fn help() -> String {
     usage("axdt", COMMANDS, OPTS)
+}
+
+/// What one `run_all` batch produced: the completed runs, the datasets
+/// that failed, and the shared eval service's histogram telemetry
+/// (`None` for serviceless native runs) for the `runs.json` archive.
+struct RunBatch {
+    runs: Vec<DatasetRun>,
+    failed: Vec<String>,
+    service_hist: Option<axdt::util::json::Json>,
 }
 
 /// Surface a partial multi-dataset failure as a non-zero exit — after the
@@ -167,10 +178,11 @@ fn partial_failure(failed: &[String]) -> Result<()> {
 /// serving, benches — see `coordinator::shard`.)  Each driver releases
 /// its token after the GA phase and runs the CPU-only Pareto-front full
 /// synthesis tokenless, so one dataset's synthesis overlaps the next
-/// dataset's first generations.  Returns the completed runs plus the ids
-/// of datasets that failed (callers decide how to surface those once
-/// their reports are out).
-fn run_all(cfg: &RunConfig, verbose: bool) -> Result<(Vec<DatasetRun>, Vec<String>)> {
+/// dataset's first generations.  Returns the completed runs, the ids of
+/// datasets that failed (callers decide how to surface those once their
+/// reports are out), and the shared service's histogram telemetry for
+/// the archive.
+fn run_all(cfg: &RunConfig, verbose: bool) -> Result<RunBatch> {
     let engine = cfg.engine_choice();
     let pool_opts = cfg.pool_options();
     let service = match engine {
@@ -182,6 +194,36 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<(Vec<DatasetRun>, Vec<Strin
             EvalService::spawn_xla_with(&cfg.artifact_dir, &pool_opts)
                 .context("starting XLA eval service (did you run `make artifacts`?)")?,
         ),
+    };
+    // Observability: a non-empty --trace-out arms the service's
+    // ticket-lifecycle journal for the whole run; --metrics-interval-ms
+    // streams live Metrics snapshots to stderr while the GA runs.  Both
+    // ride the service's Metrics, so the plain native engine (no
+    // service) reports them unavailable instead of silently dropping
+    // the request.
+    if !cfg.trace_out.is_empty() {
+        match &service {
+            Some(svc) => svc.metrics.trace.set_enabled(true),
+            None => eprintln!(
+                "[axdt] --trace-out needs a service engine (native-service|xla); tracing is off"
+            ),
+        }
+    }
+    let snapshots = match &service {
+        Some(svc) if cfg.metrics_interval_ms > 0 => Some(SnapshotEmitter::spawn(
+            std::sync::Arc::clone(&svc.metrics),
+            svc.clock(),
+            cfg.metrics_interval_ms,
+            Box::new(std::io::stderr()),
+        )),
+        None if cfg.metrics_interval_ms > 0 => {
+            eprintln!(
+                "[axdt] --metrics-interval-ms needs a service engine (native-service|xla); \
+                 snapshots are off"
+            );
+            None
+        }
+        _ => None,
     };
     let opts = cfg.run_options();
     let drivers = service
@@ -272,6 +314,11 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<(Vec<DatasetRun>, Vec<Strin
             }
         }
     }
+    if let Some(emitter) = snapshots {
+        // Stop the ticker before the final render so its last snapshot
+        // line lands ahead of the summary.
+        emitter.stop();
+    }
     if let Some(svc) = &service {
         eprintln!(
             "[axdt] eval service ({} worker(s), {} driver(s)): {}",
@@ -279,6 +326,19 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<(Vec<DatasetRun>, Vec<Strin
             drivers,
             svc.metrics.render()
         );
+        if !cfg.trace_out.is_empty() && svc.metrics.trace.enabled() {
+            let trace = &svc.metrics.trace;
+            let json =
+                chrome_trace_json(&trace.snapshot(), &trace.track_names(), trace.dropped());
+            write_atomic(&cfg.trace_out, &format!("{json}\n"))
+                .with_context(|| format!("writing trace {}", cfg.trace_out))?;
+            eprintln!(
+                "[axdt] wrote trace {} ({} event(s), {} dropped)",
+                cfg.trace_out,
+                trace.len(),
+                trace.dropped()
+            );
+        }
         svc.shutdown();
     }
     if runs.is_empty() {
@@ -293,16 +353,31 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<(Vec<DatasetRun>, Vec<Strin
             failed.join(", ")
         );
     }
-    Ok((runs, failed))
+    let service_hist = service.as_ref().map(|s| s.metrics.histograms_json());
+    Ok(RunBatch { runs, failed, service_hist })
 }
 
-fn save_runs(cfg: &RunConfig, runs: &[DatasetRun]) -> Result<()> {
+/// Write a results artifact atomically: the content lands in `<path>.tmp`
+/// first and is renamed over the destination, so a crash (or a ctrl-C)
+/// mid-write can never leave a truncated JSON file where a pipeline
+/// watching `runs.json` / the trace expects a parseable one.
+fn write_atomic(path: &str, contents: &str) -> Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, contents).with_context(|| format!("writing {tmp}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp} -> {path}"))?;
+    Ok(())
+}
+
+fn save_runs(cfg: &RunConfig, batch: &RunBatch) -> Result<()> {
     std::fs::create_dir_all(&cfg.out_dir)?;
     let path = format!("{}/runs.json", cfg.out_dir);
-    let mut f = std::fs::File::create(&path)?;
-    writeln!(f, "{}", report::RunArchive { runs }.to_json())?;
+    let archive = report::RunArchive {
+        runs: &batch.runs,
+        service: batch.service_hist.clone(),
+    };
+    write_atomic(&path, &format!("{}\n", archive.to_json()))?;
     let cfg_path = format!("{}/config.json", cfg.out_dir);
-    std::fs::write(&cfg_path, cfg.to_json())?;
+    write_atomic(&cfg_path, &cfg.to_json())?;
     eprintln!("[axdt] wrote {path} and {cfg_path}");
     Ok(())
 }
@@ -310,9 +385,9 @@ fn save_runs(cfg: &RunConfig, runs: &[DatasetRun]) -> Result<()> {
 fn export_rtl(cfg: &RunConfig, dataset: &str, out: Option<&str>) -> Result<()> {
     let mut one = cfg.clone();
     one.datasets = vec![dataset.to_string()];
-    let (runs, failed) = run_all(&one, false)?;
-    partial_failure(&failed)?;
-    let run = &runs[0];
+    let batch = run_all(&one, false)?;
+    partial_failure(&batch.failed)?;
+    let run = &batch.runs[0];
     let point = run
         .best_within_loss(cfg.accuracy_loss)
         .ok_or_else(|| anyhow!("no design within loss budget {}", cfg.accuracy_loss))?;

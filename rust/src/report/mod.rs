@@ -250,11 +250,17 @@ pub fn table2(runs: &[DatasetRun], loss: f64) -> String {
 /// Machine-readable archive of a batch of runs (written to `--out`).
 pub struct RunArchive<'a> {
     pub runs: &'a [DatasetRun],
+    /// Shared eval-service telemetry for the whole batch — the
+    /// histogram block from
+    /// [`Metrics::histograms_json`](crate::coordinator::Metrics::histograms_json)
+    /// (count/p50/p90/p99/max per hot-path histogram).  `None` for
+    /// serviceless (plain native) runs; archived as JSON `null`.
+    pub service: Option<Json>,
 }
 
 impl<'a> RunArchive<'a> {
     pub fn to_json(&self) -> Json {
-        Json::Arr(
+        let runs = Json::Arr(
             self.runs
                 .iter()
                 .map(|r| {
@@ -293,7 +299,11 @@ impl<'a> RunArchive<'a> {
                     ])
                 })
                 .collect(),
-        )
+        );
+        Json::obj(vec![
+            ("runs", runs),
+            ("service", self.service.clone().unwrap_or(Json::Null)),
+        ])
     }
 }
 
@@ -333,8 +343,12 @@ mod tests {
         assert!(fig.contains("FIG 5 (Seeds)"));
         let t2 = table2(std::slice::from_ref(&run), 0.05);
         assert!(t2.contains("TABLE II"));
-        let json = RunArchive { runs: std::slice::from_ref(&run) }.to_json().to_string();
+        let json = RunArchive { runs: std::slice::from_ref(&run), service: None }
+            .to_json()
+            .to_string();
         assert!(json.contains("\"dataset\":\"seeds\""));
+        // Serviceless batch: the service telemetry slot archives as null.
+        assert!(json.contains("\"service\":null"), "{json}");
         // Cache effectiveness is archived per dataset: 12 + 4x12
         // chromosomes requested; engine evals never exceed the post-cache
         // misses (within-batch dedup can shrink them further).
@@ -342,6 +356,15 @@ mod tests {
         assert_eq!(run.stats.requested, 60);
         assert!(run.stats.engine_evals <= 60 - run.stats.cache_hits);
         assert!(run.stats.engine_evals > 0);
+        crate::util::json::Json::parse(&json).unwrap();
+
+        // Service-backed batches archive the shared histogram block.
+        let hist = crate::coordinator::Metrics::with_shards(1).histograms_json();
+        let json = RunArchive { runs: std::slice::from_ref(&run), service: Some(hist) }
+            .to_json()
+            .to_string();
+        assert!(json.contains("\"exec_latency_ns\""), "{json}");
+        assert!(json.contains("\"ticket_latency_ns\""), "{json}");
         crate::util::json::Json::parse(&json).unwrap();
     }
 

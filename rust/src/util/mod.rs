@@ -15,7 +15,13 @@
 //! * [`pool`] — scoped parallel-map helpers with dynamic work claiming
 //!   (chunk queue for `par_map`, atomic next-index work stealing for
 //!   `par_for_each_indexed`).
-//! * [`stats`] — summary statistics used by benches and reports.
+//! * [`stats`] — summary statistics used by benches and reports, plus
+//!   the bounded [`stats::Log2Histogram`] behind the service's hot-path
+//!   latency percentiles.
+//! * [`trace`] — the ticket-lifecycle event journal
+//!   ([`trace::TraceJournal`]): bounded drop-oldest ring of typed
+//!   events with clock-seam timestamps, exported as Chrome trace-event
+//!   JSON for Perfetto.
 //! * [`sync`] — poison-recovering mutex helpers ([`sync::lock_recover`]),
 //!   the only sanctioned way to take a lock in `rust/src` (enforced by
 //!   `axdt-lint`'s `mutex-discipline` rule).
@@ -37,3 +43,4 @@ pub mod rng;
 pub mod stats;
 pub mod sync;
 pub mod testbed;
+pub mod trace;

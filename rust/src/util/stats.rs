@@ -1,5 +1,7 @@
 //! Summary statistics for benches and experiment reports.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 /// Streaming summary of a sample set.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
@@ -33,9 +35,15 @@ impl Summary {
         self.xs.iter().sum::<f64>() / self.xs.len() as f64
     }
     pub fn min(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
         self.xs.iter().copied().fold(f64::INFINITY, f64::min)
     }
     pub fn max(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
         self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
     pub fn stddev(&self) -> f64 {
@@ -64,6 +72,139 @@ impl Summary {
     }
     pub fn median(&self) -> f64 {
         self.percentile(0.5)
+    }
+}
+
+/// Number of buckets in a [`Log2Histogram`]: one per possible bit length
+/// of a `u64` sample, plus bucket 0 for the value 0.
+pub const LOG2_BUCKETS: usize = 65;
+
+/// Fixed-size log₂-bucketed histogram for hot-path latency/width metrics.
+///
+/// Bucket `b` holds samples of bit length `b` (bucket 0 holds only the
+/// value 0, bucket 1 holds 1, bucket 2 holds 2–3, …), so `record` is a
+/// single relaxed atomic increment — no lock, no allocation, bounded
+/// memory regardless of sample count.  Unlike [`Summary`] (which buffers
+/// every sample in a `Vec<f64>`), a `Log2Histogram` survives
+/// millions-of-samples service traffic; the price is that percentiles
+/// are interpolated within a power-of-two bucket instead of exact.
+/// The true maximum is tracked exactly, and percentile estimates are
+/// clamped to it.
+#[derive(Debug)]
+pub struct Log2Histogram {
+    buckets: [AtomicU64; LOG2_BUCKETS],
+    max: AtomicU64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Log2Histogram {
+    pub fn new() -> Self {
+        Log2Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index of a sample: its bit length.
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Record one sample.  Lock-free; callable from any worker thread.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the bucket counts + exact max.  All reads
+    /// below go through a snapshot so count/percentiles/max are mutually
+    /// consistent even while workers keep recording.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|b| self.buckets[b].load(Ordering::Relaxed)),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.snapshot().count()
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Percentile estimate (q in [0,1]); 0 when empty.
+    pub fn percentile(&self, q: f64) -> u64 {
+        self.snapshot().percentile(q)
+    }
+}
+
+/// Owned, immutable read of a [`Log2Histogram`].
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    buckets: [u64; LOG2_BUCKETS],
+    /// Exact maximum recorded sample.
+    pub max: u64,
+}
+
+impl HistogramSnapshot {
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Percentile estimate (q in [0,1]) by linear interpolation inside
+    /// the covering bucket's `[2^(b-1), 2^b)` range, clamped to the
+    /// exact max; 0 when empty.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (total - 1) as f64).round() as u64;
+        if rank == total - 1 {
+            // The top rank is the exact maximum — no interpolation.
+            return self.max;
+        }
+        let mut cum = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c > rank {
+                let lo = if b == 0 { 0 } else { 1u64 << (b - 1) };
+                let hi = if b == 0 {
+                    0
+                } else if b == 64 {
+                    u64::MAX
+                } else {
+                    (1u64 << b) - 1
+                };
+                let frac = (rank - cum) as f64 / c as f64;
+                let est = lo as f64 + frac * (hi - lo) as f64;
+                return (est as u64).min(self.max);
+            }
+            cum += c;
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+    pub fn p90(&self) -> u64 {
+        self.percentile(0.90)
+    }
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
     }
 }
 
@@ -101,6 +242,52 @@ mod tests {
         assert_eq!(s.max(), 4.0);
         assert_eq!(s.median(), 2.5);
         assert!((s.stddev() - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_summary_is_nan_everywhere() {
+        // mean/min/max must agree on "no data": all NaN, never ±INFINITY
+        // (an empty latency summary used to render min=inf, max=-inf).
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.min().is_nan());
+        assert!(s.max().is_nan());
+        assert!(s.percentile(0.5).is_nan());
+    }
+
+    #[test]
+    fn log2_histogram_buckets_and_percentiles() {
+        let h = Log2Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.percentile(0.5), 0);
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max(), 100);
+        // p50 of 1..=100 is ~50; log2 buckets land it inside [32,64).
+        let p50 = h.percentile(0.50);
+        assert!((32..64).contains(&p50), "p50 {p50}");
+        // p99 interpolates inside the top bucket but never exceeds max.
+        let p99 = h.percentile(0.99);
+        assert!(p99 <= 100 && p99 >= 64, "p99 {p99}");
+        assert_eq!(h.percentile(1.0), 100);
+        assert_eq!(h.percentile(0.0), 1);
+    }
+
+    #[test]
+    fn log2_histogram_edges() {
+        let h = Log2Histogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.percentile(0.0), 0);
+        assert_eq!(h.percentile(1.0), u64::MAX);
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 2);
+        assert_eq!(snap.max, u64::MAX);
     }
 
     #[test]

@@ -1,0 +1,483 @@
+//! Ticket-lifecycle tracing: a clock-seam event journal.
+//!
+//! A [`TraceJournal`] is a bounded, drop-oldest ring buffer of typed
+//! [`TraceEvent`]s covering the whole two-phase eval path — ticket
+//! submitted / enqueued / coalesced / flushed / executing / executed /
+//! collected, shard death and respawn, plus the driver-side GA spans
+//! (dataset, GA phase, generation, synthesis).  Design rules:
+//!
+//! * **Off by default, cheap when off.**  Every producer guards its
+//!   `record` call with [`TraceJournal::enabled`] — one relaxed atomic
+//!   load — so a disabled journal costs nothing measurable on the
+//!   eval hot path.
+//! * **Bounded, never backpressuring.**  The ring holds a fixed
+//!   capacity; when full, the *oldest* event is dropped and counted
+//!   ([`TraceJournal::dropped`]).  A slow or absent consumer can never
+//!   block a shard worker.
+//! * **Clock-seam timestamps.**  This module never reads time itself:
+//!   every event's `ts_ns` is passed in by a call site that already
+//!   holds the injected [`crate::util::clock::Clock`].  On
+//!   `ManualClock` whole traces are therefore bit-reproducible —
+//!   pinned by `rust/tests/trace.rs`.
+//! * **Sequence numbers.**  Events carry a global `seq` assigned under
+//!   the ring lock, so concurrent shard threads' events have a total
+//!   order to sort and diff on.
+//!
+//! [`chrome_trace_json`] renders a drained event list as Chrome
+//! trace-event JSON (one track per shard, one per registered driver),
+//! viewable in Perfetto / `chrome://tracing`.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::sync::lock_recover;
+
+/// Default ring capacity (events).  At ~80 bytes/event this bounds the
+/// journal at a few MB regardless of run length.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// One trace event: a global sequence number, a clock-seam timestamp,
+/// and the typed payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub ts_ns: u64,
+    pub kind: TraceKind,
+}
+
+/// The typed event payload.  Ticket-lifecycle variants are
+/// allocation-free (the hot path); driver spans carry a name.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceKind {
+    /// Client side: a ticket was issued for `width` chromosomes routed
+    /// to `shard`.
+    Submitted { shard: u32, problem: u32, width: u32 },
+    /// Worker side: the request left the channel and entered the
+    /// coalescer.
+    Enqueued { shard: u32, problem: u32 },
+    /// Worker side: the request merged into its problem group
+    /// (`pending` = group depth after the merge).
+    Coalesced { shard: u32, problem: u32, pending: u32 },
+    /// Worker side: a group flushed (`kind` = the `FlushKind` label,
+    /// `width` = real chromosomes in the flush).
+    Flushed { shard: u32, problem: u32, kind: &'static str, width: u32 },
+    /// Worker side: the backend call is starting.
+    Executing { shard: u32, problem: u32, width: u32 },
+    /// Worker side: the backend call finished after `dur_ns`.
+    Executed { shard: u32, problem: u32, width: u32, dur_ns: u64 },
+    /// Client side: a ticket was redeemed, `latency_ns` after submit.
+    Collected { shard: u32, latency_ns: u64 },
+    /// A shard worker died (panicking backend).
+    ShardDown { shard: u32 },
+    /// A dead shard was respawned from the retained factory.
+    Respawn { shard: u32 },
+    /// Driver side: a named span opened on a driver track (dataset,
+    /// ga, generation, synthesis).
+    SpanBegin { track: u32, name: String },
+    /// Driver side: the most recent same-named span on `track` closed.
+    SpanEnd { track: u32, name: String },
+}
+
+impl fmt::Display for TraceEvent {
+    /// Canonical one-line form, the unit of the byte-identity
+    /// determinism test.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seq={} ts={} ", self.seq, self.ts_ns)?;
+        match &self.kind {
+            TraceKind::Submitted { shard, problem, width } => {
+                write!(f, "submitted shard={shard} problem={problem} width={width}")
+            }
+            TraceKind::Enqueued { shard, problem } => {
+                write!(f, "enqueued shard={shard} problem={problem}")
+            }
+            TraceKind::Coalesced { shard, problem, pending } => {
+                write!(f, "coalesced shard={shard} problem={problem} pending={pending}")
+            }
+            TraceKind::Flushed { shard, problem, kind, width } => {
+                write!(f, "flushed({kind}) shard={shard} problem={problem} width={width}")
+            }
+            TraceKind::Executing { shard, problem, width } => {
+                write!(f, "executing shard={shard} problem={problem} width={width}")
+            }
+            TraceKind::Executed { shard, problem, width, dur_ns } => {
+                write!(f, "executed shard={shard} problem={problem} width={width} dur={dur_ns}")
+            }
+            TraceKind::Collected { shard, latency_ns } => {
+                write!(f, "collected shard={shard} latency={latency_ns}")
+            }
+            TraceKind::ShardDown { shard } => write!(f, "shard-down shard={shard}"),
+            TraceKind::Respawn { shard } => write!(f, "respawn shard={shard}"),
+            TraceKind::SpanBegin { track, name } => {
+                write!(f, "span-begin track={track} name={name}")
+            }
+            TraceKind::SpanEnd { track, name } => {
+                write!(f, "span-end track={track} name={name}")
+            }
+        }
+    }
+}
+
+/// Bounded drop-oldest event journal.  All methods are `&self`; the
+/// journal is shared via the `Metrics` it hangs off.
+#[derive(Debug)]
+pub struct TraceJournal {
+    enabled: AtomicBool,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    capacity: usize,
+    ring: Mutex<VecDeque<TraceEvent>>,
+    /// Driver track registry: tid = index + 1 (tid 0 is unused so shard
+    /// and driver tids never collide inside one Perfetto process group).
+    tracks: Mutex<Vec<String>>,
+}
+
+impl Default for TraceJournal {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+impl TraceJournal {
+    /// A disabled journal with the default capacity.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        TraceJournal {
+            enabled: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            capacity: capacity.max(1),
+            ring: Mutex::new(VecDeque::new()),
+            tracks: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The producer-side fast check: one relaxed load.  Every
+    /// instrumentation site guards on this before building an event.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::SeqCst);
+    }
+
+    /// Append one event.  `ts_ns` must come from the injected `Clock`
+    /// (this module never reads time).  When the ring is full the
+    /// oldest event is dropped and counted — recording never blocks on
+    /// a consumer.
+    pub fn record(&self, ts_ns: u64, kind: TraceKind) {
+        if !self.enabled() {
+            return;
+        }
+        let mut ring = lock_recover(&self.ring);
+        // Seq is assigned under the lock so ring order == seq order.
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        if ring.len() >= self.capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(TraceEvent { seq, ts_ns, kind });
+    }
+
+    /// Events evicted by the bounded ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        lock_recover(&self.ring).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy out the retained events, sorted by sequence number.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut v: Vec<TraceEvent> = lock_recover(&self.ring).iter().cloned().collect();
+        v.sort_by_key(|e| e.seq);
+        v
+    }
+
+    /// Register (or find) a named driver track; returns its tid.
+    /// Driver tids start at 1 + the registration order, so they are
+    /// deterministic for a deterministic registration order.
+    pub fn driver_track(&self, name: &str) -> u32 {
+        let mut tracks = lock_recover(&self.tracks);
+        if let Some(pos) = tracks.iter().position(|t| t == name) {
+            return pos as u32 + 1;
+        }
+        tracks.push(name.to_string());
+        tracks.len() as u32
+    }
+
+    /// Registered driver-track names, tid order (tid = index + 1).
+    pub fn track_names(&self) -> Vec<String> {
+        lock_recover(&self.tracks).clone()
+    }
+}
+
+/// Perfetto process-group ids for the two track families.
+const PID_SHARDS: u32 = 1;
+const PID_DRIVERS: u32 = 2;
+
+fn ts_us(ts_ns: u64) -> Json {
+    Json::num(ts_ns as f64 / 1e3)
+}
+
+fn instant(name: &str, ts_ns: u64, pid: u32, tid: u32, args: Vec<(&str, Json)>) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("i")),
+        ("s", Json::str("t")),
+        ("name", Json::str(name)),
+        ("ts", ts_us(ts_ns)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// Render drained events as Chrome trace-event JSON: an object with a
+/// `traceEvents` array, one track per shard (pid 1) and one per
+/// registered driver (pid 2), loadable in Perfetto / chrome://tracing.
+pub fn chrome_trace_json(events: &[TraceEvent], driver_tracks: &[String], dropped: u64) -> Json {
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + driver_tracks.len() + 2);
+
+    // Track-name metadata: the driver tracks are known up front; shard
+    // tracks are named lazily from the shards the events mention.
+    let mut shard_tids: Vec<u32> = events
+        .iter()
+        .filter_map(|e| match e.kind {
+            TraceKind::Submitted { shard, .. }
+            | TraceKind::Enqueued { shard, .. }
+            | TraceKind::Coalesced { shard, .. }
+            | TraceKind::Flushed { shard, .. }
+            | TraceKind::Executing { shard, .. }
+            | TraceKind::Executed { shard, .. }
+            | TraceKind::Collected { shard, .. }
+            | TraceKind::ShardDown { shard }
+            | TraceKind::Respawn { shard } => Some(shard),
+            _ => None,
+        })
+        .collect();
+    shard_tids.sort_unstable();
+    shard_tids.dedup();
+    for &shard in &shard_tids {
+        out.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(PID_SHARDS as f64)),
+            ("tid", Json::num(shard as f64)),
+            ("args", Json::obj(vec![("name", Json::str(format!("shard {shard}")))])),
+        ]));
+    }
+    for (i, name) in driver_tracks.iter().enumerate() {
+        out.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(PID_DRIVERS as f64)),
+            ("tid", Json::num((i + 1) as f64)),
+            ("args", Json::obj(vec![("name", Json::str(format!("driver {name}")))])),
+        ]));
+    }
+
+    for e in events {
+        let seq = Json::num(e.seq as f64);
+        match &e.kind {
+            TraceKind::Submitted { shard, problem, width } => out.push(instant(
+                "submitted",
+                e.ts_ns,
+                PID_SHARDS,
+                *shard,
+                vec![
+                    ("seq", seq),
+                    ("problem", Json::num(*problem as f64)),
+                    ("width", Json::num(*width as f64)),
+                ],
+            )),
+            TraceKind::Enqueued { shard, problem } => out.push(instant(
+                "enqueued",
+                e.ts_ns,
+                PID_SHARDS,
+                *shard,
+                vec![("seq", seq), ("problem", Json::num(*problem as f64))],
+            )),
+            TraceKind::Coalesced { shard, problem, pending } => out.push(instant(
+                "coalesced",
+                e.ts_ns,
+                PID_SHARDS,
+                *shard,
+                vec![
+                    ("seq", seq),
+                    ("problem", Json::num(*problem as f64)),
+                    ("pending", Json::num(*pending as f64)),
+                ],
+            )),
+            TraceKind::Flushed { shard, problem, kind, width } => out.push(instant(
+                &format!("flushed({kind})"),
+                e.ts_ns,
+                PID_SHARDS,
+                *shard,
+                vec![
+                    ("seq", seq),
+                    ("problem", Json::num(*problem as f64)),
+                    ("width", Json::num(*width as f64)),
+                ],
+            )),
+            TraceKind::Executing { shard, problem, width } => out.push(instant(
+                "executing",
+                e.ts_ns,
+                PID_SHARDS,
+                *shard,
+                vec![
+                    ("seq", seq),
+                    ("problem", Json::num(*problem as f64)),
+                    ("width", Json::num(*width as f64)),
+                ],
+            )),
+            // The backend call renders as a complete span ("X") so the
+            // shard track shows busy time as solid blocks.
+            TraceKind::Executed { shard, problem, width, dur_ns } => out.push(Json::obj(vec![
+                ("ph", Json::str("X")),
+                ("name", Json::str(format!("exec p{problem}"))),
+                ("ts", ts_us(e.ts_ns.saturating_sub(*dur_ns))),
+                ("dur", Json::num(*dur_ns as f64 / 1e3)),
+                ("pid", Json::num(PID_SHARDS as f64)),
+                ("tid", Json::num(*shard as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("seq", seq),
+                        ("width", Json::num(*width as f64)),
+                    ]),
+                ),
+            ])),
+            TraceKind::Collected { shard, latency_ns } => out.push(instant(
+                "collected",
+                e.ts_ns,
+                PID_SHARDS,
+                *shard,
+                vec![("seq", seq), ("latency_ns", Json::num(*latency_ns as f64))],
+            )),
+            TraceKind::ShardDown { shard } => out.push(instant(
+                "shard-down",
+                e.ts_ns,
+                PID_SHARDS,
+                *shard,
+                vec![("seq", seq)],
+            )),
+            TraceKind::Respawn { shard } => out.push(instant(
+                "respawn",
+                e.ts_ns,
+                PID_SHARDS,
+                *shard,
+                vec![("seq", seq)],
+            )),
+            TraceKind::SpanBegin { track, name } => out.push(Json::obj(vec![
+                ("ph", Json::str("B")),
+                ("name", Json::str(name.as_str())),
+                ("ts", ts_us(e.ts_ns)),
+                ("pid", Json::num(PID_DRIVERS as f64)),
+                ("tid", Json::num(*track as f64)),
+                ("args", Json::obj(vec![("seq", seq)])),
+            ])),
+            TraceKind::SpanEnd { track, name } => out.push(Json::obj(vec![
+                ("ph", Json::str("E")),
+                ("name", Json::str(name.as_str())),
+                ("ts", ts_us(e.ts_ns)),
+                ("pid", Json::num(PID_DRIVERS as f64)),
+                ("tid", Json::num(*track as f64)),
+                ("args", Json::obj(vec![("seq", seq)])),
+            ])),
+        }
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("droppedEvents", Json::num(dropped as f64)),
+                ("clock", Json::str("axdt virtual clock (ns since epoch)")),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_journal_records_nothing() {
+        let j = TraceJournal::new();
+        assert!(!j.enabled());
+        j.record(5, TraceKind::ShardDown { shard: 0 });
+        assert!(j.is_empty());
+        assert_eq!(j.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let j = TraceJournal::with_capacity(3);
+        j.set_enabled(true);
+        for i in 0..5u32 {
+            j.record(i as u64, TraceKind::Enqueued { shard: 0, problem: i });
+        }
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.dropped(), 2);
+        let snap = j.snapshot();
+        // Oldest two (seq 0, 1) evicted; the survivors keep their seqs.
+        assert_eq!(snap.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn driver_tracks_are_stable() {
+        let j = TraceJournal::new();
+        assert_eq!(j.driver_track("seeds"), 1);
+        assert_eq!(j.driver_track("har"), 2);
+        assert_eq!(j.driver_track("seeds"), 1);
+        assert_eq!(j.track_names(), vec!["seeds".to_string(), "har".to_string()]);
+    }
+
+    #[test]
+    fn event_display_is_canonical() {
+        let e = TraceEvent {
+            seq: 7,
+            ts_ns: 1_500,
+            kind: TraceKind::Flushed { shard: 1, problem: 2, kind: "Full", width: 32 },
+        };
+        assert_eq!(e.to_string(), "seq=7 ts=1500 flushed(Full) shard=1 problem=2 width=32");
+    }
+
+    #[test]
+    fn chrome_trace_shape_parses_and_names_tracks() {
+        let j = TraceJournal::new();
+        j.set_enabled(true);
+        let t = j.driver_track("seeds");
+        j.record(10, TraceKind::SpanBegin { track: t, name: "dataset seeds".into() });
+        j.record(20, TraceKind::Submitted { shard: 0, problem: 0, width: 4 });
+        j.record(30, TraceKind::Executed { shard: 0, problem: 0, width: 4, dur_ns: 8 });
+        j.record(40, TraceKind::Collected { shard: 0, latency_ns: 20 });
+        j.record(50, TraceKind::SpanEnd { track: t, name: "dataset seeds".into() });
+        let json = chrome_trace_json(&j.snapshot(), &j.track_names(), j.dropped());
+        let text = json.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 thread_name metadata rows + 5 events.
+        assert_eq!(events.len(), 7);
+        assert!(text.contains("\"shard 0\""));
+        assert!(text.contains("\"driver seeds\""));
+        assert!(text.contains("\"ph\":\"X\""));
+        // The exec span starts at ts-dur, in microseconds.
+        assert!(text.contains("\"droppedEvents\":0"));
+    }
+}

@@ -120,9 +120,15 @@ fn many_tickets_across_coalescing_groups_on_manual_clock() {
     assert_eq!(svc.metrics.tickets_in_flight.load(Ordering::Relaxed), 0);
     // Virtual time makes the ticket gauges exact: every ticket was
     // submitted at t=0 and collected after the 250us advance, in
-    // micro-batches of 5.
-    assert_eq!(svc.metrics.ticket_latency_summary().median(), 250_000.0);
-    assert_eq!(svc.metrics.microbatch_width_summary().median(), 5.0);
+    // micro-batches of 5.  The log₂ histograms keep the exact max and
+    // per-sample counts, so both are assertable without wall time.
+    let lat = svc.metrics.ticket_latency_hist();
+    assert_eq!(lat.count(), 5);
+    assert_eq!(lat.max, 250_000);
+    assert_eq!(lat.percentile(1.0), 250_000);
+    let widths = svc.metrics.microbatch_width_hist();
+    assert_eq!(widths.count(), 5);
+    assert_eq!(widths.max, 5);
     svc.shutdown();
 }
 

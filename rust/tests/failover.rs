@@ -178,6 +178,66 @@ fn queued_requests_get_typed_shard_down() {
     svc.shutdown();
 }
 
+/// The queue-depth gauge must never underflow (wrap to a huge u64)
+/// across a worker death: the death-path drain and the client facade
+/// can both settle charges for the same jobs, and every decrement path
+/// saturates at zero.
+#[test]
+fn queue_depth_gauge_never_underflows_across_worker_death() {
+    let kill = Arc::new(AtomicU64::new(0));
+    let clock = Arc::new(ManualClock::new());
+    let pool = spawn_killable_native_with_clock(
+        8,
+        &PoolOptions {
+            workers: 1,
+            coalesce_window_us: 500_000,
+            engine_threads: 1,
+            respawn: false,
+            ..PoolOptions::default()
+        },
+        Arc::clone(&kill),
+        Arc::clone(&clock),
+    );
+    let svc = EvalService::from_pool(pool);
+    let p = named_problem("seeds");
+    let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+    kill.store(1, Ordering::SeqCst); // shard 0 dies on its next execution
+
+    // The first sub-width batch parks in the coalescer (the virtual
+    // window cannot expire on its own)...
+    let t1 = svc.submit(id, random_batch(&p, 5, 21)).unwrap();
+    wait_until("first batch coalescing", || {
+        svc.metrics.shards()[0].coalescing.load(Ordering::Relaxed) == 5
+    });
+    // ...the width-completing batch triggers the killing flush, and a
+    // third submit races the death — in the channel, in the coalescer,
+    // or rejected at submit, every path must settle its gauge charge.
+    let t2 = svc.submit(id, random_batch(&p, 3, 22)).unwrap();
+    let t3 = svc.submit(id, random_batch(&p, 4, 23));
+
+    let err = svc.wait_typed(t1).unwrap_err();
+    assert!(matches!(err, ServiceError::ShardDown { shard: 0 }), "{err:?}");
+    let err = svc.wait_typed(t2).unwrap_err();
+    assert!(matches!(err, ServiceError::ShardDown { shard: 0 }), "{err:?}");
+    if let Ok(t3) = t3 {
+        assert!(svc.wait_typed(t3).is_err());
+    }
+
+    let depth = || svc.metrics.shards()[0].queue_depth.load(Ordering::Relaxed);
+    // The drain settles every queued charge: the gauge reads exactly
+    // zero, not a wrapped 2^64-ish value.
+    wait_until("gauge settles at zero", || depth() == 0);
+    // Extra dequeues (a shutdown racing the drain) saturate at zero
+    // instead of wrapping.
+    svc.metrics.shard_dequeued(0);
+    svc.metrics.shard_dequeued(0);
+    assert_eq!(depth(), 0, "queue_depth underflowed");
+    // The live snapshot reports the same sane value.
+    let snap = svc.metrics.snapshot_json(0).to_string();
+    assert!(snap.contains("\"queue_depth\":0"), "{snap}");
+    svc.shutdown();
+}
+
 /// The engine facade heals a mid-run shard death transparently: the
 /// failed batch is re-registered onto a live shard and retried, so the
 /// caller sees correct results, not an error.

@@ -1,0 +1,162 @@
+//! Ticket-lifecycle tracing contracts (ISSUE 7), through the public API
+//! only — no artifacts, no wall-clock sleeps for the determinism half
+//! (timing runs on the `ManualClock`):
+//!
+//! * two identical virtual-clock runs journal BYTE-IDENTICAL event
+//!   sequences: same seq numbers, same clock-seam timestamps, same
+//!   payloads — the journal is bit-reproducible, not merely "similar";
+//! * one submit→wait round trip journals the full lifecycle in causal
+//!   order (submitted → enqueued → coalesced → flushed → executing →
+//!   executed → collected), covering both a width-full `Full` flush and
+//!   a virtual-deadline `Deadline` flush;
+//! * a real `optimize_dataset` run over the service brackets the GA in
+//!   driver-track spans (dataset / ga / per-generation / synthesis) on
+//!   the SAME journal the shard events land in.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use axdt::coordinator::{
+    optimize_dataset, CoalesceMode, EngineChoice, EvalService, PoolOptions, RunOptions,
+};
+use axdt::util::clock::{Clock, ManualClock};
+use axdt::util::testbed::{named_problem, random_batch, wait_until};
+
+/// One scripted two-ticket run on a parked `ManualClock`: a width-full
+/// batch (synchronous `Full` flush, all at t=0) followed by a sub-width
+/// batch that parks in the coalescer until a 250 µs virtual advance
+/// expires its 200 µs window (`Deadline` flush).  Returns the journal's
+/// canonical one-line renderings.
+fn run_once() -> Vec<String> {
+    let clock = Arc::new(ManualClock::new());
+    let svc = EvalService::spawn_native_with_clock(
+        8,
+        &PoolOptions {
+            workers: 1,
+            coalesce: CoalesceMode::Fixed,
+            coalesce_window_us: 200,
+            engine_threads: 1,
+            ..PoolOptions::default()
+        },
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    );
+    svc.metrics.trace.set_enabled(true);
+    let p = named_problem("traced");
+    let (id, _) = svc.register(Arc::clone(&p)).unwrap();
+
+    // Width-full ticket: flushes synchronously inside the worker's Eval
+    // arm, and `wait` returns only after the worker's `Executed` record,
+    // so the seven records are totally ordered.
+    let full = random_batch(&p, 8, 7);
+    svc.wait(svc.submit(id, full).unwrap()).unwrap();
+    assert_eq!(svc.metrics.trace.len(), 7, "full-width ticket journals its whole lifecycle");
+
+    // Sub-width ticket: parks until the deadline.  The barrier is on the
+    // JOURNAL length, not the coalescing gauge — the gauge is bumped
+    // before the Enqueued/Coalesced records are written, so a gauge
+    // barrier would let the advance race the records.
+    let tail = random_batch(&p, 4, 8);
+    let ticket = svc.submit(id, tail).unwrap();
+    wait_until("enqueued+coalesced journaled", || svc.metrics.trace.len() == 10);
+    clock.advance(Duration::from_micros(250));
+    svc.wait(ticket).unwrap();
+
+    assert_eq!(svc.metrics.trace.dropped(), 0);
+    let lines: Vec<String> =
+        svc.metrics.trace.snapshot().iter().map(ToString::to_string).collect();
+    svc.shutdown();
+    lines
+}
+
+/// Acceptance (ISSUE 7): the journal is deterministic under the virtual
+/// clock — two identical runs produce byte-identical event sequences —
+/// and one run covers every lifecycle stage for both flush shapes.
+#[test]
+fn ticket_lifecycle_trace_is_bit_reproducible_on_manual_clock() {
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(a, b, "identical virtual-clock runs must journal byte-identical sequences");
+    assert_eq!(a.len(), 14);
+
+    // Causal lifecycle order, for both the Full and the Deadline ticket.
+    let kinds: Vec<&str> = a
+        .iter()
+        .map(|line| line.splitn(3, ' ').nth(2).unwrap().split(' ').next().unwrap())
+        .collect();
+    assert_eq!(
+        kinds,
+        [
+            "submitted",
+            "enqueued",
+            "coalesced",
+            "flushed(Full)",
+            "executing",
+            "executed",
+            "collected",
+            "submitted",
+            "enqueued",
+            "coalesced",
+            "flushed(Deadline)",
+            "executing",
+            "executed",
+            "collected",
+        ],
+        "{a:#?}"
+    );
+
+    // Seq numbers are dense from zero; timestamps come off the virtual
+    // clock: everything up to the parked sub-width submit is at t=0, the
+    // deadline flush and its collect land exactly at the 250 µs advance.
+    for (i, line) in a.iter().enumerate() {
+        assert!(line.starts_with(&format!("seq={i} ")), "{line}");
+    }
+    for line in &a[..10] {
+        assert!(line.contains(" ts=0 "), "{line}");
+    }
+    for line in &a[10..] {
+        assert!(line.contains(" ts=250000 "), "{line}");
+    }
+    assert!(a[3].contains("width=8"), "{}", a[3]);
+    assert!(a[10].contains("width=4"), "{}", a[10]);
+    assert!(a[13].ends_with("latency=250000"), "{}", a[13]);
+}
+
+/// A real optimization run over the service journals driver spans —
+/// dataset, ga, per-generation, synthesis — on its own driver track,
+/// interleaved with the shard-side ticket lifecycle in one journal.
+#[test]
+fn driver_spans_bracket_the_ga_on_the_shared_journal() {
+    let svc = EvalService::spawn_native_with(
+        8,
+        &PoolOptions { workers: 1, engine_threads: 1, ..PoolOptions::default() },
+    );
+    svc.metrics.trace.set_enabled(true);
+    let run = optimize_dataset(
+        "seeds",
+        &RunOptions {
+            seed: 42,
+            pop_size: 8,
+            generations: 2,
+            margin_max: 5,
+            engine: EngineChoice::NativeService,
+            microbatch: 0,
+        },
+        Some(&svc),
+    )
+    .unwrap();
+    assert!(!run.front.is_empty());
+
+    let lines: Vec<String> =
+        svc.metrics.trace.snapshot().iter().map(ToString::to_string).collect();
+    for name in ["dataset seeds", "ga", "gen 0", "gen 1", "synthesis"] {
+        let begin = format!("span-begin track=1 name={name}");
+        let end = format!("span-end track=1 name={name}");
+        assert!(lines.iter().any(|l| l.contains(&begin)), "missing `{begin}`");
+        assert!(lines.iter().any(|l| l.contains(&end)), "missing `{end}`");
+    }
+    assert_eq!(svc.metrics.trace.track_names(), ["seeds"]);
+    // Shard events share the journal with the driver spans.
+    assert!(lines.iter().any(|l| l.contains("submitted shard=0")));
+    assert!(lines.iter().any(|l| l.contains("executed shard=0")));
+    svc.shutdown();
+}

@@ -1,0 +1,25 @@
+//@ path: rust/src/util/trace.rs
+//@ expect: clock-seam@16
+//@ partial: clock-seam
+//@ expect-partial: clock-seam@16
+
+// The trace journal is NOT clock-exempt: events are stamped by their
+// call sites through the injected Clock (that is what makes the journal
+// bit-reproducible on a ManualClock), so a journal that reads the OS
+// clock itself must fire.
+
+pub fn record_ok(ring: &mut Vec<(u64, u32)>, ts_ns: u64, shard: u32) {
+    ring.push((ts_ns, shard)); // timestamp passed IN: clean
+}
+
+pub fn record_bad(ring: &mut Vec<(u64, u32)>, shard: u32) {
+    ring.push((Instant::now().elapsed().as_nanos() as u64, shard));
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn wall_time_is_fine_in_tests() {
+        let _t = Instant::now();
+    }
+}
