@@ -15,8 +15,9 @@ bench:
 	cargo bench
 
 # Architectural lints (tools/axdt-lint): Clock seam, Ticket seam,
-# panic-free workers, mutex discipline, test-sleep budget.  See the
-# "Static analysis" section of README.md.
+# panic-free workers, mutex discipline, test-sleep budget, plus the
+# dataflow rules (lock-order, ticket-leak, trace-ordering, clock-taint).
+# `--format sarif` emits SARIF 2.1.0. See "Static analysis" in README.md.
 lint:
 	cargo run -q -p axdt-lint
 	cargo test -q -p axdt-lint

@@ -31,6 +31,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::util::sync::lock_recover;
+
 /// Callback a clock runs after every virtual-time advance (used by pools
 /// to nudge workers that are blocked waiting for a deadline).
 pub type Waker = Box<dyn Fn() + Send + Sync>;
@@ -104,7 +106,7 @@ impl ManualClock {
     /// Advance virtual time by `d` and run every registered waker.
     pub fn advance(&self, d: Duration) {
         self.now.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
-        let wakers = self.wakers.lock().unwrap_or_else(|e| e.into_inner());
+        let wakers = lock_recover(&self.wakers);
         for w in wakers.iter() {
             w();
         }
@@ -135,7 +137,7 @@ impl Clock for ManualClock {
     }
 
     fn register_waker(&self, waker: Waker) {
-        self.wakers.lock().unwrap_or_else(|e| e.into_inner()).push(waker);
+        lock_recover(&self.wakers).push(waker);
     }
 }
 

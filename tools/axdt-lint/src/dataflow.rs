@@ -1,0 +1,324 @@
+//! A small intra-procedural dataflow core: def-use chains over `let`
+//! bindings and a call-context index, shared by the flow rules
+//! (`ticket-leak`, `clock-taint`, `lock-order`).
+//!
+//! The model is deliberately modest — single-name `let` bindings,
+//! linear use scanning to the end of the function, calls identified by
+//! their callee identifier — because the architectural seams it guards
+//! are written in exactly that style.  Destructuring patterns and
+//! reassignments are not tracked (conservative: no diagnostic), and
+//! closures are analyzed as part of their enclosing function.
+
+use crate::lexer::{TokKind, Token};
+use crate::parser::{matching_paren, statement_end};
+
+/// One `let` binding: `let [mut] NAME [: Type] = INIT ;`.
+#[derive(Debug, Clone)]
+pub struct Binding {
+    pub name: String,
+    /// Token index of the binding name.
+    pub name_idx: usize,
+    /// Token range `[start, end)` of the initializer expression.
+    pub init: (usize, usize),
+    /// Token index of the terminating `;` (or the statement limit).
+    pub stmt_end: usize,
+}
+
+/// Extract single-name `let` bindings in `range` (token indices,
+/// half-open).  Destructuring patterns (`let (a, b) =`, `let Some(x) =`)
+/// are skipped — the flow rules treat them conservatively.
+pub fn bindings(toks: &[Token], range: (usize, usize)) -> Vec<Binding> {
+    let (start, limit) = range;
+    let mut out = Vec::new();
+    let mut i = start;
+    while i < limit {
+        if !toks[i].is_ident("let") {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if toks.get(j).is_some_and(|t| t.is_ident("mut")) {
+            j += 1;
+        }
+        let Some(name) = toks.get(j).and_then(|t| match &t.kind {
+            TokKind::Ident(s) => Some(s.clone()),
+            _ => None,
+        }) else {
+            i += 1;
+            continue;
+        };
+        let name_idx = j;
+        // A simple binding continues with `:` (typed) or `=`; anything
+        // else (`(`, `{`, another ident) is a pattern we skip.
+        let eq = match toks.get(j + 1) {
+            Some(t) if t.is_punct('=') && !toks.get(j + 2).is_some_and(|n| n.is_punct('=')) => {
+                Some(j + 1)
+            }
+            Some(t) if t.is_punct(':') => find_eq_after_type(toks, j + 2, limit),
+            _ => None,
+        };
+        let Some(eq) = eq else {
+            i = j + 1;
+            continue;
+        };
+        let end = statement_end(toks, eq + 1, limit);
+        out.push(Binding {
+            name,
+            name_idx,
+            init: (eq + 1, end),
+            stmt_end: end,
+        });
+        i = end + 1;
+    }
+    out
+}
+
+/// Scan a type annotation for the `=` that starts the initializer,
+/// tracking angle-bracket depth so associated-type bindings
+/// (`Box<dyn Iterator<Item = u32>>`) don't end the type early.  `->`
+/// inside `Fn() -> R` sugar is ignored for angle counting.
+fn find_eq_after_type(toks: &[Token], from: usize, limit: usize) -> Option<usize> {
+    let mut angle = 0i64;
+    let mut depth = 0i64;
+    let mut k = from;
+    while k < limit {
+        let t = &toks[k];
+        if t.is_punct('(') || t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') {
+            depth -= 1;
+        } else if t.is_punct('<') {
+            angle += 1;
+        } else if t.is_punct('>') {
+            // `->` is function-sugar, not a closing angle.
+            if !toks.get(k.wrapping_sub(1)).is_some_and(|p| p.is_punct('-')) {
+                angle -= 1;
+            }
+        } else if t.is_punct('=') && angle <= 0 && depth <= 0 {
+            return Some(k);
+        } else if t.is_punct(';') && depth <= 0 {
+            return None; // `let x: T;` — no initializer.
+        }
+        k += 1;
+    }
+    None
+}
+
+/// Does `range` contain a call to one of `names` (identifier directly
+/// followed by `(`)?  Returns the index of the callee token.
+pub fn find_call(toks: &[Token], range: (usize, usize), names: &[&str]) -> Option<usize> {
+    let (start, end) = range;
+    (start..end.min(toks.len().saturating_sub(1))).find(|&k| {
+        names.iter().any(|n| toks[k].is_ident(n)) && toks[k + 1].is_punct('(')
+    })
+}
+
+/// Call-context index: for every token, the chain of enclosing calls.
+///
+/// Built once per function.  Parens without a callee (tuples, grouping)
+/// are recorded as anonymous nodes, so [`CallIndex::governing_call`]
+/// can skip them and find the nearest *named* call — `push((t, c))`
+/// governs `t` even though the tuple paren is in between.
+pub struct CallIndex {
+    /// Per-token: index into `nodes` of the innermost enclosing paren
+    /// group (usize::MAX = none).
+    node_of: Vec<usize>,
+    /// (callee name or None, parent node or usize::MAX).
+    nodes: Vec<(Option<String>, usize)>,
+    base: usize,
+}
+
+/// Keywords that look like callees when followed by `(` but are not.
+const NOT_CALLEES: &[&str] = &[
+    "if", "while", "for", "match", "return", "in", "loop", "else", "fn", "move",
+];
+
+impl CallIndex {
+    pub fn build(toks: &[Token], range: (usize, usize)) -> CallIndex {
+        let (start, end) = range;
+        let mut node_of = vec![usize::MAX; end.saturating_sub(start)];
+        let mut nodes: Vec<(Option<String>, usize)> = Vec::new();
+        let mut stack: Vec<usize> = Vec::new();
+        for k in start..end.min(toks.len()) {
+            let t = &toks[k];
+            if t.is_punct('(') {
+                let callee = k.checked_sub(1).and_then(|p| match &toks[p].kind {
+                    TokKind::Ident(s) if !NOT_CALLEES.contains(&s.as_str()) => Some(s.clone()),
+                    // Macro call `name!(..)`.
+                    TokKind::Punct('!') => p.checked_sub(1).and_then(|q| match &toks[q].kind {
+                        TokKind::Ident(s) => Some(s.clone()),
+                        _ => None,
+                    }),
+                    _ => None,
+                });
+                let parent = stack.last().copied().unwrap_or(usize::MAX);
+                nodes.push((callee, parent));
+                stack.push(nodes.len() - 1);
+                node_of[k - start] = stack.last().copied().unwrap_or(usize::MAX);
+            } else {
+                node_of[k - start] = stack.last().copied().unwrap_or(usize::MAX);
+                if t.is_punct(')') {
+                    stack.pop();
+                }
+            }
+        }
+        CallIndex { node_of, nodes, base: start }
+    }
+
+    /// The nearest enclosing *named* call of token `idx` (skipping
+    /// anonymous paren groups), if any.
+    pub fn governing_call(&self, idx: usize) -> Option<(&str, usize)> {
+        let mut node = *self.node_of.get(idx.checked_sub(self.base)?)?;
+        let mut depth = 0usize;
+        while node != usize::MAX && depth < 64 {
+            let (callee, parent) = &self.nodes[node];
+            if let Some(name) = callee {
+                return Some((name.as_str(), node));
+            }
+            node = *parent;
+            depth += 1;
+        }
+        None
+    }
+
+    /// Like [`Self::governing_call`] but returns the whole chain of
+    /// named enclosing calls, innermost first.
+    pub fn call_chain(&self, idx: usize) -> Vec<&str> {
+        let mut out = Vec::new();
+        let Some(slot) = idx.checked_sub(self.base) else { return out };
+        let mut node = self.node_of.get(slot).copied().unwrap_or(usize::MAX);
+        let mut depth = 0usize;
+        while node != usize::MAX && depth < 64 {
+            let (callee, parent) = &self.nodes[node];
+            if let Some(name) = callee {
+                out.push(name.as_str());
+            }
+            node = *parent;
+            depth += 1;
+        }
+        out
+    }
+}
+
+/// Uses of `name` as a standalone identifier in `range` strictly after
+/// `after` — field/method positions (`x.name`) and path segments
+/// (`m::name`) are excluded, so a field or item that happens to share
+/// the binding's name never counts as a use.  Struct-literal field
+/// values (`field: name`) DO count: the single `:` disambiguates.
+pub fn uses_of(
+    toks: &[Token],
+    range: (usize, usize),
+    name: &str,
+    after: usize,
+) -> Vec<usize> {
+    let (start, end) = range;
+    (start.max(after + 1)..end.min(toks.len()))
+        .filter(|&k| {
+            if !toks[k].is_ident(name) {
+                return false;
+            }
+            let prev = |n: usize| k.checked_sub(n).map(|p| &toks[p]);
+            let dotted = prev(1).is_some_and(|p| p.is_punct('.'));
+            let pathed = prev(1).is_some_and(|p| p.is_punct(':'))
+                && prev(2).is_some_and(|p| p.is_punct(':'));
+            !dotted && !pathed
+        })
+        .collect()
+}
+
+/// The last identifier at paren-depth 0 in `range` — the lock-identity
+/// heuristic for lockee expressions (`&shared.slots[shard].tx` → `tx`;
+/// the index expression is inside `[..]` and ignored).
+pub fn last_path_ident(toks: &[Token], range: (usize, usize)) -> Option<String> {
+    let (start, end) = range;
+    let mut depth = 0i64;
+    let mut last = None;
+    for k in start..end.min(toks.len()) {
+        let t = &toks[k];
+        if t.is_punct('(') || t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') {
+            depth -= 1;
+        } else if depth == 0 {
+            if let TokKind::Ident(s) = &t.kind {
+                last = Some(s.clone());
+            }
+        }
+    }
+    last
+}
+
+/// Is the `(` at `open` the argument list of a method call
+/// (`recv.name(..)`)?  Returns the receiver's trailing identifier.
+pub fn method_receiver(toks: &[Token], callee_idx: usize) -> Option<String> {
+    let dot = callee_idx.checked_sub(1)?;
+    if !toks[dot].is_punct('.') {
+        return None;
+    }
+    let recv = dot.checked_sub(1)?;
+    match &toks[recv].kind {
+        TokKind::Ident(s) => Some(s.clone()),
+        _ => None,
+    }
+}
+
+/// Argument token range of the call whose callee identifier is at
+/// `callee_idx` (expects `callee (` shape): `(start, end)` half-open,
+/// excluding the parens.
+pub fn call_args(toks: &[Token], callee_idx: usize) -> Option<(usize, usize)> {
+    let open = callee_idx + 1;
+    if !toks.get(open).is_some_and(|t| t.is_punct('(')) {
+        return None;
+    }
+    let close = matching_paren(toks, open)?;
+    Some((open + 1, close))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn bindings_handle_types_generics_and_match_inits() {
+        let src = "fn f() { let a = 1; let mut b: Box<dyn Iterator<Item = u32>> = make(); \
+                   let c = match x { Some(v) => { v; v } None => 0 }; let (d, e) = pair(); }";
+        let toks = lex(src).tokens;
+        let bs = bindings(&toks, (0, toks.len()));
+        let names: Vec<&str> = bs.iter().map(|b| b.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c"], "destructuring is skipped");
+        // c's initializer spans the whole match, inner `;` included.
+        let c = &bs[2];
+        assert!(toks[c.stmt_end].is_punct(';'));
+        assert!(toks[c.init.0].is_ident("match"));
+    }
+
+    #[test]
+    fn governing_call_skips_tuple_parens() {
+        let src = "fn f() { v.push((t, c)); w.wait(t2); }";
+        let toks = lex(src).tokens;
+        let ix = CallIndex::build(&toks, (0, toks.len()));
+        let t_idx = toks.iter().position(|t| t.is_ident("t")).unwrap();
+        assert_eq!(ix.governing_call(t_idx).map(|(n, _)| n), Some("push"));
+        let t2_idx = toks.iter().position(|t| t.is_ident("t2")).unwrap();
+        assert_eq!(ix.governing_call(t2_idx).map(|(n, _)| n), Some("wait"));
+    }
+
+    #[test]
+    fn uses_exclude_field_positions() {
+        let src = "fn f() { let t = g(); h(t); x.t; y::t; t.m(); }";
+        let toks = lex(src).tokens;
+        let bs = bindings(&toks, (0, toks.len()));
+        let uses = uses_of(&toks, (0, toks.len()), "t", bs[0].name_idx);
+        // h(t) and the receiver use t.m() — not x.t / y::t.
+        assert_eq!(uses.len(), 2);
+    }
+
+    #[test]
+    fn lock_identity_is_the_trailing_ident() {
+        let src = "lock_recover(&shared.slots[shard].tx)";
+        let toks = lex(src).tokens;
+        let args = call_args(&toks, 0).unwrap();
+        assert_eq!(last_path_ident(&toks, args).as_deref(), Some("tx"));
+    }
+}

@@ -1,20 +1,27 @@
-//! axdt-lint: token-level architectural lints for the axdt tree.
+//! axdt-lint: syntax-aware architectural lints for the axdt tree.
 //!
-//! The codebase has two load-bearing seams — every deadline decision
-//! reads the injected `Clock` (util::clock), and every evaluation flows
-//! through the two-phase `submit`/`wait` ticket path — plus hard
+//! The codebase has three load-bearing seams — every deadline decision
+//! reads the injected `Clock` (util::clock), every evaluation flows
+//! through the two-phase `submit`/`wait` ticket path, and the trace
+//! journal records causally before the sends it describes — plus hard
 //! worker-survival rules (typed errors, never panics).  Grep guards
 //! cannot see comments, strings, or test regions; this crate lexes every
-//! Rust source (no `syn`, zero dependencies, offline-green) and enforces
-//! the rule registry in [`rules`] with `file:line:col` diagnostics and
-//! justified `// axdt-lint: allow(<rule>): <why>` suppressions.
+//! Rust source (no `syn`, zero dependencies, offline-green), recovers
+//! function boundaries and def-use chains ([`parser`], [`dataflow`]) and
+//! enforces the rule registry in [`rules`] with `file:line:col`
+//! diagnostics and justified `// axdt-lint: allow(<rule>): <why>`
+//! suppressions.  `--format sarif` / `--format json` emit
+//! machine-readable output ([`sarif`]) for code-scanning upload.
 //!
 //! Run it as `cargo run -p axdt-lint` (or `make lint`); CI runs it as a
-//! required job, and `scripts/forbid_blocking_eval.sh` /
-//! `scripts/forbid_long_sleeps.sh` are thin wrappers over single rules.
+//! required job.  Per-rule documentation lives in `RULES.md` next to
+//! this crate.
 
+pub mod dataflow;
 pub mod lexer;
+pub mod parser;
 pub mod rules;
+pub mod sarif;
 
 use std::fs;
 use std::io;
@@ -25,10 +32,15 @@ pub use rules::{lint_source, rule_ids, Diagnostic, ALL_RULES};
 /// Directories under the repo root the full-tree lint walks.  Rules are
 /// path-scoped (see `rules::scope_for`), so walking a directory no rule
 /// targets is free — and keeps future rules one table entry away.
-const LINT_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches"];
+/// `examples/` and `tools/` are included so the linter dogfoods itself;
+/// fixture trees (intentional violations) are skipped in `collect_rs`.
+const LINT_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples", "tools"];
 
-/// Lint the whole tree under `root` (the repo checkout).  `active` is the
-/// rule filter (empty = all rules).  Returns diagnostics sorted by path.
+/// Lint the whole tree under `root` (the repo checkout).  `active` is
+/// the rule filter (empty = all rules).  Lock-order edges are aggregated
+/// across every file before cycle detection, so an AB/BA acquisition
+/// split across two modules is still reported.  Returns diagnostics
+/// sorted by path.
 pub fn lint_tree(root: &Path, active: &[&str]) -> io::Result<Vec<Diagnostic>> {
     let mut files = Vec::new();
     for dir in LINT_DIRS {
@@ -39,9 +51,19 @@ pub fn lint_tree(root: &Path, active: &[&str]) -> io::Result<Vec<Diagnostic>> {
     }
     files.sort();
     let mut out = Vec::new();
+    let mut edges = Vec::new();
     for file in files {
-        out.extend(lint_path(root, &file, active)?);
+        let rel = file.strip_prefix(root).unwrap_or(&file);
+        let rel = rel.to_string_lossy().replace('\\', "/");
+        let source = fs::read_to_string(&file)?;
+        let mut analysis = rules::analyze_source(&rel, &source, active);
+        out.append(&mut analysis.diags);
+        edges.append(&mut analysis.lock_edges);
     }
+    out.extend(rules::lock_cycles(&edges));
+    out.sort_by(|a, b| {
+        (a.path.clone(), a.line, a.col, a.rule).cmp(&(b.path.clone(), b.line, b.col, b.rule))
+    });
     Ok(out)
 }
 
@@ -59,6 +81,12 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
         let entry = entry?;
         let path = entry.path();
         if path.is_dir() {
+            // Fixture trees hold intentional violations; `target/` is
+            // build output.
+            let name = entry.file_name();
+            if name == "fixtures" || name == "target" {
+                continue;
+            }
             collect_rs(&path, out)?;
         } else if path.extension().is_some_and(|e| e == "rs") {
             out.push(path);
@@ -106,6 +134,36 @@ mod tests {
             diags.is_empty(),
             "tree has lint violations:\n{}",
             diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn tree_walk_covers_tools_and_skips_fixtures() {
+        let here = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let root = find_root(&here).expect("repo root");
+        let mut files = Vec::new();
+        for dir in LINT_DIRS {
+            let abs = root.join(dir);
+            if abs.is_dir() {
+                collect_rs(&abs, &mut files).expect("walk");
+            }
+        }
+        let rels: Vec<String> = files
+            .iter()
+            .map(|f| {
+                f.strip_prefix(&root)
+                    .unwrap_or(f)
+                    .to_string_lossy()
+                    .replace('\\', "/")
+            })
+            .collect();
+        assert!(
+            rels.iter().any(|r| r == "tools/axdt-lint/src/lib.rs"),
+            "dogfood: the linter lints its own sources"
+        );
+        assert!(
+            !rels.iter().any(|r| r.contains("/fixtures/")),
+            "fixtures are intentional violations and must be skipped: {rels:?}"
         );
     }
 }

@@ -1,13 +1,16 @@
 //! CLI for the axdt architectural linter.
 //!
 //! ```text
-//! axdt-lint [--rule <id>]... [--root <dir>] [--list-rules] [FILE]...
+//! axdt-lint [--rule <id>]... [--root <dir>] [--format <fmt>] [--list-rules] [FILE]...
 //! ```
 //!
-//! * no args: lint the whole tree (rust/src, rust/tests, rust/benches)
-//!   under the repo root found by walking up from the current directory;
-//! * `--rule <id>` (repeatable): run only the named rules — how the
-//!   `scripts/forbid_*.sh` wrappers keep their old single-concern CLI;
+//! * no args: lint the whole tree (rust/src, rust/tests, rust/benches,
+//!   examples, tools) under the repo root found by walking up from the
+//!   current directory;
+//! * `--rule <id>` (repeatable): run only the named rules;
+//! * `--format text|json|sarif`: diagnostic output format — `sarif`
+//!   emits SARIF 2.1.0 on stdout for code-scanning upload (exit codes
+//!   are unchanged: a SARIF run with findings still exits 1);
 //! * `FILE` operands: lint just those files (paths are resolved against
 //!   the repo root for rule scoping).
 //!
@@ -16,12 +19,21 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use axdt_lint::sarif::{to_json, to_sarif};
 use axdt_lint::{find_root, lint_path, lint_tree, rule_ids, ALL_RULES};
+
+#[derive(PartialEq)]
+enum Format {
+    Text,
+    Json,
+    Sarif,
+}
 
 fn main() -> ExitCode {
     let mut rules: Vec<String> = Vec::new();
     let mut root_arg: Option<PathBuf> = None;
     let mut files: Vec<PathBuf> = Vec::new();
+    let mut format = Format::Text;
 
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
@@ -34,6 +46,13 @@ fn main() -> ExitCode {
                 Some(d) => root_arg = Some(PathBuf::from(d)),
                 None => return usage("--root needs a directory"),
             },
+            "--format" => match args.next().as_deref() {
+                Some("text") => format = Format::Text,
+                Some("json") => format = Format::Json,
+                Some("sarif") => format = Format::Sarif,
+                Some(f) => return usage(&format!("unknown format `{f}` (text|json|sarif)")),
+                None => return usage("--format needs text|json|sarif"),
+            },
             "--list-rules" => {
                 for (id, what) in ALL_RULES {
                     println!("{id:<20} {what}");
@@ -42,7 +61,8 @@ fn main() -> ExitCode {
             }
             "--help" | "-h" => {
                 println!(
-                    "usage: axdt-lint [--rule <id>]... [--root <dir>] [--list-rules] [FILE]..."
+                    "usage: axdt-lint [--rule <id>]... [--root <dir>] [--format text|json|sarif] \
+                     [--list-rules] [FILE]..."
                 );
                 return ExitCode::SUCCESS;
             }
@@ -88,25 +108,35 @@ fn main() -> ExitCode {
     };
 
     match result {
-        Ok(diags) if diags.is_empty() => {
-            let what = if active.is_empty() {
-                "all rules".to_string()
-            } else {
-                active.join(", ")
-            };
-            println!("OK: axdt-lint clean ({what})");
-            ExitCode::SUCCESS
-        }
         Ok(diags) => {
-            for d in &diags {
-                eprintln!("{d}");
+            match format {
+                Format::Json => print!("{}", to_json(&diags)),
+                Format::Sarif => print!("{}", to_sarif(&diags)),
+                Format::Text => {}
             }
-            eprintln!(
-                "axdt-lint: {} violation(s); suppress intentional exceptions with \
-                 `// axdt-lint: allow(<rule>): <justification>`",
-                diags.len()
-            );
-            ExitCode::FAILURE
+            if diags.is_empty() {
+                if format == Format::Text {
+                    let what = if active.is_empty() {
+                        "all rules".to_string()
+                    } else {
+                        active.join(", ")
+                    };
+                    println!("OK: axdt-lint clean ({what})");
+                }
+                ExitCode::SUCCESS
+            } else {
+                if format == Format::Text {
+                    for d in &diags {
+                        eprintln!("{d}");
+                    }
+                }
+                eprintln!(
+                    "axdt-lint: {} violation(s); suppress intentional exceptions with \
+                     `// axdt-lint: allow(<rule>): <justification>`",
+                    diags.len()
+                );
+                ExitCode::FAILURE
+            }
         }
         Err(e) => fail(&format!("lint walk failed: {e}")),
     }
@@ -114,7 +144,10 @@ fn main() -> ExitCode {
 
 fn usage(msg: &str) -> ExitCode {
     eprintln!("axdt-lint: {msg}");
-    eprintln!("usage: axdt-lint [--rule <id>]... [--root <dir>] [--list-rules] [FILE]...");
+    eprintln!(
+        "usage: axdt-lint [--rule <id>]... [--root <dir>] [--format text|json|sarif] \
+         [--list-rules] [FILE]..."
+    );
     ExitCode::from(2)
 }
 

@@ -1,0 +1,237 @@
+//! Item-scope recovery on top of the lexer: just enough syntax to give
+//! the dataflow rules (`lock-order`, `ticket-leak`, `trace-ordering`,
+//! `clock-taint`) function boundaries and brace-block structure.
+//!
+//! This is NOT a Rust parser.  It recovers:
+//!
+//! * every `fn` item (named functions at any nesting: free, in `impl`,
+//!   in `mod`, nested inside another fn) with the token range of its
+//!   `{..}` body;
+//! * brace-pair matching inside a body, so a rule can ask "where does
+//!   the block enclosing token `i` end" — the granularity guard
+//!   liveness is defined at;
+//! * statement boundaries (`;` at block depth), so temporaries can be
+//!   scoped to their statement.
+//!
+//! Closures are deliberately *not* separate scopes: their tokens belong
+//! to the enclosing function, which is the right treatment for
+//! intra-procedural rules (a ticket captured and awaited inside a
+//! closure still flows within the same function body).
+
+use crate::lexer::Token;
+
+/// One recovered `fn` item.
+#[derive(Debug, Clone)]
+pub struct FnInfo {
+    /// The function's name.
+    pub name: String,
+    /// Token index of the `fn` keyword.
+    pub fn_idx: usize,
+    /// Token indices of the body's `{` and matching `}`.  `None` for
+    /// bodyless declarations (trait methods, extern blocks).
+    pub body: Option<(usize, usize)>,
+}
+
+impl FnInfo {
+    /// Token range of the body interior (excludes the braces).
+    pub fn interior(&self) -> Option<(usize, usize)> {
+        self.body.map(|(open, close)| (open + 1, close))
+    }
+}
+
+/// Recover every `fn` item in the token stream.  A `fn` token counts
+/// when followed by an identifier (so function-pointer types `fn(u32)`
+/// and the `Fn` traits never match).
+pub fn functions(toks: &[Token]) -> Vec<FnInfo> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].is_ident("fn") {
+            if let Some(name) = toks.get(i + 1).and_then(ident_of) {
+                let body = find_body(toks, i + 2);
+                out.push(FnInfo { name: name.to_string(), fn_idx: i, body });
+                // Continue scanning INSIDE the body too: nested fns are
+                // recovered as their own entries (callers subtract them
+                // from the enclosing function's range).
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn ident_of(t: &Token) -> Option<&str> {
+    match &t.kind {
+        crate::lexer::TokKind::Ident(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+/// From just past the fn name, find the body's `{..}`: skip balanced
+/// `(..)` / `[..]` groups (parameters, const-generic arrays), stop at a
+/// top-level `;` (bodyless declaration) or the first top-level `{`.
+fn find_body(toks: &[Token], from: usize) -> Option<(usize, usize)> {
+    let mut depth = 0i64;
+    let mut j = from;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.is_punct('(') || t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') {
+            depth -= 1;
+        } else if depth == 0 && t.is_punct(';') {
+            return None;
+        } else if depth == 0 && t.is_punct('{') {
+            return matching_brace(toks, j).map(|close| (j, close));
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Index of the `}` matching the `{` at `open`.
+pub fn matching_brace(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Index of the `)` matching the `(` at `open`.
+pub fn matching_paren(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Close index of the innermost `{..}` block (within `body`) containing
+/// token `idx` — where a `let`-bound guard acquired at `idx` dies.
+/// Falls back to the body close itself.
+pub fn enclosing_block_close(
+    toks: &[Token],
+    body: (usize, usize),
+    idx: usize,
+) -> usize {
+    let (open, close) = body;
+    let mut stack: Vec<usize> = Vec::new();
+    let mut best = close;
+    for k in open..=close.min(toks.len().saturating_sub(1)) {
+        if toks[k].is_punct('{') {
+            stack.push(k);
+        } else if toks[k].is_punct('}') {
+            if let Some(o) = stack.pop() {
+                if o <= idx && idx <= k && k < best {
+                    best = k;
+                }
+            }
+        }
+    }
+    best
+}
+
+/// End of the statement containing `idx`: the next `;` at the same
+/// brace/paren depth, or `limit` if the statement is a trailing
+/// expression.  Depth counting starts at `idx`, so a `;` inside a
+/// nested group (closure body, `match` arm block) does not terminate
+/// the outer statement.
+pub fn statement_end(toks: &[Token], idx: usize, limit: usize) -> usize {
+    let mut depth = 0i64;
+    let mut k = idx;
+    while k < limit && k < toks.len() {
+        let t = &toks[k];
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            depth -= 1;
+            if depth < 0 {
+                return k;
+            }
+        } else if t.is_punct(';') && depth == 0 {
+            return k;
+        }
+        k += 1;
+    }
+    limit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn recovers_nested_functions_with_bodies() {
+        let src = r#"
+            impl Foo {
+                pub fn outer(&self) -> u64 {
+                    fn inner(x: u64) -> u64 { x + 1 }
+                    inner(2)
+                }
+            }
+            trait T { fn decl(&self); }
+            mod m { fn modfn() {} }
+            type F = fn(u32) -> u32;
+        "#;
+        let toks = lex(src).tokens;
+        let fns = functions(&toks);
+        let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner", "decl", "modfn"]);
+        assert!(fns[0].body.is_some());
+        assert!(fns[1].body.is_some());
+        assert!(fns[2].body.is_none(), "trait declaration has no body");
+        // inner's body nests inside outer's.
+        let (oo, oc) = fns[0].body.unwrap();
+        let (io, ic) = fns[1].body.unwrap();
+        assert!(oo < io && ic < oc);
+    }
+
+    #[test]
+    fn body_detection_skips_generics_and_where_clauses() {
+        let src = "fn f<T: Fn() -> u32>(g: T) -> Vec<u32> where T: Send { g(); Vec::new() }";
+        let toks = lex(src).tokens;
+        let fns = functions(&toks);
+        assert_eq!(fns.len(), 1);
+        let (open, close) = fns[0].body.unwrap();
+        assert!(toks[open].is_punct('{') && toks[close].is_punct('}'));
+        assert_eq!(close, toks.len() - 1);
+    }
+
+    #[test]
+    fn enclosing_block_and_statement_boundaries() {
+        let src = "fn f() { let a = 1; { let b = 2; use_it(b); } let c = 3; }";
+        let toks = lex(src).tokens;
+        let fns = functions(&toks);
+        let body = fns[0].body.unwrap();
+        // Find the token index of ident `b` in `let b`.
+        let b_idx = toks
+            .iter()
+            .position(|t| t.is_ident("b"))
+            .unwrap();
+        let close = enclosing_block_close(&toks, body, b_idx);
+        // That close must come before `let c`.
+        let c_idx = toks.iter().position(|t| t.is_ident("c")).unwrap();
+        assert!(close < c_idx);
+        // Statement end of `let a = 1;` is the first `;`.
+        let a_idx = toks.iter().position(|t| t.is_ident("a")).unwrap();
+        let end = statement_end(&toks, a_idx, body.1);
+        assert!(toks[end].is_punct(';'));
+        assert!(end < b_idx);
+    }
+}

@@ -1,8 +1,16 @@
 //! The architectural rule registry.
 //!
-//! Every rule is a token-sequence matcher scoped by (relative) path and
-//! by the test-token mask (`lexer::test_token_mask`): test code is
-//! allowed to use wall time, blocking-eval baselines and unwraps.
+//! Two rule families share this file:
+//!
+//! * **token rules** — short token-sequence matchers, scoped by
+//!   (relative) path and by the test-token mask
+//!   (`lexer::test_token_mask`): test code is allowed to use wall time,
+//!   blocking-eval baselines and unwraps;
+//! * **flow rules** — intra-procedural dataflow over the function
+//!   boundaries recovered by [`crate::parser`] and the def-use chains
+//!   of [`crate::dataflow`]: a `Ticket` stored and never collected, two
+//!   mutexes taken in opposite orders, a journal record emitted after
+//!   the send it describes, wall time leaking into deadline arithmetic.
 //!
 //! | rule | enforces |
 //! |------|----------|
@@ -10,14 +18,23 @@
 //! | `ticket-seam` | blocking `pool/svc/service.eval(` and `.eval_typed(` confined to the pool + facade |
 //! | `no-sleep-in-tests` | `rust/tests/` sleeps: literal `Duration` ≤ 100 ms only |
 //! | `panic-free-workers` | no `.unwrap()` / `.expect(` / `panic!` on worker paths |
-//! | `mutex-discipline` | `.lock().unwrap()` forbidden — use `util::sync::lock_recover` |
+//! | `mutex-discipline` | `.lock().unwrap()` / `.lock().unwrap_or_else(` forbidden — use `util::sync::lock_recover` |
+//! | `lock-order` | the global lock-acquisition-order graph is acyclic |
+//! | `ticket-leak` | every submitted ticket flows into `wait()`/`collect()` |
+//! | `trace-ordering` | `Submitted`/`Executed` journal records precede the send they describe |
+//! | `clock-taint` | wall-time-derived values never reach deadline arithmetic |
 //!
 //! Suppression: `// axdt-lint: allow(<rule>): <justification>` on the
 //! flagged line or the line directly above.  The justification is
 //! mandatory — an allow without one is itself a diagnostic (`bad-allow`)
 //! and does NOT suppress.
 
+use crate::dataflow::{
+    bindings, call_args, find_call, last_path_ident, method_receiver, uses_of, Binding,
+    CallIndex,
+};
 use crate::lexer::{lex, test_token_mask, Comment, TokKind, Token};
+use crate::parser::{enclosing_block_close, functions, statement_end, FnInfo};
 
 /// A single finding, formatted as `path:line:col: [rule] message`.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -39,11 +56,41 @@ impl std::fmt::Display for Diagnostic {
     }
 }
 
+/// One edge of the global lock-acquisition-order graph: while a guard
+/// on `held` was live, a guard on `acquired` was taken.  Edges are
+/// collected per file and cycle-checked across the whole tree
+/// ([`lock_cycles`]), so an AB/BA split across two modules is still a
+/// potential deadlock.
+#[derive(Debug, Clone)]
+pub struct LockEdge {
+    pub held: String,
+    pub acquired: String,
+    /// Site of the inner (`acquired`) acquisition — where the
+    /// diagnostic lands.
+    pub path: String,
+    pub line: u32,
+    pub col: u32,
+    /// Line of the outer (`held`) acquisition, for the message.
+    pub held_line: u32,
+}
+
+/// Per-file analysis output: diagnostics plus the file's contribution
+/// to the global lock-order graph.
+#[derive(Debug, Default)]
+pub struct FileAnalysis {
+    pub diags: Vec<Diagnostic>,
+    pub lock_edges: Vec<LockEdge>,
+}
+
 pub const CLOCK_SEAM: &str = "clock-seam";
 pub const TICKET_SEAM: &str = "ticket-seam";
 pub const NO_SLEEP_IN_TESTS: &str = "no-sleep-in-tests";
 pub const PANIC_FREE_WORKERS: &str = "panic-free-workers";
 pub const MUTEX_DISCIPLINE: &str = "mutex-discipline";
+pub const LOCK_ORDER: &str = "lock-order";
+pub const TICKET_LEAK: &str = "ticket-leak";
+pub const TRACE_ORDERING: &str = "trace-ordering";
+pub const CLOCK_TAINT: &str = "clock-taint";
 /// Meta-rule: a malformed suppression comment (missing justification or
 /// unknown rule id).  Always active — an allow that suppresses nothing
 /// silently is how guards rot.
@@ -74,8 +121,30 @@ pub const ALL_RULES: &[(&str, &str)] = &[
     ),
     (
         MUTEX_DISCIPLINE,
-        ".lock().unwrap() where util::sync::lock_recover exists: a poisoned mutex must \
-         not cascade panics across clients",
+        ".lock().unwrap() or inline .lock().unwrap_or_else(..) where \
+         util::sync::lock_recover exists: poison recovery has exactly one spelling",
+    ),
+    (
+        LOCK_ORDER,
+        "a cycle in the global lock-acquisition-order graph (mutex B taken under mutex A \
+         in one place, A under B in another) is a potential deadlock",
+    ),
+    (
+        TICKET_LEAK,
+        "a Ticket returned by submit()/submit_accuracy() that never flows into \
+         wait()/collect() abandons in-flight work (#[must_use] cannot see \
+         stored-and-forgotten tickets)",
+    ),
+    (
+        TRACE_ORDERING,
+        "a TraceKind::Submitted/Executed journal record must precede the channel send it \
+         describes, or the journal loses its causal-ordering contract",
+    ),
+    (
+        CLOCK_TAINT,
+        "a wall-time-derived value (Instant::now()/SystemTime::now()/.elapsed()) flowing \
+         into deadline arithmetic bypasses the injected Clock even when the read itself \
+         was allowed",
     ),
 ];
 
@@ -83,9 +152,19 @@ pub fn rule_ids() -> Vec<&'static str> {
     ALL_RULES.iter().map(|(id, _)| *id).collect()
 }
 
-/// Longest sleep a test may take on the wall clock (matches the retired
-/// `scripts/forbid_long_sleeps.sh` budget).
+/// Longest sleep a test may take on the wall clock (the retired
+/// `forbid_long_sleeps` budget).
 const SLEEP_LIMIT_MS: f64 = 100.0;
+
+/// Ticket-issuing calls (`ticket-leak` defs).
+const SUBMITTERS: &[&str] = &["submit", "submit_typed", "submit_accuracy"];
+/// Ticket-redeeming calls (`ticket-leak` sinks).  Iterator `.collect()`
+/// never matches: a redeeming collect always has the ticket in its
+/// argument list or as receiver, an iterator collect has empty args.
+const COLLECTORS: &[&str] = &["wait", "wait_typed", "collect"];
+/// Container methods that *store* a ticket: the receiver inherits the
+/// obligation to reach a collector (or escape).
+const CONTAINER_STORES: &[&str] = &["push", "push_back", "insert", "extend"];
 
 /// Per-path rule scoping, derived from the repo-relative path (forward
 /// slashes).  Mirrors the seams' documented homes, so moving a seam file
@@ -97,11 +176,17 @@ struct Scope {
     sleep_rule: bool,
     panic_free: bool,
     mutex_rule: bool,
+    lock_order: bool,
+    ticket_leak: bool,
+    trace_ordering: bool,
+    clock_taint: bool,
 }
 
 fn scope_for(path: &str) -> Scope {
     let in_src = path.starts_with("rust/src/");
     let in_tests = path.starts_with("rust/tests/");
+    let in_examples = path.starts_with("examples/");
+    let in_tools = path.starts_with("tools/");
     let clock_exempt =
         path.ends_with("util/clock.rs") || path.ends_with("util/testbed.rs");
     let ticket_exempt =
@@ -109,20 +194,42 @@ fn scope_for(path: &str) -> Scope {
     let worker_path = path.ends_with("coordinator/shard.rs")
         || path.ends_with("coordinator/service.rs")
         || path.starts_with("rust/src/fitness/");
+    // util/sync.rs IS lock_recover — the one blessed home of the
+    // `.lock().unwrap_or_else(` spelling the mutex rule bans elsewhere.
+    let sync_home = path.ends_with("util/sync.rs");
     Scope {
         clock_seam: in_src && !clock_exempt,
         ticket_seam: in_src && !ticket_exempt,
         sleep_rule: in_tests,
         panic_free: in_src && worker_path,
-        mutex_rule: in_src,
+        mutex_rule: (in_src && !sync_home) || in_examples || in_tools,
+        lock_order: in_src || in_examples || in_tools,
+        ticket_leak: in_src || in_examples,
+        trace_ordering: in_src || in_examples,
+        clock_taint: in_src && !clock_exempt,
     }
 }
 
-/// Lint one source file under its repo-relative `path`.  `active` filters
-/// which rules run (empty = all); `bad-allow` findings are only reported
-/// for allows naming an active rule, so a partial run (`--rule X`) never
-/// fails on another rule's suppressions.
+/// Lint one source file under its repo-relative `path` — the
+/// single-file entry: intra-file lock-order cycles included.  `active`
+/// filters which rules run (empty = all); `bad-allow` findings are only
+/// reported for allows naming an active rule, so a partial run
+/// (`--rule X`) never fails on another rule's suppressions.
 pub fn lint_source(path: &str, source: &str, active: &[&str]) -> Vec<Diagnostic> {
+    let mut analysis = analyze_source(path, source, active);
+    analysis.diags.extend(lock_cycles(&analysis.lock_edges));
+    analysis
+        .diags
+        .sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    analysis.diags
+}
+
+/// Analyze one file: all rules except the cross-file lock-order cycle
+/// check, whose edges are returned for the caller to aggregate
+/// (`lint_tree` unions them across the tree; [`lint_source`] closes
+/// over just this file).  Suppressed acquisitions are already filtered
+/// from `lock_edges`.
+pub fn analyze_source(path: &str, source: &str, active: &[&str]) -> FileAnalysis {
     let lexed = lex(source);
     let mask = test_token_mask(&lexed.tokens);
     let scope = scope_for(path);
@@ -247,20 +354,725 @@ pub fn lint_source(path: &str, source: &str, active: &[&str]) -> Vec<Diagnostic>
             && on(MUTEX_DISCIPLINE)
             && t.is_punct('.')
             && seq(toks, i + 1, &["lock", "(", ")", "."])
-            && (seq(toks, i + 5, &["unwrap", "("]) || seq(toks, i + 5, &["expect", "("]))
         {
-            raw.push(diag(
-                path,
-                &toks[i + 5],
-                MUTEX_DISCIPLINE,
-                "raw .lock().unwrap(): use util::sync::lock_recover so a poisoned mutex \
-                 recovers instead of cascading the panic"
-                    .to_string(),
-            ));
+            if seq(toks, i + 5, &["unwrap", "("]) || seq(toks, i + 5, &["expect", "("]) {
+                raw.push(diag(
+                    path,
+                    &toks[i + 5],
+                    MUTEX_DISCIPLINE,
+                    "raw .lock().unwrap(): use util::sync::lock_recover so a poisoned mutex \
+                     recovers instead of cascading the panic"
+                        .to_string(),
+                ));
+            } else if seq(toks, i + 5, &["unwrap_or_else", "("]) {
+                raw.push(diag(
+                    path,
+                    &toks[i + 5],
+                    MUTEX_DISCIPLINE,
+                    "inline .lock().unwrap_or_else(..): poison recovery has exactly one \
+                     spelling — util::sync::lock_recover"
+                        .to_string(),
+                ));
+            }
         }
     }
 
-    apply_allows(path, raw, &lexed.comments, active)
+    // Flow rules: intra-procedural dataflow over recovered functions.
+    let mut lock_edges = Vec::new();
+    if (scope.lock_order && on(LOCK_ORDER))
+        || (scope.ticket_leak && on(TICKET_LEAK))
+        || (scope.trace_ordering && on(TRACE_ORDERING))
+        || (scope.clock_taint && on(CLOCK_TAINT))
+    {
+        let fns = functions(toks);
+        for (fi, f) in fns.iter().enumerate() {
+            let Some((open, close)) = f.body else { continue };
+            if mask.get(open).copied().unwrap_or(false) {
+                continue; // test-only function
+            }
+            // Tokens of nested fns belong to their own analysis.
+            let live = live_tokens(toks, &mask, &fns, fi, (open, close));
+            let interior = (open + 1, close);
+
+            if scope.trace_ordering && on(TRACE_ORDERING) {
+                trace_ordering_rule(path, toks, &live, interior, &mut raw);
+            }
+            if scope.lock_order && on(LOCK_ORDER) {
+                lock_order_edges(path, toks, &live, f, interior, &mut lock_edges);
+            }
+            if (scope.ticket_leak && on(TICKET_LEAK))
+                || (scope.clock_taint && on(CLOCK_TAINT))
+            {
+                let binds: Vec<Binding> = bindings(toks, interior)
+                    .into_iter()
+                    .filter(|b| live[b.name_idx - interior.0 + 1])
+                    .collect();
+                let calls = CallIndex::build(toks, interior);
+                if scope.ticket_leak && on(TICKET_LEAK) {
+                    ticket_leak_rule(path, toks, &live, interior, &binds, &calls, &mut raw);
+                }
+                if scope.clock_taint && on(CLOCK_TAINT) {
+                    clock_taint_rule(path, toks, &live, interior, &binds, &calls, &mut raw);
+                }
+            }
+        }
+    }
+
+    let allows = parse_allows(&lexed.comments);
+    let diags = apply_allows(path, raw, &allows, active);
+    let lock_edges = lock_edges
+        .into_iter()
+        .filter(|e| {
+            !allows.iter().any(|a| {
+                a.justified
+                    && a.rule == LOCK_ORDER
+                    && (a.line == e.line || a.line + 1 == e.line)
+            })
+        })
+        .collect();
+    FileAnalysis { diags, lock_edges }
+}
+
+/// Token liveness for one function: inside the body, not test-masked,
+/// not part of a nested fn item.  Indexed as `live[idx - body.0]`.
+fn live_tokens(
+    toks: &[Token],
+    mask: &[bool],
+    fns: &[FnInfo],
+    fi: usize,
+    body: (usize, usize),
+) -> Vec<bool> {
+    let (open, close) = body;
+    let mut live: Vec<bool> = (open..=close)
+        .map(|k| !mask.get(k).copied().unwrap_or(false))
+        .collect();
+    for (gi, g) in fns.iter().enumerate() {
+        if gi == fi || g.fn_idx <= open || g.fn_idx >= close {
+            continue;
+        }
+        let end = match g.body {
+            Some((_, gc)) => gc,
+            None => statement_end(toks, g.fn_idx, close),
+        };
+        for k in g.fn_idx..=end.min(close) {
+            live[k - open] = false;
+        }
+    }
+    live
+}
+
+/// `trace-ordering`: in a function that journals `Submitted`/`Executed`
+/// and also sends on a channel, every such record must be followed by a
+/// `.send(` — a record after the last send describes an action that was
+/// already visible to another thread.
+fn trace_ordering_rule(
+    path: &str,
+    toks: &[Token],
+    live: &[bool],
+    interior: (usize, usize),
+    out: &mut Vec<Diagnostic>,
+) {
+    let (start, end) = interior;
+    let idx_live = |k: usize| live.get(k - start + 1).copied().unwrap_or(false);
+    let mut records: Vec<(usize, &'static str)> = Vec::new();
+    let mut sends: Vec<usize> = Vec::new();
+    for k in start..end {
+        if !idx_live(k) {
+            continue;
+        }
+        let t = &toks[k];
+        if t.is_ident("send")
+            && k >= 1
+            && toks[k - 1].is_punct('.')
+            && toks.get(k + 1).is_some_and(|n| n.is_punct('('))
+        {
+            sends.push(k);
+        }
+        if t.is_ident("record")
+            && k >= 2
+            && toks[k - 1].is_punct('.')
+            && toks[k - 2].is_ident("trace")
+            && toks.get(k + 1).is_some_and(|n| n.is_punct('('))
+        {
+            if let Some(args) = call_args(toks, k) {
+                for kind in ["Submitted", "Executed"] {
+                    if (args.0..args.1).any(|a| toks[a].is_ident(kind)) {
+                        records.push((k, if kind == "Submitted" { "Submitted" } else { "Executed" }));
+                    }
+                }
+            }
+        }
+    }
+    if sends.is_empty() {
+        return;
+    }
+    for (rk, kind) in records {
+        if !sends.iter().any(|&s| s > rk) {
+            out.push(diag(
+                path,
+                &toks[rk],
+                TRACE_ORDERING,
+                format!(
+                    "TraceKind::{kind} journaled after every channel send in this \
+                     function: the trace record must precede the send it describes so \
+                     the journal keeps its causal-ordering contract"
+                ),
+            ));
+        }
+    }
+}
+
+/// Collect lock-acquisition-order edges for one function.  An
+/// acquisition is `lock_recover(&path)` or `recv.lock()`; its guard is
+/// live to the end of the enclosing block when `let`-bound (ended early
+/// by `drop(guard)`), to the end of its statement otherwise.
+fn lock_order_edges(
+    path: &str,
+    toks: &[Token],
+    live: &[bool],
+    f: &FnInfo,
+    interior: (usize, usize),
+    out: &mut Vec<LockEdge>,
+) {
+    let (start, end) = interior;
+    let body = f.body.expect("caller checked");
+    let idx_live = |k: usize| live.get(k - start + 1).copied().unwrap_or(false);
+    let binds = bindings(toks, interior);
+
+    struct Acq {
+        idx: usize,
+        key: String,
+        live_end: usize,
+    }
+    let mut acqs: Vec<Acq> = Vec::new();
+    for k in start..end {
+        if !idx_live(k) {
+            continue;
+        }
+        let t = &toks[k];
+        let key = if t.is_ident("lock_recover")
+            && toks.get(k + 1).is_some_and(|n| n.is_punct('('))
+        {
+            call_args(toks, k).and_then(|args| last_path_ident(toks, args))
+        } else if t.is_ident("lock")
+            && k >= 2
+            && toks[k - 1].is_punct('.')
+            && toks.get(k + 1).is_some_and(|n| n.is_punct('('))
+        {
+            match &toks[k - 2].kind {
+                TokKind::Ident(s) => Some(s.clone()),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        let Some(key) = key else { continue };
+
+        // Guard lifetime: `let`-bound guards live to the end of the
+        // enclosing block (or an explicit drop of the binding);
+        // temporaries die with their statement.
+        let owner = binds.iter().find(|b| b.init.0 <= k && k < b.init.1);
+        let live_end = match owner {
+            Some(b) => {
+                let block_end = enclosing_block_close(toks, body, k);
+                uses_of(toks, (b.stmt_end, block_end), &b.name, b.stmt_end)
+                    .into_iter()
+                    .find(|&u| {
+                        u >= 2 && toks[u - 2].is_ident("drop") && toks[u - 1].is_punct('(')
+                    })
+                    .unwrap_or(block_end)
+            }
+            None => statement_end(toks, k, end),
+        };
+        acqs.push(Acq { idx: k, key, live_end });
+    }
+
+    for a in 0..acqs.len() {
+        for b in (a + 1)..acqs.len() {
+            if acqs[b].idx <= acqs[a].live_end && acqs[a].key != acqs[b].key {
+                let site = &toks[acqs[b].idx];
+                out.push(LockEdge {
+                    held: acqs[a].key.clone(),
+                    acquired: acqs[b].key.clone(),
+                    path: path.to_string(),
+                    line: site.line,
+                    col: site.col,
+                    held_line: toks[acqs[a].idx].line,
+                });
+            }
+        }
+    }
+}
+
+/// Detect cycles in a lock-order edge set: every edge whose `acquired`
+/// lock can reach its `held` lock through other edges is part of a
+/// cycle and gets a diagnostic naming the witness site that closes it.
+pub fn lock_cycles(edges: &[LockEdge]) -> Vec<Diagnostic> {
+    let mut out: Vec<Diagnostic> = Vec::new();
+    let mut seen: Vec<(String, u32, u32, String, String)> = Vec::new();
+    for e in edges {
+        // BFS from e.acquired over held→acquired edges, looking for
+        // e.held; remember the edge that reaches it as the witness.
+        let mut frontier: Vec<&str> = vec![e.acquired.as_str()];
+        let mut visited: Vec<&str> = vec![e.acquired.as_str()];
+        let mut witness: Option<&LockEdge> = None;
+        'bfs: while let Some(u) = frontier.pop() {
+            for w in edges {
+                if w.held == u {
+                    if w.acquired == e.held {
+                        witness = Some(w);
+                        break 'bfs;
+                    }
+                    if !visited.contains(&w.acquired.as_str()) {
+                        visited.push(w.acquired.as_str());
+                        frontier.push(w.acquired.as_str());
+                    }
+                }
+            }
+        }
+        if let Some(w) = witness {
+            let dedup = (
+                e.path.clone(),
+                e.line,
+                e.col,
+                e.held.clone(),
+                e.acquired.clone(),
+            );
+            if seen.contains(&dedup) {
+                continue;
+            }
+            seen.push(dedup);
+            out.push(Diagnostic {
+                path: e.path.clone(),
+                line: e.line,
+                col: e.col,
+                rule: LOCK_ORDER,
+                message: format!(
+                    "acquiring `{}` while holding `{}` (held since line {}) forms a \
+                     lock-order cycle: `{}` is acquired under `{}` at {}:{} — pick one \
+                     global order",
+                    e.acquired, e.held, e.held_line, w.acquired, w.held, w.path, w.line
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// `ticket-leak`: every `let`-bound value from a `submit*` call must
+/// flow into `wait()`/`collect()`, escape the function (returned,
+/// passed on, matched), or be stored in a container that itself reaches
+/// a collector or escapes.
+fn ticket_leak_rule(
+    path: &str,
+    toks: &[Token],
+    live: &[bool],
+    interior: (usize, usize),
+    binds: &[Binding],
+    calls: &CallIndex,
+    out: &mut Vec<Diagnostic>,
+) {
+    let (start, end) = interior;
+    let idx_live = |k: usize| live.get(k - start + 1).copied().unwrap_or(false);
+    let last_semi = last_top_level_semi(toks, interior);
+
+    // Tracked tickets: (binding, origin diag site index).  Aliases
+    // (`let u = t;`) join the worklist with their own def site.
+    let mut tickets: Vec<&Binding> = binds
+        .iter()
+        .filter(|b| find_call(toks, b.init, SUBMITTERS).is_some())
+        .collect();
+    // Resolve aliases up front: an init that is exactly one identifier
+    // naming a tracked ticket makes the new binding a ticket too.
+    loop {
+        let mut grew = false;
+        for b in binds.iter() {
+            if tickets.iter().any(|t| t.name_idx == b.name_idx) {
+                continue;
+            }
+            if b.init.1 == b.init.0 + 1 {
+                if let TokKind::Ident(src) = &toks[b.init.0].kind {
+                    if tickets.iter().any(|t| &t.name == src) {
+                        tickets.push(b);
+                        grew = true;
+                    }
+                }
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+
+    struct TicketStatus<'a> {
+        b: &'a Binding,
+        satisfied: bool,
+        stored_in: Option<(String, usize)>,
+    }
+    let mut status: Vec<TicketStatus> = Vec::new();
+    for &b in &tickets {
+        let uses: Vec<usize> = uses_of(toks, interior, &b.name, b.stmt_end)
+            .into_iter()
+            .filter(|&k| idx_live(k))
+            .collect();
+        let mut satisfied = false;
+        let mut stored_in: Option<(String, usize)> = None;
+        for &k in &uses {
+            match classify_use(toks, calls, k, last_semi, end) {
+                UseKind::Collected | UseKind::Escaped => {
+                    satisfied = true;
+                    break;
+                }
+                UseKind::Stored(container) => {
+                    stored_in = Some((container, k));
+                }
+                UseKind::Neutral => {}
+            }
+        }
+        if !satisfied {
+            if let Some((container, taint_idx)) = &stored_in {
+                if container_satisfied(toks, calls, live, interior, container, *taint_idx) {
+                    satisfied = true;
+                }
+            }
+        }
+        status.push(TicketStatus { b, satisfied, stored_in });
+    }
+
+    // Alias discharge, to fixpoint: `let moved = t;` hands t's obligation
+    // to `moved` — a satisfied alias satisfies its source (and chains of
+    // aliases resolve in as many passes as they are deep).
+    loop {
+        let mut changed = false;
+        for i in 0..status.len() {
+            if status[i].satisfied {
+                continue;
+            }
+            let name = status[i].b.name.clone();
+            let discharged = status.iter().any(|o| {
+                o.satisfied
+                    && o.b.init.1 == o.b.init.0 + 1
+                    && toks[o.b.init.0].is_ident(&name)
+            });
+            if discharged {
+                status[i].satisfied = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    for st in &status {
+        if st.satisfied {
+            continue;
+        }
+        if let Some((container, _)) = &st.stored_in {
+            out.push(diag(
+                path,
+                &toks[st.b.name_idx],
+                TICKET_LEAK,
+                format!(
+                    "ticket `{}` is stored in `{container}` which never reaches \
+                     wait()/collect(): stored-and-forgotten tickets abandon \
+                     in-flight work",
+                    st.b.name
+                ),
+            ));
+        } else {
+            out.push(diag(
+                path,
+                &toks[st.b.name_idx],
+                TICKET_LEAK,
+                format!(
+                    "ticket `{}` from {}() is never redeemed with wait()/collect() and \
+                     never escapes this function: the submitted work is abandoned",
+                    st.b.name,
+                    submitter_name(toks, st.b.init)
+                ),
+            ));
+        }
+    }
+}
+
+fn submitter_name(toks: &[Token], init: (usize, usize)) -> &str {
+    find_call(toks, init, SUBMITTERS)
+        .and_then(|k| match &toks[k].kind {
+            TokKind::Ident(s) => Some(s.as_str()),
+            _ => None,
+        })
+        .unwrap_or("submit")
+}
+
+enum UseKind {
+    Collected,
+    Escaped,
+    Stored(String),
+    Neutral,
+}
+
+/// Classify one use of a tracked value at token `k`.
+fn classify_use(
+    toks: &[Token],
+    calls: &CallIndex,
+    k: usize,
+    last_semi: Option<usize>,
+    body_end: usize,
+) -> UseKind {
+    // Receiver of a collector method: `t.collect()` style (rare but
+    // cheap to honor).
+    if toks.get(k + 1).is_some_and(|n| n.is_punct('.')) {
+        if let Some(TokKind::Ident(m)) = toks.get(k + 2).map(|t| &t.kind) {
+            if COLLECTORS.contains(&m.as_str())
+                && toks.get(k + 3).is_some_and(|n| n.is_punct('('))
+            {
+                return UseKind::Collected;
+            }
+        }
+    }
+    let chain = calls.call_chain(k);
+    if let Some(&innermost) = chain.first() {
+        if COLLECTORS.contains(&innermost) {
+            return UseKind::Collected;
+        }
+        // A collector anywhere up the chain also counts:
+        // `wait(wrap(t))` is still a flow into wait.
+        if chain.iter().any(|c| COLLECTORS.contains(c)) {
+            return UseKind::Collected;
+        }
+        if CONTAINER_STORES.contains(&innermost) {
+            // Find the callee token to identify the receiver; the
+            // chain gives the name, re-locate it by walking back from
+            // `k` to the nearest matching `name (` opener.
+            if let Some(recv) = receiver_of_innermost_call(toks, k, innermost) {
+                return UseKind::Stored(recv);
+            }
+            return UseKind::Escaped; // stored into a non-ident receiver
+        }
+        if innermost == "drop" {
+            return UseKind::Neutral; // an undropped obligation
+        }
+        return UseKind::Escaped; // any other call consumes the value
+    }
+    // No enclosing call: moves via match/for/return, or the trailing
+    // expression, all count as escapes.
+    if let Some(p) = k.checked_sub(1) {
+        let t = &toks[p];
+        if t.is_ident("match") || t.is_ident("in") || t.is_ident("return") {
+            return UseKind::Escaped;
+        }
+        // Match-arm result: `=> t`.
+        if t.is_punct('>') && p >= 1 && toks[p - 1].is_punct('=') {
+            return UseKind::Escaped;
+        }
+    }
+    if last_semi.map(|s| k > s).unwrap_or(true) && k < body_end {
+        return UseKind::Escaped; // trailing expression
+    }
+    UseKind::Neutral
+}
+
+/// Walk back from use `k` to the opening `name (` of its innermost
+/// named call (continuing outward past anonymous tuple/grouping parens)
+/// and return the method receiver's trailing identifier.
+fn receiver_of_innermost_call(toks: &[Token], k: usize, name: &str) -> Option<String> {
+    let mut depth = 0i64;
+    let mut j = k;
+    while j > 0 {
+        j -= 1;
+        let t = &toks[j];
+        if t.is_punct(')') {
+            depth += 1;
+        } else if t.is_punct('(') {
+            if depth == 0 {
+                if j >= 1 && toks[j - 1].is_ident(name) {
+                    return method_receiver(toks, j - 1);
+                }
+                // Anonymous group or another callee: keep walking out.
+            } else {
+                depth -= 1;
+            }
+        }
+    }
+    None
+}
+
+/// A ticket container is satisfied when it reaches a collector, is
+/// consumed by iteration with a collector later in the function, or
+/// escapes (returned, passed on, matched, trailing expression).
+fn container_satisfied(
+    toks: &[Token],
+    calls: &CallIndex,
+    live: &[bool],
+    interior: (usize, usize),
+    container: &str,
+    taint_idx: usize,
+) -> bool {
+    let (start, end) = interior;
+    let idx_live = |k: usize| live.get(k - start + 1).copied().unwrap_or(false);
+    let last_semi = last_top_level_semi(toks, interior);
+    let collector_after = |k: usize| has_real_collector(toks, (k, end));
+    for k in uses_of(toks, interior, container, taint_idx) {
+        if !idx_live(k) {
+            continue;
+        }
+        match classify_use(toks, calls, k, last_semi, end) {
+            UseKind::Collected => return true,
+            UseKind::Escaped => {
+                // `for t in container` / `container.drain(..)` style
+                // consumption only discharges the obligation when a
+                // collector actually runs on what comes out.
+                let iterated = k
+                    .checked_sub(1)
+                    .is_some_and(|p| toks[p].is_ident("in"));
+                if !iterated || collector_after(k) {
+                    return true;
+                }
+            }
+            UseKind::Stored(_) | UseKind::Neutral => {
+                // `container.drain(..)` as a receiver shows up as the use
+                // being followed by `.drain(` — treat any receiver use
+                // followed by an iterator-ish consumption as iteration.
+                if toks.get(k + 1).is_some_and(|n| n.is_punct('.'))
+                    && matches!(
+                        toks.get(k + 2).map(|t| &t.kind),
+                        Some(TokKind::Ident(m)) if m == "drain" || m == "into_iter" || m == "iter"
+                    )
+                    && collector_after(k)
+                {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Is there a *redeeming* collector call in `range`?  Iterator
+/// `.collect()` / `.collect::<T>()` has an empty argument list and is
+/// excluded; `wait(t)` / `collect(ticket)` have arguments.
+fn has_real_collector(toks: &[Token], range: (usize, usize)) -> bool {
+    let (start, end) = range;
+    for k in start..end.min(toks.len()) {
+        if COLLECTORS.iter().any(|c| toks[k].is_ident(c)) {
+            if let Some((a0, a1)) = call_args(toks, k) {
+                if a1 > a0 {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Token index of the last `;` at statement level of the function body
+/// (depth 0 relative to the interior).  Uses after it are in the
+/// trailing expression.
+fn last_top_level_semi(toks: &[Token], interior: (usize, usize)) -> Option<usize> {
+    let (start, end) = interior;
+    let mut depth = 0i64;
+    let mut last = None;
+    for k in start..end.min(toks.len()) {
+        let t = &toks[k];
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            depth -= 1;
+        } else if t.is_punct(';') && depth == 0 {
+            last = Some(k);
+        }
+    }
+    last
+}
+
+/// `clock-taint`: taint `let` bindings whose initializer reads wall
+/// time (directly or through another tainted binding) and flag any
+/// tainted value reaching deadline arithmetic — a call whose name
+/// mentions deadlines/timeouts (or `wait_budget`), or a binding whose
+/// own name says it is a deadline.
+fn clock_taint_rule(
+    path: &str,
+    toks: &[Token],
+    live: &[bool],
+    interior: (usize, usize),
+    binds: &[Binding],
+    calls: &CallIndex,
+    out: &mut Vec<Diagnostic>,
+) {
+    let (start, end) = interior;
+    let idx_live = |k: usize| live.get(k - start + 1).copied().unwrap_or(false);
+
+    let wall_source = |range: (usize, usize)| -> bool {
+        for k in range.0..range.1.min(toks.len()) {
+            if (toks[k].is_ident("Instant") || toks[k].is_ident("SystemTime"))
+                && seq(toks, k + 1, &[":", ":", "now", "("])
+            {
+                return true;
+            }
+            if toks[k].is_ident("elapsed")
+                && k >= 1
+                && toks[k - 1].is_punct('.')
+                && toks.get(k + 1).is_some_and(|n| n.is_punct('('))
+            {
+                return true;
+            }
+        }
+        false
+    };
+
+    let mut tainted: Vec<&Binding> = Vec::new();
+    for b in binds {
+        let direct = wall_source(b.init);
+        let via = tainted.iter().any(|t| {
+            !uses_of(toks, b.init, &t.name, b.init.0.saturating_sub(1)).is_empty()
+        });
+        if direct || via {
+            tainted.push(b);
+            if is_deadline_name(&b.name) {
+                out.push(diag(
+                    path,
+                    &toks[b.name_idx],
+                    CLOCK_TAINT,
+                    format!(
+                        "`{}` is wall-time-derived: deadlines must be computed from the \
+                         injected Clock's now_ns(), not Instant/SystemTime/elapsed()",
+                        b.name
+                    ),
+                ));
+            }
+        }
+    }
+
+    for b in &tainted {
+        for k in uses_of(toks, interior, &b.name, b.stmt_end) {
+            if !idx_live(k) {
+                continue;
+            }
+            if let Some(sink) = calls
+                .call_chain(k)
+                .into_iter()
+                .find(|c| *c == "wait_budget" || is_deadline_name(c))
+            {
+                out.push(diag(
+                    path,
+                    &toks[k],
+                    CLOCK_TAINT,
+                    format!(
+                        "wall-time-derived `{}` flows into `{sink}(..)`: deadline \
+                         arithmetic must read the injected Clock (util::clock), not \
+                         Instant/SystemTime/elapsed()",
+                        b.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn is_deadline_name(name: &str) -> bool {
+    let lower = name.to_ascii_lowercase();
+    lower.contains("deadline") || lower.contains("timeout")
 }
 
 fn ident_text(t: &Token) -> &str {
@@ -434,10 +1246,9 @@ fn parse_allows(comments: &[Comment]) -> Vec<Allow> {
 fn apply_allows(
     path: &str,
     raw: Vec<Diagnostic>,
-    comments: &[Comment],
+    allows: &[Allow],
     active: &[&str],
 ) -> Vec<Diagnostic> {
-    let allows = parse_allows(comments);
     let on = |rule: &str| active.is_empty() || active.contains(&rule);
     let known = rule_ids();
 
@@ -452,7 +1263,7 @@ fn apply_allows(
         })
         .collect();
 
-    for a in &allows {
+    for a in allows {
         if !known.contains(&a.rule.as_str()) {
             // Unknown rule ids only fail full runs: a partial run cannot
             // tell a typo from a rule it was asked not to load.

@@ -1,0 +1,148 @@
+//! Diagnostic emitters: SARIF 2.1.0 (for GitHub code-scanning upload)
+//! and a plain JSON array.  Hand-rolled serialization — the linter is
+//! zero-dependency by design, and the subset of JSON we emit (strings,
+//! integers, fixed object shapes) doesn't justify a serializer.
+
+use crate::rules::{Diagnostic, ALL_RULES, BAD_ALLOW};
+
+/// Escape a string for embedding in a JSON string literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Plain JSON: an array of `{path, line, col, rule, message}` objects,
+/// in input order.
+pub fn to_json(diags: &[Diagnostic]) -> String {
+    let mut out = String::from("[");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"path\": \"{}\", \"line\": {}, \"col\": {}, \"rule\": \"{}\", \
+             \"message\": \"{}\"}}",
+            esc(&d.path),
+            d.line,
+            d.col,
+            esc(d.rule),
+            esc(&d.message)
+        ));
+    }
+    if !diags.is_empty() {
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// SARIF 2.1.0: one run, one driver, a rule descriptor per registered
+/// rule (plus the `bad-allow` meta-rule) whether or not it fired — the
+/// descriptors are the contract code scanning indexes results under.
+pub fn to_sarif(diags: &[Diagnostic]) -> String {
+    let mut rules = String::new();
+    let descriptors: Vec<(&str, &str)> = ALL_RULES
+        .iter()
+        .copied()
+        .chain(std::iter::once((
+            BAD_ALLOW,
+            "a malformed axdt-lint suppression: missing justification or unknown rule id",
+        )))
+        .collect();
+    for (i, (id, desc)) in descriptors.iter().enumerate() {
+        if i > 0 {
+            rules.push(',');
+        }
+        rules.push_str(&format!(
+            "\n          {{\n            \"id\": \"{}\",\n            \
+             \"shortDescription\": {{\"text\": \"{}\"}},\n            \
+             \"defaultConfiguration\": {{\"level\": \"error\"}}\n          }}",
+            esc(id),
+            esc(desc)
+        ));
+    }
+
+    let mut results = String::new();
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            results.push(',');
+        }
+        results.push_str(&format!(
+            "\n      {{\n        \"ruleId\": \"{}\",\n        \"level\": \"error\",\n        \
+             \"message\": {{\"text\": \"{}\"}},\n        \"locations\": [{{\n          \
+             \"physicalLocation\": {{\n            \
+             \"artifactLocation\": {{\"uri\": \"{}\"}},\n            \
+             \"region\": {{\"startLine\": {}, \"startColumn\": {}}}\n          }}\n        \
+             }}]\n      }}",
+            esc(d.rule),
+            esc(&d.message),
+            esc(&d.path),
+            d.line,
+            d.col
+        ));
+    }
+    if !diags.is_empty() {
+        results.push('\n');
+        results.push_str("    ");
+    }
+
+    format!(
+        "{{\n  \"$schema\": \"https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/\
+         Schemata/sarif-schema-2.1.0.json\",\n  \"version\": \"2.1.0\",\n  \"runs\": [{{\n    \
+         \"tool\": {{\n      \"driver\": {{\n        \"name\": \"axdt-lint\",\n        \
+         \"informationUri\": \"https://github.com/axdt/axdt\",\n        \
+         \"rules\": [{rules}\n        ]\n      }}\n    }},\n    \
+         \"results\": [{results}]\n  }}]\n}}\n"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Diagnostic> {
+        vec![Diagnostic {
+            path: "rust/src/x.rs".into(),
+            line: 3,
+            col: 7,
+            rule: crate::rules::CLOCK_SEAM,
+            message: "a \"quoted\" message\nwith a newline".into(),
+        }]
+    }
+
+    #[test]
+    fn json_escapes_and_round_trips_shape() {
+        let j = to_json(&sample());
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.contains("\\n"));
+        assert!(j.trim_start().starts_with('['));
+        assert!(j.trim_end().ends_with(']'));
+        assert!(to_json(&[]).trim() == "[]");
+    }
+
+    #[test]
+    fn sarif_has_descriptor_per_rule_and_result_locations() {
+        let s = to_sarif(&sample());
+        for (id, _) in ALL_RULES {
+            assert!(
+                s.contains(&format!("\"id\": \"{id}\"")),
+                "missing descriptor for {id}"
+            );
+        }
+        assert!(s.contains("\"id\": \"bad-allow\""));
+        assert!(s.contains("\"ruleId\": \"clock-seam\""));
+        assert!(s.contains("\"startLine\": 3"));
+        assert!(s.contains("\"version\": \"2.1.0\""));
+    }
+}

@@ -1,0 +1,12 @@
+//@ path: rust/src/util/pool.rs
+//@ expect: mutex-discipline@9
+
+// A suppression spelled inside a string literal is data, not a
+// comment: the violation on the next line must still fire.
+
+fn doc_and_drain(slots: &Mutex<Vec<Slot>>) -> Option<Slot> {
+    let advice = "// axdt-lint: allow(mutex-discipline): only real comments suppress";
+    let mut g = slots.lock().unwrap();
+    let _ = advice;
+    g.pop()
+}

@@ -1,0 +1,14 @@
+//@ path: rust/src/coordinator/driver.rs
+//@ expect: clock-seam@13
+
+// A #[cfg(test)] item nested inside a #[cfg(not(test))] module is test
+// code; the rest of the not(test) module is still production.
+
+#[cfg(not(test))]
+mod timing {
+    #[cfg(test)]
+    mod fakes {
+        fn wall_sample() { let _ = Instant::now(); }
+    }
+    fn prod_wall_read() { let _ = Instant::now(); }
+}

@@ -1,0 +1,40 @@
+//@ path: rust/src/coordinator/driver.rs
+//@ expect: clock-taint@16
+//@ expect: clock-taint@23
+//@ expect: clock-taint@28
+//@ expect: clock-taint@34
+//@ partial: clock-taint
+//@ expect-partial: clock-taint@16
+//@ expect-partial: clock-taint@23
+//@ expect-partial: clock-taint@28
+//@ expect-partial: clock-taint@34
+
+// Wall-derived values must never reach deadline arithmetic: the seam
+// is the injected Clock, even where the wall read itself is allowed.
+
+fn arm(started: Instant) -> u64 {
+    let deadline_ns = started.elapsed().as_nanos() as u64;
+    deadline_ns
+}
+
+fn wait_reply(started: Instant, rx: &Receiver<Reply>) -> Option<Reply> {
+    let waited = started.elapsed();
+    let budget = waited;
+    rx.recv_timeout(budget).ok()
+}
+
+fn repoll(started: Instant, clock: &SystemClock) -> Duration {
+    let lag_ns = started.elapsed().as_nanos() as u64;
+    clock.wait_budget(lag_ns)
+}
+
+fn chained(started: Instant, rx: &Receiver<Reply>) -> Option<Reply> {
+    let base_ns = started.elapsed().as_nanos() as u64;
+    let padded_ns = base_ns + GRACE_NS;
+    rx.recv_timeout(Duration::from_nanos(padded_ns)).ok()
+}
+
+fn observe(started: Instant, hist: &mut Histogram) {
+    let lag_ns = started.elapsed().as_nanos() as u64;
+    hist.record_ns(lag_ns);
+}

@@ -1,0 +1,28 @@
+//@ path: rust/src/util/pool.rs
+
+// No cycle fires here: the reverse acquisition in reset_at_boot() is
+// justified (startup-only, single-threaded), so its edge is dropped
+// before cycle detection; in tally() the first guard dies at drop(),
+// so no edge forms at all.
+
+fn drain(queue: &Mutex<Vec<Job>>, stats: &Mutex<Totals>) {
+    let q = lock_recover(queue);
+    let mut s = lock_recover(stats);
+    s.drained += q.len() as u64;
+}
+
+fn reset_at_boot(queue: &Mutex<Vec<Job>>, stats: &Mutex<Totals>) {
+    let mut s = lock_recover(stats);
+    s.drained = 0;
+    // axdt-lint: allow(lock-order): boot-time path, no drain() can run concurrently
+    lock_recover(queue).clear();
+}
+
+fn tally(queue: &Mutex<Vec<Job>>, stats: &Mutex<Totals>) -> u64 {
+    let q = lock_recover(queue);
+    let n = q.len() as u64;
+    drop(q);
+    let mut s = lock_recover(stats);
+    s.drained = n;
+    n
+}

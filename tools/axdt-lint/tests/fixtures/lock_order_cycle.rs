@@ -1,0 +1,21 @@
+//@ path: rust/src/util/pool.rs
+//@ expect: lock-order@13
+//@ expect: lock-order@20
+//@ partial: lock-order
+//@ expect-partial: lock-order@13
+//@ expect-partial: lock-order@20
+
+// Seeded AB/BA deadlock: `stats` is taken under `queue` in drain() and
+// `queue` under `stats` in reset() — the classic lock-order cycle.
+
+fn drain(queue: &Mutex<Vec<Job>>, stats: &Mutex<Totals>) {
+    let q = lock_recover(queue);
+    let mut s = lock_recover(stats);
+    s.drained += q.len() as u64;
+}
+
+fn reset(queue: &Mutex<Vec<Job>>, stats: &Mutex<Totals>) {
+    let mut s = lock_recover(stats);
+    s.drained = 0;
+    lock_recover(queue).clear();
+}

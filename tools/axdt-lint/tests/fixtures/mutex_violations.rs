@@ -1,14 +1,19 @@
 //@ path: rust/src/util/pool.rs
-//@ expect: mutex-discipline@8
-//@ expect: mutex-discipline@9
+//@ expect: mutex-discipline@12
+//@ expect: mutex-discipline@13
+//@ expect: mutex-discipline@15
+
+// All acquisitions keep one order (slots before COUNTER), so only the
+// mutex-discipline spellings fire — never lock-order.
 
 fn drain(slots: &Mutex<Vec<Slot>>) -> Option<Slot> {
     // state.lock().unwrap() in a comment must not fire.
     let doc = ".lock().unwrap() in a string must not fire";
     let mut guard = slots.lock().unwrap();
-    let n = COUNTER.lock().expect("counter mutex");
+    let again = slots.lock().unwrap_or_else(|e| e.into_inner());
     let ok = lock_recover(slots).pop();
-    let _ = (doc, n);
+    let n = COUNTER.lock().expect("counter mutex");
+    let _ = (doc, guard, again, n);
     ok
 }
 

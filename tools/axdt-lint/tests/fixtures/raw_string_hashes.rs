@@ -1,0 +1,15 @@
+//@ path: rust/src/util/pool.rs
+//@ expect: mutex-discipline@14
+
+// Raw strings with hash guards are literals: the documentation text
+// below contains `.lock().unwrap()` and an embedded `"#`, and the
+// lexer must skip it exactly and resume — the real violation after
+// it must still fire.
+
+fn help() -> &'static str {
+    r##"never write slots.lock().unwrap() — "# embedded — use lock_recover"##
+}
+
+fn drain(slots: &Mutex<Vec<Slot>>) -> Option<Slot> {
+    slots.lock().unwrap().pop()
+}

@@ -1,0 +1,51 @@
+//@ path: rust/src/coordinator/driver.rs
+//@ expect: ticket-leak@12
+//@ expect: ticket-leak@18
+//@ partial: ticket-leak
+//@ expect-partial: ticket-leak@12
+//@ expect-partial: ticket-leak@18
+
+// Two leaks: a plainly forgotten ticket and a stored-and-forgotten one.
+
+fn fire_and_forget(pool: &EvalShardPool, id: ProblemId, batch: Batch) {
+    // pool.submit(id, batch) in a comment must not fire.
+    let ticket = pool.submit(id, batch);
+}
+
+fn stash(pool: &EvalShardPool, id: ProblemId, batches: Vec<Batch>) {
+    let mut parked = Vec::new();
+    for batch in batches {
+        let t = pool.submit(id, batch);
+        parked.push(t);
+    }
+}
+
+fn pipelined(pool: &EvalShardPool, id: ProblemId, batches: Vec<Batch>) -> Vec<f32> {
+    let mut tickets = Vec::new();
+    for batch in batches {
+        let t = pool.submit(id, batch);
+        tickets.push(t);
+    }
+    let mut out = Vec::new();
+    for t in tickets {
+        out.extend(pool.wait(t));
+    }
+    out
+}
+
+fn handoff(pool: &EvalShardPool, id: ProblemId, batch: Batch) -> AccuracyTicket {
+    let t = pool.submit(id, batch);
+    t
+}
+
+fn relabel(pool: &EvalShardPool, id: ProblemId, batch: Batch) -> Vec<f32> {
+    let t = pool.submit(id, batch);
+    let moved = t;
+    pool.wait(moved)
+}
+
+fn cancel(pool: &EvalShardPool, id: ProblemId, batch: Batch) {
+    // axdt-lint: allow(ticket-leak): cancellation drops the in-flight batch on purpose
+    let t = pool.submit(id, batch);
+    drop(t);
+}

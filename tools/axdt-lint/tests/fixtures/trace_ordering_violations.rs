@@ -1,0 +1,32 @@
+//@ path: rust/src/coordinator/driver.rs
+//@ expect: trace-ordering@14
+//@ expect: trace-ordering@21
+//@ partial: trace-ordering
+//@ expect-partial: trace-ordering@14
+//@ expect-partial: trace-ordering@21
+
+// A Submitted/Executed record journaled after the send it describes
+// has lost its causal-ordering contract: record first, then send.
+
+impl Driver {
+    fn notify(&self, tx: &Sender<Msg>, now_ns: u64) {
+        let _ = tx.send(Msg::Nudge);
+        self.metrics.trace.record(now_ns, TraceKind::Submitted { shard: 0, problem: 7, width: 4 });
+    }
+
+    fn flush(&self, replies: &[ReplySender], now_ns: u64) {
+        for r in replies {
+            let _ = r.send(self.result());
+        }
+        self.metrics.trace.record(now_ns, TraceKind::Executed { shard: 1, problem: 7, width: 4 });
+    }
+
+    fn submit_traced(&self, tx: &Sender<Msg>, now_ns: u64) {
+        self.metrics.trace.record(now_ns, TraceKind::Submitted { shard: 0, problem: 7, width: 4 });
+        let _ = tx.send(Msg::Job);
+    }
+
+    fn journal_only(&self, now_ns: u64) {
+        self.metrics.trace.record(now_ns, TraceKind::Executed { shard: 1, problem: 7, width: 4 });
+    }
+}

@@ -88,7 +88,7 @@ fn fixtures() {
         .collect();
     entries.sort();
     assert!(
-        entries.len() >= 8,
+        entries.len() >= 16,
         "expected the full fixture set, found {}",
         entries.len()
     );
@@ -107,7 +107,7 @@ fn fixtures() {
     }
 }
 
-/// Each of the five rules must be exercised by at least one seeded
+/// Every registered rule must be exercised by at least one seeded
 /// violation across the fixture set — a rule nobody can trip is dead.
 #[test]
 fn every_rule_has_a_seeded_fixture() {
