@@ -3,18 +3,24 @@
 //! 3.08 ms, for the HAR dataset").
 //!
 //! Measures per-chromosome accuracy-evaluation latency for:
-//!   * the native tree-walk engine, single chromosome and batched;
+//!   * the native engine's scalar tree walk (the oracle / old baseline)
+//!     and its bit-sliced kernel, single chromosome and batched;
+//!   * the one-time bit-plane build the sliced kernel amortizes;
 //!   * the XLA artifact, amortized over a full population execution
 //!     (requires `make artifacts`; skipped otherwise);
 //! on the small (seeds) and large (HAR) ends of the workload spectrum,
 //! plus coordinator overhead (service round-trip vs direct call).
+//!
+//! Results (and the derived scalar→sliced batch speedups) are persisted
+//! to `BENCH_hotpath.json` (atomic tmp+rename) for CI and EXPERIMENTS.md
+//! tooling.
 
 use std::sync::Arc;
 
 use axdt::coordinator::{EvalService, PoolOptions, XlaEngine};
 use axdt::data::generators;
 use axdt::dt::{train, TrainConfig};
-use axdt::fitness::native::NativeEngine;
+use axdt::fitness::native::{accuracy_sliced, BitPlanes, NativeEngine};
 use axdt::fitness::{AccuracyEngine, Problem};
 use axdt::hw::synth::TreeApprox;
 use axdt::hw::{AreaLut, EgtLibrary};
@@ -62,15 +68,32 @@ fn main() {
         let p = problem_for(dataset);
         let batch32 = random_batch(&p, 32, 7);
 
-        // Native: single chromosome.
-        b.iter(&format!("native_single/{dataset}"), || {
+        // The one-time transpose the sliced kernel amortizes (paid once
+        // per problem at registration, not per chromosome).
+        b.iter(&format!("plane_build/{dataset}"), || black_box(BitPlanes::build(&p)));
+        b.row(&format!(
+            "planes/{dataset}: {} test samples -> {} KiB",
+            p.n_test,
+            p.planes().bytes() / 1024,
+        ));
+
+        // Single chromosome: scalar oracle walk vs bit-sliced kernel.
+        b.iter(&format!("scalar_single/{dataset}"), || {
             black_box(NativeEngine::accuracy_one(&p, &batch32[0]))
         });
-        // Native: batch of 32 across the thread pool (per-chromosome cost
-        // is this divided by 32).
-        let mut native = NativeEngine::default();
-        b.iter(&format!("native_batch32/{dataset}"), || {
-            black_box(native.batch_accuracy(&p, &batch32).unwrap())
+        b.iter(&format!("sliced_single/{dataset}"), || {
+            black_box(accuracy_sliced(&p, &batch32[0]))
+        });
+
+        // Batch of 32 across the thread pool (per-chromosome cost is this
+        // divided by 32) — the GA's actual hot path, both kernels.
+        let mut scalar = NativeEngine { scalar: true, ..NativeEngine::default() };
+        b.iter(&format!("scalar_batch32/{dataset}"), || {
+            black_box(scalar.batch_accuracy(&p, &batch32).unwrap())
+        });
+        let mut sliced = NativeEngine { scalar: false, ..NativeEngine::default() };
+        b.iter(&format!("sliced_batch32/{dataset}"), || {
+            black_box(sliced.batch_accuracy(&p, &batch32).unwrap())
         });
     }
 
@@ -119,4 +142,26 @@ fn main() {
         black_box(via_service.batch_accuracy(&p, &batch).unwrap())
     });
     svc.shutdown();
+
+    // Machine-readable artifact with the derived scalar→sliced speedups
+    // (null for datasets skipped in --quick).
+    let speedup = |kind: &str, d: &str| {
+        b.mean_ns(&format!("scalar_{kind}/{d}")) / b.mean_ns(&format!("sliced_{kind}/{d}"))
+    };
+    let derived = [
+        ("speedup_batch32_seeds", speedup("batch32", "seeds")),
+        ("speedup_batch32_har", speedup("batch32", "har")),
+        ("speedup_single_seeds", speedup("single", "seeds")),
+        ("speedup_single_har", speedup("single", "har")),
+    ];
+    for (name, v) in &derived {
+        if v.is_finite() {
+            b.row(&format!("derived {name} = {v:.2}x"));
+        }
+    }
+    if let Err(e) = b.save_json("BENCH_hotpath.json", &derived) {
+        b.row(&format!("BENCH_hotpath.json: write failed ({e})"));
+    } else {
+        b.row("saved BENCH_hotpath.json");
+    }
 }

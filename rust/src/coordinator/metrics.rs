@@ -140,6 +140,14 @@ pub struct Metrics {
     pub eval_cache_hits: AtomicU64,
     /// …and the engine actually evaluated (post-dedup misses).
     pub eval_engine_evals: AtomicU64,
+    /// Bit-plane builds performed at problem registration (the native
+    /// engine's one-time test-set transpose; at most one per problem).
+    pub plane_builds: AtomicU64,
+    /// Total time (ns) spent building bit planes, on the injected clock.
+    pub plane_build_ns: AtomicU64,
+    /// Test samples scored by backend executions (chromosomes × n_test):
+    /// the numerator of the engine's samples/sec throughput gauge.
+    pub eval_samples: AtomicU64,
     /// Per-execution backend latency (ns).  A bounded log₂ histogram —
     /// the service can record millions of executions without growing
     /// (the old `Summary` buffered every sample in a `Vec<f64>`).
@@ -254,6 +262,31 @@ impl Metrics {
         self.eval_requested.fetch_add(stats.requested as u64, Ordering::Relaxed);
         self.eval_cache_hits.fetch_add(stats.cache_hits as u64, Ordering::Relaxed);
         self.eval_engine_evals.fetch_add(stats.engine_evals as u64, Ordering::Relaxed);
+    }
+
+    /// One bit-plane build finished, `elapsed_ns` on the caller's
+    /// injected clock (planes are built once per registered problem and
+    /// reused by every execution, so builds ≤ problems always).
+    pub fn record_plane_build(&self, elapsed_ns: u64) {
+        self.plane_builds.fetch_add(1, Ordering::Relaxed);
+        self.plane_build_ns.fetch_add(elapsed_ns, Ordering::Relaxed);
+    }
+
+    /// A backend execution scored `n` test samples (chromosomes in the
+    /// real batch × the problem's test-set size).
+    pub fn record_eval_samples(&self, n: u64) {
+        self.eval_samples.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Engine throughput in test samples per second of shard busy time
+    /// (NaN until an execution with sample accounting has run).
+    pub fn samples_per_sec(&self) -> f64 {
+        let samples = self.eval_samples.load(Ordering::Relaxed) as f64;
+        let busy: u64 = self.shards.iter().map(|s| s.busy_ns.load(Ordering::Relaxed)).sum();
+        if samples == 0.0 || busy == 0 {
+            return f64::NAN;
+        }
+        samples / (busy as f64 / 1e9)
     }
 
     /// A job was queued on `shard` (called by the client facade).
@@ -461,6 +494,28 @@ impl Metrics {
                 self.eval_engine_evals.load(Ordering::Relaxed),
             ));
         }
+        // Native-engine throughput surface: only rendered once a plane
+        // build or sample-accounted execution happened, so XLA-only and
+        // legacy instances keep their exact line.
+        let plane_builds = self.plane_builds.load(Ordering::Relaxed);
+        if plane_builds > 0 {
+            s.push_str(&format!(
+                " planes: builds={} build_time={}",
+                plane_builds,
+                crate::util::stats::fmt_duration_ns(
+                    self.plane_build_ns.load(Ordering::Relaxed) as f64
+                ),
+            ));
+        }
+        let samples = self.eval_samples.load(Ordering::Relaxed);
+        if samples > 0 {
+            let sps = self.samples_per_sec();
+            if sps.is_finite() {
+                s.push_str(&format!(" samples={samples} samples_per_sec={sps:.3e}"));
+            } else {
+                s.push_str(&format!(" samples={samples}"));
+            }
+        }
         let deaths = self.shard_deaths.load(Ordering::Relaxed);
         if deaths > 0 {
             s.push_str(&format!(
@@ -526,6 +581,9 @@ impl Metrics {
                 "tickets_submitted",
                 Json::num(self.tickets_submitted.load(Ordering::Relaxed) as f64),
             ),
+            ("plane_builds", Json::num(self.plane_builds.load(Ordering::Relaxed) as f64)),
+            ("plane_build_ns", Json::num(self.plane_build_ns.load(Ordering::Relaxed) as f64)),
+            ("eval_samples", Json::num(self.eval_samples.load(Ordering::Relaxed) as f64)),
             ("shard_deaths", Json::num(self.shard_deaths.load(Ordering::Relaxed) as f64)),
             ("trace_dropped", Json::num(self.trace.dropped() as f64)),
             ("hist", self.histograms_json()),
@@ -768,6 +826,35 @@ mod tests {
         m.record_shard_execution(0, 8, 8, 2_000, 1, FlushKind::Full);
         m.record_shard_execution(0, 4, 8, 3_000, 1, FlushKind::Deadline);
         assert_eq!(m.shards()[0].busy_ns.load(Ordering::Relaxed), 5_000);
+    }
+
+    /// The native-engine throughput surface: plane builds and scored
+    /// samples render only once recorded (legacy lines unchanged), and
+    /// samples/sec divides by summed shard busy time.
+    #[test]
+    fn plane_and_sample_gauges_render_and_snapshot() {
+        let m = Metrics::with_shards(1);
+        assert!(!m.render().contains("planes:"), "{}", m.render());
+        assert!(!m.render().contains("samples="), "{}", m.render());
+        assert!(m.samples_per_sec().is_nan());
+        m.record_plane_build(2_000);
+        m.record_plane_build(3_000);
+        assert_eq!(m.plane_builds.load(Ordering::Relaxed), 2);
+        assert_eq!(m.plane_build_ns.load(Ordering::Relaxed), 5_000);
+        assert!(m.render().contains("planes: builds=2"), "{}", m.render());
+
+        // 32 chromosomes × 310 samples over 1ms of busy time.
+        m.record_shard_execution(0, 32, 32, 1_000_000, 1, FlushKind::Full);
+        m.record_eval_samples(32 * 310);
+        let sps = m.samples_per_sec();
+        assert!((sps - 32.0 * 310.0 * 1e3).abs() < 1e-6, "{sps}");
+        assert!(m.render().contains("samples=9920"), "{}", m.render());
+
+        let snap = m.snapshot_json(1).to_string();
+        let v = Json::parse(&snap).unwrap();
+        assert_eq!(v.get("plane_builds").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("plane_build_ns").unwrap().as_f64(), Some(5_000.0));
+        assert_eq!(v.get("eval_samples").unwrap().as_f64(), Some(9_920.0));
     }
 
     #[test]

@@ -1223,6 +1223,20 @@ fn worker_loop(mut backend: Box<dyn Backend>, rx: mpsc::Receiver<Msg>, ctx: Work
                     None => match catch_unwind(AssertUnwindSafe(|| backend.register(&problem)))
                     {
                         Ok(Ok(reg)) => {
+                            // Native registrations pay the one-time bit-plane
+                            // transpose here, off the eval hot path, timed on
+                            // the injected clock.  Idempotent across shards:
+                            // whoever registers the Arc first builds, the
+                            // rest see `planes_built()` and skip.
+                            if matches!(reg, RegisteredProblem::Native { .. })
+                                && !problem.planes_built()
+                            {
+                                let t0 = ctx.clock.now_ns();
+                                let _ = problem.planes();
+                                ctx.metrics.record_plane_build(
+                                    ctx.clock.now_ns().saturating_sub(t0),
+                                );
+                            }
                             groups.push(Group::new(
                                 problem,
                                 reg,
@@ -1640,6 +1654,7 @@ fn execute_chunk(
                 contributors.len(),
                 kind,
             );
+            metrics.record_eval_samples(chunk.len() as u64 * group.problem.n_test as u64);
             if metrics.trace.enabled() {
                 metrics.trace.record(
                     done_ns,

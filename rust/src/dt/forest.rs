@@ -98,12 +98,29 @@ impl Forest {
         TreeApprox { bits, thr_int: thr }
     }
 
+    /// Per-member [`crate::hw::synth::node_slots`] tables.  Hoist once and
+    /// feed [`Self::predict_codes_with_slots`] when predicting many samples.
+    pub fn member_slots(&self) -> Vec<Vec<i32>> {
+        self.trees.iter().map(crate::hw::synth::node_slots).collect()
+    }
+
     /// Majority-vote prediction on 8-bit feature codes under a concatenated
     /// approximation (native fitness path of the forest extension).
     pub fn predict_codes(&self, approxes: &[TreeApprox], codes: &[u32]) -> u32 {
+        self.predict_codes_with_slots(&self.member_slots(), approxes, codes)
+    }
+
+    /// [`Self::predict_codes`] with the members' slot tables hoisted by the
+    /// caller, so per-sample loops pay no per-call table builds.
+    pub fn predict_codes_with_slots(
+        &self,
+        slots: &[Vec<i32>],
+        approxes: &[TreeApprox],
+        codes: &[u32],
+    ) -> u32 {
         let mut votes = vec![0u32; self.n_classes];
-        for (t, a) in self.trees.iter().zip(approxes) {
-            votes[crate::hw::synth::predict_codes(t, a, codes) as usize] += 1;
+        for ((t, a), s) in self.trees.iter().zip(approxes).zip(slots) {
+            votes[crate::hw::synth::predict_codes_with_slots(t, s, a, codes) as usize] += 1;
         }
         argmax(&votes)
     }
@@ -192,6 +209,7 @@ mod tests {
         assert_eq!(parts.len(), forest.trees.len());
 
         // 8-bit code votes ≈ float votes.
+        let slots = forest.member_slots();
         let mut agree = 0usize;
         for s in 0..test_d.n_samples {
             let row = test_d.row(s);
@@ -199,7 +217,7 @@ mod tests {
                 .iter()
                 .map(|&x| crate::quant::code(x, crate::hw::synth::FEATURE_BITS))
                 .collect();
-            if forest.predict_codes(&parts, &codes) == forest.predict(row) {
+            if forest.predict_codes_with_slots(&slots, &parts, &codes) == forest.predict(row) {
                 agree += 1;
             }
         }

@@ -208,12 +208,14 @@ mod tests {
             );
             assert!(pr.removed_constant > 0 || pr.tree.n_comparators() == tree.n_comparators());
             // Prediction equivalence on random codes.
+            let slots = synth::node_slots(&tree);
+            let pr_slots = synth::node_slots(&pr.tree);
             for _ in 0..50 {
                 let codes: Vec<u32> =
                     (0..tree.n_features).map(|_| rng.below(256) as u32).collect();
                 assert_eq!(
-                    synth::predict_codes(&tree, &approx, &codes),
-                    synth::predict_codes(&pr.tree, &pr.approx, &codes)
+                    synth::predict_codes_with_slots(&tree, &slots, &approx, &codes),
+                    synth::predict_codes_with_slots(&pr.tree, &pr_slots, &pr.approx, &codes)
                 );
             }
         }

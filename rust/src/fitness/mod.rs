@@ -24,6 +24,7 @@ pub mod native;
 
 use std::any::Any;
 use std::collections::HashMap;
+use std::sync::OnceLock;
 
 use anyhow::{anyhow, Result};
 
@@ -57,6 +58,9 @@ pub struct Problem {
     pub exact_report: crate::hw::HwReport,
     /// Substitution margin bound (paper: 5).
     pub margin_max: u32,
+    /// Bit-sliced evaluation planes (built lazily by [`Self::planes`],
+    /// then shared by every chromosome evaluated against this problem).
+    planes: OnceLock<native::BitPlanes>,
 }
 
 impl Problem {
@@ -78,11 +82,7 @@ impl Problem {
             .map(|&x| quant::code(x, FEATURE_BITS))
             .collect();
         let thresholds = tree.comparator_thresholds();
-
-        let mut slot_of_node = vec![-1i32; tree.nodes.len()];
-        for (slot, node) in tree.comparator_nodes().into_iter().enumerate() {
-            slot_of_node[node] = slot as i32;
-        }
+        let slot_of_node = synth::node_slots(&tree);
 
         let exact = TreeApprox::exact(&tree);
         let exact_report = synth::synth_tree(&tree, &exact).netlist.report(lib);
@@ -107,11 +107,32 @@ impl Problem {
             margin_max,
             tree,
             test_codes,
+            planes: OnceLock::new(),
         }
     }
 
     pub fn n_comparators(&self) -> usize {
         self.thresholds.len()
+    }
+
+    /// The bit-sliced evaluation planes: `test_codes` transposed into
+    /// per-(feature, bit) `u64` words plus per-class label planes.  Built
+    /// on first use, then reused by every chromosome evaluated against
+    /// this problem (the native engine's default kernel reads them).
+    ///
+    /// **Invariant for engines:** the planes are a pure function of
+    /// `test_codes`, `labels`, `n_test` and the tree's comparator
+    /// features.  Those fields must not change once the planes exist —
+    /// code that wants a different test set builds a new `Problem`.
+    pub fn planes(&self) -> &native::BitPlanes {
+        self.planes.get_or_init(|| native::BitPlanes::build(self))
+    }
+
+    /// Whether [`Self::planes`] has already run — shard workers use this
+    /// to warm (and time) the build at registration instead of paying it
+    /// inside the first evaluation window.
+    pub fn planes_built(&self) -> bool {
+        self.planes.get().is_some()
     }
 
     /// High-level area estimate of one approximation (the GA objective).

@@ -1,29 +1,65 @@
-//! Native accuracy engine: per-sample quantized tree walk.
+//! Native accuracy engine: bit-sliced word-parallel evaluation with a
+//! per-sample scalar walk kept as the oracle.
 //!
-//! This is the formulation the paper's own Python framework uses (and its
-//! 3.08 ms/chromosome HAR headline refers to).  It serves three roles here:
-//! the test oracle the XLA engine is checked against, the CPU baseline the
-//! hot-path bench compares engines on, and a fallback when artifacts are
-//! absent.  Work is sharded across the thread pool by chromosome.
+//! The scalar walk is the formulation the paper's own Python framework
+//! uses (its 3.08 ms/chromosome HAR headline refers to it).  The default
+//! kernel here is **bit-sliced**: `Problem::planes` pre-transposes the
+//! 8-bit test codes into per-(feature, bit) `u64` planes — built once,
+//! reused across every chromosome — and each comparator is evaluated as
+//! branch-free word ops over 64 samples at a time, the same trick the
+//! paper's printed EGT comparators exploit in hardware.  Each tree node's
+//! "go left" predicate becomes a mask word, leaf hits are popcounts
+//! against per-class label planes, so one chromosome costs
+//! `O(nodes × bits × n_test / 64)` word operations instead of
+//! `O(depth × n_test)` dependent branches.
+//!
+//! Both kernels are exposed; `AXDT_SCALAR_EVAL` (or the engine's `scalar`
+//! knob) selects the oracle walk, and the test suite pins the two
+//! bit-identical — including test-set sizes that are not multiples of 64,
+//! where the tail-lane mask is load-bearing.  Work is sharded across the
+//! thread pool by chromosome.
 
 use anyhow::Result;
 
 use super::{AccuracyEngine, Problem};
 use crate::hw::synth::{TreeApprox, FEATURE_BITS};
+use crate::quant;
 use crate::util::pool;
 
 /// Tree-walk engine; `threads = 0` → auto.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct NativeEngine {
     pub threads: usize,
+    /// `true` forces the per-sample scalar walk (the oracle); `false`
+    /// (default) uses the bit-sliced kernel.  Defaults from the
+    /// `AXDT_SCALAR_EVAL` escape hatch.
+    pub scalar: bool,
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        NativeEngine { threads: 0, scalar: scalar_eval_env() }
+    }
+}
+
+/// Should the scalar walk replace the bit-sliced kernel?  Any non-empty
+/// `AXDT_SCALAR_EVAL` value other than `0` opts out of bit-slicing
+/// (bisecting a suspected kernel bug, measuring the old baseline).
+pub fn scalar_eval_env() -> bool {
+    scalar_eval_flag(std::env::var("AXDT_SCALAR_EVAL").ok().as_deref())
+}
+
+fn scalar_eval_flag(v: Option<&str>) -> bool {
+    matches!(v, Some(s) if !s.is_empty() && s != "0")
 }
 
 impl NativeEngine {
     pub fn with_threads(threads: usize) -> Self {
-        NativeEngine { threads }
+        NativeEngine { threads, ..NativeEngine::default() }
     }
 
-    /// Accuracy of one approximation (public: used directly by benches).
+    /// Scalar-oracle accuracy of one approximation (public: the reference
+    /// the bit-sliced kernel is pinned against, and the benches' baseline).
     pub fn accuracy_one(problem: &Problem, approx: &TreeApprox) -> f64 {
         let nf = problem.n_features;
         let mut correct = 0usize;
@@ -38,6 +74,10 @@ impl NativeEngine {
 }
 
 /// Quantized walk using the problem's precomputed node→slot map.
+///
+/// Precondition: `approx` passed [`quant::validate_approx`] (the engine
+/// entry points enforce it) — precision genes outside `[MIN_BITS,
+/// MAX_BITS]` would underflow the shift below.
 #[inline]
 pub fn predict(problem: &Problem, approx: &TreeApprox, codes: &[u32]) -> u32 {
     let mut i = 0usize;
@@ -56,11 +96,162 @@ pub fn predict(problem: &Problem, approx: &TreeApprox, codes: &[u32]) -> u32 {
     }
 }
 
+/// Transposed test set for the bit-sliced kernel: one `u64` plane per
+/// (comparator-read feature, code bit) over lanes of 64 samples, plus
+/// per-class label planes.  Built once per [`Problem`] (see
+/// [`Problem::planes`]) and reused across every chromosome.
+#[derive(Debug)]
+pub struct BitPlanes {
+    /// Words per plane: `ceil(n_test / 64)`.
+    n_words: usize,
+    /// Valid-lane mask of the last word (all ones when `n_test` is a
+    /// multiple of 64).
+    tail_mask: u64,
+    /// Feature-bit planes, `[read feature][FEATURE_BITS][n_words]`
+    /// flattened: bit `l` of word `w` in plane `(f, k)` is bit `k` of
+    /// sample `w·64 + l`'s 8-bit code of feature `f`.  Only features some
+    /// comparator actually reads get planes, so a wide dataset (HAR: 561
+    /// features) only pays for the tree's handful of split features.
+    planes: Vec<u64>,
+    /// Comparator slot → offset of its feature's plane block in `planes`.
+    slot_base: Vec<usize>,
+    /// Per-class one-hot label planes, `[class][n_words]`: bit `l` of
+    /// word `w` set iff sample `w·64 + l` carries that label (invalid
+    /// tail lanes are never set).
+    label_planes: Vec<u64>,
+}
+
+impl BitPlanes {
+    /// Transpose a problem's test codes + labels into bit planes.
+    pub fn build(problem: &Problem) -> BitPlanes {
+        let n_test = problem.n_test;
+        let nf = problem.n_features;
+        let n_words = n_test.div_ceil(64);
+        let tail = n_test % 64;
+        let tail_mask = if tail == 0 { !0u64 } else { (1u64 << tail) - 1 };
+        let fb = FEATURE_BITS as usize;
+
+        // Plane storage for comparator-read features only; every slot of
+        // the same feature shares one plane block.
+        let mut feat_base: std::collections::BTreeMap<usize, usize> =
+            std::collections::BTreeMap::new();
+        let mut slot_base = vec![0usize; problem.n_comparators()];
+        for (i, node) in problem.tree.nodes.iter().enumerate() {
+            let slot = problem.slot_of_node[i];
+            if slot < 0 {
+                continue;
+            }
+            let next = feat_base.len() * fb * n_words;
+            let base = *feat_base.entry(node.feat as usize).or_insert(next);
+            slot_base[slot as usize] = base;
+        }
+
+        let mut planes = vec![0u64; feat_base.len() * fb * n_words];
+        for s in 0..n_test {
+            let (w, lane) = (s / 64, (s % 64) as u32);
+            let row = &problem.test_codes[s * nf..(s + 1) * nf];
+            for (&f, &base) in &feat_base {
+                let code = row[f];
+                for (k, chunk) in planes[base..base + fb * n_words].chunks_mut(n_words).enumerate()
+                {
+                    chunk[w] |= (((code >> k) & 1) as u64) << lane;
+                }
+            }
+        }
+
+        let n_classes = problem.tree.n_classes.max(1);
+        let mut label_planes = vec![0u64; n_classes * n_words];
+        for (s, &y) in problem.labels.iter().enumerate().take(n_test) {
+            label_planes[y as usize * n_words + s / 64] |= 1u64 << (s % 64);
+        }
+
+        BitPlanes { n_words, tail_mask, planes, slot_base, label_planes }
+    }
+
+    /// Approximate retained size (the plane buffers), for reporting.
+    pub fn bytes(&self) -> usize {
+        (self.planes.len() + self.label_planes.len()) * std::mem::size_of::<u64>()
+            + self.slot_base.len() * std::mem::size_of::<usize>()
+    }
+
+    /// Branch-free comparator mask over one word: lane `l` is set iff
+    /// `code >> (FEATURE_BITS − bits) <= thr` for sample `w·64 + l`.
+    /// MSB→LSB less-than/equal recurrence over the slot's top `bits`
+    /// planes — `bits` word ops per 64 samples, no data-dependent branch.
+    #[inline]
+    fn le_mask(&self, slot: usize, w: usize, bits: u8, thr: u32) -> u64 {
+        let base = self.slot_base[slot];
+        let (mut lt, mut eq) = (0u64, !0u64);
+        for i in (0..bits as usize).rev() {
+            let plane =
+                self.planes[base + (FEATURE_BITS as usize - bits as usize + i) * self.n_words + w];
+            if (thr >> i) & 1 == 1 {
+                lt |= eq & !plane;
+                eq &= plane;
+            } else {
+                eq &= !plane;
+            }
+        }
+        lt | eq
+    }
+}
+
+/// Bit-sliced accuracy of one approximation: walks the tree once per
+/// 64-sample word carrying a lane mask, splitting it at each comparator
+/// and popcounting leaf masks against the label planes.  Bit-identical to
+/// [`NativeEngine::accuracy_one`] (pinned by tests and `util::prop`).
+///
+/// Same validation precondition as [`predict`].
+pub fn accuracy_sliced(problem: &Problem, approx: &TreeApprox) -> f64 {
+    let planes = problem.planes();
+    let nodes = &problem.tree.nodes;
+    let mut correct = 0u64;
+    let mut stack: Vec<(usize, u64)> = Vec::with_capacity(64);
+    for w in 0..planes.n_words {
+        let full = if w + 1 == planes.n_words { planes.tail_mask } else { !0u64 };
+        stack.push((0, full));
+        while let Some((i, mask)) = stack.pop() {
+            let n = &nodes[i];
+            if n.is_leaf() {
+                let labels = planes.label_planes[n.leaf_class as usize * planes.n_words + w];
+                correct += (mask & labels).count_ones() as u64;
+                continue;
+            }
+            let slot = problem.slot_of_node[i] as usize;
+            let le = planes.le_mask(slot, w, approx.bits[slot], approx.thr_int[slot]);
+            let left = mask & le;
+            if left != 0 {
+                stack.push((n.left as usize, left));
+            }
+            let right = mask & !le;
+            if right != 0 {
+                stack.push((n.right as usize, right));
+            }
+        }
+    }
+    correct as f64 / problem.n_test.max(1) as f64
+}
+
 impl AccuracyEngine for NativeEngine {
-    /// Infallible: the tree walk has no backend to lose.
+    /// Validates every approximation at entry (typed
+    /// [`quant::ApproxError`] — a corrupted chromosome must not panic a
+    /// worker), then shards the batch across the thread pool with the
+    /// selected kernel.  The planes are forced before sharding so the
+    /// workers share one build instead of racing to create it.
     fn batch_accuracy(&mut self, problem: &Problem, batch: &[TreeApprox]) -> Result<Vec<f64>> {
+        let n = problem.n_comparators();
+        for approx in batch {
+            quant::validate_approx(n, &approx.bits, &approx.thr_int)
+                .map_err(anyhow::Error::new)?;
+        }
         let threads = if self.threads == 0 { pool::default_threads() } else { self.threads };
-        Ok(pool::par_map(batch, threads, |approx| Self::accuracy_one(problem, approx)))
+        if self.scalar {
+            return Ok(pool::par_map(batch, threads, |approx| {
+                Self::accuracy_one(problem, approx)
+            }));
+        }
+        let _ = problem.planes();
+        Ok(pool::par_map(batch, threads, |approx| accuracy_sliced(problem, approx)))
     }
 
     fn name(&self) -> &'static str {
@@ -71,30 +262,141 @@ impl AccuracyEngine for NativeEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::generators;
+    use crate::dt::{train, TrainConfig};
     use crate::fitness::testutil::small_problem;
     use crate::hw::{AreaLut, EgtLibrary};
     use crate::util::rng::Pcg64;
+
+    fn random_approx(p: &Problem, rng: &mut Pcg64, substitute: bool) -> TreeApprox {
+        let n = p.n_comparators();
+        let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+        let thr_int: Vec<u32> = (0..n)
+            .map(|j| {
+                let t = crate::quant::int_threshold(p.thresholds[j], bits[j]);
+                if substitute {
+                    crate::quant::substitute(t, rng.int_in(-5, 5) as i32, bits[j])
+                } else {
+                    t
+                }
+            })
+            .collect();
+        TreeApprox { bits, thr_int }
+    }
 
     #[test]
     fn walk_matches_synth_predict_codes() {
         let lut = AreaLut::build(&EgtLibrary::default());
         let p = small_problem(&lut);
         let mut rng = Pcg64::seeded(0x51);
-        let n = p.n_comparators();
         for _ in 0..10 {
-            let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
-            let thr_int: Vec<u32> = (0..n)
-                .map(|j| crate::quant::int_threshold(p.thresholds[j], bits[j]))
-                .collect();
-            let approx = TreeApprox { bits, thr_int };
+            let approx = random_approx(&p, &mut rng, false);
             for s in (0..p.n_test).step_by(7) {
                 let codes = &p.test_codes[s * p.n_features..(s + 1) * p.n_features];
                 assert_eq!(
                     predict(&p, &approx, codes),
-                    crate::hw::synth::predict_codes(&p.tree, &approx, codes)
+                    // Reuses the problem's precomputed slot table — no
+                    // per-sample map rebuild.
+                    crate::hw::synth::predict_codes_with_slots(
+                        &p.tree,
+                        &p.slot_of_node,
+                        &approx,
+                        codes
+                    )
                 );
             }
         }
+    }
+
+    /// The tentpole contract: the bit-sliced kernel is bit-identical to
+    /// the scalar oracle, across random substituted approximations and
+    /// test-set sizes that exercise the tail-lane mask (n_test < 64,
+    /// n_test == 64 exactly, and a multi-word non-multiple-of-64 size).
+    #[test]
+    fn sliced_is_bit_identical_to_scalar_across_tail_sizes() {
+        let lib = EgtLibrary::default();
+        let lut = AreaLut::build(&lib);
+        let spec = generators::spec("vertebral").unwrap();
+        let data = generators::generate(spec, 7);
+        let (train_d, test_d) = data.split(0.3, 7);
+        let tree =
+            train(&train_d, &TrainConfig { max_leaves: spec.max_leaves, min_samples_split: 2 });
+        assert!(test_d.n_samples > 64, "need a multi-word test set");
+
+        for truncate in [1usize, 5, 63, 64, usize::MAX] {
+            // A fresh Problem per size: the planes cache on the instance.
+            let mut p = Problem::new("vertebral", tree.clone(), &test_d, &lut, &lib, 5);
+            p.n_test = p.n_test.min(truncate);
+            let mut rng = Pcg64::seeded(0x1D + truncate as u64);
+            for _ in 0..8 {
+                let approx = random_approx(&p, &mut rng, true);
+                let scalar = NativeEngine::accuracy_one(&p, &approx);
+                let sliced = accuracy_sliced(&p, &approx);
+                assert_eq!(
+                    scalar.to_bits(),
+                    sliced.to_bits(),
+                    "n_test={} scalar={scalar} sliced={sliced}",
+                    p.n_test
+                );
+            }
+        }
+    }
+
+    /// Regression: precision genes outside `[MIN_BITS, MAX_BITS]` used to
+    /// underflow `FEATURE_BITS - bits` (panic in debug, masked shift in
+    /// release).  Both kernels must answer with the typed error instead.
+    #[test]
+    fn malformed_approx_is_typed_error_not_panic() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let n = p.n_comparators();
+        let cases = [
+            TreeApprox { bits: vec![9; n], thr_int: vec![0; n] },
+            TreeApprox { bits: vec![1; n], thr_int: vec![0; n] },
+            TreeApprox { bits: vec![4; n], thr_int: vec![16; n] },
+            TreeApprox { bits: vec![8; n - 1], thr_int: vec![0; n] },
+        ];
+        for (scalar, case) in [(false, 0), (false, 1), (false, 2), (false, 3), (true, 0)] {
+            let mut engine = NativeEngine { threads: 1, scalar };
+            let batch =
+                vec![TreeApprox::exact(&p.tree), cases[case].clone(), TreeApprox::exact(&p.tree)];
+            let err = engine.batch_accuracy(&p, &batch).unwrap_err();
+            assert!(
+                err.downcast_ref::<quant::ApproxError>().is_some(),
+                "case {case} scalar={scalar}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn scalar_knob_selects_oracle_with_identical_results() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let mut rng = Pcg64::seeded(0x53);
+        let batch: Vec<TreeApprox> = (0..5).map(|_| random_approx(&p, &mut rng, true)).collect();
+        let mut sliced = NativeEngine { threads: 2, scalar: false };
+        let mut scalar = NativeEngine { threads: 2, scalar: true };
+        assert_eq!(
+            sliced.batch_accuracy(&p, &batch).unwrap(),
+            scalar.batch_accuracy(&p, &batch).unwrap()
+        );
+        // The escape-hatch parse: only a non-empty value != "0" opts out.
+        assert!(!scalar_eval_flag(None));
+        assert!(!scalar_eval_flag(Some("")));
+        assert!(!scalar_eval_flag(Some("0")));
+        assert!(scalar_eval_flag(Some("1")));
+        assert!(scalar_eval_flag(Some("yes")));
+    }
+
+    #[test]
+    fn planes_build_once_and_report_size() {
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        assert!(!p.planes_built());
+        let first = p.planes() as *const BitPlanes;
+        assert!(p.planes_built());
+        assert_eq!(first, p.planes() as *const BitPlanes, "planes cached");
+        assert!(p.planes().bytes() > 0);
     }
 
     /// The native engine rides the default blocking submit/collect
@@ -118,25 +420,15 @@ mod tests {
         let lut = AreaLut::build(&EgtLibrary::default());
         let p = small_problem(&lut);
         let mut rng = Pcg64::seeded(0x52);
-        let n = p.n_comparators();
-        let batch: Vec<TreeApprox> = (0..9)
-            .map(|_| {
-                let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
-                let thr_int: Vec<u32> = (0..n)
-                    .map(|j| {
-                        let t = crate::quant::int_threshold(p.thresholds[j], bits[j]);
-                        crate::quant::substitute(t, rng.int_in(-5, 5) as i32, bits[j])
-                    })
-                    .collect();
-                TreeApprox { bits, thr_int }
-            })
-            .collect();
+        let batch: Vec<TreeApprox> = (0..9).map(|_| random_approx(&p, &mut rng, true)).collect();
         let mut e1 = NativeEngine::with_threads(1);
         let mut e4 = NativeEngine::with_threads(4);
         let a1 = e1.batch_accuracy(&p, &batch).unwrap();
         let a4 = e4.batch_accuracy(&p, &batch).unwrap();
         assert_eq!(a1, a4);
         for (i, approx) in batch.iter().enumerate() {
+            // The batched (bit-sliced) path is pinned to the scalar
+            // oracle, chromosome by chromosome.
             assert_eq!(a1[i], NativeEngine::accuracy_one(&p, approx));
             assert!((0.0..=1.0).contains(&a1[i]));
         }

@@ -236,23 +236,36 @@ pub fn bits_for_classes(n: usize) -> usize {
     (usize::BITS - (n.max(2) - 1).leading_zeros()) as usize
 }
 
+/// Comparator slot per node index (-1 for leaves): the lookup table
+/// [`predict_codes_with_slots`] walks.  Build it once per tree and reuse
+/// it across samples — `Problem::slot_of_node` is this same table,
+/// precomputed, for call sites that hold a `Problem`.
+pub fn node_slots(tree: &Tree) -> Vec<i32> {
+    let mut slots = vec![-1i32; tree.nodes.len()];
+    for (slot, node) in tree.comparator_nodes().into_iter().enumerate() {
+        slots[node] = slot as i32;
+    }
+    slots
+}
+
 /// Reference prediction on feature *codes* (8-bit ints) with the same
 /// precision-truncation semantics the hardware uses — the oracle the
-/// netlist is verified against, and the core of the native fitness engine.
-pub fn predict_codes(tree: &Tree, approx: &TreeApprox, codes: &[u32]) -> u32 {
-    let comp_slot: std::collections::HashMap<usize, usize> = tree
-        .comparator_nodes()
-        .into_iter()
-        .enumerate()
-        .map(|(slot, node)| (node, slot))
-        .collect();
+/// netlist is verified against, and the scalar core of the native fitness
+/// engine.  `slots` is the tree's [`node_slots`] table, hoisted by the
+/// caller so per-sample loops pay no allocation or hashing.
+pub fn predict_codes_with_slots(
+    tree: &Tree,
+    slots: &[i32],
+    approx: &TreeApprox,
+    codes: &[u32],
+) -> u32 {
     let mut i = 0usize;
     loop {
         let n = &tree.nodes[i];
         if n.is_leaf() {
             return n.leaf_class as u32;
         }
-        let j = comp_slot[&i];
+        let j = slots[i] as usize;
         let code_b = codes[n.feat as usize] >> (FEATURE_BITS - approx.bits[j]);
         i = if code_b <= approx.thr_int[j] {
             n.left as usize
@@ -260,6 +273,12 @@ pub fn predict_codes(tree: &Tree, approx: &TreeApprox, codes: &[u32]) -> u32 {
             n.right as usize
         };
     }
+}
+
+/// One-shot convenience over [`predict_codes_with_slots`].  Builds the
+/// slot table per call — loops over samples should hoist it instead.
+pub fn predict_codes(tree: &Tree, approx: &TreeApprox, codes: &[u32]) -> u32 {
+    predict_codes_with_slots(tree, &node_slots(tree), approx, codes)
 }
 
 #[cfg(test)]
@@ -354,6 +373,7 @@ mod tests {
         let spec = generators::spec("seeds").unwrap();
         let data = generators::generate(spec, 5);
         let tree = train(&data, &TrainConfig { max_leaves: 12, min_samples_split: 2 });
+        let slots = node_slots(&tree);
         let mut rng = Pcg64::seeded(0x7EE);
 
         for case in 0..8 {
@@ -390,7 +410,7 @@ mod tests {
                     .enumerate()
                     .map(|(m, &b)| (b as u32) << m)
                     .sum();
-                let want = predict_codes(&tree, &approx, &codes);
+                let want = predict_codes_with_slots(&tree, &slots, &approx, &codes);
                 assert_eq!(got, want, "case {case} codes {codes:?}");
             }
         }

@@ -233,6 +233,7 @@ mod tests {
                 TreeApprox { bits, thr_int }
             };
             let parts = forest.split_approx(&approx);
+            let slots = forest.member_slots();
             let circuit = synth_forest(&forest, &parts);
             for _ in 0..40 {
                 let codes: Vec<u32> =
@@ -246,7 +247,7 @@ mod tests {
                 let out = circuit.netlist.eval(&ins);
                 let got: u32 =
                     out.iter().enumerate().map(|(m, &v)| (v as u32) << m).sum();
-                let want = forest.predict_codes(&parts, &codes);
+                let want = forest.predict_codes_with_slots(&slots, &parts, &codes);
                 assert_eq!(got, want, "case {case}");
             }
         }

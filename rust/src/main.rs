@@ -357,15 +357,13 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<RunBatch> {
     Ok(RunBatch { runs, failed, service_hist })
 }
 
-/// Write a results artifact atomically: the content lands in `<path>.tmp`
-/// first and is renamed over the destination, so a crash (or a ctrl-C)
-/// mid-write can never leave a truncated JSON file where a pipeline
-/// watching `runs.json` / the trace expects a parseable one.
+/// Write a results artifact atomically (`util::fsx::write_atomic`), so a
+/// crash (or a ctrl-C) mid-write can never leave a truncated JSON file
+/// where a pipeline watching `runs.json` / the trace expects a parseable
+/// one.
 fn write_atomic(path: &str, contents: &str) -> Result<()> {
-    let tmp = format!("{path}.tmp");
-    std::fs::write(&tmp, contents).with_context(|| format!("writing {tmp}"))?;
-    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp} -> {path}"))?;
-    Ok(())
+    axdt::util::fsx::write_atomic(path, contents)
+        .with_context(|| format!("atomically writing {path}"))
 }
 
 fn save_runs(cfg: &RunConfig, batch: &RunBatch) -> Result<()> {

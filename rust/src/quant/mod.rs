@@ -58,6 +58,74 @@ pub fn cmp_le(x: f32, thr_int: u32, bits: u8) -> bool {
     code(x, bits) <= thr_int
 }
 
+/// A malformed approximation arriving at an accuracy engine.
+///
+/// The engines shift feature codes by `FEATURE_BITS - bits`, so an
+/// out-of-range precision underflows the `u8` subtraction (panic in debug,
+/// silently masked shift in release) — engines validate at entry and
+/// return this typed error instead, keeping the panic-free-workers
+/// guarantee honest for hand-built or corrupted chromosomes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ApproxError {
+    /// `bits`/`thr_int` gene counts disagree with the tree's comparators.
+    LengthMismatch { n_comparators: usize, bits_len: usize, thr_len: usize },
+    /// A precision gene outside `[MIN_BITS, MAX_BITS]`.
+    BitsOutOfRange { slot: usize, bits: u8 },
+    /// An integer threshold not representable at its slot's precision.
+    ThresholdOutOfRange { slot: usize, thr_int: u32, bits: u8 },
+}
+
+impl std::fmt::Display for ApproxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApproxError::LengthMismatch { n_comparators, bits_len, thr_len } => write!(
+                f,
+                "approximation has {bits_len} precision / {thr_len} threshold genes \
+                 for a tree with {n_comparators} comparators"
+            ),
+            ApproxError::BitsOutOfRange { slot, bits } => write!(
+                f,
+                "comparator slot {slot}: precision {bits} bits outside \
+                 [{MIN_BITS}, {MAX_BITS}]"
+            ),
+            ApproxError::ThresholdOutOfRange { slot, thr_int, bits } => write!(
+                f,
+                "comparator slot {slot}: threshold {thr_int} not representable \
+                 at {bits} bits (max {})",
+                levels(*bits) - 1
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ApproxError {}
+
+/// Validate one approximation's genes against a tree with `n_comparators`
+/// comparator slots: matching lengths, every precision in
+/// `[MIN_BITS, MAX_BITS]`, every threshold representable at its precision.
+pub fn validate_approx(
+    n_comparators: usize,
+    bits: &[u8],
+    thr_int: &[u32],
+) -> Result<(), ApproxError> {
+    if bits.len() != n_comparators || thr_int.len() != n_comparators {
+        return Err(ApproxError::LengthMismatch {
+            n_comparators,
+            bits_len: bits.len(),
+            thr_len: thr_int.len(),
+        });
+    }
+    for (slot, (&b, &t)) in bits.iter().zip(thr_int).enumerate() {
+        if !(MIN_BITS..=MAX_BITS).contains(&b) {
+            return Err(ApproxError::BitsOutOfRange { slot, bits: b });
+        }
+        if t >= levels(b) {
+            return Err(ApproxError::ThresholdOutOfRange { slot, thr_int: t, bits: b });
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +206,31 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn validate_approx_accepts_legal_and_names_the_bad_slot() {
+        assert_eq!(validate_approx(2, &[2, 8], &[3, 255]), Ok(()));
+        assert_eq!(
+            validate_approx(2, &[2], &[3, 255]),
+            Err(ApproxError::LengthMismatch { n_comparators: 2, bits_len: 1, thr_len: 2 })
+        );
+        // bits = 9 would underflow `FEATURE_BITS - bits` in the engines.
+        assert_eq!(
+            validate_approx(2, &[4, 9], &[3, 0]),
+            Err(ApproxError::BitsOutOfRange { slot: 1, bits: 9 })
+        );
+        assert_eq!(
+            validate_approx(1, &[1], &[0]),
+            Err(ApproxError::BitsOutOfRange { slot: 0, bits: 1 })
+        );
+        assert_eq!(
+            validate_approx(1, &[4], &[16]),
+            Err(ApproxError::ThresholdOutOfRange { slot: 0, thr_int: 16, bits: 4 })
+        );
+        // The Display strings are what engine errors surface to drivers.
+        let msg = ApproxError::BitsOutOfRange { slot: 3, bits: 11 }.to_string();
+        assert!(msg.contains("slot 3") && msg.contains("11"), "{msg}");
     }
 
     #[test]

@@ -76,18 +76,22 @@ impl Bench {
 
     fn report(&mut self, name: &str, summary: Summary) {
         let full = format!("{}/{}", self.group, name);
+        // One sort answers both quantiles for both output lines (the old
+        // per-call percentile() sorted the sample vec four times here).
+        let ps = summary.percentiles(&[0.5, 0.99]);
+        let (p50, p99) = (ps[0], ps[1]);
         println!(
             "bench {full:<52} mean {:>12}  p50 {:>12}  p99 {:>12}  (n={})",
             fmt_duration_ns(summary.mean()),
-            fmt_duration_ns(summary.median()),
-            fmt_duration_ns(summary.percentile(0.99)),
+            fmt_duration_ns(p50),
+            fmt_duration_ns(p99),
             summary.len(),
         );
         println!(
             "BENCHJSON {{\"bench\":\"{full}\",\"mean_ns\":{:.1},\"p50_ns\":{:.1},\"p99_ns\":{:.1},\"n\":{}}}",
             summary.mean(),
-            summary.median(),
-            summary.percentile(0.99),
+            p50,
+            p99,
             summary.len(),
         );
         self.results.push((name.to_string(), summary));
@@ -97,6 +101,65 @@ impl Bench {
     /// which report paper metrics rather than wallclock).
     pub fn row(&self, line: &str) {
         println!("{line}");
+    }
+
+    /// Every recorded `(name, summary)` pair, in report order — for
+    /// benches that derive their own metrics (speedups) from the raw
+    /// summaries.
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+
+    /// Mean of a recorded benchmark by name (NaN when absent) — the
+    /// building block for derived speedup entries.
+    pub fn mean_ns(&self, name: &str) -> f64 {
+        self.results
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.mean())
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Persist every recorded benchmark (plus caller-derived scalar
+    /// metrics) as machine-readable JSON, written atomically (tmp +
+    /// rename, like `runs.json`) so CI / EXPERIMENTS.md tooling never
+    /// reads a torn file.
+    pub fn save_json(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        derived: &[(&str, f64)],
+    ) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        // Non-finite values (a derived ratio over a skipped bench) become
+        // null — "NaN" is not JSON.
+        fn num(v: f64) -> Json {
+            if v.is_finite() {
+                Json::num(v)
+            } else {
+                Json::Null
+            }
+        }
+        let benches: Vec<Json> = self
+            .results
+            .iter()
+            .map(|(name, s)| {
+                let ps = s.percentiles(&[0.5, 0.99]);
+                Json::obj(vec![
+                    ("name", Json::str(name.clone())),
+                    ("mean_ns", num(s.mean())),
+                    ("p50_ns", num(ps[0])),
+                    ("p99_ns", num(ps[1])),
+                    ("n", Json::num(s.len() as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("group", Json::str(self.group.clone())),
+            ("quick", Json::Bool(self.quick)),
+            ("benches", Json::Arr(benches)),
+            ("derived", Json::obj(derived.iter().map(|&(k, v)| (k, num(v))).collect())),
+        ]);
+        crate::util::fsx::write_atomic(path, &format!("{doc}\n"))
     }
 }
 
@@ -134,5 +197,24 @@ mod tests {
         let mut b = Bench::new("test");
         b.record_once("one", Duration::from_millis(5));
         assert_eq!(b.results[0].1.len(), 1);
+    }
+
+    #[test]
+    fn save_json_roundtrips_and_nulls_nonfinite() {
+        use crate::util::json::Json;
+        let mut b = Bench::new("grp");
+        b.record_once("a", Duration::from_millis(2));
+        b.record_once("b", Duration::from_millis(4));
+        assert!((b.mean_ns("a") - 2e6).abs() < 1.0);
+        assert!(b.mean_ns("missing").is_nan());
+        let path = std::env::temp_dir().join("axdt_bench_save.json");
+        let speedup = b.mean_ns("b") / b.mean_ns("a");
+        b.save_json(&path, &[("speedup", speedup), ("skipped", f64::NAN)]).unwrap();
+        let doc = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        assert_eq!(doc.get("group").unwrap().as_str(), Some("grp"));
+        assert_eq!(doc.get("benches").unwrap().as_arr().unwrap().len(), 2);
+        let derived = doc.get("derived").unwrap();
+        assert!((derived.get("speedup").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        assert_eq!(derived.get("skipped"), Some(&Json::Null));
     }
 }

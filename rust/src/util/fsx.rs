@@ -1,0 +1,33 @@
+//! Filesystem helpers: atomic whole-file writes.
+
+use std::io;
+use std::path::Path;
+
+/// Write `contents` to `path` atomically: write a sibling `.tmp` file,
+/// then rename over the target, so readers (dashboards tailing
+/// `runs.json`, CI parsing `BENCH_*.json`) never observe a torn file.
+pub fn write_atomic(path: impl AsRef<Path>, contents: &str) -> io::Result<()> {
+    let path = path.as_ref();
+    let tmp = path.with_extension(match path.extension() {
+        Some(ext) => format!("{}.tmp", ext.to_string_lossy()),
+        None => "tmp".to_string(),
+    });
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("axdt_fsx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        write_atomic(&path, "{\"a\":1}").unwrap();
+        write_atomic(&path, "{\"a\":2}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"a\":2}");
+        assert!(!dir.join("out.json.tmp").exists(), "tmp file must be renamed away");
+    }
+}

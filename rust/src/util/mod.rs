@@ -12,6 +12,8 @@
 //! * [`json`] — minimal JSON value model, parser and writer (artifact
 //!   metadata, config files, experiment reports).
 //! * [`cli`] — declarative command-line parsing for the `axdt` launcher.
+//! * [`fsx`] — atomic tmp+rename file writes (`runs.json`, trace
+//!   exports, `BENCH_*.json`).
 //! * [`pool`] — scoped parallel-map helpers with dynamic work claiming
 //!   (chunk queue for `par_map`, atomic next-index work stealing for
 //!   `par_for_each_indexed`).
@@ -36,6 +38,7 @@
 pub mod bench;
 pub mod cli;
 pub mod clock;
+pub mod fsx;
 pub mod json;
 pub mod pool;
 pub mod prop;

@@ -55,23 +55,38 @@ impl Summary {
             .sqrt()
     }
     /// Percentile via linear interpolation on the sorted sample (q in [0,1]).
+    ///
+    /// Sorts per call — a batch of quantiles (a p50/p90/p99 report line)
+    /// should use [`Self::percentiles`], which sorts once.
     pub fn percentile(&self, q: f64) -> f64 {
+        self.percentiles(std::slice::from_ref(&q))[0]
+    }
+
+    /// A batch of percentiles answered from ONE sort of the sample —
+    /// rendering p50/p90/p99 used to cost three O(n log n) clones+sorts.
+    pub fn percentiles(&self, qs: &[f64]) -> Vec<f64> {
         if self.xs.is_empty() {
-            return f64::NAN;
+            return vec![f64::NAN; qs.len()];
         }
         let mut s = self.xs.clone();
         s.sort_by(|a, b| a.total_cmp(b));
-        let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
-        let i = pos.floor() as usize;
-        let frac = pos - i as f64;
-        if i + 1 < s.len() {
-            s[i] * (1.0 - frac) + s[i + 1] * frac
-        } else {
-            s[i]
-        }
+        qs.iter().map(|&q| percentile_sorted(&s, q)).collect()
     }
+
     pub fn median(&self) -> f64 {
         self.percentile(0.5)
+    }
+}
+
+/// Linear-interpolation percentile over an already-sorted non-empty slice.
+fn percentile_sorted(s: &[f64], q: f64) -> f64 {
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i + 1 < s.len() {
+        s[i] * (1.0 - frac) + s[i + 1] * frac
+    } else {
+        s[i]
     }
 }
 
@@ -296,6 +311,18 @@ mod tests {
         assert_eq!(s.percentile(0.25), 2.5);
         assert_eq!(s.percentile(1.0), 10.0);
         assert_eq!(s.percentile(0.0), 0.0);
+    }
+
+    #[test]
+    fn percentiles_batch_matches_singles() {
+        let s = Summary::from_slice(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        let qs = [0.0, 0.25, 0.5, 0.99, 1.0];
+        let batch = s.percentiles(&qs);
+        for (&q, &got) in qs.iter().zip(&batch) {
+            assert_eq!(got, s.percentile(q), "q={q}");
+        }
+        assert!(Summary::new().percentiles(&qs).iter().all(|x| x.is_nan()));
+        assert!(Summary::new().percentiles(&[]).is_empty());
     }
 
     #[test]

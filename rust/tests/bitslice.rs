@@ -1,0 +1,143 @@
+//! Bit-sliced kernel ≡ scalar oracle, pinned across every dataset
+//! generator and across test-set sizes that exercise the tail-lane mask.
+//!
+//! The native engine's default kernel evaluates 64 samples per `u64` word
+//! (see `fitness::native`); the scalar per-sample walk is kept as the
+//! oracle.  These tests pin the two **bit-identical** — same `f64` bits,
+//! not approximately equal — on every generator in `generators::SPECS`
+//! (each has its own feature distribution: continuous, discrete-grid,
+//! imbalanced, wide) and on test-set sizes that are deliberately NOT
+//! multiples of 64, where a wrong tail mask would count phantom lanes.
+//!
+//! Big generators are row-subsampled before the split: tier-1 runs this
+//! in debug mode, and the kernel contract is about code distributions and
+//! word tails, not the paper's full cardinalities.
+
+use axdt::data::{generators, Dataset};
+use axdt::dt::{train, TrainConfig};
+use axdt::fitness::native::{accuracy_sliced, NativeEngine};
+use axdt::fitness::{AccuracyEngine, Problem};
+use axdt::hw::synth::TreeApprox;
+use axdt::hw::{AreaLut, EgtLibrary};
+use axdt::util::prop::{check, PropConfig};
+use axdt::util::rng::Pcg64;
+
+/// Row-subsampled problem: first `keep` generated rows, leaf-capped tree
+/// (debug-mode tier-1 budget; the kernel contract doesn't need the
+/// paper-size trees).
+fn subsampled_problem(
+    spec: &generators::DatasetSpec,
+    keep: usize,
+    lut: &AreaLut,
+    lib: &EgtLibrary,
+) -> Problem {
+    let full = generators::generate(spec, 11);
+    let n = full.n_samples.min(keep);
+    let data = Dataset {
+        name: full.name.clone(),
+        x: full.x[..n * full.n_features].to_vec(),
+        y: full.y[..n].to_vec(),
+        n_samples: n,
+        n_features: full.n_features,
+        n_classes: full.n_classes,
+    };
+    let (train_d, test_d) = data.split(0.3, 11);
+    let tree = train(
+        &train_d,
+        &TrainConfig { max_leaves: spec.max_leaves.min(24), min_samples_split: 2 },
+    );
+    Problem::new(spec.id, tree, &test_d, lut, lib, 5)
+}
+
+fn random_approx(p: &Problem, rng: &mut Pcg64) -> TreeApprox {
+    let n = p.n_comparators();
+    let bits: Vec<u8> = (0..n).map(|_| rng.int_in(2, 8) as u8).collect();
+    let thr_int: Vec<u32> = (0..n)
+        .map(|j| {
+            let t = axdt::quant::int_threshold(p.thresholds[j], bits[j]);
+            axdt::quant::substitute(t, rng.int_in(-5, 5) as i32, bits[j])
+        })
+        .collect();
+    TreeApprox { bits, thr_int }
+}
+
+/// Every generator in SPECS: batched bit-sliced accuracy is bit-identical
+/// to the scalar oracle, chromosome by chromosome.  The per-spec row caps
+/// land test-set sizes on a mix of word tails — exact multiples of 64 and
+/// odd remainders both — so a tail-mask regression on any distribution
+/// shape fails here by name.
+#[test]
+fn sliced_matches_scalar_on_every_generator() {
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+    // round(0.3 × keep) = n_test: 64 exactly (one full-word boundary),
+    // then a spread of non-multiples across 1..4 words.
+    let keeps = [213usize, 437, 203, 533, 337, 713, 257, 190, 310, 497];
+    assert_eq!(keeps.len(), generators::SPECS.len());
+
+    let mut tails_seen = std::collections::BTreeSet::new();
+    for (spec, &keep) in generators::SPECS.iter().zip(&keeps) {
+        let p = subsampled_problem(spec, keep, &lut, &lib);
+        tails_seen.insert(p.n_test % 64);
+
+        let mut rng = Pcg64::seeded(0xB17 ^ keep as u64);
+        let batch: Vec<TreeApprox> = (0..4).map(|_| random_approx(&p, &mut rng)).collect();
+        let mut engine = NativeEngine { threads: 2, scalar: false };
+        let accs = engine.batch_accuracy(&p, &batch).unwrap();
+        for (approx, &sliced) in batch.iter().zip(&accs) {
+            let scalar = NativeEngine::accuracy_one(&p, approx);
+            assert_eq!(
+                scalar.to_bits(),
+                sliced.to_bits(),
+                "{}: n_test={} scalar={scalar} sliced={sliced}",
+                spec.id,
+                p.n_test
+            );
+        }
+    }
+    assert!(
+        tails_seen.contains(&0) && tails_seen.len() >= 4,
+        "row caps must exercise full-word and varied partial-word tails, got {tails_seen:?}"
+    );
+}
+
+/// Seeded property test: random trees-by-subsample, random precisions and
+/// substitutions, random odd test-set truncations — sliced == scalar,
+/// bit for bit, every case (failure replays by printed seed).
+#[test]
+fn prop_sliced_equals_scalar_on_random_approximations() {
+    let lib = EgtLibrary::default();
+    let lut = AreaLut::build(&lib);
+    // Three tail shapes per problem set: sub-word, exact word, multi-word
+    // with an odd tail.
+    let problems: Vec<Problem> = [("seeds", 210usize), ("vertebral", 310), ("balance", 427)]
+        .iter()
+        .map(|&(id, keep)| subsampled_problem(generators::spec(id).unwrap(), keep, &lut, &lib))
+        .collect();
+    for (p, want_tail) in problems.iter().zip([63usize, 29, 0]) {
+        // Guard the fixture: each problem must land on its intended tail.
+        assert_eq!(p.n_test % 64, want_tail, "{}: n_test={}", p.name, p.n_test);
+    }
+
+    check(
+        "bitslice==scalar",
+        PropConfig { cases: 48, seed: 0x511CED },
+        |rng| {
+            let which = rng.below(problems.len() as u64) as usize;
+            (which, random_approx(&problems[which], rng))
+        },
+        |(which, approx)| {
+            let p = &problems[*which];
+            let scalar = NativeEngine::accuracy_one(p, approx);
+            let sliced = accuracy_sliced(p, approx);
+            if scalar.to_bits() == sliced.to_bits() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{} (n_test={}): scalar {scalar} != sliced {sliced}",
+                    p.name, p.n_test
+                ))
+            }
+        },
+    );
+}

@@ -57,7 +57,8 @@ fn three_way_equivalence_on_random_approximations() {
             (TreeApprox { bits, thr_int }, rng.next_u64())
         },
         |(approx, sample_seed)| {
-            // (a) walk vs netlist on random feature codes.
+            // (a) walk vs netlist on random feature codes.  The slot table
+            // is the problem's precomputed node→slot map (same tree).
             let circuit = synth::synth_tree(tree, approx);
             let mut rng = Pcg64::seeded(*sample_seed);
             for _ in 0..16 {
@@ -72,7 +73,12 @@ fn three_way_equivalence_on_random_approximations() {
                 let out = circuit.netlist.eval(&ins);
                 let got: u32 =
                     out.iter().enumerate().map(|(m, &b)| (b as u32) << m).sum();
-                let want = synth::predict_codes(tree, approx, &codes);
+                let want = synth::predict_codes_with_slots(
+                    tree,
+                    &problem.slot_of_node,
+                    approx,
+                    &codes,
+                );
                 if got != want {
                     return Err(format!("netlist {got} != walk {want}"));
                 }
