@@ -22,12 +22,13 @@ lint:
 	cargo run -q -p axdt-lint
 	cargo test -q -p axdt-lint
 
-# ThreadSanitizer over the four concurrency suites (needs a nightly
+# ThreadSanitizer over the five concurrency suites (needs a nightly
 # toolchain with the rust-src component; mirrors .github/workflows/tsan.yml).
 tsan:
 	RUSTFLAGS="-Zsanitizer=thread" AXDT_THREADS=2 \
 	cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
-		--test shard_pool --test failover --test adaptive_coalesce --test async_eval
+		--test shard_pool --test failover --test adaptive_coalesce --test async_eval \
+		--test cache
 
 clean:
 	cargo clean

@@ -1,6 +1,6 @@
 //! Shard-pool scaling bench: eval-service throughput with 1 vs N workers
-//! on a synthetic multi-driver workload, and padding waste with the
-//! coalescer off vs on.
+//! on a synthetic multi-driver workload, padding waste with the coalescer
+//! off vs on, and the tiered eval-cache's repeat-run payoff.
 //!
 //! The workload models the production shape: several GA drivers (one per
 //! dataset), each hammering its own registered problem with
@@ -16,21 +16,32 @@
 //! Acceptance (ISSUE 5): one driver's micro-batched submit/poll beats its
 //! own monolithic blocking loop >= 1.5x on a 4-shard pool and keeps >= 2
 //! shards busy (blocking pins ~1), bit-identically.
+//! Acceptance (cache tentpole): replaying the same phenotype stream
+//! against a warm shared cache issues ZERO engine evaluations and beats
+//! the cold pass >= 5x wall-clock (`repeat_speedup` in BENCH_shard.json).
+//!
+//! Every scenario lands in `BENCH_shard.json` (written atomically via
+//! `Bench::save_json`, like `BENCH_hotpath.json`): wall-clock per scenario
+//! under `benches`, throughput/speedup scalars under `derived`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use axdt::coordinator::{CoalesceMode, EvalService, PoolOptions, XlaEngine};
+use axdt::fitness::cache::{DatasetFingerprint, EvalCache};
 use axdt::fitness::native::NativeEngine;
-use axdt::fitness::{AccuracyEngine, Problem};
+use axdt::fitness::{AccuracyEngine, FitnessEvaluator, Problem, SharedCache};
+use axdt::ga::{Chromosome, Evaluator};
 use axdt::hw::synth::TreeApprox;
+use axdt::hw::{AreaLut, EgtLibrary};
 use axdt::util::bench::Bench;
+use axdt::util::rng::Pcg64;
 use axdt::util::testbed::{named_problem, random_batch, spawn_killable_native, DRIVER_NAMES};
 
 /// Drive `DRIVER_NAMES.len()` concurrent drivers for `iters` rounds each;
-/// returns chromosome evaluations per second.
-fn multi_driver_throughput(workers: usize, width: usize, iters: usize) -> (f64, String) {
+/// returns (chromosome evaluations per second, wall time, metrics line).
+fn multi_driver_throughput(workers: usize, width: usize, iters: usize) -> (f64, Duration, String) {
     let svc = EvalService::spawn_native_with(
         width,
         &PoolOptions {
@@ -69,11 +80,11 @@ fn multi_driver_throughput(workers: usize, width: usize, iters: usize) -> (f64, 
             });
         }
     });
-    let dt = t0.elapsed().as_secs_f64();
+    let dt = t0.elapsed();
     let evals = (DRIVER_NAMES.len() * iters * width) as f64;
     let report = svc.metrics.render();
     svc.shutdown();
-    (evals / dt, report)
+    (evals / dt.as_secs_f64(), dt, report)
 }
 
 /// 4 drivers hammer ONE problem with sub-width batches (5 at width 32):
@@ -116,8 +127,13 @@ fn padding_waste(window_us: u64, rounds: usize) -> (f64, String) {
 /// the next shard, so at most one worker runs at a time; the pipelined
 /// driver submits every problem's micro-batch before collecting any, so
 /// all four shards execute concurrently under the same single thread.
-/// Returns (evals/s, mean shards busy, first-round results, metrics).
-fn one_driver(pipelined: bool, width: usize, rounds: usize) -> (f64, f64, Vec<Vec<f64>>, String) {
+/// Returns (evals/s, mean shards busy, wall time, first-round results,
+/// metrics).
+fn one_driver(
+    pipelined: bool,
+    width: usize,
+    rounds: usize,
+) -> (f64, f64, Duration, Vec<Vec<f64>>, String) {
     let svc = EvalService::spawn_native_with(
         width,
         &PoolOptions {
@@ -169,7 +185,7 @@ fn one_driver(pipelined: bool, width: usize, rounds: usize) -> (f64, f64, Vec<Ve
     let thr = (DRIVER_NAMES.len() * rounds * width) as f64 / dt.as_secs_f64();
     let report = svc.metrics.render();
     svc.shutdown();
-    (thr, occupancy, first_round, report)
+    (thr, occupancy, dt, first_round, report)
 }
 
 /// Failover cost: the multi-driver workload with one of 4 workers killed
@@ -177,7 +193,7 @@ fn one_driver(pipelined: bool, width: usize, rounds: usize) -> (f64, f64, Vec<Ve
 /// so the dead shard's drivers heal (re-register onto survivors) instead
 /// of erroring — throughput degrades toward 3/4 of the healthy pool, it
 /// does not collapse to zero.
-fn failover_throughput(width: usize, iters: usize) -> (f64, String) {
+fn failover_throughput(width: usize, iters: usize) -> (f64, Duration, String) {
     let kill = Arc::new(AtomicU64::new(0));
     let pool = spawn_killable_native(
         width,
@@ -214,11 +230,11 @@ fn failover_throughput(width: usize, iters: usize) -> (f64, String) {
             });
         }
     });
-    let dt = t0.elapsed().as_secs_f64();
+    let dt = t0.elapsed();
     let evals = (DRIVER_NAMES.len() * iters * width) as f64;
     let report = svc.metrics.render();
     svc.shutdown();
-    (evals / dt, report)
+    (evals / dt.as_secs_f64(), dt, report)
 }
 
 /// Fixed vs adaptive coalescing under two arrival shapes: 4 drivers, each
@@ -287,38 +303,93 @@ fn coalesce_policy_run(
     ((drivers * rounds * 5) as f64 / dt, mean_width, waste, report)
 }
 
+/// The cache tentpole's repeat-run scenario: one phenotype stream driven
+/// through a service-backed evaluator twice against ONE shared cache.
+/// The cold pass pays the ticket seam and the engine; the warm pass must
+/// resolve every phenotype from L1 — zero engine evaluations,
+/// bit-identical objectives — which is where the >= 5x wall-clock payoff
+/// comes from.  Returns (cold wall, warm wall, cold engine evals, warm
+/// engine evals, warm L1 hits, metrics line).
+fn repeat_eval(width: usize, rounds: usize) -> (Duration, Duration, usize, usize, usize, String) {
+    let svc = EvalService::spawn_native(width);
+    let p = named_problem("seeds");
+    let lut = AreaLut::build(&EgtLibrary::default());
+    let cache = Arc::new(EvalCache::in_memory());
+    let fp = DatasetFingerprint::compute("seeds", 42, 210, 8);
+    let wire = || SharedCache {
+        cache: Arc::clone(&cache),
+        fingerprint: fp,
+        metrics: Arc::clone(&svc.metrics),
+        clock: svc.clock(),
+    };
+    // The same deterministic stream of mostly-distinct phenotypes for
+    // both passes: `rounds` GA-generation-sized populations.
+    let pops: Vec<Vec<Chromosome>> = (0..rounds)
+        .map(|r| {
+            let mut rng = Pcg64::seeded(0xBEEF + r as u64);
+            (0..width * 4).map(|_| Chromosome::random(&mut rng, p.n_comparators())).collect()
+        })
+        .collect();
+
+    let engine = XlaEngine::register(&svc, Arc::clone(&p)).unwrap();
+    let mut cold = FitnessEvaluator::new(&p, &lut, engine);
+    cold.shared = Some(wire());
+    let t0 = Instant::now();
+    let cold_objs: Vec<_> = pops.iter().map(|pop| cold.evaluate(pop)).collect();
+    let cold_dt = t0.elapsed();
+    assert!(cold.take_error().is_none());
+
+    let engine = XlaEngine::register(&svc, Arc::clone(&p)).unwrap();
+    let mut warm = FitnessEvaluator::new(&p, &lut, engine);
+    warm.shared = Some(wire());
+    let t1 = Instant::now();
+    let warm_objs: Vec<_> = pops.iter().map(|pop| warm.evaluate(pop)).collect();
+    let warm_dt = t1.elapsed();
+    assert!(warm.take_error().is_none());
+    assert_eq!(warm_objs, cold_objs, "warm pass must be bit-identical to cold");
+    assert_eq!(warm.stats.engine_evals, 0, "warm pass must never touch the engine");
+
+    let report = svc.metrics.render();
+    let (ce, we, wl1) = (cold.stats.engine_evals, warm.stats.engine_evals, warm.stats.l1_hits);
+    svc.shutdown();
+    (cold_dt, warm_dt, ce, we, wl1, report)
+}
+
 fn main() {
-    let b = Bench::new("shard");
+    let mut b = Bench::new("shard");
     let quick = b.quick();
     let width = 32;
     let iters = if quick { 30 } else { 150 };
+    // Scalar metrics accumulate here and land under `derived` in
+    // BENCH_shard.json next to the per-scenario wall-clock benches.
+    let mut derived: Vec<(String, f64)> = Vec::new();
 
     let mut throughput = Vec::new();
     for workers in [1usize, 4] {
-        let (thr, report) = multi_driver_throughput(workers, width, iters);
+        let (thr, dt, report) = multi_driver_throughput(workers, width, iters);
         throughput.push(thr);
+        b.record_once(&format!("throughput_w{workers}"), dt);
         b.row(&format!(
             "shard/throughput workers={workers}: {thr:.0} evals/s \
              ({} drivers x {iters} iters x {width} batch)",
             DRIVER_NAMES.len()
         ));
         b.row(&format!("shard/metrics workers={workers}: {report}"));
-        println!(
-            "BENCHJSON {{\"bench\":\"shard/throughput_w{workers}\",\"evals_per_s\":{thr:.1}}}"
-        );
+        derived.push((format!("throughput_w{workers}_evals_per_s"), thr));
     }
     let speedup = throughput[1] / throughput[0];
     b.row(&format!(
         "shard/speedup workers4_vs_workers1 = {speedup:.2}x (acceptance target >= 2x)"
     ));
-    println!("BENCHJSON {{\"bench\":\"shard/speedup_4v1\",\"x\":{speedup:.3}}}");
+    derived.push(("speedup_4v1".into(), speedup));
 
     // Pipelined submit/poll vs monolithic blocking eval, ONE driver on a
     // 4-shard pool (acceptance: >= 1.5x and >= 2 shards busy where
     // blocking keeps ~1, bit-identically).
     let pb_rounds = if quick { 20 } else { 80 };
-    let (thr_block, occ_block, res_block, rep_block) = one_driver(false, width, pb_rounds);
-    let (thr_pipe, occ_pipe, res_pipe, rep_pipe) = one_driver(true, width, pb_rounds);
+    let (thr_block, occ_block, dt_block, res_block, rep_block) =
+        one_driver(false, width, pb_rounds);
+    let (thr_pipe, occ_pipe, dt_pipe, res_pipe, rep_pipe) = one_driver(true, width, pb_rounds);
     assert_eq!(res_pipe, res_block, "pipelined must be bit-identical to blocking");
     {
         // …and both must match the direct native engine.
@@ -333,6 +404,8 @@ fn main() {
             );
         }
     }
+    b.record_once("pipeline_blocking", dt_block);
+    b.record_once("pipeline_ticketed", dt_pipe);
     let speedup_pipe = thr_pipe / thr_block;
     b.row(&format!(
         "shard/pipeline blocking 1-driver: {thr_block:.0} evals/s, \
@@ -349,25 +422,23 @@ fn main() {
          {occ_pipe:.2} (acceptance >= 1.5x and >= 2 shards busy: {})",
         speedup_pipe >= 1.5 && occ_pipe >= 2.0
     ));
-    println!(
-        "BENCHJSON {{\"bench\":\"shard/pipelined_vs_blocking\",\
-         \"blocking_evals_per_s\":{thr_block:.1},\
-         \"pipelined_evals_per_s\":{thr_pipe:.1},\"speedup\":{speedup_pipe:.3},\
-         \"blocking_shards_busy\":{occ_block:.3},\
-         \"pipelined_shards_busy\":{occ_pipe:.3}}}"
-    );
+    derived.push(("pipeline_blocking_evals_per_s".into(), thr_block));
+    derived.push(("pipeline_ticketed_evals_per_s".into(), thr_pipe));
+    derived.push(("pipeline_speedup".into(), speedup_pipe));
+    derived.push(("pipeline_blocking_shards_busy".into(), occ_block));
+    derived.push(("pipeline_ticketed_shards_busy".into(), occ_pipe));
 
-    let (thr_failover, report) = failover_throughput(width, iters);
+    let (thr_failover, dt_failover, report) = failover_throughput(width, iters);
     let retained = thr_failover / throughput[1];
+    b.record_once("failover", dt_failover);
     b.row(&format!(
         "shard/failover 1-of-4 workers killed at 25%: {thr_failover:.0} evals/s \
          ({:.0}% of healthy 4-worker throughput; all drivers completed)",
         100.0 * retained
     ));
     b.row(&format!("shard/failover metrics: {report}"));
-    println!(
-        "BENCHJSON {{\"bench\":\"shard/failover_throughput\",\"evals_per_s\":{thr_failover:.1},\"retained_vs_healthy\":{retained:.3}}}"
-    );
+    derived.push(("failover_evals_per_s".into(), thr_failover));
+    derived.push(("failover_retained_vs_healthy".into(), retained));
 
     let rounds = if quick { 40 } else { 150 };
     let (waste_off, report_off) = padding_waste(0, rounds);
@@ -386,9 +457,8 @@ fn main() {
         100.0 * waste_on,
         waste_on < waste_off
     ));
-    println!(
-        "BENCHJSON {{\"bench\":\"shard/padding_waste\",\"uncoalesced\":{waste_off:.4},\"coalesced\":{waste_on:.4}}}"
-    );
+    derived.push(("padding_waste_uncoalesced".into(), waste_off));
+    derived.push(("padding_waste_coalesced".into(), waste_on));
 
     // Fixed vs adaptive coalescing under bursty and steady arrivals.
     // Acceptance (ISSUE 4): under bursty arrivals, adaptive's mean
@@ -409,11 +479,9 @@ fn main() {
                 100.0 * waste
             ));
             b.row(&format!("shard/coalesce {pattern}/{label} metrics: {report}"));
-            println!(
-                "BENCHJSON {{\"bench\":\"shard/coalesce_{pattern}_{label}\",\
-                 \"evals_per_s\":{thr:.1},\"mean_width\":{mean_width:.2},\
-                 \"padding_waste\":{waste:.4}}}"
-            );
+            derived.push((format!("coalesce_{pattern}_{label}_evals_per_s"), thr));
+            derived.push((format!("coalesce_{pattern}_{label}_mean_width"), mean_width));
+            derived.push((format!("coalesce_{pattern}_{label}_padding_waste"), waste));
         }
         let (fixed_w, adaptive_w) = (widths[0], widths[1]);
         b.row(&format!(
@@ -421,10 +489,38 @@ fn main() {
              {fixed_w:.1} (adaptive >= fixed: {})",
             adaptive_w >= fixed_w
         ));
-        println!(
-            "BENCHJSON {{\"bench\":\"shard/coalesce_{pattern}_width_ratio\",\
-             \"x\":{:.3}}}",
-            adaptive_w / fixed_w.max(1e-9)
-        );
+        derived.push((format!("coalesce_{pattern}_width_ratio"), adaptive_w / fixed_w.max(1e-9)));
     }
+
+    // Repeat-run cold/warm over one shared cache (the tentpole's payoff).
+    // Zero warm engine evals and bit-identity are hard-asserted inside
+    // `repeat_eval` (deterministic contracts); the wall-clock ratio is
+    // reported, not asserted — timing thresholds flake on shared runners.
+    let repeat_rounds = if quick { 4 } else { 12 };
+    let (cold_dt, warm_dt, cold_evals, warm_evals, warm_l1, report) =
+        repeat_eval(width, repeat_rounds);
+    b.record_once("repeat_cold", cold_dt);
+    b.record_once("repeat_warm", warm_dt);
+    let repeat_speedup = cold_dt.as_secs_f64() / warm_dt.as_secs_f64().max(1e-12);
+    b.row(&format!(
+        "shard/repeat cold: {cold_evals} engine evals in {:.1} ms; warm: {warm_evals} \
+         engine evals, {warm_l1} L1 hits in {:.1} ms",
+        cold_dt.as_secs_f64() * 1e3,
+        warm_dt.as_secs_f64() * 1e3
+    ));
+    b.row(&format!("shard/repeat metrics: {report}"));
+    b.row(&format!(
+        "shard/repeat speedup = {repeat_speedup:.2}x (acceptance target >= 5x: {})",
+        repeat_speedup >= 5.0
+    ));
+    derived.push(("repeat_speedup".into(), repeat_speedup));
+    derived.push(("repeat_cold_engine_evals".into(), cold_evals as f64));
+    derived.push(("repeat_warm_engine_evals".into(), warm_evals as f64));
+    derived.push(("repeat_warm_l1_hits".into(), warm_l1 as f64));
+
+    let derived_refs: Vec<(&str, f64)> =
+        derived.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    b.save_json("BENCH_shard.json", &derived_refs)
+        .expect("writing BENCH_shard.json");
+    b.row("shard: wrote BENCH_shard.json");
 }

@@ -51,6 +51,17 @@ pub struct RunConfig {
     pub microbatch: usize,
     pub accuracy_loss: f64,
     pub out_dir: String,
+    /// L2 eval-cache directory (`--cache-dir`); "" = `<out_dir>/cache`.
+    /// Segment files are keyed by dataset fingerprint, so a directory can
+    /// be shared across runs — stale entries are simply never looked up.
+    pub cache_dir: String,
+    /// Disable the persistent eval cache entirely (`--no-cache`): no L2
+    /// load at startup, no spill at exit, in-memory L1 only.
+    pub no_cache: bool,
+    /// Path to a previous run's `runs.json` (`--warm-start`); "" = off.
+    /// Archived Pareto-front chromosomes seed the initial NSGA-II
+    /// population for matching datasets (re-validated, padded random).
+    pub warm_start: String,
     /// Chrome trace-event JSON output path (`--trace-out`); "" = tracing
     /// off.  A non-empty path enables the service's ticket-lifecycle
     /// [`TraceJournal`](crate::util::trace::TraceJournal) and writes the
@@ -84,6 +95,9 @@ impl Default for RunConfig {
             microbatch: 0, // auto
             accuracy_loss: 0.01,
             out_dir: "results".into(),
+            cache_dir: String::new(), // auto: <out_dir>/cache
+            no_cache: false,
+            warm_start: String::new(),
             trace_out: String::new(),
             metrics_interval_ms: 0,
         }
@@ -127,6 +141,11 @@ impl RunConfig {
         cfg.microbatch = args.usize_or("microbatch", cfg.microbatch)?;
         cfg.accuracy_loss = args.f64_or("loss", cfg.accuracy_loss)?;
         cfg.out_dir = args.str_or("out", &cfg.out_dir);
+        cfg.cache_dir = args.str_or("cache-dir", &cfg.cache_dir);
+        if args.has_flag("no-cache") {
+            cfg.no_cache = true;
+        }
+        cfg.warm_start = args.str_or("warm-start", &cfg.warm_start);
         cfg.trace_out = args.str_or("trace-out", &cfg.trace_out);
         cfg.metrics_interval_ms =
             args.u64_or("metrics-interval-ms", cfg.metrics_interval_ms)?;
@@ -199,6 +218,20 @@ impl RunConfig {
         }
     }
 
+    /// Where the persistent L2 cache tier lives, or `None` when
+    /// `--no-cache` turned persistence off.  An empty `cache_dir`
+    /// defaults to `<out_dir>/cache`, so repeat runs into the same
+    /// `--out` are warm automatically.
+    pub fn resolved_cache_dir(&self) -> Option<String> {
+        if self.no_cache {
+            None
+        } else if self.cache_dir.is_empty() {
+            Some(format!("{}/cache", self.out_dir))
+        } else {
+            Some(self.cache_dir.clone())
+        }
+    }
+
     pub fn run_options(&self) -> crate::coordinator::RunOptions {
         crate::coordinator::RunOptions {
             seed: self.seed,
@@ -207,6 +240,9 @@ impl RunConfig {
             margin_max: self.margin_max,
             engine: self.engine_choice(),
             microbatch: self.microbatch,
+            // The shared cache and warm-start archive are process-level
+            // resources wired up by the launcher (`run_all`), not here.
+            ..crate::coordinator::RunOptions::default()
         }
     }
 
@@ -234,6 +270,9 @@ impl RunConfig {
             ("microbatch", Json::num(self.microbatch as f64)),
             ("accuracy_loss", Json::num(self.accuracy_loss)),
             ("out_dir", Json::str(self.out_dir.clone())),
+            ("cache_dir", Json::str(self.cache_dir.clone())),
+            ("no_cache", Json::Bool(self.no_cache)),
+            ("warm_start", Json::str(self.warm_start.clone())),
             ("trace_out", Json::str(self.trace_out.clone())),
             ("metrics_interval_ms", Json::num(self.metrics_interval_ms as f64)),
         ])
@@ -277,6 +316,12 @@ impl RunConfig {
             microbatch: get_num("microbatch", d.microbatch as f64) as usize,
             accuracy_loss: get_num("accuracy_loss", d.accuracy_loss),
             out_dir: get_str("out_dir", &d.out_dir),
+            cache_dir: get_str("cache_dir", &d.cache_dir),
+            no_cache: j
+                .get("no_cache")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.no_cache),
+            warm_start: get_str("warm_start", &d.warm_start),
             trace_out: get_str("trace_out", &d.trace_out),
             metrics_interval_ms: get_num(
                 "metrics_interval_ms",
@@ -310,6 +355,9 @@ mod tests {
         opt("microbatch", ""),
         opt("loss", ""),
         opt("out", ""),
+        opt("cache-dir", ""),
+        flag("no-cache", ""),
+        opt("warm-start", ""),
         opt("trace-out", ""),
         opt("metrics-interval-ms", ""),
         opt("config", ""),
@@ -504,6 +552,52 @@ mod tests {
         let mut bad = RunConfig::default();
         bad.metrics_interval_ms = 4_000_000;
         assert!(bad.validate().is_err());
+    }
+
+    /// The caching / warm-start knobs: CLI parse, JSON round-trip,
+    /// off-by-default semantics, and `<out>/cache` auto-resolution.
+    #[test]
+    fn cache_knobs_parse_round_trip_and_resolve() {
+        let d = RunConfig::default();
+        assert_eq!(d.cache_dir, "", "auto by default");
+        assert!(!d.no_cache, "persistent cache on by default");
+        assert_eq!(d.warm_start, "", "warm-start off by default");
+        assert_eq!(d.resolved_cache_dir().as_deref(), Some("results/cache"));
+
+        let args = Args::parse(
+            &sv(&[
+                "optimize",
+                "--cache-dir",
+                "/tmp/axdt-cache",
+                "--warm-start",
+                "prev/runs.json",
+            ]),
+            SPEC,
+        )
+        .unwrap();
+        let cfg = RunConfig::resolve(&args).unwrap();
+        assert_eq!(cfg.cache_dir, "/tmp/axdt-cache");
+        assert_eq!(cfg.warm_start, "prev/runs.json");
+        assert_eq!(cfg.resolved_cache_dir().as_deref(), Some("/tmp/axdt-cache"));
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // A config without the keys keeps the defaults.
+        let empty = RunConfig::from_json("{}").unwrap();
+        assert_eq!(empty.cache_dir, "");
+        assert!(!empty.no_cache);
+        assert_eq!(empty.warm_start, "");
+
+        // --no-cache kills persistence regardless of --cache-dir.
+        let args = Args::parse(
+            &sv(&["optimize", "--no-cache", "--cache-dir", "/tmp/x"]),
+            SPEC,
+        )
+        .unwrap();
+        let off = RunConfig::resolve(&args).unwrap();
+        assert!(off.no_cache);
+        assert_eq!(off.resolved_cache_dir(), None);
+        let back = RunConfig::from_json(&off.to_json()).unwrap();
+        assert_eq!(off, back);
     }
 
     #[test]

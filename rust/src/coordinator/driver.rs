@@ -6,6 +6,7 @@
 //! (the paper's "all presented pareto points are evaluated using the tool
 //! flow described above").
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -14,10 +15,12 @@ use super::metrics::Metrics;
 use super::service::{EvalService, XlaEngine};
 use crate::data::generators::{self, DatasetSpec};
 use crate::dt::{train, TrainConfig};
-use crate::fitness::{native::NativeEngine, EvalStats, FitnessEvaluator, Problem};
+use crate::fitness::cache::{DatasetFingerprint, EvalCache};
+use crate::fitness::{native::NativeEngine, EvalStats, FitnessEvaluator, Problem, SharedCache};
 use crate::ga::{run_nsga2, Chromosome, Evaluator, GenStats, NsgaConfig};
-use crate::hw::synth::{self, TreeApprox};
+use crate::hw::synth::{self, TreeApprox, FEATURE_BITS};
 use crate::hw::{AreaLut, EgtLibrary, HwReport};
+use crate::quant;
 use crate::util::clock::{Clock, SystemClock};
 use crate::util::trace::TraceKind;
 
@@ -66,6 +69,16 @@ pub struct RunOptions {
     /// collected.  0 = auto (the engine's preference: pool workers x
     /// artifact width for service engines, whole-batch for native).
     pub microbatch: usize,
+    /// Shared tiered accuracy cache (L1 in-memory, optional L2 on disk),
+    /// `Arc`-shared across every concurrent driver in `run_all`.  `None`
+    /// keeps the pre-cache behavior: a per-run memo only.  The shared
+    /// tiers also need an eval service (its injected clock stamps lookup
+    /// latencies; its metrics take the hit/miss counters).
+    pub cache: Option<Arc<EvalCache>>,
+    /// Archived Pareto-front genes per dataset id (`--warm-start
+    /// runs.json`): re-validated against this run's tree and seeded into
+    /// the initial NSGA-II population after the exact/ladder anchors.
+    pub warm_start: Option<Arc<HashMap<String, Vec<Vec<f64>>>>>,
 }
 
 impl Default for RunOptions {
@@ -77,6 +90,8 @@ impl Default for RunOptions {
             margin_max: 5,
             engine: EngineChoice::Native,
             microbatch: 0,
+            cache: None,
+            warm_start: None,
         }
     }
 }
@@ -89,6 +104,9 @@ pub struct ParetoPoint {
     pub est_area_mm2: f64,
     pub measured: HwReport,
     pub approx: TreeApprox,
+    /// The raw chromosome behind this design, archived in `runs.json` so
+    /// a later run can `--warm-start` from it.
+    pub genes: Vec<f64>,
 }
 
 /// Everything a table/figure needs about one dataset's run.
@@ -284,11 +302,59 @@ pub fn optimize_dataset_ga(
     let baseline_accuracy =
         crate::fitness::native::NativeEngine::accuracy_one(&problem, &exact);
 
+    // Shared-cache wiring: fingerprint this dataset exactly as the
+    // engines see it, so a cached entry can never cross datasets (new
+    // seed → new fingerprint → different segment file).  The shared tiers
+    // ride the service's seams — its injected clock stamps lookup
+    // latencies, its metrics take the hit/miss counters — so without a
+    // service the tiers stay off and only the per-run memo runs.
+    let shared = match (&opts.cache, service) {
+        (Some(cache), Some(svc)) => Some(SharedCache {
+            cache: Arc::clone(cache),
+            fingerprint: DatasetFingerprint::compute(
+                spec.id,
+                opts.seed,
+                spec.n_samples,
+                FEATURE_BITS,
+            ),
+            metrics: Arc::clone(&svc.metrics),
+            clock: svc.clock(),
+        }),
+        _ => None,
+    };
+
+    // Warm start: archived front genes for this dataset, re-validated
+    // against *this* run's tree (gene count, finite [0,1] range, and the
+    // decoded phenotype's representability) before they may seed the
+    // population — a stale archive degrades to a cold start, never a
+    // poisoned one.
+    let warm_seeds: Vec<Chromosome> = opts
+        .warm_start
+        .as_ref()
+        .and_then(|archive| archive.get(spec.id))
+        .map(|fronts| {
+            let ctx = problem.decode_context(&lut);
+            fronts
+                .iter()
+                .filter(|genes| {
+                    genes.len() == 2 * n_comparators
+                        && genes.iter().all(|g| g.is_finite() && (0.0..=1.0).contains(g))
+                })
+                .map(|genes| Chromosome { genes: genes.clone() })
+                .filter(|c| {
+                    let a = c.decode(&ctx);
+                    quant::validate_approx(n_comparators, &a.bits, &a.thr_int).is_ok()
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+
     // GA.
     let ga_cfg = NsgaConfig {
         pop_size: opts.pop_size,
         generations: opts.generations,
         seed: opts.seed,
+        warm_seeds,
         ..Default::default()
     };
     let (result, stats, engine_name): (crate::ga::NsgaResult, EvalStats, &'static str) =
@@ -296,6 +362,7 @@ pub fn optimize_dataset_ga(
             EngineChoice::Native => {
                 let mut ev = FitnessEvaluator::new(&problem, &lut, NativeEngine::default());
                 ev.microbatch = opts.microbatch;
+                ev.shared = shared;
                 let result = run_ga(n_comparators, &ga_cfg, &mut ev, trace.as_ref());
                 // The native engine cannot fail today, but the evaluator
                 // stores errors instead of panicking — never let one pass
@@ -314,6 +381,7 @@ pub fn optimize_dataset_ga(
                 let engine = XlaEngine::register(service, Arc::clone(&problem))?;
                 let mut ev = FitnessEvaluator::new(&problem, &lut, engine);
                 ev.microbatch = opts.microbatch;
+                ev.shared = shared;
                 let result = run_ga(n_comparators, &ga_cfg, &mut ev, trace.as_ref());
                 // A failed batch poisons the run's fitness values: fail
                 // this dataset instead of reporting a front built on
@@ -372,6 +440,7 @@ pub fn finish_dataset(phase: GaPhase) -> DatasetRun {
                 est_area_mm2: s.objectives[1],
                 measured,
                 approx,
+                genes: s.chromosome.genes.clone(),
             }
         })
         .collect();
@@ -424,14 +493,7 @@ mod tests {
     use super::*;
 
     fn quick_opts() -> RunOptions {
-        RunOptions {
-            seed: 42,
-            pop_size: 16,
-            generations: 6,
-            margin_max: 5,
-            engine: EngineChoice::Native,
-            microbatch: 0,
-        }
+        RunOptions { pop_size: 16, generations: 6, ..RunOptions::default() }
     }
 
     #[test]
@@ -544,6 +606,69 @@ mod tests {
         svc.shutdown();
     }
 
+    /// Two runs of the same dataset against one shared cache: the repeat
+    /// costs zero engine evaluations (every unique phenotype of the
+    /// deterministic trajectory hits L1) and reproduces the front
+    /// bit-exactly — the tentpole's core promise, at unit scale.
+    #[test]
+    fn repeat_run_on_shared_cache_is_engine_free() {
+        let svc = EvalService::spawn_native(8);
+        let cache = Arc::new(EvalCache::in_memory());
+        let opts = RunOptions {
+            engine: EngineChoice::NativeService,
+            cache: Some(Arc::clone(&cache)),
+            ..quick_opts()
+        };
+        let cold = optimize_dataset("seeds", &opts, Some(&svc)).unwrap();
+        assert!(cold.stats.engine_evals > 0);
+        assert_eq!(cold.stats.l1_hits + cold.stats.l2_hits, 0, "first run has no shared hits");
+        assert!(!cache.is_empty(), "cold run must publish its evals");
+
+        let warm = optimize_dataset("seeds", &opts, Some(&svc)).unwrap();
+        assert_eq!(warm.stats.engine_evals, 0, "repeat must be pure lookups: {:?}", warm.stats);
+        assert!(warm.stats.l1_hits > 0);
+        assert_eq!(warm.stats.requested, cold.stats.requested);
+        assert_eq!(cold.front.len(), warm.front.len());
+        for (a, b) in cold.front.iter().zip(&warm.front) {
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.est_area_mm2, b.est_area_mm2);
+            assert_eq!(a.genes, b.genes);
+        }
+        let l1 = svc.metrics.cache_l1_hits.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(l1 >= warm.stats.l1_hits as u64, "live counter tracks the run");
+        assert!(svc.metrics.render().contains("cache: l1_hits="), "{}", svc.metrics.render());
+        svc.shutdown();
+    }
+
+    /// A warm-started GA accepts only seeds that survive re-validation,
+    /// and the seeded run stays deterministic (same opts → same front).
+    #[test]
+    fn warm_start_seeds_are_validated_and_deterministic() {
+        let cold = optimize_dataset("seeds", &quick_opts(), None).unwrap();
+        let genes: Vec<Vec<f64>> = cold.front.iter().map(|p| p.genes.clone()).collect();
+        assert!(genes.iter().all(|g| !g.is_empty()), "front archives its genes");
+
+        let mut archive: HashMap<String, Vec<Vec<f64>>> = HashMap::new();
+        let mut seeds = genes.clone();
+        seeds.push(vec![0.5; 3]); // wrong gene count: dropped by validation
+        seeds.push(vec![f64::NAN; genes[0].len()]); // non-finite: dropped
+        archive.insert("seeds".to_string(), seeds);
+        let opts = RunOptions { warm_start: Some(Arc::new(archive)), ..quick_opts() };
+        let a = optimize_dataset("seeds", &opts, None).unwrap();
+        let b = optimize_dataset("seeds", &opts, None).unwrap();
+        assert_eq!(a.front.len(), b.front.len());
+        for (pa, pb) in a.front.iter().zip(&b.front) {
+            assert_eq!(pa.accuracy, pb.accuracy);
+            assert_eq!(pa.est_area_mm2, pb.est_area_mm2);
+        }
+        // Warm-started search must never end below the cold baseline's
+        // best accuracy: the archived best is in its initial population.
+        let best = |run: &DatasetRun| {
+            run.front.iter().map(|p| p.accuracy).fold(f64::NEG_INFINITY, f64::max)
+        };
+        assert!(best(&a) >= best(&cold) - 1e-12, "{} vs {}", best(&a), best(&cold));
+    }
+
     #[test]
     fn best_within_loss_selection() {
         let run = optimize_dataset("seeds", &quick_opts(), None).unwrap();
@@ -583,6 +708,7 @@ mod tests {
             est_area_mm2: area,
             measured: report(area),
             approx: TreeApprox { bits: vec![8], thr_int: vec![0] },
+            genes: Vec::new(),
         };
         let run = DatasetRun {
             spec,

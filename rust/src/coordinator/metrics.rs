@@ -140,6 +140,20 @@ pub struct Metrics {
     pub eval_cache_hits: AtomicU64,
     /// …and the engine actually evaluated (post-dedup misses).
     pub eval_engine_evals: AtomicU64,
+    /// Shared-cache hits answered by the in-memory L1 tier (entries this
+    /// process produced), bumped live by the fitness evaluator.
+    pub cache_l1_hits: AtomicU64,
+    /// Shared-cache hits answered by the persistent L2 tier (entries
+    /// loaded from disk segments).  A warm repeat run proves itself with
+    /// `engine_evals == 0` next to a nonzero value here.
+    pub cache_l2_hits: AtomicU64,
+    /// Shared-cache probes that found nothing in either tier.
+    pub cache_misses: AtomicU64,
+    /// Entries appended to disk segments by cache spills.
+    pub cache_spills: AtomicU64,
+    /// Corrupt/torn segment records that made the L2 loader stop a file
+    /// early (each counts once; the good prefix is still served).
+    pub cache_load_errors: AtomicU64,
     /// Bit-plane builds performed at problem registration (the native
     /// engine's one-time test-set transpose; at most one per problem).
     pub plane_builds: AtomicU64,
@@ -160,6 +174,9 @@ pub struct Metrics {
     /// Submit→collect latency per ticket (ns): queueing + coalescing +
     /// execution, as the client experiences it.
     ticket_latency: Log2Histogram,
+    /// Shared-cache probe latency (ns), hit or miss: the price a repeat
+    /// request pays instead of an engine evaluation.
+    cache_lookup: Log2Histogram,
     /// Ticket-lifecycle event journal (off by default; enabled by
     /// `--trace-out`).  Producers guard on `trace.enabled()` — one
     /// relaxed load — so a disabled journal stays off the hot path.
@@ -262,6 +279,19 @@ impl Metrics {
         self.eval_requested.fetch_add(stats.requested as u64, Ordering::Relaxed);
         self.eval_cache_hits.fetch_add(stats.cache_hits as u64, Ordering::Relaxed);
         self.eval_engine_evals.fetch_add(stats.engine_evals as u64, Ordering::Relaxed);
+        // Tier hits (`l1_hits`/`l2_hits`) are NOT folded here: the
+        // evaluator bumps `cache_l1_hits`/`cache_l2_hits` live on the same
+        // shared instance, so folding them again would double count.
+    }
+
+    /// One shared-cache probe took `ns` on the caller's injected clock.
+    pub fn record_cache_lookup(&self, ns: u64) {
+        self.cache_lookup.record(ns);
+    }
+
+    /// Distribution of shared-cache probe latencies (ns).
+    pub fn cache_lookup_hist(&self) -> HistogramSnapshot {
+        self.cache_lookup.snapshot()
     }
 
     /// One bit-plane build finished, `elapsed_ns` on the caller's
@@ -494,6 +524,25 @@ impl Metrics {
                 self.eval_engine_evals.load(Ordering::Relaxed),
             ));
         }
+        // Tiered shared-cache surface: only rendered once a probe, spill,
+        // or load-error happened, so untiered runs keep their exact line.
+        let cache_activity = self.cache_l1_hits.load(Ordering::Relaxed)
+            + self.cache_l2_hits.load(Ordering::Relaxed)
+            + self.cache_misses.load(Ordering::Relaxed)
+            + self.cache_spills.load(Ordering::Relaxed)
+            + self.cache_load_errors.load(Ordering::Relaxed);
+        if cache_activity > 0 {
+            let cl = self.cache_lookup_hist();
+            s.push_str(&format!(
+                " cache: l1_hits={} l2_hits={} misses={} spills={} load_errors={} lookup_p50={}",
+                self.cache_l1_hits.load(Ordering::Relaxed),
+                self.cache_l2_hits.load(Ordering::Relaxed),
+                self.cache_misses.load(Ordering::Relaxed),
+                self.cache_spills.load(Ordering::Relaxed),
+                self.cache_load_errors.load(Ordering::Relaxed),
+                crate::util::stats::fmt_duration_ns(cl.p50() as f64),
+            ));
+        }
         // Native-engine throughput surface: only rendered once a plane
         // build or sample-accounted execution happened, so XLA-only and
         // legacy instances keep their exact line.
@@ -549,6 +598,7 @@ impl Metrics {
             ("batch_width", hist(&self.batch_width_hist())),
             ("microbatch_width", hist(&self.microbatch_width_hist())),
             ("ticket_latency_ns", hist(&self.ticket_latency_hist())),
+            ("cache_lookup_ns", hist(&self.cache_lookup_hist())),
         ])
     }
 
@@ -584,6 +634,14 @@ impl Metrics {
             ("plane_builds", Json::num(self.plane_builds.load(Ordering::Relaxed) as f64)),
             ("plane_build_ns", Json::num(self.plane_build_ns.load(Ordering::Relaxed) as f64)),
             ("eval_samples", Json::num(self.eval_samples.load(Ordering::Relaxed) as f64)),
+            ("cache_l1_hits", Json::num(self.cache_l1_hits.load(Ordering::Relaxed) as f64)),
+            ("cache_l2_hits", Json::num(self.cache_l2_hits.load(Ordering::Relaxed) as f64)),
+            ("cache_misses", Json::num(self.cache_misses.load(Ordering::Relaxed) as f64)),
+            ("cache_spills", Json::num(self.cache_spills.load(Ordering::Relaxed) as f64)),
+            (
+                "cache_load_errors",
+                Json::num(self.cache_load_errors.load(Ordering::Relaxed) as f64),
+            ),
             ("shard_deaths", Json::num(self.shard_deaths.load(Ordering::Relaxed) as f64)),
             ("trace_dropped", Json::num(self.trace.dropped() as f64)),
             ("hist", self.histograms_json()),
@@ -818,8 +876,18 @@ mod tests {
         assert_eq!(m.tickets_in_flight.load(Ordering::Relaxed), 0);
 
         assert!(!m.render().contains("eval:"), "{}", m.render());
-        m.record_eval_stats(&EvalStats { requested: 10, cache_hits: 4, engine_evals: 6 });
-        m.record_eval_stats(&EvalStats { requested: 10, cache_hits: 9, engine_evals: 1 });
+        m.record_eval_stats(&EvalStats {
+            requested: 10,
+            cache_hits: 4,
+            engine_evals: 6,
+            ..EvalStats::default()
+        });
+        m.record_eval_stats(&EvalStats {
+            requested: 10,
+            cache_hits: 9,
+            engine_evals: 1,
+            ..EvalStats::default()
+        });
         let r = m.render();
         assert!(r.contains("eval: requested=20 cache_hits=13 engine_evals=7"), "{r}");
 
@@ -855,6 +923,41 @@ mod tests {
         assert_eq!(v.get("plane_builds").unwrap().as_f64(), Some(2.0));
         assert_eq!(v.get("plane_build_ns").unwrap().as_f64(), Some(5_000.0));
         assert_eq!(v.get("eval_samples").unwrap().as_f64(), Some(9_920.0));
+    }
+
+    /// The tiered-cache surface: counters and lookup latencies render
+    /// only once a probe/spill/load-error happened (untiered runs keep
+    /// their exact line), and the snapshot carries every tier counter.
+    #[test]
+    fn cache_gauges_render_and_snapshot() {
+        let m = Metrics::default();
+        assert!(!m.render().contains("cache:"), "{}", m.render());
+        m.cache_l1_hits.fetch_add(3, Ordering::Relaxed);
+        m.cache_l2_hits.fetch_add(7, Ordering::Relaxed);
+        m.cache_misses.fetch_add(2, Ordering::Relaxed);
+        m.record_cache_lookup(800);
+        m.record_cache_lookup(1_200);
+        let r = m.render();
+        assert!(r.contains("cache: l1_hits=3 l2_hits=7 misses=2 spills=0 load_errors=0"), "{r}");
+        assert_eq!(m.cache_lookup_hist().count(), 2);
+        assert_eq!(m.cache_lookup_hist().max, 1_200);
+
+        // A load error alone (corrupt segment tail, zero probes so far)
+        // still surfaces the segment.
+        let m2 = Metrics::default();
+        m2.cache_load_errors.fetch_add(1, Ordering::Relaxed);
+        assert!(m2.render().contains("load_errors=1"), "{}", m2.render());
+
+        let snap = m.snapshot_json(5).to_string();
+        let v = Json::parse(&snap).unwrap();
+        assert_eq!(v.get("cache_l1_hits").unwrap().as_f64(), Some(3.0));
+        assert_eq!(v.get("cache_l2_hits").unwrap().as_f64(), Some(7.0));
+        assert_eq!(v.get("cache_misses").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("cache_spills").unwrap().as_f64(), Some(0.0));
+        assert_eq!(v.get("cache_load_errors").unwrap().as_f64(), Some(0.0));
+        let cl = v.get("hist").unwrap().get("cache_lookup_ns").unwrap();
+        assert_eq!(cl.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(cl.get("max").unwrap().as_f64(), Some(1_200.0));
     }
 
     #[test]

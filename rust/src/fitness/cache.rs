@@ -1,0 +1,432 @@
+//! Tiered, concurrent, persistent accuracy cache.
+//!
+//! The co-design loop spends nearly all of its time re-evaluating
+//! approximate-tree phenotypes, and the same `(bits, thresholds)` design
+//! points recur across runs: a repeat `optimize` of a seen dataset should
+//! cost cache lookups, not bit-sliced kernel time. This module makes the
+//! per-run fitness memo durable and shared:
+//!
+//! * **L1 — sharded in-memory tier.** A lock-striped map shared (via
+//!   `Arc`) across every concurrent driver in `run_all`, so dataset A's
+//!   driver can reuse phenotypes dataset A evaluated last generation even
+//!   while B..H hammer the same cache. Entries produced by this process
+//!   live here.
+//! * **L2 — disk tier.** One append-only segment file per dataset
+//!   fingerprint under `<out>/cache/`, length-prefixed checksummed
+//!   records, loaded at startup. A torn tail (crash mid-append, truncated
+//!   copy) is skipped record-by-record and *counted*, never fatal.
+//!
+//! Keys are `(dataset fingerprint, phenotype fingerprint)` — both
+//! 128-bit. The dataset fingerprint hashes the generator id, seed, row
+//! count and quantization width, so an entry can never leak across
+//! datasets (change the seed and the fingerprint — hence the segment file
+//! — changes). The phenotype fingerprint is
+//! [`crate::ga::Chromosome::phenotype_key_of`], 128-bit for the same
+//! reason the per-run memo was widened: a 64-bit birthday collision
+//! silently serves one phenotype another's objectives.
+//!
+//! Seam contracts (see ROADMAP.md): this module never reads the OS clock
+//! — lookup-latency timestamps come from the caller's injected `Clock`,
+//! and lifecycle events (hits, misses, spills, loads) are journaled by
+//! the caller through `TraceKind::Cache*` variants. Misses still flow
+//! through the `submit_accuracy`/`collect` ticket seam; the cache sits in
+//! front of it, it is not a second blocking path.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::rng::{fnv1a, fnv1a128, splitmix64};
+use crate::util::sync::lock_recover;
+
+/// Number of independent lock stripes in the L1 tier. 16 is comfortably
+/// above the pool's worker cap-per-host in practice; stripes are cheap.
+const STRIPES: usize = 16;
+
+/// Segment-file magic: bumped if the record layout ever changes, so an
+/// old binary never misparses a new segment (it counts one load error and
+/// skips the file instead).
+const SEGMENT_MAGIC: &[u8; 8] = b"AXDTSEG1";
+
+/// Serialized record payload: key (16) + error (8) + area (8).
+const RECORD_LEN: usize = 32;
+
+/// Identity of a dataset *as the accuracy engines see it*: anything that
+/// changes the trained tree or its test set must change the fingerprint,
+/// or a stale cache entry could cross datasets. Hashes the generator id,
+/// the experiment seed, the row count, and the feature quantization
+/// width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DatasetFingerprint(pub u128);
+
+impl DatasetFingerprint {
+    pub fn compute(generator_id: &str, seed: u64, n_samples: usize, feature_bits: u8) -> Self {
+        let mut bytes = Vec::with_capacity(generator_id.len() + 18);
+        bytes.extend_from_slice(generator_id.as_bytes());
+        bytes.push(0); // terminator: ("ab", 1) must never alias ("a", ...) byte-wise
+        bytes.extend_from_slice(&seed.to_le_bytes());
+        bytes.extend_from_slice(&(n_samples as u64).to_le_bytes());
+        bytes.push(feature_bits);
+        DatasetFingerprint(fnv1a128(&bytes))
+    }
+
+    /// Hex form used as the segment-file name stem.
+    pub fn hex(&self) -> String {
+        format!("{:032x}", self.0)
+    }
+}
+
+/// Which tier satisfied a lookup. `L1` = produced by this process; `L2` =
+/// loaded from a segment file at startup. The distinction is what lets
+/// `runs.json` *prove* a warm repeat run touched no engine: its hits are
+/// all L2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheTier {
+    L1,
+    L2,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    objectives: [f64; 2],
+    tier: CacheTier,
+    /// Already on disk (loaded from a segment, or spilled earlier)?
+    spilled: bool,
+}
+
+/// What `load()` saw on disk.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoadReport {
+    pub segments: usize,
+    pub records: u64,
+    /// Corrupt or truncated tails skipped (counted into
+    /// `Metrics::cache_load_errors` by the caller).
+    pub errors: u64,
+}
+
+/// What `spill()` wrote.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpillReport {
+    pub segments: usize,
+    pub records: u64,
+}
+
+/// How a fixed-size read against a segment file ended.
+enum Fill {
+    Full,
+    /// Zero bytes available: clean EOF at a record boundary.
+    Eof,
+    /// Some but not all bytes: a torn record (crash mid-append).
+    Torn,
+}
+
+fn read_full(file: &mut fs::File, buf: &mut [u8]) -> Fill {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match file.read(&mut buf[filled..]) {
+            Ok(0) => return if filled == 0 { Fill::Eof } else { Fill::Torn },
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return Fill::Torn,
+        }
+    }
+    Fill::Full
+}
+
+/// The shared cache. Construct once in `run_all`, share via `Arc` with
+/// every driver's `FitnessEvaluator`.
+#[derive(Debug)]
+pub struct EvalCache {
+    stripes: Vec<Mutex<HashMap<(u128, u128), Entry>>>,
+    dir: Option<PathBuf>,
+}
+
+impl EvalCache {
+    /// A cache with an L2 directory (created on first spill).
+    pub fn persistent(dir: impl Into<PathBuf>) -> Self {
+        EvalCache { stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(), dir: Some(dir.into()) }
+    }
+
+    /// L1 only — nothing is ever spilled or loaded. Used when `--no-cache`
+    /// leaves persistence off but tests still want the shared tier.
+    pub fn in_memory() -> Self {
+        EvalCache { stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(), dir: None }
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    #[inline]
+    fn stripe(&self, fp: DatasetFingerprint, key: u128) -> usize {
+        let mixed = splitmix64((fp.0 as u64) ^ (key as u64) ^ ((key >> 64) as u64));
+        (mixed % self.stripes.len() as u64) as usize
+    }
+
+    /// Look up `(dataset, phenotype)`. Returns the objectives and the tier
+    /// that produced them. Pure map access: no clock, no I/O.
+    pub fn lookup(&self, fp: DatasetFingerprint, key: u128) -> Option<([f64; 2], CacheTier)> {
+        let shard = lock_recover(&self.stripes[self.stripe(fp, key)]);
+        shard.get(&(fp.0, key)).map(|e| (e.objectives, e.tier))
+    }
+
+    /// Publish freshly computed objectives. First writer wins (all writers
+    /// computed the same deterministic value); returns whether the entry
+    /// was new.
+    pub fn publish(&self, fp: DatasetFingerprint, key: u128, objectives: [f64; 2]) -> bool {
+        let mut shard = lock_recover(&self.stripes[self.stripe(fp, key)]);
+        match shard.entry((fp.0, key)) {
+            std::collections::hash_map::Entry::Occupied(_) => false,
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(Entry { objectives, tier: CacheTier::L1, spilled: false });
+                true
+            }
+        }
+    }
+
+    /// Total entries across stripes (tests / reporting).
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| lock_recover(s).len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Load every segment file under the L2 directory. Corrupt records
+    /// (bad checksum, impossible length, torn tail) end that segment's
+    /// replay with one counted error — the good prefix is kept, the run
+    /// proceeds. A missing directory is simply an empty cache.
+    pub fn load(&self) -> LoadReport {
+        let mut report = LoadReport::default();
+        let Some(dir) = self.dir.as_deref() else {
+            return report;
+        };
+        let Ok(entries) = fs::read_dir(dir) else {
+            return report;
+        };
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.extension().is_some_and(|x| x == "seg")
+                    && p.file_stem().is_some_and(|s| s.to_string_lossy().len() == 32)
+            })
+            .collect();
+        paths.sort(); // deterministic load order
+        for path in paths {
+            report.segments += 1;
+            self.load_segment(&path, &mut report);
+        }
+        report
+    }
+
+    fn load_segment(&self, path: &Path, report: &mut LoadReport) {
+        let stem = match path.file_stem() {
+            Some(s) => s.to_string_lossy().into_owned(),
+            None => {
+                report.errors += 1;
+                return;
+            }
+        };
+        let Ok(fp_bits) = u128::from_str_radix(&stem, 16) else {
+            report.errors += 1;
+            return;
+        };
+        let fp = DatasetFingerprint(fp_bits);
+        let Ok(mut file) = fs::File::open(path) else {
+            report.errors += 1;
+            return;
+        };
+        let mut header = [0u8; 8];
+        if file.read_exact(&mut header).is_err() || &header != SEGMENT_MAGIC {
+            report.errors += 1;
+            return;
+        }
+        loop {
+            let mut len_buf = [0u8; 4];
+            match read_full(&mut file, &mut len_buf) {
+                Fill::Eof => break, // clean end at a record boundary
+                Fill::Torn => {
+                    report.errors += 1;
+                    break;
+                }
+                Fill::Full => {}
+            }
+            let len = u32::from_le_bytes(len_buf) as usize;
+            if len != RECORD_LEN {
+                // Future layouts bump SEGMENT_MAGIC; any other length here
+                // is corruption. Skip the rest of the file.
+                report.errors += 1;
+                break;
+            }
+            let mut payload = vec![0u8; len];
+            let mut sum_buf = [0u8; 8];
+            if !matches!(read_full(&mut file, &mut payload), Fill::Full)
+                || !matches!(read_full(&mut file, &mut sum_buf), Fill::Full)
+            {
+                report.errors += 1; // torn tail: crash mid-append
+                break;
+            }
+            if fnv1a(&payload) != u64::from_le_bytes(sum_buf) {
+                report.errors += 1; // bit rot / partial overwrite
+                break;
+            }
+            let key = u128::from_le_bytes(payload[0..16].try_into().unwrap_or([0u8; 16]));
+            let err = f64::from_le_bytes(payload[16..24].try_into().unwrap_or([0u8; 8]));
+            let area = f64::from_le_bytes(payload[24..32].try_into().unwrap_or([0u8; 8]));
+            let mut shard = lock_recover(&self.stripes[self.stripe(fp, key)]);
+            shard
+                .entry((fp.0, key))
+                .or_insert(Entry { objectives: [err, area], tier: CacheTier::L2, spilled: true });
+            report.records += 1;
+        }
+    }
+
+    /// Append every not-yet-spilled entry to its fingerprint's segment
+    /// file. Records are length-prefixed and checksummed, so a crash
+    /// mid-append costs exactly the torn record (the loader keeps the
+    /// prefix). Call once at the end of `run_all`; entries loaded from
+    /// disk are never rewritten.
+    pub fn spill(&self) -> io::Result<SpillReport> {
+        let mut report = SpillReport::default();
+        let Some(dir) = self.dir.as_deref() else {
+            return Ok(report);
+        };
+        // Group fresh entries per fingerprint so each segment is opened once.
+        let mut fresh: HashMap<u128, Vec<(u128, [f64; 2])>> = HashMap::new();
+        for stripe in &self.stripes {
+            let mut shard = lock_recover(stripe);
+            for ((fp, key), entry) in shard.iter_mut() {
+                if !entry.spilled {
+                    entry.spilled = true;
+                    fresh.entry(*fp).or_default().push((*key, entry.objectives));
+                }
+            }
+        }
+        if fresh.is_empty() {
+            return Ok(report);
+        }
+        fs::create_dir_all(dir)?;
+        let mut fps: Vec<u128> = fresh.keys().copied().collect();
+        fps.sort_unstable();
+        for fp in fps {
+            let mut records = fresh.remove(&fp).unwrap_or_default();
+            records.sort_unstable_by_key(|(k, _)| *k); // deterministic file bytes
+            let path = dir.join(format!("{}.seg", DatasetFingerprint(fp).hex()));
+            let is_new = !path.exists();
+            let mut file = fs::OpenOptions::new().create(true).append(true).open(&path)?;
+            let mut buf = Vec::with_capacity(records.len() * (4 + RECORD_LEN + 8) + 8);
+            if is_new {
+                buf.extend_from_slice(SEGMENT_MAGIC);
+            }
+            for (key, obj) in &records {
+                let mut payload = [0u8; RECORD_LEN];
+                payload[0..16].copy_from_slice(&key.to_le_bytes());
+                payload[16..24].copy_from_slice(&obj[0].to_le_bytes());
+                payload[24..32].copy_from_slice(&obj[1].to_le_bytes());
+                buf.extend_from_slice(&(RECORD_LEN as u32).to_le_bytes());
+                buf.extend_from_slice(&payload);
+                buf.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+            }
+            file.write_all(&buf)?;
+            report.segments += 1;
+            report.records += records.len() as u64;
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("axdt_cache_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn fingerprint_separates_every_component() {
+        let base = DatasetFingerprint::compute("seeds", 42, 210, 8);
+        assert_eq!(base, DatasetFingerprint::compute("seeds", 42, 210, 8));
+        assert_ne!(base, DatasetFingerprint::compute("vertebral", 42, 210, 8));
+        assert_ne!(base, DatasetFingerprint::compute("seeds", 43, 210, 8));
+        assert_ne!(base, DatasetFingerprint::compute("seeds", 42, 211, 8));
+        assert_ne!(base, DatasetFingerprint::compute("seeds", 42, 210, 7));
+        // The id terminator keeps ("ab", …) from aliasing a shifted field.
+        assert_ne!(
+            DatasetFingerprint::compute("a", u64::from_le_bytes(*b"b\0\0\0\0\0\0\0"), 0, 0).0,
+            DatasetFingerprint::compute("ab", 0, 0, 0).0,
+        );
+    }
+
+    #[test]
+    fn lookup_publish_and_tier_attribution() {
+        let cache = EvalCache::in_memory();
+        let fp = DatasetFingerprint::compute("seeds", 1, 100, 8);
+        assert!(cache.lookup(fp, 7).is_none());
+        assert!(cache.publish(fp, 7, [0.25, 3.5]));
+        assert!(!cache.publish(fp, 7, [9.9, 9.9]), "first writer wins");
+        assert_eq!(cache.lookup(fp, 7), Some(([0.25, 3.5], CacheTier::L1)));
+        // Same phenotype under a different dataset is a distinct entry.
+        let fp2 = DatasetFingerprint::compute("seeds", 2, 100, 8);
+        assert!(cache.lookup(fp2, 7).is_none());
+    }
+
+    #[test]
+    fn spill_then_load_round_trips_as_l2() {
+        let dir = tmp_dir("roundtrip");
+        let fp = DatasetFingerprint::compute("seeds", 42, 210, 8);
+        let cache = EvalCache::persistent(&dir);
+        for k in 0..10u128 {
+            assert!(cache.publish(fp, k, [k as f64 / 10.0, 2.0 + k as f64]));
+        }
+        let spilled = cache.spill().unwrap();
+        assert_eq!((spilled.segments, spilled.records), (1, 10));
+        // Spilling again writes nothing: entries are marked.
+        assert_eq!(cache.spill().unwrap(), SpillReport::default());
+
+        let warm = EvalCache::persistent(&dir);
+        let report = warm.load();
+        assert_eq!((report.segments, report.records, report.errors), (1, 10, 0));
+        for k in 0..10u128 {
+            assert_eq!(warm.lookup(fp, k), Some(([k as f64 / 10.0, 2.0 + k as f64], CacheTier::L2)));
+        }
+        // Loaded entries are already on disk: no re-spill.
+        assert_eq!(warm.spill().unwrap(), SpillReport::default());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn appends_accumulate_across_processes() {
+        let dir = tmp_dir("append");
+        let fp = DatasetFingerprint::compute("har", 42, 700, 8);
+        {
+            let cache = EvalCache::persistent(&dir);
+            cache.publish(fp, 1, [0.1, 1.0]);
+            cache.spill().unwrap();
+        }
+        {
+            let cache = EvalCache::persistent(&dir);
+            assert_eq!(cache.load().records, 1);
+            cache.publish(fp, 2, [0.2, 2.0]);
+            let r = cache.spill().unwrap();
+            assert_eq!(r.records, 1, "only the fresh entry is appended");
+        }
+        let cache = EvalCache::persistent(&dir);
+        assert_eq!(cache.load().records, 2);
+        assert_eq!(cache.len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_and_in_memory_are_empty_loads() {
+        assert_eq!(EvalCache::in_memory().load(), LoadReport::default());
+        assert_eq!(EvalCache::in_memory().spill().unwrap(), SpillReport::default());
+        let cache = EvalCache::persistent(tmp_dir("missing"));
+        assert_eq!(cache.load(), LoadReport::default());
+    }
+}

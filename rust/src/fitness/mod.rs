@@ -19,21 +19,28 @@
 //! pool's ticketed submit/wait so a generation's micro-batches pipeline
 //! across shards while this side keeps decoding and estimating area.
 
+pub mod cache;
 pub mod encode;
 pub mod native;
 
 use std::any::Any;
 use std::collections::HashMap;
-use std::sync::OnceLock;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::metrics::Metrics;
 use crate::data::Dataset;
 use crate::dt::Tree;
 use crate::ga::{Chromosome, DecodeContext, Evaluator};
 use crate::hw::synth::{self, TreeApprox, FEATURE_BITS};
 use crate::hw::{AreaLut, EgtLibrary};
 use crate::quant;
+use crate::util::clock::Clock;
+use crate::util::trace::TraceKind;
+
+use cache::{CacheTier, DatasetFingerprint, EvalCache};
 
 /// One optimization problem: a trained tree + its held-out test set +
 /// precomputed structures shared by every fitness evaluation.
@@ -281,11 +288,31 @@ pub trait AccuracyEngine {
 }
 
 /// Evaluation counters (exposed through coordinator metrics).
+///
+/// Resolution order per requested chromosome: the per-run phenotype memo
+/// (`cache_hits`), then the shared L1 tier (`l1_hits`, entries produced
+/// by this process), then the shared L2 tier (`l2_hits`, entries loaded
+/// from disk), then the engine (`engine_evals`). A warm repeat run is
+/// *provably* engine-free when `engine_evals == 0` with `l2_hits > 0` —
+/// `runs.json` archives all four so CI can assert exactly that.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EvalStats {
     pub requested: usize,
     pub cache_hits: usize,
+    pub l1_hits: usize,
+    pub l2_hits: usize,
     pub engine_evals: usize,
+}
+
+/// Shared-tier wiring for a [`FitnessEvaluator`]: the process-wide cache,
+/// this dataset's fingerprint, and the observability seams. Timestamps
+/// come from the injected `clock` (never the OS clock — trace-seam
+/// contract), hit/miss/latency accounting lands in `metrics`.
+pub struct SharedCache {
+    pub cache: Arc<EvalCache>,
+    pub fingerprint: DatasetFingerprint,
+    pub metrics: Arc<Metrics>,
+    pub clock: Arc<dyn Clock>,
 }
 
 /// The GA-facing evaluator: decode → (cache | engine) → objectives.
@@ -307,7 +334,16 @@ pub struct FitnessEvaluator<'a, E: AccuracyEngine> {
     /// (the engine's [`AccuracyEngine::preferred_microbatch`]; whole
     /// batch when the engine has no preference).
     pub microbatch: usize,
-    cache: HashMap<u64, [f64; 2]>,
+    /// Per-run phenotype memo (L0): dies with the evaluator. Keyed on the
+    /// 128-bit phenotype fingerprint — at 64 bits a birthday collision
+    /// would silently share objectives between distinct phenotypes.
+    cache: HashMap<u128, [f64; 2]>,
+    /// Optional shared tiers (L1 in-memory across drivers, L2 on disk):
+    /// consulted on a per-run miss *before* any ticket is issued, and
+    /// published back on collect. Misses still flow through the
+    /// `submit_accuracy`/`collect` seam — the cache is a filter in front
+    /// of it, not a second blocking path.
+    pub shared: Option<SharedCache>,
     pub stats: EvalStats,
     error: Option<anyhow::Error>,
 }
@@ -320,6 +356,7 @@ impl<'a, E: AccuracyEngine> FitnessEvaluator<'a, E> {
             engine,
             microbatch: 0,
             cache: HashMap::new(),
+            shared: None,
             stats: EvalStats::default(),
             error: None,
         }
@@ -337,23 +374,65 @@ impl<'a, E: AccuracyEngine> Evaluator for FitnessEvaluator<'a, E> {
         let ctx = self.problem.decode_context(self.lut);
         self.stats.requested += pop.len();
 
-        // Decode once; split into cache hits and misses.
-        let decoded: Vec<(u64, TreeApprox)> = pop
+        // Decode once; split into cache hits and misses. A per-run miss
+        // probes the shared tiers (when wired) before it can cost a
+        // ticket; shared hits are pulled down into the per-run memo so a
+        // phenotype is ever charged at most one shared lookup per run.
+        let decoded: Vec<(u128, TreeApprox)> = pop
             .iter()
             .map(|c| {
                 let approx = c.decode(&ctx);
                 (Chromosome::phenotype_key_of(&approx), approx)
             })
             .collect();
-        let mut out: Vec<Option<[f64; 2]>> = decoded
-            .iter()
-            .map(|(key, _)| self.cache.get(key).copied())
-            .collect();
-        self.stats.cache_hits += out.iter().filter(|o| o.is_some()).count();
+        let mut out: Vec<Option<[f64; 2]>> = Vec::with_capacity(pop.len());
+        for (key, _) in &decoded {
+            if let Some(v) = self.cache.get(key) {
+                self.stats.cache_hits += 1;
+                out.push(Some(*v));
+                continue;
+            }
+            let Some(shared) = &self.shared else {
+                out.push(None);
+                continue;
+            };
+            let t0 = shared.clock.now_ns();
+            let hit = shared.cache.lookup(shared.fingerprint, *key);
+            let t1 = shared.clock.now_ns();
+            shared.metrics.record_cache_lookup(t1.saturating_sub(t0));
+            match hit {
+                Some((obj, tier)) => {
+                    let tier_no = match tier {
+                        CacheTier::L1 => {
+                            self.stats.l1_hits += 1;
+                            shared.metrics.cache_l1_hits.fetch_add(1, Relaxed);
+                            1
+                        }
+                        CacheTier::L2 => {
+                            self.stats.l2_hits += 1;
+                            shared.metrics.cache_l2_hits.fetch_add(1, Relaxed);
+                            2
+                        }
+                    };
+                    if shared.metrics.trace.enabled() {
+                        shared.metrics.trace.record(t1, TraceKind::CacheHit { tier: tier_no });
+                    }
+                    self.cache.insert(*key, obj);
+                    out.push(Some(obj));
+                }
+                None => {
+                    shared.metrics.cache_misses.fetch_add(1, Relaxed);
+                    if shared.metrics.trace.enabled() {
+                        shared.metrics.trace.record(t1, TraceKind::CacheMiss);
+                    }
+                    out.push(None);
+                }
+            }
+        }
 
         // Deduplicate misses by phenotype within the batch, too.
-        let mut unique: Vec<(u64, usize)> = Vec::new(); // (key, representative idx)
-        let mut key_pos: HashMap<u64, usize> = HashMap::new();
+        let mut unique: Vec<(u128, usize)> = Vec::new(); // (key, representative idx)
+        let mut key_pos: HashMap<u128, usize> = HashMap::new();
         for i in 0..pop.len() {
             if out[i].is_none() && !key_pos.contains_key(&decoded[i].0) {
                 key_pos.insert(decoded[i].0, unique.len());
@@ -370,7 +449,7 @@ impl<'a, E: AccuracyEngine> Evaluator for FitnessEvaluator<'a, E> {
                 n => n,
             };
             let size = if size == 0 { unique.len() } else { size.max(1) };
-            let mut tickets: Vec<(AccuracyTicket, &[(u64, usize)])> =
+            let mut tickets: Vec<(AccuracyTicket, &[(u128, usize)])> =
                 Vec::with_capacity(unique.len().div_ceil(size));
             for chunk in unique.chunks(size) {
                 let batch: Vec<TreeApprox> =
@@ -380,7 +459,7 @@ impl<'a, E: AccuracyEngine> Evaluator for FitnessEvaluator<'a, E> {
             }
             // Overlap: every miss's area estimate runs while the accuracy
             // tickets are in flight on the service side.
-            let areas: HashMap<u64, f64> = unique
+            let areas: HashMap<u128, f64> = unique
                 .iter()
                 .map(|&(key, i)| (key, self.problem.estimate_area(self.lut, &decoded[i].1)))
                 .collect();
@@ -393,7 +472,14 @@ impl<'a, E: AccuracyEngine> Evaluator for FitnessEvaluator<'a, E> {
                     Ok(accs) if accs.len() == chunk.len() => {
                         self.stats.engine_evals += chunk.len();
                         for (&(key, _), acc) in chunk.iter().zip(accs) {
-                            self.cache.insert(key, [1.0 - acc, areas[&key]]);
+                            let obj = [1.0 - acc, areas[&key]];
+                            self.cache.insert(key, obj);
+                            // Publish to the shared tiers so concurrent
+                            // drivers (and, after the spill, future
+                            // processes) reuse this eval.
+                            if let Some(shared) = &self.shared {
+                                shared.cache.publish(shared.fingerprint, key, obj);
+                            }
                         }
                     }
                     // A misbehaving engine returning the wrong length is a
@@ -584,6 +670,84 @@ mod tests {
         assert_eq!(sliced.stats.engine_evals, whole.stats.engine_evals);
         assert_eq!(sliced.stats.requested, whole.stats.requested);
         assert_eq!(sliced.stats.cache_hits, whole.stats.cache_hits);
+    }
+
+    /// The shared-tier seam end to end: a cold evaluator publishes, a
+    /// second evaluator in the same process resolves everything from L1,
+    /// a spill/reload round-trip resolves everything from L2 — all with
+    /// zero engine evals, correct counter attribution on the shared
+    /// `Metrics`, and lookups timed purely on the injected clock.
+    #[test]
+    fn shared_tiers_attribute_hits_and_skip_the_engine() {
+        use crate::util::clock::ManualClock;
+
+        let lut = AreaLut::build(&EgtLibrary::default());
+        let p = small_problem(&lut);
+        let metrics = Arc::new(Metrics::default());
+        let clock: Arc<dyn Clock> = Arc::new(ManualClock::new());
+        let fp = DatasetFingerprint::compute("seeds", 42, p.n_test, FEATURE_BITS);
+        let wire = |cache: &Arc<EvalCache>| SharedCache {
+            cache: Arc::clone(cache),
+            fingerprint: fp,
+            metrics: Arc::clone(&metrics),
+            clock: Arc::clone(&clock),
+        };
+
+        let dir = std::env::temp_dir()
+            .join(format!("axdt-shared-tier-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = Arc::new(EvalCache::persistent(&dir));
+
+        let mut rng = crate::util::rng::Pcg64::seeded(0x11);
+        let pop: Vec<Chromosome> =
+            (0..5).map(|_| Chromosome::random(&mut rng, p.n_comparators())).collect();
+
+        // Cold: shared tiers miss, the engine runs, results are published.
+        let mut cold = FitnessEvaluator::new(&p, &lut, native::NativeEngine::default());
+        cold.shared = Some(wire(&cache));
+        let want = cold.evaluate(&pop);
+        let distinct = cold.stats.engine_evals;
+        assert!(distinct > 0);
+        assert_eq!(cold.stats.l1_hits + cold.stats.l2_hits, 0);
+        assert_eq!(cache.len(), distinct, "every engine eval was published");
+        assert_eq!(metrics.cache_misses.load(Relaxed) as usize, pop.len());
+
+        // Warm, same process: every distinct phenotype resolves from L1;
+        // the pull-down memo makes a re-evaluate cost no further shared
+        // lookups.
+        let mut warm = FitnessEvaluator::new(&p, &lut, native::NativeEngine::default());
+        warm.shared = Some(wire(&cache));
+        let got = warm.evaluate(&pop);
+        assert_eq!(got, want, "cached objectives are bit-identical");
+        assert_eq!(warm.stats.engine_evals, 0);
+        assert_eq!(warm.stats.l1_hits, distinct);
+        warm.evaluate(&pop);
+        assert_eq!(warm.stats.l1_hits, distinct, "memo absorbs the repeat");
+        assert_eq!(warm.stats.cache_hits, pop.len());
+
+        // Spill, reload into a fresh cache (a new process, in effect):
+        // the same phenotypes now resolve from L2.
+        cache.spill().unwrap();
+        let reloaded = Arc::new(EvalCache::persistent(&dir));
+        assert_eq!(reloaded.load().records as usize, distinct);
+        let mut disk = FitnessEvaluator::new(&p, &lut, native::NativeEngine::default());
+        disk.shared = Some(wire(&reloaded));
+        let from_disk = disk.evaluate(&pop);
+        assert_eq!(from_disk, want, "disk round-trip is bit-exact");
+        assert_eq!(disk.stats.engine_evals, 0);
+        assert_eq!(disk.stats.l2_hits, distinct);
+
+        // Attribution on the one shared Metrics: tier counters match the
+        // per-run stats, and every shared lookup was timed (on a
+        // ManualClock that never moved — durations land in bucket 0).
+        assert_eq!(metrics.cache_l1_hits.load(Relaxed) as usize, warm.stats.l1_hits);
+        assert_eq!(metrics.cache_l2_hits.load(Relaxed) as usize, disk.stats.l2_hits);
+        assert_eq!(
+            metrics.cache_lookup_hist().count() as usize,
+            pop.len() + 2 * distinct,
+            "cold misses + warm L1 hits + reloaded L2 hits, one timing each"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -101,21 +101,33 @@ impl Chromosome {
         TreeApprox { bits, thr_int }
     }
 
-    /// Stable cache key over the *phenotype* (two chromosomes that decode
-    /// identically share fitness).
-    pub fn phenotype_key(&self, ctx: &DecodeContext) -> u64 {
+    /// Stable 128-bit cache key over the *phenotype* (two chromosomes that
+    /// decode identically share fitness).
+    ///
+    /// 128 bits, not 64: these keys outlive the run in the persistent
+    /// accuracy cache (`fitness::cache`), where a birthday collision at
+    /// 64 bits would silently serve one phenotype another's objectives.
+    pub fn phenotype_key(&self, ctx: &DecodeContext) -> u128 {
         Self::phenotype_key_of(&self.decode(ctx))
     }
 
     /// Key over an already-decoded phenotype (avoids re-decoding when the
     /// caller needs both — the fitness evaluator's hot path).
-    pub fn phenotype_key_of(approx: &TreeApprox) -> u64 {
+    pub fn phenotype_key_of(approx: &TreeApprox) -> u128 {
+        crate::util::rng::fnv1a128(&Self::phenotype_bytes(approx))
+    }
+
+    /// Canonical byte encoding of a phenotype: 5 bytes per comparator
+    /// (`bits` then the little-endian integer threshold). Shared by the
+    /// cache keys and their tests so a crafted near-collision exercises
+    /// the exact bytes the cache hashes.
+    pub fn phenotype_bytes(approx: &TreeApprox) -> Vec<u8> {
         let mut bytes = Vec::with_capacity(approx.bits.len() * 5);
         for (b, t) in approx.bits.iter().zip(&approx.thr_int) {
             bytes.push(*b);
             bytes.extend_from_slice(&t.to_le_bytes());
         }
-        crate::util::rng::fnv1a(&bytes)
+        bytes
     }
 }
 
@@ -206,5 +218,46 @@ mod tests {
         // Crossing a decode boundary changes the key.
         b.genes[0] = 0.0;
         assert_ne!(a.phenotype_key(&ctx), b.phenotype_key(&ctx));
+    }
+
+    /// Regression for the 64-bit collision hazard: the per-run fitness
+    /// cache used to key on bare `fnv1a(bytes) as u64`, so two colliding
+    /// phenotypes silently shared objectives. A genuine 64-bit birthday
+    /// collision needs ~2^32 candidates — out of reach for a unit test —
+    /// so this crafts the same failure mode at 32 bits (where the
+    /// birthday bound is ~2^16 candidates): find two distinct phenotypes
+    /// whose old-style 64-bit keys agree on their low 32 bits, i.e. a
+    /// pair "half way" to the collision that poisoned the old cache, and
+    /// pin that the widened 128-bit key still separates them.
+    #[test]
+    fn crafted_near_collision_separated_by_128bit_key() {
+        use crate::util::rng::{fnv1a, fnv1a128};
+        use std::collections::HashMap;
+
+        let approx_for = |t: u32| TreeApprox { bits: vec![8, 8], thr_int: vec![t & 0xff, t >> 8] };
+        let old_key = |a: &TreeApprox| fnv1a(&Chromosome::phenotype_bytes(a));
+
+        let mut seen: HashMap<u32, u32> = HashMap::new();
+        let mut pair = None;
+        for t in 0..200_000u32 {
+            let truncated = old_key(&approx_for(t)) as u32;
+            if let Some(&prev) = seen.get(&truncated) {
+                pair = Some((prev, t));
+                break;
+            }
+            seen.insert(truncated, t);
+        }
+        let (ta, tb) = pair.expect("birthday bound guarantees a 32-bit collision in 2^17.6 tries");
+        let (a, b) = (approx_for(ta), approx_for(tb));
+        assert_ne!(a.thr_int, b.thr_int, "crafted inputs must be distinct phenotypes");
+        assert_eq!(old_key(&a) as u32, old_key(&b) as u32, "pair must collide at 32 bits");
+        // The fix: the cache key is the full 128-bit fingerprint, which
+        // separates the crafted pair (and is not a widening of the old
+        // hash, so old-key collisions carry no structure into it).
+        assert_ne!(Chromosome::phenotype_key_of(&a), Chromosome::phenotype_key_of(&b));
+        assert_ne!(
+            fnv1a128(&Chromosome::phenotype_bytes(&a)) as u64,
+            fnv1a(&Chromosome::phenotype_bytes(&a)),
+        );
     }
 }

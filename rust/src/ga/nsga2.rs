@@ -31,7 +31,7 @@ pub trait Evaluator {
 }
 
 /// NSGA-II hyper-parameters (paper defaults in `Default`).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct NsgaConfig {
     pub pop_size: usize,
     pub generations: usize,
@@ -49,6 +49,11 @@ pub struct NsgaConfig {
     /// without substitution margin) — strong anchors that make large
     /// chromosomes (hundreds of genes) tractable at small GA budgets.
     pub seed_ladder: bool,
+    /// Warm-start individuals (validated chromosomes, e.g. an archived
+    /// Pareto front from a previous run): injected into the initial
+    /// population after the exact/ladder anchors, clamped at `pop_size`;
+    /// the remaining slots stay random.  Empty = cold start.
+    pub warm_seeds: Vec<Chromosome>,
 }
 
 impl Default for NsgaConfig {
@@ -63,6 +68,7 @@ impl Default for NsgaConfig {
             seed: 0xA1D7,
             seed_exact: true,
             seed_ladder: true,
+            warm_seeds: Vec::new(),
         }
     }
 }
@@ -128,6 +134,19 @@ pub fn run(n_comparators: usize, cfg: &NsgaConfig, eval: &mut dyn Evaluator) -> 
                     slot += 1;
                 }
             }
+        }
+    }
+    // Warm start: archived designs take the slots after the anchors.  A
+    // wrong-length seed (stale archive, different tree) is skipped so one
+    // bad entry can never poison the run; overflow past `pop_size` is
+    // silently clamped.
+    for seed in &cfg.warm_seeds {
+        if slot >= pop.len() {
+            break;
+        }
+        if seed.genes.len() == n_genes {
+            pop[slot] = seed.clone();
+            slot += 1;
         }
     }
     let mut objs = eval.evaluate(&pop);
@@ -507,6 +526,53 @@ mod tests {
         assert!(best_b < 0.4, "obj1 {best_b}");
         // Monotone improvement in evaluations count.
         assert_eq!(res.evaluations, 32 + 30 * 32);
+    }
+
+    /// Warm seeds land in the initial population right after the
+    /// exact/ladder anchors, wrong-length seeds are skipped, and the
+    /// injection clamps at `pop_size` instead of panicking.
+    #[test]
+    fn warm_seeds_injected_after_anchors_and_clamped() {
+        struct Capture {
+            first: Vec<Chromosome>,
+            inner: Toy,
+        }
+        impl Evaluator for Capture {
+            fn evaluate(&mut self, pop: &[Chromosome]) -> Vec<[f64; 2]> {
+                if self.first.is_empty() {
+                    self.first = pop.to_vec();
+                }
+                self.inner.evaluate(pop)
+            }
+        }
+
+        let warm: Vec<Chromosome> = (0..4)
+            .map(|i| Chromosome { genes: vec![0.21 + i as f64 * 0.07; 6] })
+            .collect();
+        let mut seeds = warm.clone();
+        seeds.insert(2, Chromosome { genes: vec![0.5; 4] }); // wrong length: skipped
+        let cfg = NsgaConfig {
+            pop_size: 20,
+            generations: 1,
+            seed: 9,
+            warm_seeds: seeds.clone(),
+            ..Default::default()
+        };
+        let mut cap = Capture { first: Vec::new(), inner: Toy };
+        run(3, &cfg, &mut cap);
+        // Anchors: 1 exact + 7 ladder rungs x 2 margin genes = 15 slots.
+        let anchors = 1 + 2 * (crate::quant::MAX_BITS - crate::quant::MIN_BITS + 1) as usize;
+        assert_eq!(anchors, 15);
+        for (w, seed) in warm.iter().enumerate() {
+            assert_eq!(cap.first[anchors + w].genes, seed.genes, "warm seed {w}");
+        }
+
+        // A population too small for every seed clamps without panicking.
+        let tight = NsgaConfig { pop_size: 16, generations: 1, seed: 9, warm_seeds: seeds, ..Default::default() };
+        let mut cap = Capture { first: Vec::new(), inner: Toy };
+        run(3, &tight, &mut cap);
+        assert_eq!(cap.first.len(), 16);
+        assert_eq!(cap.first[15].genes, warm[0].genes, "only the first seed fits");
     }
 
     #[test]

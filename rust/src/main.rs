@@ -19,10 +19,12 @@ use axdt::coordinator::{
     finish_dataset, optimize_dataset, optimize_dataset_ga, DatasetRun, EngineChoice, EvalService,
     SnapshotEmitter,
 };
+use axdt::fitness::cache::EvalCache;
 use axdt::report;
 use axdt::util::cli::{flag, opt, usage, Args, OptSpec};
+use axdt::util::json::Json;
 use axdt::util::sync::lock_recover;
-use axdt::util::trace::chrome_trace_json;
+use axdt::util::trace::{chrome_trace_json, TraceKind};
 
 const OPTS: &[OptSpec] = &[
     opt("config", "JSON config file (defaults < config < flags)"),
@@ -42,6 +44,9 @@ const OPTS: &[OptSpec] = &[
     opt("microbatch", "pipelined-eval micro-batch size (0 = auto: workers x width)"),
     opt("loss", "Table II accuracy-loss budget (default 0.01)"),
     opt("out", "output directory for JSON results (default results)"),
+    opt("cache-dir", "persistent eval-cache directory (default <out>/cache)"),
+    flag("no-cache", "disable the persistent eval cache (in-memory L1 only)"),
+    opt("warm-start", "seed the GA from a previous run's runs.json Pareto fronts"),
     opt("trace-out", "write the run's ticket-lifecycle trace as Chrome trace-event JSON (Perfetto-loadable)"),
     opt("metrics-interval-ms", "emit a JSON metrics-snapshot line to stderr every N ms (0 = off)"),
     opt("dataset", "single dataset (export-rtl)"),
@@ -225,7 +230,48 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<RunBatch> {
         }
         _ => None,
     };
-    let opts = cfg.run_options();
+    // Tiered eval cache: one L1 shared across every concurrent driver;
+    // the L2 tier replays previous runs' segment files so repeat
+    // optimization requests cost lookups, not engine evals.  `--no-cache`
+    // keeps the shared L1 but turns persistence off.
+    let cache = match cfg.resolved_cache_dir() {
+        Some(dir) => std::sync::Arc::new(EvalCache::persistent(dir)),
+        None => std::sync::Arc::new(EvalCache::in_memory()),
+    };
+    let loaded = cache.load();
+    if let Some(svc) = &service {
+        svc.metrics
+            .cache_load_errors
+            .fetch_add(loaded.errors, std::sync::atomic::Ordering::Relaxed);
+        if svc.metrics.trace.enabled() {
+            svc.metrics.trace.record(
+                svc.clock().now_ns(),
+                TraceKind::CacheLoad { records: loaded.records, errors: loaded.errors },
+            );
+        }
+    }
+    if verbose && (loaded.records > 0 || loaded.errors > 0) {
+        eprintln!(
+            "[axdt] eval cache: loaded {} record(s) from {} segment(s), {} error(s)",
+            loaded.records, loaded.segments, loaded.errors
+        );
+    }
+    let warm_start = if cfg.warm_start.is_empty() {
+        None
+    } else {
+        let archive = load_warm_start(&cfg.warm_start)?;
+        if verbose {
+            eprintln!(
+                "[axdt] warm-start: {} dataset(s) with archived fronts in {}",
+                archive.len(),
+                cfg.warm_start
+            );
+        }
+        Some(std::sync::Arc::new(archive))
+    };
+    let mut opts = cfg.run_options();
+    opts.cache = Some(std::sync::Arc::clone(&cache));
+    opts.warm_start = warm_start;
     let drivers = service
         .as_ref()
         .map_or(1, |s| s.workers())
@@ -319,6 +365,31 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<RunBatch> {
         // line lands ahead of the summary.
         emitter.stop();
     }
+    // Persist the L1 tier: fresh entries append to per-fingerprint
+    // segment files so the next run into this cache dir starts warm.
+    match cache.spill() {
+        Ok(spilled) => {
+            if let Some(svc) = &service {
+                svc.metrics
+                    .cache_spills
+                    .fetch_add(spilled.records, std::sync::atomic::Ordering::Relaxed);
+                if svc.metrics.trace.enabled() {
+                    svc.metrics.trace.record(
+                        svc.clock().now_ns(),
+                        TraceKind::CacheSpill { records: spilled.records },
+                    );
+                }
+            }
+            if verbose && spilled.records > 0 {
+                eprintln!(
+                    "[axdt] eval cache: spilled {} record(s) to {} segment(s)",
+                    spilled.records, spilled.segments
+                );
+            }
+        }
+        // A failed spill costs next run's warmth, not this run's results.
+        Err(e) => eprintln!("[axdt] eval cache: spill failed: {e}"),
+    }
     if let Some(svc) = &service {
         eprintln!(
             "[axdt] eval service ({} worker(s), {} driver(s)): {}",
@@ -355,6 +426,38 @@ fn run_all(cfg: &RunConfig, verbose: bool) -> Result<RunBatch> {
     }
     let service_hist = service.as_ref().map(|s| s.metrics.histograms_json());
     Ok(RunBatch { runs, failed, service_hist })
+}
+
+/// Parse a previous run's `runs.json` into `dataset -> front genes` for GA
+/// warm-starting.  Points without a `genes` array (older archives) are
+/// skipped; the driver re-validates and length-checks every seed anyway,
+/// so an archive from a different configuration degrades to a cold start
+/// instead of failing the run.
+fn load_warm_start(path: &str) -> Result<std::collections::HashMap<String, Vec<Vec<f64>>>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading warm-start archive {path}"))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing warm-start archive {path}"))?;
+    let runs = j
+        .get("runs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("warm-start archive {path} has no runs[]"))?;
+    let mut map: std::collections::HashMap<String, Vec<Vec<f64>>> =
+        std::collections::HashMap::new();
+    for run in runs {
+        let Some(dataset) = run.get("dataset").and_then(Json::as_str) else {
+            continue;
+        };
+        let fronts = map.entry(dataset.to_string()).or_default();
+        for point in run.get("front").and_then(Json::as_arr).unwrap_or(&[]) {
+            if let Some(genes) = point.get("genes").and_then(Json::as_arr) {
+                let genes: Vec<f64> = genes.iter().filter_map(Json::as_f64).collect();
+                if !genes.is_empty() {
+                    fronts.push(genes);
+                }
+            }
+        }
+    }
+    Ok(map)
 }
 
 /// Write a results artifact atomically (`util::fsx::write_atomic`), so a

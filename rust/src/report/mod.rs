@@ -276,6 +276,12 @@ impl<'a> RunArchive<'a> {
                         // next to the eval-service coalescing gauges.
                         ("eval_requested", Json::num(r.stats.requested as f64)),
                         ("eval_cache_hits", Json::num(r.stats.cache_hits as f64)),
+                        // Shared-tier hits (L1 = this process, L2 = loaded
+                        // from disk): `eval_engine_evals == 0` with
+                        // `eval_l2_hits > 0` is the warm-repeat proof CI
+                        // asserts on.
+                        ("eval_l1_hits", Json::num(r.stats.l1_hits as f64)),
+                        ("eval_l2_hits", Json::num(r.stats.l2_hits as f64)),
                         ("eval_engine_evals", Json::num(r.stats.engine_evals as f64)),
                         ("elapsed_s", Json::num(r.elapsed_s)),
                         ("engine", Json::str(r.engine)),
@@ -291,6 +297,12 @@ impl<'a> RunArchive<'a> {
                                             ("area_mm2", Json::num(p.measured.area_mm2)),
                                             ("power_mw", Json::num(p.measured.power_mw)),
                                             ("delay_ms", Json::num(p.measured.delay_ms)),
+                                            // The chromosome itself, so a
+                                            // later `--warm-start` can seed
+                                            // from this archive.  Gene
+                                            // values round-trip bit-exactly
+                                            // (shortest-repr f64 printing).
+                                            ("genes", Json::arr_f64(&p.genes)),
                                         ])
                                     })
                                     .collect(),
@@ -356,7 +368,20 @@ mod tests {
         assert_eq!(run.stats.requested, 60);
         assert!(run.stats.engine_evals <= 60 - run.stats.cache_hits);
         assert!(run.stats.engine_evals > 0);
-        crate::util::json::Json::parse(&json).unwrap();
+        // Tier counters are archived (zero here: no shared cache wired)
+        // and every front point carries its warm-startable genes.
+        assert!(json.contains("\"eval_l1_hits\":0"), "{json}");
+        assert!(json.contains("\"eval_l2_hits\":0"), "{json}");
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        let front = parsed.get("runs").unwrap().as_arr().unwrap()[0]
+            .get("front")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        for p in front {
+            let genes = p.get("genes").unwrap().as_arr().unwrap();
+            assert_eq!(genes.len(), 2 * run.n_comparators);
+        }
 
         // Service-backed batches archive the shared histogram block.
         let hist = crate::coordinator::Metrics::with_shards(1).histograms_json();

@@ -170,6 +170,22 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Stable 128-bit FNV-1a hash (offset basis / prime from the FNV spec).
+///
+/// Cache keys that outlive a process (the persistent accuracy cache) ride
+/// this instead of [`fnv1a`]: at 64 bits a few million distinct phenotypes
+/// give a birthday-collision probability that is small but not *service*
+/// small, and a collision silently serves one phenotype the other's
+/// objectives. 128 bits puts that off the table.
+pub fn fnv1a128(bytes: &[u8]) -> u128 {
+    let mut h: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+    for &b in bytes {
+        h ^= b as u128;
+        h = h.wrapping_mul(0x0000_0000_0100_0000_0000_0000_0000_013b);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,6 +287,16 @@ mod tests {
     fn fnv_stability() {
         assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
         assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+
+    #[test]
+    fn fnv128_stability() {
+        // Offset basis for the empty input, and the spec's test vector
+        // property that single-byte inputs are all distinct.
+        assert_eq!(fnv1a128(b""), 0x6c62272e07bb014262b821756295c58d);
+        assert_ne!(fnv1a128(b"a"), fnv1a128(b"b"));
+        // The 128-bit hash must not be a widening of the 64-bit one.
+        assert_ne!(fnv1a128(b"axdt") as u64, fnv1a(b"axdt"));
     }
 
     #[test]

@@ -79,6 +79,19 @@ pub enum TraceKind {
     SpanBegin { track: u32, name: String },
     /// Driver side: the most recent same-named span on `track` closed.
     SpanEnd { track: u32, name: String },
+    /// Eval-cache lookup satisfied by tier 1 (shared in-memory) or
+    /// tier 2 (loaded from disk).  The per-run memo (L0) is not traced —
+    /// it never leaves one evaluator.
+    CacheHit { tier: u8 },
+    /// Eval-cache lookup missed every shared tier; the phenotype will
+    /// cost a ticket through the submit/collect seam.
+    CacheMiss,
+    /// `records` fresh cache entries were appended to their segment
+    /// files (end of run).
+    CacheSpill { records: u64 },
+    /// The L2 tier was replayed at startup: `records` entries loaded,
+    /// `errors` corrupt/torn tails skipped.
+    CacheLoad { records: u64, errors: u64 },
 }
 
 impl fmt::Display for TraceEvent {
@@ -115,6 +128,12 @@ impl fmt::Display for TraceEvent {
             }
             TraceKind::SpanEnd { track, name } => {
                 write!(f, "span-end track={track} name={name}")
+            }
+            TraceKind::CacheHit { tier } => write!(f, "cache-hit tier=L{tier}"),
+            TraceKind::CacheMiss => write!(f, "cache-miss"),
+            TraceKind::CacheSpill { records } => write!(f, "cache-spill records={records}"),
+            TraceKind::CacheLoad { records, errors } => {
+                write!(f, "cache-load records={records} errors={errors}")
             }
         }
     }
@@ -227,6 +246,8 @@ impl TraceJournal {
 /// Perfetto process-group ids for the two track families.
 const PID_SHARDS: u32 = 1;
 const PID_DRIVERS: u32 = 2;
+/// Synthetic tid for the eval-cache track (driver tids start at 1).
+const CACHE_TID: u32 = 0;
 
 fn ts_us(ts_ns: u64) -> Json {
     Json::num(ts_ns as f64 / 1e3)
@@ -285,6 +306,25 @@ pub fn chrome_trace_json(events: &[TraceEvent], driver_tracks: &[String], droppe
             ("pid", Json::num(PID_DRIVERS as f64)),
             ("tid", Json::num((i + 1) as f64)),
             ("args", Json::obj(vec![("name", Json::str(format!("driver {name}")))])),
+        ]));
+    }
+    // Cache lifecycle events share one synthetic track (driver tid 0 is
+    // reserved — driver tracks start at 1).
+    if events.iter().any(|e| {
+        matches!(
+            e.kind,
+            TraceKind::CacheHit { .. }
+                | TraceKind::CacheMiss
+                | TraceKind::CacheSpill { .. }
+                | TraceKind::CacheLoad { .. }
+        )
+    }) {
+        out.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::num(PID_DRIVERS as f64)),
+            ("tid", Json::num(CACHE_TID as f64)),
+            ("args", Json::obj(vec![("name", Json::str("eval cache"))])),
         ]));
     }
 
@@ -396,6 +436,38 @@ pub fn chrome_trace_json(events: &[TraceEvent], driver_tracks: &[String], droppe
                 ("tid", Json::num(*track as f64)),
                 ("args", Json::obj(vec![("seq", seq)])),
             ])),
+            TraceKind::CacheHit { tier } => out.push(instant(
+                &format!("cache-hit L{tier}"),
+                e.ts_ns,
+                PID_DRIVERS,
+                CACHE_TID,
+                vec![("seq", seq), ("tier", Json::num(*tier as f64))],
+            )),
+            TraceKind::CacheMiss => out.push(instant(
+                "cache-miss",
+                e.ts_ns,
+                PID_DRIVERS,
+                CACHE_TID,
+                vec![("seq", seq)],
+            )),
+            TraceKind::CacheSpill { records } => out.push(instant(
+                "cache-spill",
+                e.ts_ns,
+                PID_DRIVERS,
+                CACHE_TID,
+                vec![("seq", seq), ("records", Json::num(*records as f64))],
+            )),
+            TraceKind::CacheLoad { records, errors } => out.push(instant(
+                "cache-load",
+                e.ts_ns,
+                PID_DRIVERS,
+                CACHE_TID,
+                vec![
+                    ("seq", seq),
+                    ("records", Json::num(*records as f64)),
+                    ("errors", Json::num(*errors as f64)),
+                ],
+            )),
         }
     }
 
@@ -456,6 +528,35 @@ mod tests {
             kind: TraceKind::Flushed { shard: 1, problem: 2, kind: "Full", width: 32 },
         };
         assert_eq!(e.to_string(), "seq=7 ts=1500 flushed(Full) shard=1 problem=2 width=32");
+    }
+
+    #[test]
+    fn cache_event_display_is_canonical() {
+        let show = |kind: TraceKind| TraceEvent { seq: 1, ts_ns: 10, kind }.to_string();
+        assert_eq!(show(TraceKind::CacheHit { tier: 2 }), "seq=1 ts=10 cache-hit tier=L2");
+        assert_eq!(show(TraceKind::CacheMiss), "seq=1 ts=10 cache-miss");
+        assert_eq!(show(TraceKind::CacheSpill { records: 9 }), "seq=1 ts=10 cache-spill records=9");
+        assert_eq!(
+            show(TraceKind::CacheLoad { records: 9, errors: 1 }),
+            "seq=1 ts=10 cache-load records=9 errors=1"
+        );
+    }
+
+    #[test]
+    fn cache_events_render_on_their_own_track() {
+        let j = TraceJournal::new();
+        j.set_enabled(true);
+        j.record(10, TraceKind::CacheLoad { records: 3, errors: 1 });
+        j.record(20, TraceKind::CacheHit { tier: 2 });
+        j.record(30, TraceKind::CacheMiss);
+        j.record(40, TraceKind::CacheSpill { records: 5 });
+        let text = chrome_trace_json(&j.snapshot(), &[], j.dropped()).to_string();
+        let parsed = Json::parse(&text).unwrap();
+        // 1 thread_name metadata row (the cache track) + 4 events.
+        assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), 5);
+        assert!(text.contains("\"eval cache\""));
+        assert!(text.contains("\"cache-hit L2\""));
+        assert!(text.contains("\"cache-miss\""));
     }
 
     #[test]

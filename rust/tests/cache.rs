@@ -1,0 +1,300 @@
+//! Tiered persistent eval-cache contracts (the cache tentpole), through
+//! the public API:
+//!
+//! * **L2 durability**: a corrupted, truncated, or wrong-magic segment
+//!   loses exactly the bad tail — the loader keeps the good prefix and
+//!   counts one error, never fails the run;
+//! * **concurrency**: N driver threads hammering one shared cache on a
+//!   `ManualClock` publish each distinct phenotype exactly once and,
+//!   once warm, hit L1 an exactly predictable number of times (this
+//!   suite runs under ThreadSanitizer nightly — see Makefile `tsan`);
+//! * **repeat runs**: a spill → load → re-optimize cycle performs zero
+//!   engine evaluations (every hit attributed to L2) and reproduces the
+//!   front bit-exactly;
+//! * **warm start**: a GA seeded from a cold run's archived front
+//!   reaches the cold run's final hypervolume in half the generations,
+//!   bit-reproducibly.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+use axdt::coordinator::{optimize_dataset, EngineChoice, EvalService, Metrics, RunOptions};
+use axdt::fitness::cache::{DatasetFingerprint, EvalCache};
+use axdt::fitness::{native::NativeEngine, FitnessEvaluator, SharedCache};
+use axdt::ga::{Chromosome, Evaluator};
+use axdt::hw::{AreaLut, EgtLibrary};
+use axdt::util::clock::{Clock, ManualClock};
+use axdt::util::rng::Pcg64;
+use axdt::util::testbed::named_problem;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("axdt_cache_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn quick_opts() -> RunOptions {
+    RunOptions { pop_size: 16, generations: 6, ..RunOptions::default() }
+}
+
+/// Segment layout constants mirrored from `fitness::cache`: an 8-byte
+/// magic, then 44-byte records (4-byte length + 32-byte payload + 8-byte
+/// FNV checksum).  A layout change bumps the magic, which this test
+/// would catch as a whole-file rejection.
+const MAGIC_LEN: usize = 8;
+const REC_LEN: usize = 4 + 32 + 8;
+
+#[test]
+fn corrupt_and_truncated_segments_lose_only_the_bad_tail() {
+    let dir = tmp_dir("durability");
+    let fp = DatasetFingerprint::compute("seeds", 42, 210, 8);
+    let cache = EvalCache::persistent(&dir);
+    let n = 10u64;
+    // Keys 1..=10: spill sorts records by key, so record j holds key j+1.
+    for i in 0..n {
+        cache.publish(fp, i as u128 + 1, [i as f64 * 0.01, 2.0 + i as f64]);
+    }
+    let spilled = cache.spill().unwrap();
+    assert_eq!((spilled.segments, spilled.records), (1, n));
+    let seg = dir.join(format!("{}.seg", fp.hex()));
+    let pristine = std::fs::read(&seg).unwrap();
+    assert_eq!(pristine.len(), MAGIC_LEN + REC_LEN * n as usize);
+
+    // Pristine reload: every record, as L2, zero errors.
+    let clean = EvalCache::persistent(&dir);
+    let rep = clean.load();
+    assert_eq!((rep.segments, rep.records, rep.errors), (1, n, 0));
+    assert_eq!(clean.len(), n as usize);
+
+    // One flipped payload bit in record 6: its checksum fails, records
+    // 0..6 survive, everything after the corruption is distrusted, and
+    // exactly one error is counted for the caller to surface.
+    let mut corrupt = pristine.clone();
+    corrupt[MAGIC_LEN + REC_LEN * 6 + 4] ^= 0x40;
+    std::fs::write(&seg, &corrupt).unwrap();
+    let c = EvalCache::persistent(&dir);
+    let rep = c.load();
+    assert_eq!((rep.records, rep.errors), (6, 1));
+    assert_eq!(c.len(), 6);
+    for key in 1..=6u128 {
+        assert!(c.lookup(fp, key).is_some(), "good prefix key {key} survives");
+    }
+    assert!(c.lookup(fp, 7).is_none(), "the corrupted record is dropped");
+
+    // A torn tail (crash mid-append): the last record is cut inside its
+    // checksum; the good prefix replays with one counted error.
+    std::fs::write(&seg, &pristine[..pristine.len() - 7]).unwrap();
+    let t = EvalCache::persistent(&dir);
+    let rep = t.load();
+    assert_eq!((rep.records, rep.errors), (n - 1, 1));
+
+    // A wrong magic (foreign or future-layout file) rejects the whole
+    // segment with one error instead of misparsing it.
+    let mut bad_magic = pristine.clone();
+    bad_magic[0] ^= 0xFF;
+    std::fs::write(&seg, &bad_magic).unwrap();
+    let m = EvalCache::persistent(&dir);
+    let rep = m.load();
+    assert_eq!((rep.records, rep.errors), (0, 1));
+
+    // An impossible record length likewise ends the replay at the bad
+    // record, keeping what came before it.
+    let mut bad_len = pristine.clone();
+    bad_len[MAGIC_LEN + REC_LEN * 3] = 0xFF;
+    std::fs::write(&seg, &bad_len).unwrap();
+    let l = EvalCache::persistent(&dir);
+    let rep = l.load();
+    assert_eq!((rep.records, rep.errors), (3, 1));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// N concurrent drivers over ONE shared cache, timestamps from a parked
+/// `ManualClock` (the cache itself never reads the OS clock).  The cold
+/// racing phase must publish each distinct phenotype exactly once
+/// (first-writer-wins under the stripe locks); the warm phase has fully
+/// deterministic per-thread counts: every distinct phenotype is one L1
+/// hit, every duplicate a per-run memo hit, zero engine evals.
+#[test]
+fn concurrent_drivers_share_one_cache_with_exact_warm_hits() {
+    const DRIVERS: usize = 4;
+    let problem = named_problem("seeds");
+    let lut = AreaLut::build(&EgtLibrary::default());
+    let metrics = Arc::new(Metrics::default());
+    let clock: Arc<dyn Clock> = Arc::new(ManualClock::new());
+    let cache = Arc::new(EvalCache::in_memory());
+    let fp = DatasetFingerprint::compute("seeds", 42, 210, 8);
+    let mut rng = Pcg64::seeded(0xC0FFEE);
+    let pop: Vec<Chromosome> =
+        (0..24).map(|_| Chromosome::random(&mut rng, problem.n_comparators())).collect();
+    let wire = || SharedCache {
+        cache: Arc::clone(&cache),
+        fingerprint: fp,
+        metrics: Arc::clone(&metrics),
+        clock: Arc::clone(&clock),
+    };
+
+    // Reference evaluator (no shared tiers): the expected objectives and
+    // the number of distinct phenotypes in `pop`.
+    let mut probe = FitnessEvaluator::new(&problem, &lut, NativeEngine::default());
+    let want = probe.evaluate(&pop);
+    let distinct = probe.stats.engine_evals;
+    assert!(distinct > 0);
+
+    // Phase 1: DRIVERS cold evaluators race on the same population.
+    std::thread::scope(|s| {
+        for _ in 0..DRIVERS {
+            s.spawn(|| {
+                let mut ev =
+                    FitnessEvaluator::new(&problem, &lut, NativeEngine::default());
+                ev.shared = Some(wire());
+                let got = ev.evaluate(&pop);
+                assert_eq!(got, want, "shared tiers never change arithmetic");
+                assert_eq!(ev.stats.requested, pop.len());
+                assert_eq!(ev.stats.l2_hits, 0, "nothing was ever loaded from disk");
+            });
+        }
+    });
+    assert_eq!(cache.len(), distinct, "each phenotype published exactly once");
+    let l1_after_cold = metrics.cache_l1_hits.load(Relaxed);
+
+    // Phase 2: DRIVERS warm evaluators — exact counts, zero engine work.
+    std::thread::scope(|s| {
+        for _ in 0..DRIVERS {
+            s.spawn(|| {
+                let mut ev =
+                    FitnessEvaluator::new(&problem, &lut, NativeEngine::default());
+                ev.shared = Some(wire());
+                let got = ev.evaluate(&pop);
+                assert_eq!(got, want);
+                assert_eq!(ev.stats.engine_evals, 0, "warm run is pure lookups");
+                assert_eq!(ev.stats.l1_hits, distinct, "one L1 hit per phenotype");
+                assert_eq!(ev.stats.cache_hits, pop.len() - distinct, "dupes hit the memo");
+            });
+        }
+    });
+    assert_eq!(
+        metrics.cache_l1_hits.load(Relaxed),
+        l1_after_cold + (DRIVERS * distinct) as u64,
+        "live counter attributes every warm hit"
+    );
+    assert_eq!(cache.len(), distinct, "warm phase publishes nothing new");
+}
+
+/// The tentpole's acceptance cycle at integration scale: optimize, spill,
+/// reload in a fresh cache (a new process, in effect), optimize again —
+/// the repeat performs ZERO engine evaluations, every hit is attributed
+/// to L2, and the front is bit-identical.
+#[test]
+fn warm_repeat_across_spill_and_load_is_engine_free() {
+    let dir = tmp_dir("l2_repeat");
+    let opts = |cache: &Arc<EvalCache>| RunOptions {
+        engine: EngineChoice::NativeService,
+        cache: Some(Arc::clone(cache)),
+        ..quick_opts()
+    };
+
+    let svc = EvalService::spawn_native(8);
+    let cache = Arc::new(EvalCache::persistent(&dir));
+    let cold = optimize_dataset("seeds", &opts(&cache), Some(&svc)).unwrap();
+    assert!(cold.stats.engine_evals > 0);
+    let spilled = cache.spill().unwrap();
+    assert_eq!(spilled.records as usize, cache.len());
+    svc.shutdown();
+
+    let svc2 = EvalService::spawn_native(8);
+    let cache2 = Arc::new(EvalCache::persistent(&dir));
+    let loaded = cache2.load();
+    assert_eq!((loaded.records as usize, loaded.errors), (cache.len(), 0));
+    let warm = optimize_dataset("seeds", &opts(&cache2), Some(&svc2)).unwrap();
+    assert_eq!(warm.stats.engine_evals, 0, "repeat must be engine-free: {:?}", warm.stats);
+    assert_eq!(warm.stats.l1_hits, 0, "nothing was produced in-process");
+    assert!(warm.stats.l2_hits > 0, "every hit comes from disk");
+    assert_eq!(warm.stats.requested, cold.stats.requested);
+    assert_eq!(
+        svc2.metrics.cache_l2_hits.load(Relaxed),
+        warm.stats.l2_hits as u64
+    );
+    assert_eq!(cold.front.len(), warm.front.len());
+    for (a, b) in cold.front.iter().zip(&warm.front) {
+        assert_eq!(a.accuracy, b.accuracy, "f64 objectives round-trip bit-exactly");
+        assert_eq!(a.est_area_mm2, b.est_area_mm2);
+        assert_eq!(a.genes, b.genes);
+    }
+    svc2.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// 2D hypervolume of a front against `ref_pt` (both objectives
+/// minimized), by the standard staircase sweep: sort by the first
+/// objective ascending and accumulate each point's uncovered rectangle.
+fn hypervolume(points: &[(f64, f64)], ref_pt: (f64, f64)) -> f64 {
+    let mut pts: Vec<(f64, f64)> = points
+        .iter()
+        .copied()
+        .filter(|p| p.0 < ref_pt.0 && p.1 < ref_pt.1)
+        .collect();
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut hv = 0.0;
+    let mut prev_area = ref_pt.1;
+    for (err, area) in pts {
+        if area < prev_area {
+            hv += (ref_pt.0 - err) * (prev_area - area);
+            prev_area = area;
+        }
+    }
+    hv
+}
+
+/// Warm-starting from a cold run's archived front reaches the cold run's
+/// final hypervolume in HALF the generations: the seeded population
+/// contains the whole cold front (pop 48 leaves room behind the 15
+/// exact/ladder anchors), and elitist NSGA-II never lets a nondominated
+/// seed regress — so the warm front weakly dominates the cold one.
+/// Running the warm configuration twice must reproduce the front
+/// bit-identically (seeds are injected deterministically).
+#[test]
+fn warm_start_reaches_cold_hypervolume_in_half_the_generations() {
+    let cold = optimize_dataset(
+        "seeds",
+        &RunOptions { pop_size: 16, generations: 8, ..RunOptions::default() },
+        None,
+    )
+    .unwrap();
+    let mut archive: HashMap<String, Vec<Vec<f64>>> = HashMap::new();
+    archive
+        .insert("seeds".into(), cold.front.iter().map(|p| p.genes.clone()).collect());
+    let warm_opts = RunOptions {
+        pop_size: 48,
+        generations: 4, // half of the cold run's 8
+        warm_start: Some(Arc::new(archive)),
+        ..RunOptions::default()
+    };
+    let warm = optimize_dataset("seeds", &warm_opts, None).unwrap();
+    let warm2 = optimize_dataset("seeds", &warm_opts, None).unwrap();
+    assert_eq!(warm.front.len(), warm2.front.len(), "warm start is deterministic");
+    for (a, b) in warm.front.iter().zip(&warm2.front) {
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.est_area_mm2, b.est_area_mm2);
+        assert_eq!(a.genes, b.genes);
+    }
+
+    let objs = |run: &axdt::coordinator::DatasetRun| -> Vec<(f64, f64)> {
+        run.front.iter().map(|p| (1.0 - p.accuracy, p.est_area_mm2)).collect()
+    };
+    let (co, wo) = (objs(&cold), objs(&warm));
+    let max_area = co
+        .iter()
+        .chain(&wo)
+        .map(|p| p.1)
+        .fold(0.0f64, f64::max);
+    let ref_pt = (1.5, max_area * 1.5 + 1.0);
+    let (hv_cold, hv_warm) = (hypervolume(&co, ref_pt), hypervolume(&wo, ref_pt));
+    assert!(hv_cold > 0.0);
+    assert!(
+        hv_warm >= hv_cold - 1e-9,
+        "half-generation warm run must reach the cold hypervolume: {hv_warm} vs {hv_cold}"
+    );
+}

@@ -1,0 +1,19 @@
+//@ path: rust/src/fitness/cache.rs
+//@ expect: clock-seam@17
+//@ partial: clock-seam
+//@ expect-partial: clock-seam@17
+
+// The tiered eval cache sits behind the Clock seam: lookup/publish
+// timestamps arrive as `ts_ns` arguments from the injected clock, so the
+// cache itself may never read the OS clock — not even for "cheap" latency
+// accounting on the L2 load path, where a stray wall read would taint the
+// trace journal's byte-identity on the ManualClock.
+
+pub fn record_lookup(ts_ns: u64, journal: &mut Vec<u64>) {
+    journal.push(ts_ns);
+}
+
+pub fn load_segment_timed(records: u64) -> u64 {
+    let _t0 = std::time::Instant::now();
+    records
+}
